@@ -1,0 +1,66 @@
+//! Live-mode example: the rust coordinator executing *real* compute —
+//! every task runs the AOT-compiled Pallas payload kernel through the
+//! PJRT CPU client (no Python anywhere on the request path).
+//!
+//! ```text
+//! make artifacts
+//! cargo run --release --offline --example live_cluster
+//! ```
+//!
+//! Prints per-job latency and task throughput, and cross-checks the
+//! batched water-filling kernel against the native rust WF.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use taos::assign::AssignPolicy;
+use taos::cluster::Cluster;
+use taos::config::ClusterConfig;
+use taos::coordinator::{verify, AccelHandle, Leader, LiveJobSpec};
+use taos::util::rng::Rng;
+
+fn main() {
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    // 1. Cross-layer check: AOT kernel == native WF on 32 random
+    //    instances.
+    let (checked, batch) =
+        verify::verify_wf_kernel(artifacts, 32, 7).expect("kernel verification");
+    println!("[verify] AOT water-filling kernel == native WF on {checked} instances (batch {batch})\n");
+
+    // 2. Live cluster: 4 worker servers, chunked data with 3-way
+    //    replication, WF assignment over live queue depths.
+    let accel = Arc::new(AccelHandle::spawn(artifacts).expect("accelerator"));
+    let mut ccfg = ClusterConfig::default();
+    ccfg.servers = 4;
+    ccfg.avail_lo = 1;
+    ccfg.avail_hi = 3;
+    let cluster = Cluster::generate(&ccfg, &mut Rng::seed_from(1));
+    let leader = Leader::start(cluster, Arc::clone(&accel), 3).expect("leader");
+
+    let mut rng = Rng::seed_from(99);
+    let specs: Vec<LiveJobSpec> = (0..10)
+        .map(|id| LiveJobSpec {
+            id,
+            chunk_ids: (0..48).map(|_| rng.gen_range(5_000)).collect(),
+        })
+        .collect();
+
+    println!("[live] 10 jobs x 48 tasks on 4 workers, payload = Pallas chunk kernel via PJRT");
+    let report = leader.run_jobs(&specs, AssignPolicy::Wf).expect("live run");
+    let lat = report.latency_summary();
+    println!("  tasks executed : {}", report.tasks);
+    println!("  throughput     : {:.0} tasks/s", report.throughput_tps());
+    println!(
+        "  job latency    : mean {:.2} ms / p50 {:.2} ms / p99 {:.2} ms",
+        lat.mean, lat.p50, lat.p99
+    );
+    println!("  checksum       : {:.4}", report.checksum);
+    assert!(report.checksum != 0.0, "payload kernel must produce nonzero output");
+    leader.shutdown();
+    println!("\nlive_cluster OK");
+}

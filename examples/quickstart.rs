@@ -1,0 +1,48 @@
+//! Quickstart: build a small cluster + trace, run FIFO water-filling and
+//! OCWF-ACC, and compare completion times.
+//!
+//! ```text
+//! cargo run --release --offline --example quickstart
+//! ```
+
+use taos::prelude::*;
+
+fn main() {
+    // A scaled-down version of the paper's setup (§V-A): Zipf-placed task
+    // groups, per-(server, job) capacities in [3, 5].
+    let mut cfg = ExperimentConfig::default();
+    cfg.cluster.servers = 30;
+    cfg.cluster.zipf_alpha = 1.0;
+    cfg.cluster.avail_lo = 4;
+    cfg.cluster.avail_hi = 8;
+    cfg.trace.jobs = 60;
+    cfg.trace.total_tasks = 6_000;
+    cfg.trace.utilization = 0.6;
+    cfg.seed = 7;
+
+    println!("cluster: {} servers, zipf alpha {}", cfg.cluster.servers, cfg.cluster.zipf_alpha);
+    println!(
+        "trace  : {} jobs, {} tasks, {:.0}% utilization\n",
+        cfg.trace.jobs,
+        cfg.trace.total_tasks,
+        cfg.trace.utilization * 100.0
+    );
+
+    for policy in [
+        SchedPolicy::Fifo(AssignPolicy::Wf),
+        SchedPolicy::Fifo(AssignPolicy::Obta),
+        SchedPolicy::Ocwf { acc: true },
+    ] {
+        let out = taos::sim::run_experiment(&cfg, policy).expect("run");
+        let s = out.jct_stats();
+        println!(
+            "{:<9} mean JCT {:>7.1}  p99 {:>7.0}  makespan {:>6}  overhead {:>8.1} us/arrival",
+            policy.name(),
+            s.mean,
+            s.p99,
+            out.makespan,
+            out.overhead.mean_us()
+        );
+    }
+    println!("\n(see `taos repro --fig 12 --quick` for the full six-way comparison)");
+}

@@ -1,0 +1,47 @@
+//! Reordering ablation (paper §IV): how much does shortest-estimated-
+//! time-first reordering help as data-placement skew grows, and how much
+//! computation does the early-exit technique save?
+//!
+//! ```text
+//! cargo run --release --offline --example reorder_study
+//! ```
+
+use taos::benchlib::TextTable;
+use taos::prelude::*;
+
+fn main() {
+    let mut base = taos::sweep::quick_base(21);
+    base.trace.utilization = 0.75;
+
+    println!("== mean JCT: FIFO WF vs OCWF vs OCWF-ACC, rising skew ==\n");
+    let mut t = TextTable::new(&["alpha", "wf (fifo)", "ocwf", "ocwf-acc", "jct gain", "wf evals ocwf", "wf evals acc", "evals saved"]);
+    for &alpha in &[0.0, 0.5, 1.0, 1.5, 2.0] {
+        let mut cfg = base.clone();
+        cfg.cluster.zipf_alpha = alpha;
+        let fifo = taos::sim::run_experiment(&cfg, SchedPolicy::Fifo(AssignPolicy::Wf)).unwrap();
+        let ocwf = taos::sim::run_experiment(&cfg, SchedPolicy::Ocwf { acc: false }).unwrap();
+        let acc = taos::sim::run_experiment(&cfg, SchedPolicy::Ocwf { acc: true }).unwrap();
+        assert_eq!(
+            ocwf.jcts, acc.jcts,
+            "OCWF and OCWF-ACC must produce identical schedules"
+        );
+        t.row(vec![
+            format!("{alpha}"),
+            format!("{:.0}", fifo.mean_jct()),
+            format!("{:.0}", ocwf.mean_jct()),
+            format!("{:.0}", acc.mean_jct()),
+            format!("{:.1}x", fifo.mean_jct() / ocwf.mean_jct().max(1e-9)),
+            format!("{}", ocwf.wf_evals),
+            format!("{}", acc.wf_evals),
+            format!(
+                "{:.0}%",
+                100.0 * (1.0 - acc.wf_evals as f64 / ocwf.wf_evals.max(1) as f64)
+            ),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("The paper's two §IV claims, reproduced:");
+    println!("  1. reordering is robust to skew (OCWF JCT flat while FIFO WF degrades),");
+    println!("  2. early-exit cuts the reordering computation (fewer WF evaluations)");
+    println!("     while producing the exact same schedule.");
+}

@@ -1,0 +1,75 @@
+//! End-to-end driver: replay the full Alibaba-like trace (250 jobs,
+//! 113,653 tasks — the paper's workload scale) through all six
+//! algorithms and report the paper's headline metrics: average job
+//! completion time and per-arrival computation overhead.
+//!
+//! ```text
+//! cargo run --release --offline --example trace_replay            # paper scale
+//! cargo run --release --offline --example trace_replay -- --quick # CI scale
+//! ```
+//!
+//! The run is recorded in EXPERIMENTS.md (§End-to-end).
+
+use taos::benchlib::TextTable;
+use taos::prelude::*;
+use taos::util::json::Json;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = if quick {
+        taos::sweep::quick_base(42)
+    } else {
+        let mut cfg = ExperimentConfig::default();
+        cfg.cluster.zipf_alpha = 1.0;
+        cfg.trace.utilization = 0.5;
+        cfg.seed = 42;
+        cfg
+    };
+    println!(
+        "replaying {} jobs / {} tasks on {} servers (alpha {}, {:.0}% util)\n",
+        cfg.trace.jobs,
+        cfg.trace.total_tasks,
+        cfg.cluster.servers,
+        cfg.cluster.zipf_alpha,
+        cfg.trace.utilization * 100.0
+    );
+
+    let mut table = TextTable::new(&[
+        "algorithm",
+        "mean JCT",
+        "p50",
+        "p99",
+        "makespan",
+        "overhead us",
+    ]);
+    let mut rows = Vec::new();
+    for policy in SchedPolicy::ALL {
+        let t0 = std::time::Instant::now();
+        let out = taos::sim::run_experiment(&cfg, policy).expect("run");
+        let s = out.jct_stats();
+        eprintln!(
+            "  {} done in {:.1}s (overhead {:.1} us/arrival)",
+            policy.name(),
+            t0.elapsed().as_secs_f64(),
+            out.overhead.mean_us()
+        );
+        table.row(vec![
+            policy.name().into(),
+            format!("{:.0}", s.mean),
+            format!("{:.0}", s.p50),
+            format!("{:.0}", s.p99),
+            format!("{}", out.makespan),
+            format!("{:.1}", out.overhead.mean_us()),
+        ]);
+        rows.push(Json::obj(vec![
+            ("algorithm", Json::str(policy.name())),
+            ("mean_jct", Json::num(s.mean)),
+            ("p99_jct", Json::num(s.p99)),
+            ("overhead_us", Json::num(out.overhead.mean_us())),
+        ]));
+    }
+    println!("\n{}", table.render());
+    let out_path = "trace_replay_results.json";
+    std::fs::write(out_path, Json::arr(rows).to_string()).expect("write results");
+    println!("wrote {out_path}");
+}

@@ -1,0 +1,81 @@
+"""AOT lowering: jax -> HLO *text* -> artifacts/ for the rust runtime.
+
+HLO text, not serialized HloModuleProto: jax >= 0.5 emits protos with
+64-bit instruction ids which the `xla` crate's xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly. Lowered with return_tuple=True; the rust side
+unwraps with `Literal::to_tuple`.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (the Makefile's
+`artifacts` target). Writes one .hlo.txt per artifact plus manifest.json
+describing the static shapes, which `runtime::ArtifactIndex` consumes.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # int64 capacity sums in the WF kernel
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from .model import payload_lowered, wf_phi_lowered  # noqa: E402
+
+# Static artifact shapes. `wf_phi` is sized for the reorder batches the
+# coordinator sends (and the verify-kernel harness); `payload` for the
+# live demo's task batches.
+ARTIFACTS = {
+    "wf_phi": dict(B=8, K=8, M=32),
+    "wf_phi_large": dict(B=32, K=16, M=128),
+    "payload": dict(N=64, D=32),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(name: str, params: dict):
+    if name.startswith("wf_phi"):
+        return wf_phi_lowered(params["B"], params["K"], params["M"])
+    if name == "payload":
+        return payload_lowered(params["N"], params["D"])
+    raise ValueError(f"unknown artifact {name}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", nargs="*", default=None, help="subset of artifact names"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {}
+    for name, params in ARTIFACTS.items():
+        if args.only and name not in args.only:
+            continue
+        lowered = lower_one(name, params)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {"file": fname, "params": params}
+        print(f"wrote {path} ({len(text)} chars) params={params}")
+
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

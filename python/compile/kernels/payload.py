@@ -1,0 +1,68 @@
+"""L1 Pallas kernel: the per-task data-chunk compute payload.
+
+Each task in the live coordinator reads one data chunk (a row of D
+features) and reduces it through a small nonlinear transform:
+
+    y[i] = sum_f tanh(x[i] @ W)[f]^2
+
+The matmul is the MXU-shaped part (tiled by BlockSpec over the task
+batch), the tanh/square/row-sum epilogue is VPU work. W is a fixed,
+deterministic projection baked into the artifact at AOT time, so the rust
+request path only ships chunk rows.
+
+TPU mapping: grid over N/block_n row tiles; each program holds an
+(block_n, D) x tile and the full (D, F) W panel in VMEM -- at the shipped
+sizes (D=32, F=16) W is 2 KiB and the schedule is a single pass over x.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _payload_kernel(x_ref, w_ref, y_ref):
+    x = x_ref[...]
+    w = w_ref[...]
+    h = jnp.tanh(jnp.dot(x, w, preferred_element_type=jnp.float32))
+    y_ref[...] = jnp.sum(h * h, axis=1)
+
+
+def chunk_payload(x, w, *, block_n=None, interpret=True):
+    """x f32[N, D], w f32[D, F] -> y f32[N]. N must be divisible by
+    block_n (default: min(64, N))."""
+    n, d = x.shape
+    d2, f = w.shape
+    assert d == d2, (x.shape, w.shape)
+    if block_n is None:
+        block_n = min(64, n)
+    assert n % block_n == 0, (n, block_n)
+    return pl.pallas_call(
+        _payload_kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(x, w)
+
+
+def fixed_projection(d, f, seed=0x7A05):
+    """The deterministic W baked into the payload artifact: a cheap
+    hash-like construction that is stable across jax versions (no RNG
+    implementation dependence)."""
+    i = jnp.arange(d, dtype=jnp.float32)[:, None]
+    j = jnp.arange(f, dtype=jnp.float32)[None, :]
+    s = jnp.float32(seed % 1000) / 1000.0
+    return jnp.sin(i * 12.9898 + j * 78.233 + s) * 0.43
+
+
+@partial(jax.jit, static_argnames=("d", "f"))
+def payload_fixed(x, *, d, f):
+    """The AOT entrypoint: payload with the baked projection."""
+    w = fixed_projection(d, f)
+    return chunk_payload(x, w)

@@ -1,0 +1,68 @@
+"""Pure-numpy correctness oracles for the Pallas kernels.
+
+These mirror the rust-native implementations (`rust/src/assign/wf.rs`)
+line for line: the L3 <-> L1 agreement test (`taos verify-kernel`) and the
+pytest suites both anchor on this file.
+"""
+
+import numpy as np
+
+
+def water_level_ref(servers_mask, size, busy, mu):
+    """Minimal integer xi with sum(mask * max(xi - busy, 0) * mu) >= size.
+    Mirrors `assign::bounds::water_level` (sort-free binary search)."""
+    size = int(size)
+    if size == 0:
+        return 0
+    busy = np.asarray(busy, dtype=np.int64)
+    mu = np.asarray(mu, dtype=np.int64)
+    mask = np.asarray(servers_mask, dtype=np.int64)
+    assert mask.any(), "group with no available servers"
+
+    def cap(x):
+        return int(np.sum(mask * np.maximum(x - busy, 0) * mu))
+
+    lo, hi = 1, int(np.max(busy * mask)) + size
+    assert cap(hi) >= size
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if cap(mid) >= size:
+            hi = mid
+        else:
+            lo = mid + 1
+    return hi
+
+
+def wf_phi_ref(busy, mu, sizes, avail):
+    """Reference batched WF.
+
+    busy, mu: int[B, M]; sizes: int[B, K]; avail: int[B, K, M].
+    Returns (phi int64[B], busy_out int64[B, M]).
+    """
+    busy = np.asarray(busy, dtype=np.int64).copy()
+    mu = np.asarray(mu, dtype=np.int64)
+    sizes = np.asarray(sizes, dtype=np.int64)
+    avail = np.asarray(avail, dtype=np.int64)
+    b, m = busy.shape
+    _, k = sizes.shape
+    phi = np.zeros(b, dtype=np.int64)
+    for row in range(b):
+        for g in range(k):
+            size = sizes[row, g]
+            if size == 0:
+                continue
+            mask = avail[row, g]
+            xi = water_level_ref(mask, size, busy[row], mu[row])
+            participating = (mask > 0) & (busy[row] < xi)
+            busy[row][participating] = xi
+            phi[row] = max(phi[row], xi)
+    return phi, busy
+
+
+def payload_ref(x, w):
+    """Reference payload: y[i] = sum_f tanh(x[i] @ w)[f]^2 in float64
+    (tight tolerance target for the f32 kernel)."""
+    x = np.asarray(x, dtype=np.float64)
+    w = np.asarray(w, dtype=np.float64)
+    h = np.tanh(x @ w)
+    return np.sum(h * h, axis=1)

@@ -1,0 +1,107 @@
+"""L1 Pallas kernel: batched water-filling (paper SIII-B, Algorithm 2).
+
+For each batch row (one candidate job against one cluster state), the
+kernel runs the full WF recurrence over K task groups: the water level
+xi_k is the minimal integer satisfying eq. (9),
+
+    sum_m avail[k, m] * max(xi - busy[m], 0) * mu[m] >= sizes[k],
+
+found by a fixed-iteration integer binary search (a masked reduce per
+probe -- no sort needed, which is what makes this kernel a clean
+data-parallel fit); busy times are then raised to the level (eq. 10) and
+phi = max_k xi_k is the WF estimate the paper calls WF(I).
+
+This is the inner loop of OCWF reordering (SIV): the rust coordinator
+evaluates a whole batch of candidate jobs in one call.
+
+TPU mapping (DESIGN.md SHardware-Adaptation): grid = B, one program per
+batch row; the row's working set (busy[M], mu[M], avail[K,M], sizes[K])
+lives in VMEM for all K groups; HBM traffic is one load + one store per
+row. The kernel is VPU-bound (masked reduces), MXU-free by nature.
+
+Padding contract: unused groups MUST have sizes[k] == 0 (the search then
+converges to xi = 0 and the row state is untouched); unused servers MUST
+have avail == 0 everywhere (mu/busy values are then irrelevant, but keep
+mu >= 1 for hygiene). Rows are padded with all-zero sizes.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; numerics are identical and that is what the AOT artifacts
+ship.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 31 probes decide any level < 2^31 and are a no-op fixpoint once the
+# bracket collapses, so a static count is safe for all inputs.
+_BS_ITERS = 31
+
+
+def _wf_kernel(busy_ref, mu_ref, sizes_ref, avail_ref, phi_ref, busy_out_ref, *, K):
+    """One batch row. Refs: busy/mu [1, M], sizes [1, K], avail [1, K, M];
+    outputs phi [1], busy_out [1, M]."""
+    busy = busy_ref[0, :].astype(jnp.int64)
+    mu = mu_ref[0, :].astype(jnp.int64)
+    sizes = sizes_ref[0, :].astype(jnp.int64)
+    avail = avail_ref[0, :, :].astype(jnp.int64)
+
+    def group_body(k, carry):
+        busy, phi = carry
+        size = sizes[k]
+        mask = avail[k]
+        # Feasible upper bracket: max masked busy + size (capacity grows by
+        # at least one task per level once any masked server has mu >= 1).
+        hi0 = jnp.max(jnp.where(mask > 0, busy, 0)) + size
+
+        def probe(_, lohi):
+            lo, hi = lohi
+            mid = (lo + hi) // 2
+            cap = jnp.sum(mask * jnp.maximum(mid - busy, 0) * mu)
+            ok = cap >= size
+            return (jnp.where(ok, lo, mid + 1), jnp.where(ok, mid, hi))
+
+        _, xi = jax.lax.fori_loop(0, _BS_ITERS, probe, (jnp.int64(0), hi0))
+        # eq. (10): participating servers (mask & busy < xi) rise to xi.
+        busy = jnp.where((mask > 0) & (busy < xi), xi, busy)
+        phi = jnp.maximum(phi, xi)
+        return (busy, phi)
+
+    busy, phi = jax.lax.fori_loop(0, K, group_body, (busy, jnp.int64(0)))
+    phi_ref[0] = phi.astype(jnp.int32)
+    busy_out_ref[0, :] = busy.astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _noop(x, interpret=True):  # pragma: no cover - keeps jit cache warm in tests
+    return x
+
+
+def wf_phi_batch(busy, mu, sizes, avail, *, interpret=True):
+    """Batched WF: busy/mu int32[B, M], sizes int32[B, K],
+    avail int32[B, K, M] -> (phi int32[B], busy_out int32[B, M])."""
+    b, m = busy.shape
+    _, k = sizes.shape
+    assert mu.shape == (b, m), mu.shape
+    assert avail.shape == (b, k, m), avail.shape
+    return pl.pallas_call(
+        partial(_wf_kernel, K=k),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k, m), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b, m), jnp.int32),
+        ],
+        interpret=interpret,
+    )(busy, mu, sizes, avail)

@@ -1,0 +1,48 @@
+"""L2: the jitted computation graphs that get AOT-lowered to HLO text.
+
+Two entrypoints, both calling L1 Pallas kernels (interpret=True so the
+lowered HLO is plain ops the CPU PJRT plugin can run):
+
+- ``wf_phi_model``  -- batched water-filling evaluation, the inner loop of
+  OCWF reordering (paper SIV). Inputs are padded to the static (B, K, M)
+  of the artifact; see the padding contract in ``kernels/waterfill.py``.
+- ``payload_model`` -- the per-task chunk payload with the projection
+  baked in; the live request path ships only chunk rows.
+
+`jax_enable_x64` must be on (aot.py and conftest.py set it): the water
+level search accumulates capacities in int64.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.payload import chunk_payload, fixed_projection
+from .kernels.waterfill import wf_phi_batch
+
+
+def wf_phi_model(busy, mu, sizes, avail):
+    """int32[B,M], int32[B,M], int32[B,K], int32[B,K,M] ->
+    (phi int32[B], busy_out int32[B,M])."""
+    phi, busy_out = wf_phi_batch(busy, mu, sizes, avail)
+    return phi, busy_out
+
+
+def payload_model(x):
+    """f32[N, D] -> f32[N], with the fixed projection (D -> F = D // 2)."""
+    n, d = x.shape
+    w = fixed_projection(d, max(d // 2, 1))
+    return (chunk_payload(x, w),)
+
+
+def wf_phi_lowered(b, k, m):
+    """Lower wf_phi_model at static shape (B=b, K=k, M=m)."""
+    spec_bm = jax.ShapeDtypeStruct((b, m), jnp.int32)
+    spec_bk = jax.ShapeDtypeStruct((b, k), jnp.int32)
+    spec_bkm = jax.ShapeDtypeStruct((b, k, m), jnp.int32)
+    return jax.jit(wf_phi_model).lower(spec_bm, spec_bm, spec_bk, spec_bkm)
+
+
+def payload_lowered(n, d):
+    """Lower payload_model at static shape (N=n, D=d)."""
+    spec = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    return jax.jit(payload_model).lower(spec)

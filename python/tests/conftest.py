@@ -1,0 +1,5 @@
+import jax
+
+# The water-filling kernel accumulates level capacities in int64; enable
+# x64 before any kernel module is imported (aot.py does the same).
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,72 @@
+"""Pallas payload kernel vs the float64 numpy oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.payload import chunk_payload, fixed_projection, payload_fixed
+from compile.kernels.ref import payload_ref
+
+
+def test_known_zero_input():
+    x = np.zeros((4, 8), np.float32)
+    w = fixed_projection(8, 4)
+    y = np.asarray(chunk_payload(x, w))
+    np.testing.assert_allclose(y, 0.0, atol=1e-7)
+
+
+def test_matches_ref_basic():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(8, 16)).astype(np.float32)
+    w = rng.normal(size=(16, 4)).astype(np.float32)
+    y = np.asarray(chunk_payload(x, w))
+    np.testing.assert_allclose(y, payload_ref(x, w), rtol=1e-5, atol=1e-5)
+
+
+def test_blocking_invariance():
+    """The BlockSpec tiling must not change the numbers."""
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(32, 8)).astype(np.float32)
+    w = rng.normal(size=(8, 4)).astype(np.float32)
+    y_full = np.asarray(chunk_payload(x, w, block_n=32))
+    y_tiled = np.asarray(chunk_payload(x, w, block_n=8))
+    np.testing.assert_allclose(y_full, y_tiled, rtol=1e-6, atol=1e-6)
+
+
+def test_payload_fixed_entrypoint():
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(64, 32)).astype(np.float32)
+    y = payload_fixed(x, d=32, f=16)
+    w = np.asarray(fixed_projection(32, 16))
+    np.testing.assert_allclose(np.asarray(y), payload_ref(x, w), rtol=1e-4, atol=1e-5)
+
+
+def test_fixed_projection_deterministic():
+    a = np.asarray(fixed_projection(16, 8))
+    b = np.asarray(fixed_projection(16, 8))
+    np.testing.assert_array_equal(a, b)
+    assert np.abs(a).max() <= 0.43 + 1e-6
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.sampled_from([(4, 4, 2), (8, 16, 4), (16, 8, 8), (64, 32, 16)]),
+    st.integers(0, 2**31 - 1),
+)
+def test_matches_ref_across_shapes(shape, seed):
+    n, d, f = shape
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-3, 3, size=(n, d)).astype(np.float32)
+    w = rng.uniform(-1, 1, size=(d, f)).astype(np.float32)
+    y = np.asarray(chunk_payload(x, w))
+    np.testing.assert_allclose(y, payload_ref(x, w), rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(-50, 50, allow_nan=False))
+def test_saturation_bounded(scale):
+    """tanh^2 <= 1, so y <= F regardless of input magnitude."""
+    x = np.full((4, 8), np.float32(scale))
+    w = np.asarray(fixed_projection(8, 4))
+    y = np.asarray(chunk_payload(x, w))
+    assert (y <= 4.0 + 1e-5).all()
+    assert (y >= 0.0).all()

@@ -1,0 +1,213 @@
+"""Pallas water-filling kernel vs the pure-numpy oracle.
+
+The oracle (`ref.wf_phi_ref`) mirrors rust's `assign::wf`; the kernel must
+agree *exactly* (integer semantics) on every instance, including the
+padding contract (zero-size groups / all-zero availability rows).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import water_level_ref, wf_phi_ref
+from compile.kernels.waterfill import wf_phi_batch
+
+
+def run_kernel(busy, mu, sizes, avail):
+    phi, busy_out = wf_phi_batch(
+        np.asarray(busy, np.int32),
+        np.asarray(mu, np.int32),
+        np.asarray(sizes, np.int32),
+        np.asarray(avail, np.int32),
+    )
+    return np.asarray(phi, np.int64), np.asarray(busy_out, np.int64)
+
+
+def assert_matches_ref(busy, mu, sizes, avail):
+    phi_k, busy_k = run_kernel(busy, mu, sizes, avail)
+    phi_r, busy_r = wf_phi_ref(busy, mu, sizes, avail)
+    np.testing.assert_array_equal(phi_k, phi_r)
+    np.testing.assert_array_equal(busy_k, busy_r)
+
+
+# ---------- directed cases ----------
+
+
+def test_single_group_idle_servers():
+    # 12 tasks over 3 idle servers with mu=2 -> level 2, phi 2.
+    busy = [[0, 0, 0]]
+    mu = [[2, 2, 2]]
+    sizes = [[12]]
+    avail = [[[1, 1, 1]]]
+    phi, busy_out = run_kernel(busy, mu, sizes, avail)
+    assert phi.tolist() == [2]
+    assert busy_out.tolist() == [[2, 2, 2]]
+
+
+def test_busy_server_excluded():
+    busy = [[10, 0]]
+    mu = [[1, 1]]
+    sizes = [[4]]
+    avail = [[[1, 1]]]
+    phi, busy_out = run_kernel(busy, mu, sizes, avail)
+    assert phi.tolist() == [4]
+    assert busy_out.tolist() == [[10, 4]]
+
+
+def test_sequential_groups_stack():
+    # Mirrors the rust unit test `sequential_groups_stack`.
+    busy = [[0, 0, 0]]
+    mu = [[1, 1, 1]]
+    sizes = [[4, 4]]
+    avail = [[[1, 1, 0], [0, 1, 1]]]
+    phi, busy_out = run_kernel(busy, mu, sizes, avail)
+    assert phi.tolist() == [3]
+    assert busy_out.tolist() == [[2, 3, 3]]
+
+
+def test_zero_size_groups_are_noops():
+    busy = [[3, 1]]
+    mu = [[2, 2]]
+    sizes = [[0, 6, 0]]
+    avail = [[[1, 1], [1, 1], [0, 0]]]
+    phi, busy_out = run_kernel(busy, mu, sizes, avail)
+    # Level for the middle group: busy (3,1): xi=3 -> (0 + 2*2)=4 < 6;
+    # xi=4 -> (1*2 + 3*2) = 8 >= 6 -> xi 4.
+    assert phi.tolist() == [4]
+    assert busy_out.tolist() == [[4, 4]]
+
+
+def test_fully_padded_row():
+    busy = [[0, 0], [5, 7]]
+    mu = [[1, 1], [2, 2]]
+    sizes = [[3], [0]]
+    avail = [[[1, 1]], [[0, 0]]]
+    phi, busy_out = run_kernel(busy, mu, sizes, avail)
+    assert phi[1] == 0
+    assert busy_out[1].tolist() == [5, 7]
+
+
+def test_theorem1_construction():
+    # K=3, theta=3: WF phi must be K*theta = 9.
+    theta, K = 3, 3
+    sizes_per_group = [sum(theta**e for e in range(1, K - k + 2)) for k in range(K)]
+    m = sizes_per_group[0]
+    avail = np.zeros((1, K, m), np.int32)
+    sizes = np.zeros((1, K), np.int32)
+    for k in range(K):
+        avail[0, k, : sizes_per_group[k]] = 1
+        sizes[0, k] = theta * sizes_per_group[k]
+    busy = np.zeros((1, m), np.int32)
+    mu = np.ones((1, m), np.int32)
+    phi, _ = run_kernel(busy, mu, sizes, avail)
+    assert phi.tolist() == [K * theta]
+    assert_matches_ref(busy, mu, sizes, avail)
+
+
+def test_saturated_single_server():
+    busy = [[7]]
+    mu = [[3]]
+    sizes = [[10]]
+    avail = [[[1]]]
+    phi, _ = run_kernel(busy, mu, sizes, avail)
+    assert phi.tolist() == [7 + 4]  # ceil(10/3) past the backlog
+
+
+def test_large_values_no_overflow():
+    # Capacity sums cross 2^31 during early probes; int64 internals must
+    # keep the result exact.
+    busy = [[1_000_000, 0]]
+    mu = [[7, 7]]
+    sizes = [[2_000_000]]
+    avail = [[[1, 1]]]
+    assert_matches_ref(busy, mu, sizes, avail)
+
+
+def test_water_level_ref_minimal():
+    # The oracle's own invariant, spot-checked.
+    assert water_level_ref([1, 1], 5, [0, 0], [2, 3]) == 1
+    assert water_level_ref([1, 1], 6, [0, 0], [2, 3]) == 2
+    assert water_level_ref([1, 0], 6, [0, 99], [2, 3]) == 3
+
+
+# ---------- hypothesis sweeps ----------
+
+instances = st.integers(1, 4).flatmap(
+    lambda b: st.integers(1, 4).flatmap(
+        lambda k: st.integers(1, 6).flatmap(
+            lambda m: st.tuples(
+                st.just((b, k, m)),
+                st.lists(
+                    st.integers(0, 40), min_size=b * m, max_size=b * m
+                ),  # busy
+                st.lists(st.integers(1, 5), min_size=b * m, max_size=b * m),  # mu
+                st.lists(st.integers(0, 60), min_size=b * k, max_size=b * k),  # sizes
+                st.lists(
+                    st.integers(0, 1), min_size=b * k * m, max_size=b * k * m
+                ),  # avail
+            )
+        )
+    )
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(instances)
+def test_kernel_matches_ref_on_random_instances(data):
+    (b, k, m), busy, mu, sizes, avail = data
+    busy = np.array(busy, np.int32).reshape(b, m)
+    mu = np.array(mu, np.int32).reshape(b, m)
+    sizes = np.array(sizes, np.int32).reshape(b, k)
+    avail = np.array(avail, np.int32).reshape(b, k, m)
+    # Padding contract: a group with no available servers must be empty.
+    for row in range(b):
+        for g in range(k):
+            if avail[row, g].sum() == 0:
+                sizes[row, g] = 0
+    assert_matches_ref(busy, mu, sizes, avail)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(1, 3),
+    st.integers(1, 8),
+    st.lists(st.integers(0, 30), min_size=1, max_size=8),
+)
+def test_busy_monotone_nondecreasing(b_rows, m, sizes_list):
+    """Water-filling never lowers a busy time (eq. 8)."""
+    k = len(sizes_list)
+    rng = np.random.default_rng(42)
+    busy = rng.integers(0, 20, size=(b_rows, m)).astype(np.int32)
+    mu = rng.integers(1, 5, size=(b_rows, m)).astype(np.int32)
+    sizes = np.tile(np.array(sizes_list, np.int32), (b_rows, 1))
+    avail = rng.integers(0, 2, size=(b_rows, k, m)).astype(np.int32)
+    for row in range(b_rows):
+        for g in range(k):
+            if avail[row, g].sum() == 0:
+                avail[row, g, 0] = 1
+    _, busy_out = run_kernel(busy, mu, sizes, avail)
+    assert (busy_out >= busy).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**20), st.integers(1, 7))
+def test_single_server_level_is_ceil(size, mu_v):
+    busy = [[0]]
+    mu = [[mu_v]]
+    sizes = [[size]]
+    avail = [[[1]]]
+    phi, _ = run_kernel(busy, mu, sizes, avail)
+    assert phi[0] == -(-size // mu_v)  # ceil division
+
+
+@pytest.mark.parametrize("dtype", [np.int32])
+def test_dtype_contract(dtype):
+    # The artifact interface is int32-in/int32-out.
+    phi, busy_out = wf_phi_batch(
+        np.zeros((1, 2), dtype),
+        np.ones((1, 2), dtype),
+        np.full((1, 1), 4, dtype),
+        np.ones((1, 1, 2), dtype),
+    )
+    assert phi.dtype == np.int32
+    assert busy_out.dtype == np.int32

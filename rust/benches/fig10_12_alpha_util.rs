@@ -1,0 +1,52 @@
+//! Regenerates Figures 10, 11 and 12: average job completion time,
+//! per-arrival computation overhead, and JCT CDFs for all six algorithms
+//! as the Zipf skew α sweeps 0 → 2, at 25% / 50% / 75% utilization.
+//!
+//! `cargo bench --bench fig10_12_alpha_util` (full paper scale) or with
+//! `TAOS_BENCH_QUICK=1` / `-- --quick` for the scaled-down workload.
+//! JSON series land in `bench_results/`.
+
+use taos::sweep;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("TAOS_BENCH_QUICK").is_ok();
+    let base = if quick {
+        sweep::quick_base(42)
+    } else {
+        sweep::paper_base(42)
+    };
+    let alphas = [0.0, 0.5, 1.0, 1.5, 2.0];
+    std::fs::create_dir_all("bench_results").ok();
+
+    for (fig, util) in [("fig10", 0.25), ("fig11", 0.50), ("fig12", 0.75)] {
+        let t0 = std::time::Instant::now();
+        let figure = sweep::fig_alpha_util(&base, util, &alphas);
+        println!(
+            "\n================ {} (paper Fig {}) — {:.0}% utilization ({:.1}s) ================",
+            figure.name,
+            &fig[3..],
+            util * 100.0,
+            t0.elapsed().as_secs_f64()
+        );
+        println!("{}", figure.render());
+        let path = format!("bench_results/{fig}.json");
+        std::fs::write(&path, figure.to_json().to_string()).expect("write json");
+        println!("wrote {path}");
+
+        // The paper's qualitative checks for these figures.
+        let last = *alphas.last().unwrap();
+        let nlip = figure.cell("nlip", last).unwrap().mean_jct;
+        let obta = figure.cell("obta", last).unwrap().mean_jct;
+        let wf = figure.cell("wf", last).unwrap().mean_jct;
+        let ocwf = figure.cell("ocwf", last).unwrap().mean_jct;
+        let ocwf_acc = figure.cell("ocwf-acc", last).unwrap().mean_jct;
+        println!(
+            "checks @ alpha=2: OBTA~NLIP diff {:.1}%  |  WF/OBTA {:.2}x  |  OCWF/WF {:.2}x  |  OCWF==ACC: {}",
+            100.0 * (obta - nlip).abs() / nlip.max(1.0),
+            wf / obta.max(1.0),
+            ocwf / wf.max(1.0),
+            (ocwf - ocwf_acc).abs() < 1e-9,
+        );
+    }
+}

@@ -1,0 +1,47 @@
+//! Regenerates Figure 13 and Table I: average job completion time and
+//! JCT CDFs as the number of available servers per task group sweeps
+//! p ∈ {4, 6, 8, 10, 12}, at α = 2 and 75% utilization.
+//!
+//! `cargo bench --bench fig13_table1_servers` (paper scale) or
+//! `TAOS_BENCH_QUICK=1` for CI. Prints the exact row layout of Table I.
+
+use taos::sweep;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("TAOS_BENCH_QUICK").is_ok();
+    let base = if quick {
+        sweep::quick_base(42)
+    } else {
+        sweep::paper_base(42)
+    };
+    let ps = [4usize, 6, 8, 10, 12];
+    let t0 = std::time::Instant::now();
+    let figure = sweep::fig_servers(&base, &ps);
+    println!(
+        "================ Fig 13 / Table I — #available servers ({:.1}s) ================",
+        t0.elapsed().as_secs_f64()
+    );
+    println!("{}", figure.render());
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write(
+        "bench_results/fig13_table1.json",
+        figure.to_json().to_string(),
+    )
+    .expect("write json");
+    println!("wrote bench_results/fig13_table1.json");
+
+    // Table I's qualitative shape: JCT decreases with p for every
+    // algorithm; the reordered pair coincides and dominates.
+    for policy in ["obta", "wf", "ocwf"] {
+        let first = figure.cell(policy, 4.0).unwrap().mean_jct;
+        let last = figure.cell(policy, 12.0).unwrap().mean_jct;
+        println!(
+            "check {policy}: JCT p=4 {first:.0} -> p=12 {last:.0} ({})",
+            if last < first { "decreasing OK" } else { "NOT decreasing" }
+        );
+    }
+    let o = figure.cell("ocwf", 8.0).unwrap().mean_jct;
+    let a = figure.cell("ocwf-acc", 8.0).unwrap().mean_jct;
+    println!("check ocwf == ocwf-acc at p=8: {}", (o - a).abs() < 1e-9);
+}

@@ -1,0 +1,41 @@
+//! Regenerates Figure 14: average job completion time and JCT CDFs as
+//! the computing capacity range sweeps (μ ∈ [mid−1, mid+1] for
+//! mid ∈ {2..6}), at α = 2 and 75% utilization.
+//!
+//! `cargo bench --bench fig14_capacity` (paper scale) or
+//! `TAOS_BENCH_QUICK=1` for CI.
+
+use taos::sweep;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("TAOS_BENCH_QUICK").is_ok();
+    let base = if quick {
+        sweep::quick_base(42)
+    } else {
+        sweep::paper_base(42)
+    };
+    let mids = [2u64, 3, 4, 5, 6];
+    let t0 = std::time::Instant::now();
+    let figure = sweep::fig_capacity(&base, &mids);
+    println!(
+        "================ Fig 14 — computing capacity ({:.1}s) ================",
+        t0.elapsed().as_secs_f64()
+    );
+    println!("{}", figure.render());
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/fig14.json", figure.to_json().to_string())
+        .expect("write json");
+    println!("wrote bench_results/fig14.json");
+
+    // Fig 14's qualitative shape: higher capacity → lower JCT; relative
+    // algorithm ordering stable.
+    for policy in ["obta", "wf", "rd", "ocwf"] {
+        let lo = figure.cell(policy, 2.0).unwrap().mean_jct;
+        let hi = figure.cell(policy, 6.0).unwrap().mean_jct;
+        println!(
+            "check {policy}: JCT mu~2 {lo:.0} -> mu~6 {hi:.0} ({})",
+            if hi < lo { "decreasing OK" } else { "NOT decreasing" }
+        );
+    }
+}

@@ -1,0 +1,107 @@
+//! Micro-benchmarks of the hot paths: one assignment per algorithm on a
+//! paper-shaped instance (M = 100 servers, K ≈ 5.5 groups, p ∈ [8, 12]
+//! available servers, μ ∈ [3, 5]), plus the substrate primitives
+//! (water-level search, Dinic feasibility probe, OCWF reorder round).
+//!
+//! These are the numbers the PERFORMANCE section of EXPERIMENTS.md
+//! tracks. `cargo bench --bench micro_assign` (add `-- --quick` for CI).
+
+use taos::assign::bounds::water_level;
+use taos::assign::feasible::Oracle;
+use taos::assign::{bounds, AssignPolicy, Assigner, Instance};
+use taos::benchlib::{black_box, Bench};
+use taos::job::TaskGroup;
+use taos::sched::ocwf::{reorder, Outstanding};
+use taos::util::rng::Rng;
+
+/// A paper-shaped instance: `k` groups over `m` servers.
+fn paper_instance(rng: &mut Rng, m: usize, k: usize) -> (Vec<TaskGroup>, Vec<u64>, Vec<u64>) {
+    let mu: Vec<u64> = (0..m).map(|_| rng.gen_range_incl(3, 5)).collect();
+    let busy: Vec<u64> = (0..m).map(|_| rng.gen_range(50)).collect();
+    let groups: Vec<TaskGroup> = (0..k)
+        .map(|_| {
+            let p = rng.gen_range_incl(8, 12) as usize;
+            let anchor = rng.gen_range(m as u64) as usize;
+            let servers: Vec<usize> = (0..p).map(|i| (anchor + i) % m).collect();
+            TaskGroup::new(rng.gen_range_incl(20, 160), servers)
+        })
+        .collect();
+    (groups, mu, busy)
+}
+
+fn main() {
+    let mut bench = Bench::new();
+    let mut rng = Rng::seed_from(0xBE7C);
+    let m = 100;
+
+    // A stable set of instances to cycle through (avoids benchmarking a
+    // single lucky shape).
+    let instances: Vec<_> = (0..32).map(|_| paper_instance(&mut rng, m, 6)).collect();
+
+    for policy in AssignPolicy::ALL {
+        let mut assigner = policy.build(7);
+        let mut i = 0;
+        bench.run(&format!("assign/{}@M100_K6", policy.name()), || {
+            let (groups, mu, busy) = &instances[i % instances.len()];
+            i += 1;
+            let inst = Instance { groups, mu, busy };
+            black_box(assigner.assign(&inst))
+        });
+    }
+
+    // Substrate: the water-level binary search (WF's inner loop).
+    {
+        let (groups, mu, busy) = &instances[0];
+        let g = &groups[0];
+        bench.run("substrate/water_level@p12", || {
+            black_box(water_level(&g.servers, g.size, busy, mu))
+        });
+    }
+
+    // Substrate: one feasibility probe (flow build + max-flow) at Φ⁺.
+    {
+        let (groups, mu, busy) = &instances[0];
+        let inst = Instance { groups, mu, busy };
+        let hi = bounds::phi_upper(&inst) + groups.len() as u64;
+        bench.run("substrate/feasibility_probe", || {
+            let mut oracle = Oracle::new(&inst);
+            black_box(oracle.check(hi).is_some())
+        });
+    }
+
+    // Scheduler: one OCWF-ACC reorder round over 12 outstanding jobs.
+    {
+        let jobs: Vec<taos::job::Job> = (0..12)
+            .map(|id| {
+                let (groups, mu, _) = paper_instance(&mut rng, m, 6);
+                taos::job::Job {
+                    id,
+                    arrival: id as u64,
+                    groups,
+                    mu,
+                }
+            })
+            .collect();
+        let outstanding: Vec<Outstanding> = jobs
+            .iter()
+            .map(|j| Outstanding {
+                job: j,
+                remaining: j.groups.iter().map(|g| g.size).collect(),
+            })
+            .collect();
+        let mut wf = taos::assign::wf::Wf::new();
+        bench.run("sched/ocwf_acc_reorder@12jobs", || {
+            black_box(reorder(&outstanding, m, true, &mut wf).order.len())
+        });
+        let mut wf2 = taos::assign::wf::Wf::new();
+        bench.run("sched/ocwf_reorder@12jobs", || {
+            black_box(reorder(&outstanding, m, false, &mut wf2).order.len())
+        });
+    }
+
+    std::fs::create_dir_all("bench_results").ok();
+    bench
+        .write_json("bench_results/micro_assign.jsonl")
+        .expect("write bench json");
+    println!("\nwrote bench_results/micro_assign.jsonl");
+}

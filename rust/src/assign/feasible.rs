@@ -1,0 +1,709 @@
+//! The per-Φ feasibility oracle behind NLIP and OBTA.
+//!
+//! At a fixed candidate Φ, program `P` (eq. 4) asks whether every group's
+//! tasks fit into the slot budgets `cap_m = max{Φ − b_m, 0}`. The oracle
+//! answers exactly, in three tiers (fast → slow), returning the concrete
+//! allocation when feasible:
+//!
+//! 1. **Flow relaxation** (task units): bipartite max-flow with server
+//!    capacity `cap_m·μ_m` tasks. The LP relaxation of `P` at fixed Φ is
+//!    *equivalent* to this flow (substitute `t = μ·y`), so an unsaturated
+//!    flow certifies the integer program infeasible — *certified no*.
+//! 2. **Ceil extraction**: round each `(group, server)` flow quantity up
+//!    to whole slots; if every server still fits its slot budget —
+//!    *certified yes* with that allocation.
+//! 3. **Floor + residual ILP**: floor the flow to whole slots (never
+//!    exceeds budgets), then cover the per-group residuals (each < Σ μ)
+//!    with the spare slots via a *small* exact branch & bound. Certified
+//!    yes when it covers.
+//! 4. **Full ILP** ([`super::ilp`]): slot-unit branch & bound over the
+//!    whole instance, within a node budget. `Unknown` (budget exhausted)
+//!    is treated as infeasible: the surrounding Φ search then settles on
+//!    a slightly larger but still valid Φ — a bounded, telemetered
+//!    deviation from exactness (`stats.ilp_unknown`), never observed on
+//!    the brute-force-checked instance sizes.
+//!
+//! Tiers 1–3 resolve virtually every real instance (group sizes ≫ μ);
+//! the tier counters feed the perf report (EXPERIMENTS.md §Perf).
+
+use crate::flow::{Dinic, EdgeRef};
+use crate::job::{ServerId, Slots, TaskCount};
+use crate::util::ceil_div;
+
+use super::ilp::{ilp_feasible, Constraint, IlpOutcome, Sense};
+use super::Instance;
+
+/// Per-process counters of which tier decided feasibility (perf telemetry).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OracleStats {
+    pub flow_infeasible: u64,
+    pub ceil_feasible: u64,
+    pub floor_residual_feasible: u64,
+    pub ilp_calls: u64,
+    /// Full-ILP budget exhaustions treated as infeasible (see module docs).
+    pub ilp_unknown: u64,
+}
+
+impl OracleStats {
+    pub fn merge(&mut self, other: &OracleStats) {
+        self.flow_infeasible += other.flow_infeasible;
+        self.ceil_feasible += other.ceil_feasible;
+        self.floor_residual_feasible += other.floor_residual_feasible;
+        self.ilp_calls += other.ilp_calls;
+        self.ilp_unknown += other.ilp_unknown;
+    }
+}
+
+/// Feasibility oracle for one instance; reusable across candidate Φ values
+/// (binary search). The flow network is built once — only the sink-edge
+/// capacities depend on Φ, so each probe is a reset + recapacitate +
+/// max-flow, with zero graph construction.
+pub struct Oracle<'a> {
+    inst: &'a Instance<'a>,
+    /// Non-empty group indices.
+    groups: Vec<usize>,
+    /// Union of available servers, sorted; `server_pos[m]` is its index.
+    union: Vec<ServerId>,
+    server_pos: std::collections::HashMap<ServerId, usize>,
+    total: TaskCount,
+    net: Dinic,
+    /// Per group (in `groups` order): the (server, edge) pairs.
+    group_edges: Vec<Vec<(ServerId, EdgeRef)>>,
+    /// Per union server: the server→sink edge (capacity = f(Φ)).
+    sink_edges: Vec<EdgeRef>,
+    pub stats: OracleStats,
+}
+
+impl<'a> Oracle<'a> {
+    pub fn new(inst: &'a Instance<'a>) -> Self {
+        let groups: Vec<usize> = (0..inst.groups.len())
+            .filter(|&k| inst.groups[k].size > 0)
+            .collect();
+        let union = inst.union_servers();
+        let server_pos: std::collections::HashMap<ServerId, usize> =
+            union.iter().enumerate().map(|(i, &m)| (m, i)).collect();
+        let total = inst.total_tasks();
+
+        // Build the bipartite flow network once.
+        // Nodes: 0 = source, 1..=G groups, G+1..=G+S servers, last = sink.
+        let g_n = groups.len();
+        let s_n = union.len();
+        let mut net = Dinic::new(2 + g_n + s_n);
+        let src = 0;
+        let mut group_edges = Vec::with_capacity(g_n);
+        for (gi, &k) in groups.iter().enumerate() {
+            let g = &inst.groups[k];
+            net.add_edge(src, 1 + gi, g.size);
+            let mut edges = Vec::with_capacity(g.servers.len());
+            for &m in &g.servers {
+                let si = server_pos[&m];
+                edges.push((m, net.add_edge(1 + gi, 1 + g_n + si, g.size)));
+            }
+            group_edges.push(edges);
+        }
+        let sink = 1 + g_n + s_n;
+        let sink_edges: Vec<EdgeRef> = union
+            .iter()
+            .enumerate()
+            .map(|(si, _)| net.add_edge(1 + g_n + si, sink, 0))
+            .collect();
+
+        Oracle {
+            inst,
+            groups,
+            union,
+            server_pos,
+            total,
+            net,
+            group_edges,
+            sink_edges,
+            stats: OracleStats::default(),
+        }
+    }
+
+    /// Decide feasibility at Φ; on success return the per-group
+    /// `(server, tasks)` allocation (aligned with `inst.groups`, empty
+    /// groups get empty allocations).
+    pub fn check(&mut self, phi: Slots) -> Option<Vec<Vec<(ServerId, TaskCount)>>> {
+        if self.total == 0 {
+            return Some(vec![Vec::new(); self.inst.groups.len()]);
+        }
+        let caps: Vec<Slots> = self
+            .union
+            .iter()
+            .map(|&m| phi.saturating_sub(self.inst.busy[m]))
+            .collect();
+
+        // --- Tier 1: max-flow relaxation in task units ---
+        let g_n = self.groups.len();
+        let s_n = self.union.len();
+        let src = 0;
+        let sink = 1 + g_n + s_n;
+        self.net.reset();
+        for (si, &m) in self.union.iter().enumerate() {
+            let task_cap = caps[si].saturating_mul(self.inst.mu[m]);
+            self.net.set_cap(self.sink_edges[si], task_cap);
+        }
+        let flow = self.net.max_flow(src, sink);
+        if flow < self.total {
+            self.stats.flow_infeasible += 1;
+            return None;
+        }
+        let net = &self.net;
+        let group_edges = &self.group_edges;
+
+        // --- Tier 2: ceil extraction ---
+        let mut alloc: Vec<Vec<(ServerId, TaskCount)>> =
+            vec![Vec::new(); self.inst.groups.len()];
+        let mut slot_use = vec![0u64; s_n];
+        // Per (group, server): the flow amount, for tiers 2–3.
+        let mut flows: Vec<Vec<(ServerId, TaskCount)>> = vec![Vec::new(); g_n];
+        for (gi, &k) in self.groups.iter().enumerate() {
+            for &(m, e) in &group_edges[gi] {
+                let f = net.flow_of(e);
+                if f > 0 {
+                    alloc[k].push((m, f));
+                    flows[gi].push((m, f));
+                    slot_use[self.server_pos[&m]] += ceil_div(f, self.inst.mu[m]);
+                }
+            }
+        }
+        if slot_use.iter().zip(&caps).all(|(&used, &cap)| used <= cap) {
+            self.stats.ceil_feasible += 1;
+            return Some(alloc);
+        }
+
+        // --- Tier 3: floor the flow, cover residuals with a small ILP ---
+        if let Some(alloc) = self.floor_residual(&flows, &caps) {
+            self.stats.floor_residual_feasible += 1;
+            return Some(alloc);
+        }
+
+        // --- Tier 4: exact slot-unit ILP over the whole instance ---
+        self.stats.ilp_calls += 1;
+        // Variables: one per (group, server) edge, in deterministic order.
+        let mut var_of: Vec<Vec<usize>> = Vec::with_capacity(g_n);
+        let mut nvars = 0;
+        for &k in &self.groups {
+            let g = &self.inst.groups[k];
+            var_of.push((0..g.servers.len()).map(|j| nvars + j).collect());
+            nvars += g.servers.len();
+        }
+        let mut constraints = Vec::new();
+        // Slot budgets per server.
+        for (si, &m) in self.union.iter().enumerate() {
+            let mut terms = Vec::new();
+            for (gi, &k) in self.groups.iter().enumerate() {
+                let g = &self.inst.groups[k];
+                if let Some(j) = g.servers.iter().position(|&x| x == m) {
+                    terms.push((var_of[gi][j], 1.0));
+                }
+            }
+            if !terms.is_empty() {
+                constraints.push(Constraint {
+                    terms,
+                    sense: Sense::Le,
+                    rhs: caps[si] as f64,
+                });
+            }
+        }
+        // Coverage per group.
+        for (gi, &k) in self.groups.iter().enumerate() {
+            let g = &self.inst.groups[k];
+            let terms = g
+                .servers
+                .iter()
+                .enumerate()
+                .map(|(j, &m)| (var_of[gi][j], self.inst.mu[m] as f64))
+                .collect();
+            constraints.push(Constraint {
+                terms,
+                sense: Sense::Ge,
+                rhs: g.size as f64,
+            });
+        }
+        match ilp_feasible(nvars, &constraints) {
+            IlpOutcome::Infeasible => None,
+            IlpOutcome::Unknown => {
+                self.stats.ilp_unknown += 1;
+                None
+            }
+            IlpOutcome::Feasible(y) => {
+                // Convert slot counts to task counts: walk each group's
+                // servers, taking up to y·μ tasks, last taker absorbs the
+                // remainder (coverage guarantees enough capacity).
+                let mut alloc: Vec<Vec<(ServerId, TaskCount)>> =
+                    vec![Vec::new(); self.inst.groups.len()];
+                for (gi, &k) in self.groups.iter().enumerate() {
+                    let g = &self.inst.groups[k];
+                    let mut remaining = g.size;
+                    for (j, &m) in g.servers.iter().enumerate() {
+                        if remaining == 0 {
+                            break;
+                        }
+                        let cap = y[var_of[gi][j]] * self.inst.mu[m];
+                        let take = cap.min(remaining);
+                        if take > 0 {
+                            alloc[k].push((m, take));
+                            remaining -= take;
+                        }
+                    }
+                    debug_assert_eq!(remaining, 0, "ILP coverage violated");
+                }
+                Some(alloc)
+            }
+        }
+    }
+
+    /// Tier 3: floor every flow quantity to whole slots (never exceeds
+    /// any slot budget), then try to cover the small per-group residual
+    /// demands with the spare slots via an exact ILP on the *residual*
+    /// instance only. Residuals are < μ per (group, server) pair, so the
+    /// residual ILP is tiny and its B&B converges immediately.
+    fn floor_residual(
+        &mut self,
+        flows: &[Vec<(ServerId, TaskCount)>],
+        caps: &[Slots],
+    ) -> Option<Vec<Vec<(ServerId, TaskCount)>>> {
+        let g_n = self.groups.len();
+        // Floored allocation + spare capacity.
+        let mut floored: Vec<Vec<(ServerId, TaskCount)>> = vec![Vec::new(); g_n];
+        let mut used_slots = vec![0u64; self.union.len()];
+        let mut residual = vec![0u64; g_n];
+        for (gi, f) in flows.iter().enumerate() {
+            for &(m, t) in f {
+                let mu = self.inst.mu[m];
+                let whole = t / mu;
+                if whole > 0 {
+                    floored[gi].push((m, whole * mu));
+                    used_slots[self.server_pos[&m]] += whole;
+                }
+                residual[gi] += t % mu;
+            }
+        }
+        let spare: Vec<u64> = caps
+            .iter()
+            .zip(&used_slots)
+            .map(|(&c, &u)| c - u) // floors cannot exceed the budget
+            .collect();
+
+        // Residual ILP: cover residual[gi] tasks from the group's servers
+        // using spare slots. Only groups with a residual get variables —
+        // the others are already fully served by their floors.
+        let active: Vec<usize> = (0..g_n).filter(|&gi| residual[gi] > 0).collect();
+        if active.is_empty() {
+            // Floors alone cover everything (flow was slot-aligned).
+            let mut alloc: Vec<Vec<(ServerId, TaskCount)>> =
+                vec![Vec::new(); self.inst.groups.len()];
+            for (gi, &k) in self.groups.iter().enumerate() {
+                let g = &self.inst.groups[k];
+                let mut remaining = g.size;
+                for &(m, t) in &floored[gi] {
+                    let take = t.min(remaining);
+                    if take > 0 {
+                        alloc[k].push((m, take));
+                        remaining -= take;
+                    }
+                }
+                if remaining > 0 {
+                    return None;
+                }
+            }
+            return Some(alloc);
+        }
+        // Exact residual cover by DFS + memoization — *simplex-free*.
+        // Residual demands are < μ per (group, server) pair, so per-group
+        // slot needs are tiny and the memoized search resolves in
+        // microseconds; this is what keeps the boundary probes of the Φ
+        // search cheap (EXPERIMENTS.md §Perf).
+        match residual_cover_dfs(
+            &active,
+            &residual,
+            &spare,
+            &self.groups,
+            self.inst,
+            &self.server_pos,
+        ) {
+            Some(cover) => self.combine_floor_cover(&floored, &cover),
+            None => None,
+        }
+    }
+
+    /// Merge the floored flow allocation with a residual slot cover
+    /// (`cover[gi]` = (server index within the group, slots)) into the
+    /// final per-group `(server, tasks)` allocation.
+    pub(crate) fn combine_floor_cover(
+        &self,
+        floored: &[Vec<(ServerId, TaskCount)>],
+        cover: &[Vec<(usize, u64)>],
+    ) -> Option<Vec<Vec<(ServerId, TaskCount)>>> {
+        let mut alloc: Vec<Vec<(ServerId, TaskCount)>> =
+            vec![Vec::new(); self.inst.groups.len()];
+        for (gi, &k) in self.groups.iter().enumerate() {
+            let g = &self.inst.groups[k];
+            // Capacity per server: floored amount + residual slots · μ.
+            let mut cap_here: std::collections::BTreeMap<ServerId, u64> = Default::default();
+            for &(m, t) in &floored[gi] {
+                *cap_here.entry(m).or_insert(0) += t;
+            }
+            for &(j, slots) in &cover[gi] {
+                let m = g.servers[j];
+                *cap_here.entry(m).or_insert(0) += slots * self.inst.mu[m];
+            }
+            let mut remaining = g.size;
+            for (&m, &cap) in &cap_here {
+                if remaining == 0 {
+                    break;
+                }
+                let take = cap.min(remaining);
+                if take > 0 {
+                    alloc[k].push((m, take));
+                    remaining -= take;
+                }
+            }
+            if remaining > 0 {
+                return None; // defensive: cover fell short
+            }
+        }
+        Some(alloc)
+    }
+
+    /// Smallest feasible Φ in `[lo, hi]` (monotone binary search), with
+    /// its allocation.
+    ///
+    /// `hi` is a *hint*: it is expected to be feasible (Φ⁺ or the
+    /// trivial bound) but is only probed if the search actually converges
+    /// onto it; if it then proves infeasible (possible because Φ⁺ ignores
+    /// integer-slot collisions between groups, by at most K_c − 1 slots),
+    /// the bracket is widened by `expand` and the search resumes. Probing
+    /// lazily saves one boundary-priced feasibility check per call —
+    /// which is most of OBTA's per-arrival cost, since its narrowed
+    /// window means *every* probe lands in the expensive tight zone.
+    pub fn search_min_phi(
+        &mut self,
+        lo: Slots,
+        mut hi: Slots,
+        expand: Slots,
+    ) -> (Slots, Vec<Vec<(ServerId, TaskCount)>>) {
+        debug_assert!(lo <= hi);
+        // The lower bound Φ⁻ is tight for most arrivals (one bottleneck
+        // group); probing it first turns the common case into a single
+        // feasibility check.
+        if let Some(alloc) = self.check(lo) {
+            return (lo, alloc);
+        }
+        let mut lo = lo + 1;
+        let mut best: Option<(Slots, Vec<Vec<(ServerId, TaskCount)>>)> = None;
+        let mut guard = 0;
+        loop {
+            while lo < hi {
+                let mid = lo + (hi - lo) / 2;
+                match self.check(mid) {
+                    Some(a) => {
+                        best = Some((mid, a));
+                        hi = mid;
+                    }
+                    None => lo = mid + 1,
+                }
+            }
+            // lo == hi: done if hi was verified during the search.
+            if let Some((p, a)) = best.take() {
+                if p == hi {
+                    return (hi, a);
+                }
+                best = Some((p, a));
+            }
+            match self.check(hi) {
+                Some(a) => return (hi, a),
+                None => {
+                    // The hint was short (integer-slot collisions); widen.
+                    lo = hi + 1;
+                    hi += expand.max(1);
+                    guard += 1;
+                    assert!(guard < 64, "Φ search bracket runaway");
+                }
+            }
+        }
+    }
+}
+
+/// Exact, simplex-free cover of the (tiny) residual demands with spare
+/// slots: DFS over the active groups (most-constrained first), memoized
+/// on the spare-capacity state, node-budgeted. `None` means "could not
+/// certify" — the caller falls through to the full ILP, so a budget
+/// exhaustion (astronomically unlikely at residual sizes < μ·p) only
+/// costs time, never correctness.
+fn residual_cover_dfs(
+    active: &[usize],
+    residual: &[u64],
+    spare: &[u64],
+    group_ids: &[usize],
+    inst: &Instance,
+    server_pos: &std::collections::HashMap<ServerId, usize>,
+) -> Option<Vec<Vec<(usize, u64)>>> {
+    const BUDGET: usize = 100_000;
+    let g_n = residual.len();
+
+    // Most-constrained group order: fewest available servers first, then
+    // largest residual.
+    let mut order: Vec<usize> = active.to_vec();
+    order.sort_by_key(|&gi| {
+        let g = &inst.groups[group_ids[gi]];
+        (g.servers.len(), std::cmp::Reverse(residual[gi]))
+    });
+
+    // Per-server clamp for the memo key: spare beyond the total possible
+    // remaining use is equivalent.
+    let mut clamp = vec![0u64; spare.len()];
+    for &gi in &order {
+        let g = &inst.groups[group_ids[gi]];
+        for &m in &g.servers {
+            let si = server_pos[&m];
+            clamp[si] += ceil_div(residual[gi], inst.mu[m].max(1));
+        }
+    }
+
+    struct Ctx<'c> {
+        order: Vec<usize>,
+        residual: &'c [u64],
+        group_ids: &'c [usize],
+        inst: &'c Instance<'c>,
+        server_pos: &'c std::collections::HashMap<ServerId, usize>,
+        clamp: Vec<u64>,
+        memo: std::collections::HashMap<(usize, Vec<u8>), bool>,
+        nodes: usize,
+        cover: Vec<Vec<(usize, u64)>>,
+    }
+
+    fn key(spare: &[u64], clamp: &[u64]) -> Vec<u8> {
+        spare
+            .iter()
+            .zip(clamp)
+            .map(|(&s, &c)| s.min(c).min(250) as u8)
+            .collect()
+    }
+
+    /// Ok(true) = covered from this point; Err = budget exhausted.
+    fn rec(ctx: &mut Ctx, oi: usize, spare: &mut Vec<u64>) -> Result<bool, ()> {
+        if oi == ctx.order.len() {
+            return Ok(true);
+        }
+        ctx.nodes += 1;
+        if ctx.nodes > BUDGET {
+            return Err(());
+        }
+        // Memo of *failed* states only: successes return immediately with
+        // the cover intact (first success wins), so only exhaustive
+        // failures repeat and need pruning.
+        let k = (oi, key(spare, &ctx.clamp));
+        if ctx.memo.contains_key(&k) {
+            return Ok(false);
+        }
+        let gi = ctx.order[oi];
+        let need = ctx.residual[gi];
+        let g = &ctx.inst.groups[ctx.group_ids[gi]];
+        // Server order: highest μ first (covers with fewest slots).
+        let mut js: Vec<usize> = (0..g.servers.len()).collect();
+        js.sort_by_key(|&j| std::cmp::Reverse(ctx.inst.mu[g.servers[j]]));
+
+        fn assign(
+            ctx: &mut Ctx,
+            oi: usize,
+            js: &[usize],
+            ji: usize,
+            need: u64,
+            spare: &mut Vec<u64>,
+            taken: &mut Vec<(usize, u64)>,
+        ) -> Result<bool, ()> {
+            if need == 0 {
+                let gi = ctx.order[oi];
+                ctx.cover[gi] = taken.clone();
+                if rec(ctx, oi + 1, spare)? {
+                    return Ok(true);
+                }
+                ctx.cover[gi].clear();
+                return Ok(false);
+            }
+            if ji == js.len() {
+                return Ok(false);
+            }
+            let gi = ctx.order[oi];
+            let g = &ctx.inst.groups[ctx.group_ids[gi]];
+            let j = js[ji];
+            let m = g.servers[j];
+            let si = ctx.server_pos[&m];
+            let mu = ctx.inst.mu[m];
+            let max_take = spare[si].min(ceil_div(need, mu));
+            // Try the largest useful allocation first.
+            for s in (0..=max_take).rev() {
+                spare[si] -= s;
+                let served = (s * mu).min(need);
+                if s > 0 {
+                    taken.push((j, s));
+                }
+                let ok = assign(ctx, oi, js, ji + 1, need - served, spare, taken);
+                if s > 0 {
+                    taken.pop();
+                }
+                spare[si] += s;
+                // On success the full cover for this group was already
+                // recorded (taken.clone() in the need == 0 branch).
+                if ok? {
+                    return Ok(true);
+                }
+            }
+            Ok(false)
+        }
+
+        let mut taken = Vec::new();
+        let result = assign(ctx, oi, &js, 0, need, spare, &mut taken)?;
+        if !result {
+            ctx.memo.insert(k, true);
+        }
+        Ok(result)
+    }
+
+    let mut ctx = Ctx {
+        order,
+        residual,
+        group_ids,
+        inst,
+        server_pos,
+        clamp,
+        memo: Default::default(),
+        nodes: 0,
+        cover: vec![Vec::new(); g_n],
+    };
+    let mut spare_mut = spare.to_vec();
+    match rec(&mut ctx, 0, &mut spare_mut) {
+        Ok(true) => Some(ctx.cover),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assign::bounds::{phi_lower, phi_upper};
+    use crate::job::TaskGroup;
+
+    fn inst_fixture() -> (Vec<TaskGroup>, Vec<u64>, Vec<u64>) {
+        (
+            vec![
+                TaskGroup::new(10, vec![0, 1]),
+                TaskGroup::new(6, vec![1, 2]),
+            ],
+            vec![2, 2, 2],
+            vec![0, 3, 1],
+        )
+    }
+
+    #[test]
+    fn feasible_at_upper_infeasible_below_lower() {
+        let (groups, mu, busy) = inst_fixture();
+        let inst = Instance {
+            groups: &groups,
+            mu: &mu,
+            busy: &busy,
+        };
+        let lo = phi_lower(&inst);
+        let hi = phi_upper(&inst);
+        let mut oracle = Oracle::new(&inst);
+        assert!(oracle.check(hi).is_some(), "Φ⁺ must be feasible");
+        if lo > 0 {
+            assert!(oracle.check(lo - 1).is_none(), "below Φ⁻ must be infeasible");
+        }
+    }
+
+    #[test]
+    fn returned_allocation_fits_slot_budgets() {
+        let (groups, mu, busy) = inst_fixture();
+        let inst = Instance {
+            groups: &groups,
+            mu: &mu,
+            busy: &busy,
+        };
+        let mut oracle = Oracle::new(&inst);
+        let hi = phi_upper(&inst);
+        let (phi, alloc) = oracle.search_min_phi(phi_lower(&inst), hi, 4);
+        // Assignment covers all tasks on available servers.
+        for (k, g) in groups.iter().enumerate() {
+            let total: u64 = alloc[k].iter().map(|&(_, n)| n).sum();
+            assert_eq!(total, g.size);
+            for &(m, _) in &alloc[k] {
+                assert!(g.servers.contains(&m));
+            }
+        }
+        // Slot budgets respected at phi.
+        let mut slots = std::collections::BTreeMap::new();
+        for g in &alloc {
+            for &(m, n) in g {
+                *slots.entry(m).or_insert(0u64) += ceil_div(n, mu[m]);
+            }
+        }
+        for (&m, &s) in &slots {
+            assert!(busy[m] + s <= phi, "server {m} exceeds Φ {phi}");
+        }
+    }
+
+    #[test]
+    fn slot_sharing_needs_ilp_tier() {
+        // cap 1 slot at the only server; two groups of 2 tasks; μ = 4.
+        // Flow relaxation says feasible; truth is infeasible at Φ = 1.
+        let groups = vec![TaskGroup::new(2, vec![0]), TaskGroup::new(2, vec![0])];
+        let mu = vec![4];
+        let busy = vec![0];
+        let inst = Instance {
+            groups: &groups,
+            mu: &mu,
+            busy: &busy,
+        };
+        let mut oracle = Oracle::new(&inst);
+        assert!(oracle.check(1).is_none(), "integer slots forbid Φ=1");
+        assert!(oracle.stats.ilp_calls >= 1, "must have reached tier 3");
+        let alloc = oracle.check(2).expect("Φ=2 feasible");
+        let total: u64 = alloc.iter().flatten().map(|&(_, n)| n).sum();
+        assert_eq!(total, 4);
+    }
+
+    #[test]
+    fn empty_instance_feasible_at_zero() {
+        let groups: Vec<TaskGroup> = vec![];
+        let mu = vec![1];
+        let busy = vec![5];
+        let inst = Instance {
+            groups: &groups,
+            mu: &mu,
+            busy: &busy,
+        };
+        let mut oracle = Oracle::new(&inst);
+        assert!(oracle.check(0).is_some());
+    }
+
+    #[test]
+    fn search_min_phi_matches_linear_scan() {
+        use crate::assign::testutil::random_instance;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from(88);
+        for _ in 0..30 {
+            let owned = random_instance(&mut rng, 5, 3, 20, 5);
+            let inst = owned.view();
+            let lo = phi_lower(&inst);
+            // Φ⁺ can be short by up to K_c − 1 slots when groups collide
+            // on one server (integer slots); bracket like OBTA does.
+            let mut hi = phi_upper(&inst);
+            let mut o1 = Oracle::new(&inst);
+            while o1.check(hi).is_none() {
+                hi += inst.groups.len() as u64 + 1;
+            }
+            let (phi, _) = o1.search_min_phi(lo, hi, 4);
+            // Linear scan cross-check.
+            let mut o2 = Oracle::new(&inst);
+            let mut scan = lo;
+            while o2.check(scan).is_none() {
+                scan += 1;
+            }
+            assert_eq!(phi, scan, "instance {owned:?}");
+        }
+    }
+}

@@ -1,0 +1,451 @@
+//! A small exact integer-feasibility solver — the stand-in for CPLEX.
+//!
+//! The paper solves program `P` (eq. 4) with a commercial solver. At a
+//! fixed candidate Φ the program becomes a pure *integer feasibility*
+//! question over the slot counts `n_m^k`:
+//!
+//! ```text
+//!   Σ_k  y_{k,m}        ≤ cap_m   for every server m   (slot budget)
+//!   Σ_m  μ_m · y_{k,m}  ≥ T_k     for every group  k   (task coverage)
+//!   y ≥ 0, integer
+//! ```
+//!
+//! The LP relaxation is *not* integral (slots cannot be shared between
+//! groups: with cap = 1 slot, μ = 4 and two groups demanding 2 tasks each,
+//! the LP is feasible but the IP is not), so a real solver is needed:
+//! phase-1 dense simplex (Bland's rule, guaranteed termination) plus
+//! depth-first branch-and-bound on fractional variables. Instances here
+//! are tiny (K·|S| ≲ a few hundred variables) and near-integral, so the
+//! tree rarely branches more than a handful of nodes.
+
+/// Row sense of a linear constraint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sense {
+    Le,
+    Ge,
+}
+
+/// A linear constraint `Σ coef_i · x_i  (≤|≥)  rhs` over sparse columns.
+#[derive(Clone, Debug)]
+pub struct Constraint {
+    /// (variable index, coefficient) pairs.
+    pub terms: Vec<(usize, f64)>,
+    pub sense: Sense,
+    pub rhs: f64,
+}
+
+/// Outcome of the integer feasibility search.
+#[derive(Clone, Debug, PartialEq)]
+pub enum IlpOutcome {
+    /// A feasible integer point (values per variable).
+    Feasible(Vec<u64>),
+    Infeasible,
+    /// The node budget ran out before a certificate either way. Callers
+    /// treat this conservatively (as infeasible — the search then settles
+    /// on a slightly larger, still-valid Φ) and count it in telemetry.
+    Unknown,
+}
+
+const EPS: f64 = 1e-7;
+/// Default B&B node budget. Program-`P` feasibility is NP-hard in general
+/// (the paper hands it to CPLEX, which has the same worst case); the
+/// budget bounds the tail while the flow/floor tiers keep it from being
+/// reached in practice. 2k nodes decide every brute-force-checkable
+/// instance we generate; see EXPERIMENTS.md §Perf for the tier telemetry.
+pub const DEFAULT_NODE_LIMIT: usize = 100;
+
+/// Integer feasibility of the given system with `nvars` non-negative
+/// integer variables, within a B&B node budget.
+pub fn ilp_feasible(nvars: usize, constraints: &[Constraint]) -> IlpOutcome {
+    ilp_feasible_budget(nvars, constraints, DEFAULT_NODE_LIMIT)
+}
+
+/// [`ilp_feasible`] with an explicit node budget.
+pub fn ilp_feasible_budget(
+    nvars: usize,
+    constraints: &[Constraint],
+    budget: usize,
+) -> IlpOutcome {
+    let mut nodes = 0usize;
+    let mut extra: Vec<Constraint> = Vec::new();
+    match branch(nvars, constraints, &mut extra, &mut nodes, budget) {
+        Ok(Some(sol)) => IlpOutcome::Feasible(sol),
+        Ok(None) => IlpOutcome::Infeasible,
+        Err(()) => IlpOutcome::Unknown,
+    }
+}
+
+/// `Err(())` = budget exhausted (undecided).
+fn branch(
+    nvars: usize,
+    base: &[Constraint],
+    extra: &mut Vec<Constraint>,
+    nodes: &mut usize,
+    budget: usize,
+) -> Result<Option<Vec<u64>>, ()> {
+    *nodes += 1;
+    if *nodes > budget {
+        return Err(());
+    }
+    let Some(relax) = lp_feasible_point2(nvars, base, extra) else {
+        return Ok(None);
+    };
+
+    // Find the most fractional variable.
+    let mut pick: Option<(usize, f64)> = None;
+    for (i, &v) in relax.iter().enumerate() {
+        let frac = (v - v.round()).abs();
+        if frac > EPS {
+            let dist = (v.fract() - 0.5).abs();
+            match pick {
+                Some((_, best_dist)) if best_dist <= dist => {}
+                _ => pick = Some((i, dist)),
+            }
+        }
+    }
+    let Some((bi, _)) = pick else {
+        // Integral (within tolerance) — round and return.
+        return Ok(Some(
+            relax.iter().map(|&v| v.round().max(0.0) as u64).collect(),
+        ));
+    };
+
+    let v = relax[bi];
+    // Branch UP first: y_bi >= ceil(v). For pure covering/packing
+    // feasibility, rounding demand-side variables up reaches integer
+    // points faster than shaving them down.
+    extra.push(Constraint {
+        terms: vec![(bi, 1.0)],
+        sense: Sense::Ge,
+        rhs: v.ceil(),
+    });
+    let up = branch(nvars, base, extra, nodes, budget);
+    extra.pop();
+    match up {
+        Ok(Some(sol)) => return Ok(Some(sol)),
+        Err(()) => return Err(()),
+        Ok(None) => {}
+    }
+    // Branch DOWN: y_bi <= floor(v).
+    extra.push(Constraint {
+        terms: vec![(bi, 1.0)],
+        sense: Sense::Le,
+        rhs: v.floor(),
+    });
+    let down = branch(nvars, base, extra, nodes, budget);
+    extra.pop();
+    down
+}
+
+/// Phase-1 simplex: return a feasible point of the LP relaxation (x ≥ 0),
+/// or `None` if the LP itself is infeasible.
+pub fn lp_feasible_point(nvars: usize, constraints: &[Constraint]) -> Option<Vec<f64>> {
+    lp_feasible_point2(nvars, constraints, &[])
+}
+
+/// [`lp_feasible_point`] over two constraint slices (avoids concatenating
+/// base constraints with branching bounds on every B&B node).
+pub fn lp_feasible_point2(
+    nvars: usize,
+    base: &[Constraint],
+    extra: &[Constraint],
+) -> Option<Vec<f64>> {
+    // Standard form: every row becomes an equality with slack (Le) or
+    // surplus+artificial (Ge). Rows with negative rhs are flipped first.
+    let nrows = base.len() + extra.len();
+    if nrows == 0 {
+        return Some(vec![0.0; nvars]);
+    }
+
+    // Normalize rows to non-negative rhs.
+    let mut rows: Vec<(Vec<(usize, f64)>, Sense, f64)> = base
+        .iter()
+        .chain(extra.iter())
+        .map(|c| {
+            if c.rhs < 0.0 {
+                let terms = c.terms.iter().map(|&(i, a)| (i, -a)).collect();
+                let sense = match c.sense {
+                    Sense::Le => Sense::Ge,
+                    Sense::Ge => Sense::Le,
+                };
+                (terms, sense, -c.rhs)
+            } else {
+                (c.terms.clone(), c.sense, c.rhs)
+            }
+        })
+        .collect();
+
+    // Column layout: [x (nvars)] [slack/surplus (nrows)] [artificial (na)].
+    // Le rows get slack (+1, basic). Ge rows get surplus (-1) + artificial
+    // (+1, basic). Ge rows with rhs == 0 can use the surplus as... the
+    // surplus has coefficient -1 so it cannot be basic at rhs 0 without
+    // negativity; keep the artificial uniformly for simplicity.
+    let mut n_art = 0;
+    for (_, sense, _) in rows.iter() {
+        if *sense == Sense::Ge {
+            n_art += 1;
+        }
+    }
+    let ncols = nvars + nrows + n_art;
+    // Dense tableau: nrows x (ncols + 1 rhs), plus objective row.
+    let mut t = vec![vec![0.0f64; ncols + 1]; nrows];
+    let mut basis = vec![0usize; nrows];
+    let mut art_cols: Vec<usize> = Vec::with_capacity(n_art);
+    let mut next_art = nvars + nrows;
+    for (r, (terms, sense, rhs)) in rows.drain(..).enumerate() {
+        for (i, a) in terms {
+            debug_assert!(i < nvars, "variable index out of range");
+            t[r][i] += a;
+        }
+        t[r][ncols] = rhs;
+        match sense {
+            Sense::Le => {
+                t[r][nvars + r] = 1.0;
+                basis[r] = nvars + r;
+            }
+            Sense::Ge => {
+                t[r][nvars + r] = -1.0; // surplus
+                t[r][next_art] = 1.0; // artificial
+                basis[r] = next_art;
+                art_cols.push(next_art);
+                next_art += 1;
+            }
+        }
+    }
+
+    // Phase-1 objective: minimize Σ artificials. Objective row z holds
+    // reduced costs; start with z = Σ (rows with artificial basis).
+    let mut z = vec![0.0f64; ncols + 1];
+    for r in 0..nrows {
+        if basis[r] >= nvars + nrows {
+            for c in 0..=ncols {
+                z[c] += t[r][c];
+            }
+        }
+    }
+    // Reduced cost of basic artificials must be zeroed: by construction
+    // z[artificial col] = 1 from its own row; subtract cost vector (cost 1
+    // on artificials) => handled implicitly: we seek to drive z[rhs] to 0
+    // by pivoting on columns with positive z-coefficient.
+    for &ac in &art_cols {
+        z[ac] = 0.0;
+    }
+
+    // Simplex iterations. Dantzig's rule (most positive reduced cost)
+    // for speed, falling back to Bland's rule (smallest index — finite by
+    // the anti-cycling theorem) if the iteration count suggests cycling.
+    let bland_after = 50 * (nrows + ncols);
+    let mut iters = 0usize;
+    loop {
+        iters += 1;
+        let use_bland = iters > bland_after;
+        // Entering column among structural + slack/surplus columns
+        // (artificials never re-enter in phase 1).
+        let mut enter = None;
+        if use_bland {
+            for c in 0..nvars + nrows {
+                if z[c] > EPS {
+                    enter = Some(c);
+                    break;
+                }
+            }
+        } else {
+            let mut best = EPS;
+            for c in 0..nvars + nrows {
+                if z[c] > best {
+                    best = z[c];
+                    enter = Some(c);
+                }
+            }
+        }
+        let Some(e) = enter else { break };
+        // Ratio test.
+        let mut leave: Option<(usize, f64)> = None;
+        for r in 0..nrows {
+            if t[r][e] > EPS {
+                let ratio = t[r][ncols] / t[r][e];
+                match leave {
+                    Some((lr, lratio)) => {
+                        if ratio < lratio - EPS
+                            || (ratio < lratio + EPS && basis[r] < basis[lr])
+                        {
+                            leave = Some((r, ratio));
+                        }
+                    }
+                    None => leave = Some((r, ratio)),
+                }
+            }
+        }
+        let Some((lr, _)) = leave else {
+            // Unbounded in phase 1 cannot happen (objective bounded below
+            // by 0); defensive break.
+            break;
+        };
+        // Pivot on (lr, e).
+        let piv = t[lr][e];
+        for c in 0..=ncols {
+            t[lr][c] /= piv;
+        }
+        for r in 0..nrows {
+            if r != lr && t[r][e].abs() > 1e-12 {
+                let f = t[r][e];
+                for c in 0..=ncols {
+                    t[r][c] -= f * t[lr][c];
+                }
+            }
+        }
+        let f = z[e];
+        if f.abs() > 1e-12 {
+            for c in 0..=ncols {
+                z[c] -= f * t[lr][c];
+            }
+        }
+        basis[lr] = e;
+    }
+
+    // Feasible iff phase-1 objective (z rhs) is ~0.
+    if z[ncols] > 1e-6 {
+        return None;
+    }
+    let mut x = vec![0.0; nvars];
+    for r in 0..nrows {
+        if basis[r] < nvars {
+            x[basis[r]] = t[r][ncols];
+        }
+    }
+    Some(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn le(terms: Vec<(usize, f64)>, rhs: f64) -> Constraint {
+        Constraint { terms, sense: Sense::Le, rhs }
+    }
+    fn ge(terms: Vec<(usize, f64)>, rhs: f64) -> Constraint {
+        Constraint { terms, sense: Sense::Ge, rhs }
+    }
+
+    #[test]
+    fn lp_simple_feasible() {
+        // x0 + x1 <= 10, x0 >= 3, x1 >= 4.
+        let cs = vec![
+            le(vec![(0, 1.0), (1, 1.0)], 10.0),
+            ge(vec![(0, 1.0)], 3.0),
+            ge(vec![(1, 1.0)], 4.0),
+        ];
+        let x = lp_feasible_point(2, &cs).expect("feasible");
+        assert!(x[0] >= 3.0 - 1e-6 && x[1] >= 4.0 - 1e-6);
+        assert!(x[0] + x[1] <= 10.0 + 1e-6);
+    }
+
+    #[test]
+    fn lp_simple_infeasible() {
+        let cs = vec![le(vec![(0, 1.0)], 2.0), ge(vec![(0, 1.0)], 3.0)];
+        assert!(lp_feasible_point(1, &cs).is_none());
+    }
+
+    #[test]
+    fn lp_empty_constraints() {
+        assert_eq!(lp_feasible_point(3, &[]), Some(vec![0.0; 3]));
+    }
+
+    #[test]
+    fn ilp_integral_when_lp_fractional() {
+        // The slot-sharing example from the module docs: one server with
+        // cap 1 slot, mu = 4; two groups each need 2 tasks.
+        // Variables: y0 = slots for group A, y1 = slots for group B.
+        let cs = vec![
+            le(vec![(0, 1.0), (1, 1.0)], 1.0),
+            ge(vec![(0, 4.0)], 2.0),
+            ge(vec![(1, 4.0)], 2.0),
+        ];
+        // LP is feasible (0.5, 0.5)...
+        assert!(lp_feasible_point(2, &cs).is_some());
+        // ...but the IP is not.
+        assert_eq!(ilp_feasible(2, &cs), IlpOutcome::Infeasible);
+    }
+
+    #[test]
+    fn ilp_finds_integer_point() {
+        // cap 2 slots, mu = 4, two groups of 2 tasks: y0 = y1 = 1 works.
+        let cs = vec![
+            le(vec![(0, 1.0), (1, 1.0)], 2.0),
+            ge(vec![(0, 4.0)], 2.0),
+            ge(vec![(1, 4.0)], 2.0),
+        ];
+        match ilp_feasible(2, &cs) {
+            IlpOutcome::Feasible(y) => {
+                assert!(y[0] >= 1 && y[1] >= 1 && y[0] + y[1] <= 2, "{y:?}");
+            }
+            other => panic!("expected feasible, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn ilp_respects_all_constraints() {
+        // Two servers (caps 3 and 2 slots; mu 3 and 5), two groups
+        // demanding 9 and 10 tasks, both groups on both servers.
+        // Variables y[k][m] flattened as y0=(g0,s0) y1=(g0,s1) y2=(g1,s0) y3=(g1,s1).
+        let cs = vec![
+            le(vec![(0, 1.0), (2, 1.0)], 3.0),
+            le(vec![(1, 1.0), (3, 1.0)], 2.0),
+            ge(vec![(0, 3.0), (1, 5.0)], 9.0),
+            ge(vec![(2, 3.0), (3, 5.0)], 10.0),
+        ];
+        match ilp_feasible(4, &cs) {
+            IlpOutcome::Feasible(y) => {
+                assert!(y[0] + y[2] <= 3);
+                assert!(y[1] + y[3] <= 2);
+                assert!(3 * y[0] + 5 * y[1] >= 9);
+                assert!(3 * y[2] + 5 * y[3] >= 10);
+            }
+            other => panic!("expected feasible, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn ilp_large_caps_fast() {
+        // Degenerate-free sanity: big caps, trivially feasible.
+        let cs = vec![
+            le(vec![(0, 1.0), (1, 1.0)], 10_000.0),
+            ge(vec![(0, 4.0), (1, 3.0)], 25_000.0),
+        ];
+        assert!(matches!(ilp_feasible(2, &cs), IlpOutcome::Feasible(_)));
+    }
+
+    #[test]
+    fn ilp_matches_bruteforce_on_random_small_instances() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from(55);
+        for case in 0..40 {
+            // 2 servers, 2 groups, random small caps/demands/mu.
+            let cap = [rng.gen_range_incl(0, 4), rng.gen_range_incl(0, 4)];
+            let mu = [rng.gen_range_incl(1, 4), rng.gen_range_incl(1, 4)];
+            let demand = [rng.gen_range_incl(0, 12), rng.gen_range_incl(0, 12)];
+            let cs = vec![
+                le(vec![(0, 1.0), (2, 1.0)], cap[0] as f64),
+                le(vec![(1, 1.0), (3, 1.0)], cap[1] as f64),
+                ge(vec![(0, mu[0] as f64), (1, mu[1] as f64)], demand[0] as f64),
+                ge(vec![(2, mu[0] as f64), (3, mu[1] as f64)], demand[1] as f64),
+            ];
+            // Brute force over all slot splits.
+            let mut brute = false;
+            for a0 in 0..=cap[0] {
+                for a1 in 0..=cap[1] {
+                    let g0 = a0 * mu[0] + a1 * mu[1];
+                    if g0 < demand[0] {
+                        continue;
+                    }
+                    let g1 = (cap[0] - a0) * mu[0] + (cap[1] - a1) * mu[1];
+                    if g1 >= demand[1] {
+                        brute = true;
+                    }
+                }
+            }
+            let got = matches!(ilp_feasible(4, &cs), IlpOutcome::Feasible(_));
+            assert_eq!(got, brute, "case {case}: cap {cap:?} mu {mu:?} demand {demand:?}");
+        }
+    }
+}

@@ -1,0 +1,444 @@
+//! Task assignment for one arriving job (paper §III).
+//!
+//! Given the job's task groups, the per-server capacities `μ_m^c` and the
+//! servers' estimated busy times `b_m^c`, an [`Assigner`] decides how many
+//! tasks of each group go to each available server, minimizing (exactly or
+//! approximately) the job's estimated completion time Φ_c of program `P`
+//! (eq. 4).
+//!
+//! Implemented assigners:
+//! - [`nlip::Nlip`] — exact, no search-space narrowing (the paper's NLIP
+//!   baseline, CPLEX replaced by [`ilp`]).
+//! - [`obta::Obta`] — exact, with the narrowed `[Φ⁻, Φ⁺]` search of
+//!   §III-A2/A3 (the paper's OBTA).
+//! - [`wf::Wf`] — the water-filling approximation (§III-B, Alg 2), tight
+//!   K_c-approximate (Thms 1–2).
+//! - [`rd::Rd`] — the replica-deletion heuristic (§III-C).
+
+pub mod bounds;
+pub mod feasible;
+pub mod ilp;
+pub mod nlip;
+pub mod obta;
+pub mod rd;
+pub mod wf;
+
+use crate::job::{ServerId, Slots, TaskCount, TaskGroup};
+use crate::util::ceil_div;
+
+/// A task-assignment problem instance: the state an assigner sees when job
+/// `c` arrives (or when an outstanding job is re-assigned during
+/// reordering).
+#[derive(Clone, Copy, Debug)]
+pub struct Instance<'a> {
+    /// The job's task groups (sizes = *remaining* tasks).
+    pub groups: &'a [TaskGroup],
+    /// Per-server capacity μ_m^c, length M.
+    pub mu: &'a [u64],
+    /// Per-server estimated busy time b_m^c (eq. 2), length M.
+    pub busy: &'a [Slots],
+}
+
+impl<'a> Instance<'a> {
+    pub fn total_tasks(&self) -> TaskCount {
+        self.groups.iter().map(|g| g.size).sum()
+    }
+
+    /// Union of available servers over non-empty groups, sorted.
+    pub fn union_servers(&self) -> Vec<ServerId> {
+        let mut all: Vec<ServerId> = self
+            .groups
+            .iter()
+            .filter(|g| g.size > 0)
+            .flat_map(|g| g.servers.iter().copied())
+            .collect();
+        all.sort_unstable();
+        all.dedup();
+        all
+    }
+}
+
+/// The result of assigning one job: for each group, the `(server, tasks)`
+/// allocation, plus the estimated completion time Φ under program `P`'s
+/// objective.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Assignment {
+    /// `per_group[k]` lists `(server, tasks)` with tasks > 0.
+    pub per_group: Vec<Vec<(ServerId, TaskCount)>>,
+    /// Estimated completion time (slots, relative to the job's arrival).
+    pub phi: Slots,
+}
+
+impl Assignment {
+    /// Total tasks assigned to each server (summed over groups), as a
+    /// sparse `(server, tasks)` list sorted by server.
+    pub fn per_server(&self) -> Vec<(ServerId, TaskCount)> {
+        let mut acc: std::collections::BTreeMap<ServerId, TaskCount> = Default::default();
+        for g in &self.per_group {
+            for &(m, n) in g {
+                *acc.entry(m).or_insert(0) += n;
+            }
+        }
+        acc.into_iter().collect()
+    }
+
+    pub fn total_assigned(&self) -> TaskCount {
+        self.per_group.iter().flatten().map(|&(_, n)| n).sum()
+    }
+}
+
+/// Program `P`'s objective value for a concrete allocation: every group's
+/// tasks at a server occupy an integer number of slots
+/// (`Σ_k ceil(n_{k,m}/μ_m)` per server), and Φ is the latest finish over
+/// servers that received tasks. This is the metric NLIP/OBTA optimize and
+/// the one used to compare assigners.
+pub fn program_phi(inst: &Instance, per_group: &[Vec<(ServerId, TaskCount)>]) -> Slots {
+    let mut slots: std::collections::BTreeMap<ServerId, u64> = Default::default();
+    for g in per_group {
+        for &(m, n) in g {
+            if n > 0 {
+                *slots.entry(m).or_insert(0) += ceil_div(n, inst.mu[m]);
+            }
+        }
+    }
+    slots
+        .into_iter()
+        .map(|(m, s)| inst.busy[m] + s)
+        .max()
+        .unwrap_or(0)
+}
+
+/// The *execution-model* completion estimate for a concrete allocation:
+/// the simulator merges all of a job's tasks at a server into one queue
+/// entry costing `ceil(total/μ_m)` slots (eq. 2), so this is what the job
+/// will actually experience under FIFO. Always ≤ [`program_phi`].
+pub fn realized_phi(inst: &Instance, per_group: &[Vec<(ServerId, TaskCount)>]) -> Slots {
+    let mut tasks: std::collections::BTreeMap<ServerId, u64> = Default::default();
+    for g in per_group {
+        for &(m, n) in g {
+            if n > 0 {
+                *tasks.entry(m).or_insert(0) += n;
+            }
+        }
+    }
+    tasks
+        .into_iter()
+        .map(|(m, n)| inst.busy[m] + ceil_div(n, inst.mu[m]))
+        .max()
+        .unwrap_or(0)
+}
+
+/// A task-assignment algorithm.
+pub trait Assigner {
+    fn name(&self) -> &'static str;
+    /// Assign all tasks of the instance; must assign every task of every
+    /// non-empty group to one of the group's available servers.
+    fn assign(&mut self, inst: &Instance) -> Assignment;
+    /// Accumulated feasibility-oracle telemetry (exact assigners only).
+    fn oracle_stats(&self) -> Option<feasible::OracleStats> {
+        None
+    }
+}
+
+/// Which assignment algorithm to run (CLI/config-level selector).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AssignPolicy {
+    Nlip,
+    Obta,
+    Wf,
+    Rd,
+}
+
+impl AssignPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AssignPolicy::Nlip => "nlip",
+            AssignPolicy::Obta => "obta",
+            AssignPolicy::Wf => "wf",
+            AssignPolicy::Rd => "rd",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<AssignPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "nlip" => Some(AssignPolicy::Nlip),
+            "obta" => Some(AssignPolicy::Obta),
+            "wf" => Some(AssignPolicy::Wf),
+            "rd" => Some(AssignPolicy::Rd),
+            _ => None,
+        }
+    }
+
+    /// Instantiate the assigner. `seed` only affects RD's random
+    /// tie-breaking (paper §III-C: ties among equal-copy replicas are
+    /// broken randomly).
+    pub fn build(&self, seed: u64) -> Box<dyn Assigner> {
+        match self {
+            AssignPolicy::Nlip => Box::new(nlip::Nlip::new()),
+            AssignPolicy::Obta => Box::new(obta::Obta::new()),
+            AssignPolicy::Wf => Box::new(wf::Wf::new()),
+            AssignPolicy::Rd => Box::new(rd::Rd::new(seed)),
+        }
+    }
+
+    pub const ALL: [AssignPolicy; 4] = [
+        AssignPolicy::Nlip,
+        AssignPolicy::Obta,
+        AssignPolicy::Wf,
+        AssignPolicy::Rd,
+    ];
+}
+
+/// Validate that an assignment is structurally correct for the instance:
+/// every task assigned exactly once, only to available servers. Used by
+/// tests and debug assertions.
+pub fn validate_assignment(inst: &Instance, a: &Assignment) -> Result<(), String> {
+    if a.per_group.len() != inst.groups.len() {
+        return Err(format!(
+            "group arity mismatch: {} vs {}",
+            a.per_group.len(),
+            inst.groups.len()
+        ));
+    }
+    for (k, (g, alloc)) in inst.groups.iter().zip(&a.per_group).enumerate() {
+        let total: TaskCount = alloc.iter().map(|&(_, n)| n).sum();
+        if total != g.size {
+            return Err(format!(
+                "group {k}: assigned {total} of {} tasks",
+                g.size
+            ));
+        }
+        for &(m, n) in alloc {
+            if n == 0 {
+                return Err(format!("group {k}: zero-task allocation on server {m}"));
+            }
+            if !g.servers.contains(&m) {
+                return Err(format!("group {k}: server {m} not available"));
+            }
+        }
+        // No duplicate servers within one group's allocation.
+        let mut servers: Vec<ServerId> = alloc.iter().map(|&(m, _)| m).collect();
+        servers.sort_unstable();
+        let len = servers.len();
+        servers.dedup();
+        if servers.len() != len {
+            return Err(format!("group {k}: duplicate server in allocation"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    //! Shared helpers for assigner tests: random instance generation and a
+    //! brute-force optimal Φ for tiny instances.
+
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// An owned instance for test generation.
+    #[derive(Clone, Debug)]
+    pub struct OwnedInstance {
+        pub groups: Vec<TaskGroup>,
+        pub mu: Vec<u64>,
+        pub busy: Vec<Slots>,
+    }
+
+    impl OwnedInstance {
+        pub fn view(&self) -> Instance<'_> {
+            Instance {
+                groups: &self.groups,
+                mu: &self.mu,
+                busy: &self.busy,
+            }
+        }
+    }
+
+    /// Random small instance: up to `max_m` servers, `max_k` groups,
+    /// `max_size` tasks per group.
+    pub fn random_instance(
+        rng: &mut Rng,
+        max_m: usize,
+        max_k: usize,
+        max_size: u64,
+        max_busy: u64,
+    ) -> OwnedInstance {
+        let m = 1 + rng.gen_range(max_m as u64) as usize;
+        let k = 1 + rng.gen_range(max_k as u64) as usize;
+        let mu: Vec<u64> = (0..m).map(|_| rng.gen_range_incl(1, 5)).collect();
+        let busy: Vec<Slots> = (0..m).map(|_| rng.gen_range_incl(0, max_busy)).collect();
+        let groups = (0..k)
+            .map(|_| {
+                let ns = 1 + rng.gen_range(m as u64) as usize;
+                let mut servers: Vec<ServerId> = (0..m).collect();
+                rng.shuffle(&mut servers);
+                servers.truncate(ns);
+                TaskGroup::new(rng.gen_range_incl(1, max_size), servers)
+            })
+            .collect();
+        OwnedInstance { groups, mu, busy }
+    }
+
+    /// Brute-force the optimal program-P Φ by scanning Φ upward and doing
+    /// exhaustive (memoized) slot-partition search per server. Only
+    /// usable for tiny instances.
+    pub fn brute_force_opt_phi(inst: &Instance) -> Slots {
+        let lo = bounds::phi_lower(inst);
+        let mut phi = lo;
+        loop {
+            if brute_feasible(inst, phi) {
+                return phi;
+            }
+            phi += 1;
+            assert!(phi < lo + 10_000, "brute force runaway");
+        }
+    }
+
+    fn brute_feasible(inst: &Instance, phi: Slots) -> bool {
+        use std::collections::HashMap;
+        let union = inst.union_servers();
+        let mut cap: Vec<u64> = union
+            .iter()
+            .map(|&m| phi.saturating_sub(inst.busy[m]))
+            .collect();
+        let groups: Vec<&TaskGroup> = inst.groups.iter().filter(|g| g.size > 0).collect();
+        // Memo on (group index, residual caps): residual capacity fully
+        // determines feasibility of the remaining groups.
+        let mut memo: HashMap<(usize, Vec<u64>), bool> = HashMap::new();
+
+        fn rec(
+            gi: usize,
+            groups: &[&TaskGroup],
+            union: &[ServerId],
+            cap: &mut Vec<u64>,
+            mu: &[u64],
+            memo: &mut std::collections::HashMap<(usize, Vec<u64>), bool>,
+        ) -> bool {
+            if gi == groups.len() {
+                return true;
+            }
+            let key = (gi, cap.clone());
+            if let Some(&v) = memo.get(&key) {
+                return v;
+            }
+            let g = groups[gi];
+            let result = alloc(0, g.size, g, gi, groups, union, cap, mu, memo);
+            memo.insert(key, result);
+            result
+        }
+
+        #[allow(clippy::too_many_arguments)]
+        fn alloc(
+            si: usize,
+            remaining: u64,
+            g: &TaskGroup,
+            gi: usize,
+            groups: &[&TaskGroup],
+            union: &[ServerId],
+            cap: &mut Vec<u64>,
+            mu: &[u64],
+            memo: &mut std::collections::HashMap<(usize, Vec<u64>), bool>,
+        ) -> bool {
+            if remaining == 0 {
+                return rec(gi + 1, groups, union, cap, mu, memo);
+            }
+            if si == g.servers.len() {
+                return false;
+            }
+            let m = g.servers[si];
+            let ui = union.iter().position(|&x| x == m).unwrap();
+            let max_slots = cap[ui].min(crate::util::ceil_div(remaining, mu[m]));
+            for s in (0..=max_slots).rev() {
+                cap[ui] -= s;
+                let served = (s * mu[m]).min(remaining);
+                if alloc(si + 1, remaining - served, g, gi, groups, union, cap, mu, memo) {
+                    cap[ui] += s;
+                    return true;
+                }
+                cap[ui] += s;
+            }
+            false
+        }
+        rec(0, &groups, &union, &mut cap, inst.mu, &mut memo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_server_merges_groups() {
+        let a = Assignment {
+            per_group: vec![vec![(0, 5), (2, 1)], vec![(0, 3)]],
+            phi: 4,
+        };
+        assert_eq!(a.per_server(), vec![(0, 8), (2, 1)]);
+        assert_eq!(a.total_assigned(), 9);
+    }
+
+    #[test]
+    fn program_phi_counts_per_group_slots() {
+        let groups = vec![
+            TaskGroup::new(2, vec![0]),
+            TaskGroup::new(2, vec![0, 1]),
+        ];
+        let mu = vec![4, 4];
+        let busy = vec![1, 0];
+        let inst = Instance {
+            groups: &groups,
+            mu: &mu,
+            busy: &busy,
+        };
+        // Both groups on server 0: 2 groups × ceil(2/4)=1 slot each = 2
+        // slots + busy 1 = 3 under the program objective...
+        let alloc = vec![vec![(0, 2)], vec![(0, 2)]];
+        assert_eq!(program_phi(&inst, &alloc), 3);
+        // ...but merged execution finishes in ceil(4/4)=1 slot + busy 1 = 2.
+        assert_eq!(realized_phi(&inst, &alloc), 2);
+    }
+
+    #[test]
+    fn validate_catches_errors() {
+        let groups = vec![TaskGroup::new(3, vec![0, 1])];
+        let mu = vec![1, 1];
+        let busy = vec![0, 0];
+        let inst = Instance {
+            groups: &groups,
+            mu: &mu,
+            busy: &busy,
+        };
+        // OK.
+        let ok = Assignment {
+            per_group: vec![vec![(0, 1), (1, 2)]],
+            phi: 2,
+        };
+        assert!(validate_assignment(&inst, &ok).is_ok());
+        // Under-assigned.
+        let under = Assignment {
+            per_group: vec![vec![(0, 1)]],
+            phi: 1,
+        };
+        assert!(validate_assignment(&inst, &under).is_err());
+        // Wrong server.
+        let wrong = Assignment {
+            per_group: vec![vec![(5, 3)]],
+            phi: 3,
+        };
+        assert!(validate_assignment(&inst, &wrong).is_err());
+        // Duplicate server entries.
+        let dup = Assignment {
+            per_group: vec![vec![(0, 1), (0, 2)]],
+            phi: 3,
+        };
+        assert!(validate_assignment(&inst, &dup).is_err());
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in AssignPolicy::ALL {
+            assert_eq!(AssignPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(AssignPolicy::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,145 @@
+//! OBTA — Optimal Balanced Task Assignment (paper §III-A, Algorithm 1).
+//!
+//! OBTA solves program `P` exactly, but only searches Φ inside the
+//! narrowed window `[Φ⁻, Φ⁺]` of §III-A2. Within the window, feasibility
+//! is monotone in Φ (capacity only grows), so the subrange walk of
+//! §III-A3 — check sub-intervals `[Φ⁻, b'_i), [b'_i, b'_{i+1}), …` in
+//! ascending order and stop at the first feasible one — is realized here
+//! as a binary search that the feasibility oracle answers exactly; the
+//! first feasible Φ is the global optimum, matching the paper's "the
+//! remaining sub-intervals cannot contain a smaller Φ_c".
+
+use super::bounds::{phi_lower, phi_upper};
+use super::feasible::{Oracle, OracleStats};
+use super::{program_phi, Assigner, Assignment, Instance};
+
+/// The OBTA assigner.
+#[derive(Clone, Debug, Default)]
+pub struct Obta {
+    /// Accumulated oracle tier counters (perf telemetry).
+    pub stats: OracleStats,
+}
+
+impl Obta {
+    pub fn new() -> Self {
+        Obta::default()
+    }
+}
+
+impl Assigner for Obta {
+    fn name(&self) -> &'static str {
+        "obta"
+    }
+
+    fn assign(&mut self, inst: &Instance) -> Assignment {
+        if inst.total_tasks() == 0 {
+            return Assignment {
+                per_group: vec![Vec::new(); inst.groups.len()],
+                phi: 0,
+            };
+        }
+        let lo = phi_lower(inst);
+        let hi = phi_upper(inst);
+        let mut oracle = Oracle::new(inst);
+        // Φ⁺ assumes each group can pile onto a single server; with
+        // integer slots per (group, server) pair the bound can be short
+        // by at most K_c − 1 slots when groups collide — search_min_phi
+        // widens lazily if that ever binds.
+        let (phi, per_group) = oracle.search_min_phi(lo, hi, inst.groups.len() as u64 + 1);
+        self.stats.merge(&oracle.stats);
+        debug_assert_eq!(program_phi(inst, &per_group), phi);
+        Assignment { per_group, phi }
+    }
+
+    fn oracle_stats(&self) -> Option<OracleStats> {
+        Some(self.stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assign::testutil::{brute_force_opt_phi, random_instance};
+    use crate::assign::{validate_assignment, AssignPolicy};
+    use crate::job::TaskGroup;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn single_group_balances_perfectly() {
+        let groups = vec![TaskGroup::new(12, vec![0, 1, 2])];
+        let mu = vec![2, 2, 2];
+        let busy = vec![0, 0, 0];
+        let inst = Instance {
+            groups: &groups,
+            mu: &mu,
+            busy: &busy,
+        };
+        let a = Obta::new().assign(&inst);
+        validate_assignment(&inst, &a).unwrap();
+        assert_eq!(a.phi, 2);
+    }
+
+    #[test]
+    fn optimal_beats_wf_on_nested_groups() {
+        // Two groups, the second's servers nested in the first's. WF fills
+        // greedily and stacks; OPT reserves the private servers.
+        let groups = vec![
+            TaskGroup::new(8, vec![0, 1, 2, 3]),
+            TaskGroup::new(4, vec![2, 3]),
+        ];
+        let mu = vec![1, 1, 1, 1];
+        let busy = vec![0, 0, 0, 0];
+        let inst = Instance {
+            groups: &groups,
+            mu: &mu,
+            busy: &busy,
+        };
+        let opt = Obta::new().assign(&inst);
+        let wf = AssignPolicy::Wf.build(0).assign(&inst);
+        validate_assignment(&inst, &opt).unwrap();
+        // Total 12 tasks over 4 unit servers → Φ* = 3.
+        assert_eq!(opt.phi, 3);
+        // WF: group 1 levels at 2 everywhere; group 2 then stacks to 4.
+        assert_eq!(wf.phi, 4);
+    }
+
+    #[test]
+    fn empty_job() {
+        let groups: Vec<TaskGroup> = vec![];
+        let mu = vec![1];
+        let busy = vec![9];
+        let inst = Instance {
+            groups: &groups,
+            mu: &mu,
+            busy: &busy,
+        };
+        assert_eq!(Obta::new().assign(&inst).phi, 0);
+    }
+
+    #[test]
+    fn matches_brute_force_on_random_small_instances() {
+        let mut rng = Rng::seed_from(99);
+        for case in 0..30 {
+            let owned = random_instance(&mut rng, 3, 3, 6, 2);
+            let inst = owned.view();
+            let a = Obta::new().assign(&inst);
+            validate_assignment(&inst, &a).unwrap();
+            let brute = brute_force_opt_phi(&inst);
+            assert_eq!(a.phi, brute, "case {case}: {owned:?}");
+        }
+    }
+
+    #[test]
+    fn never_worse_than_wf_and_rd() {
+        let mut rng = Rng::seed_from(101);
+        for _ in 0..60 {
+            let owned = random_instance(&mut rng, 6, 4, 40, 8);
+            let inst = owned.view();
+            let opt = Obta::new().assign(&inst);
+            let wf = AssignPolicy::Wf.build(0).assign(&inst);
+            let rd = AssignPolicy::Rd.build(7).assign(&inst);
+            assert!(opt.phi <= wf.phi, "OBTA {} vs WF {}", opt.phi, wf.phi);
+            assert!(opt.phi <= rd.phi, "OBTA {} vs RD {}", opt.phi, rd.phi);
+        }
+    }
+}

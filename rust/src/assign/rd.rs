@@ -1,0 +1,356 @@
+//! RD — replica-deletion task assignment (paper §III-C).
+//!
+//! Every task starts replicated on *all* of its available servers; RD then
+//! iteratively deletes redundant replicas from the most-loaded (*target*)
+//! server(s), always removing the replicas with the largest remaining copy
+//! counts (ties across target servers broken toward the larger *initial*
+//! busy time, then randomly), until no target server holds a deletable
+//! replica. A final phase strips the remaining duplicates from the
+//! most-loaded holders so every task ends on exactly one server.
+//!
+//! Unlike WF, which balances only within each task group, RD looks at all
+//! groups and all servers at once — globally balancing at the cost of a
+//! higher complexity, O(M²·n·log n) worst case (§III-C2). Implemented
+//! with lazy max-heaps (stale entries validated on pop), matching the
+//! paper's priority-queue design.
+
+use std::collections::BinaryHeap;
+
+use crate::job::{ServerId, Slots, TaskCount};
+use crate::util::ceil_div;
+use crate::util::rng::Rng;
+
+use super::{program_phi, Assigner, Assignment, Instance};
+
+/// The RD assigner. Carries an RNG for the paper's random tie-breaking.
+#[derive(Clone, Debug)]
+pub struct Rd {
+    rng: Rng,
+}
+
+impl Rd {
+    pub fn new(seed: u64) -> Self {
+        Rd {
+            rng: Rng::seed_from(seed ^ 0x5D_D3_1E_57),
+        }
+    }
+}
+
+/// Replica state for one job's assignment.
+struct RdState<'a> {
+    inst: &'a Instance<'a>,
+    /// Group index of each task.
+    task_group: Vec<usize>,
+    /// Current copy count per task.
+    copies: Vec<u32>,
+    /// Whether replica (task, server) is live: per-task sorted holder list.
+    holders: Vec<Vec<ServerId>>,
+    /// Live replica count per server.
+    load: Vec<u64>,
+    /// Per-server lazy max-heap of (copies_at_push, tiebreak, task).
+    heap: Vec<BinaryHeap<(u32, u32, usize)>>,
+}
+
+impl<'a> RdState<'a> {
+    fn new(inst: &'a Instance<'a>, rng: &mut Rng) -> Self {
+        let m = inst.mu.len();
+        let mut task_group = Vec::new();
+        let mut copies = Vec::new();
+        let mut holders: Vec<Vec<ServerId>> = Vec::new();
+        let mut load = vec![0u64; m];
+        let mut heap: Vec<BinaryHeap<(u32, u32, usize)>> = (0..m).map(|_| BinaryHeap::new()).collect();
+        for (k, g) in inst.groups.iter().enumerate() {
+            for _ in 0..g.size {
+                let t = task_group.len();
+                task_group.push(k);
+                copies.push(g.servers.len() as u32);
+                holders.push(g.servers.clone());
+                for &s in &g.servers {
+                    load[s] += 1;
+                    heap[s].push((g.servers.len() as u32, rng.next_u64() as u32, t));
+                }
+            }
+        }
+        RdState {
+            inst,
+            task_group,
+            copies,
+            holders,
+            load,
+            heap,
+        }
+    }
+
+    #[inline]
+    fn busy(&self, m: ServerId) -> Slots {
+        if self.load[m] == 0 {
+            self.inst.busy[m]
+        } else {
+            self.inst.busy[m] + ceil_div(self.load[m], self.inst.mu[m])
+        }
+    }
+
+    /// Peek server m's best deletable replica (copies ≥ 2), lazily
+    /// discarding stale heap entries. Returns its current copy count.
+    fn peek_deletable(&mut self, m: ServerId) -> Option<u32> {
+        while let Some(&(c, tb, t)) = self.heap[m].peek() {
+            let live = self.holders[t].contains(&m);
+            if !live {
+                self.heap[m].pop();
+                continue;
+            }
+            let cur = self.copies[t];
+            if cur != c {
+                // Stale count: reinsert with the current count.
+                self.heap[m].pop();
+                self.heap[m].push((cur, tb, t));
+                continue;
+            }
+            if cur < 2 {
+                // Top is a single-copy task: nothing deletable remains on
+                // this server (heap is max-ordered by copies).
+                return None;
+            }
+            return Some(cur);
+        }
+        None
+    }
+
+    /// Delete server m's best deletable replica. Returns false when none.
+    fn delete_one(&mut self, m: ServerId) -> bool {
+        if self.peek_deletable(m).is_none() {
+            return false;
+        }
+        let (_, _, t) = self.heap[m].pop().unwrap();
+        let pos = self.holders[t].iter().position(|&x| x == m).unwrap();
+        self.holders[t].swap_remove(pos);
+        self.copies[t] -= 1;
+        self.load[m] -= 1;
+        true
+    }
+
+    /// Servers currently holding at least one replica, with max busy.
+    fn target_servers(&self) -> Vec<ServerId> {
+        let max = (0..self.load.len())
+            .filter(|&m| self.load[m] > 0)
+            .map(|m| self.busy(m))
+            .max();
+        match max {
+            None => Vec::new(),
+            Some(mx) => (0..self.load.len())
+                .filter(|&m| self.load[m] > 0 && self.busy(m) == mx)
+                .collect(),
+        }
+    }
+
+    /// Phase 1: delete from target servers until none has a deletable
+    /// replica.
+    fn deletion_phase(&mut self) {
+        loop {
+            let targets = self.target_servers();
+            if targets.is_empty() {
+                return;
+            }
+            // Best (copies, initial busy) across targets.
+            let mut best: Option<(u32, Slots, ServerId)> = None;
+            for &m in &targets {
+                if let Some(c) = self.peek_deletable(m) {
+                    let key = (c, self.inst.busy[m], m);
+                    match best {
+                        Some((bc, bb, _)) if (bc, bb) >= (key.0, key.1) => {}
+                        _ => best = Some(key),
+                    }
+                }
+            }
+            let Some((_, _, m)) = best else {
+                // Exit condition (§III-C1): every task on every target
+                // server is down to one replica.
+                return;
+            };
+            // Remove enough replicas from m to drop its busy time by one
+            // slot (up to μ_m replicas), stopping early if deletables run
+            // out.
+            let slots = ceil_div(self.load[m], self.inst.mu[m]);
+            let want = self.load[m] - self.inst.mu[m] * (slots - 1);
+            for _ in 0..want {
+                if !self.delete_one(m) {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Phase 2: strip remaining duplicates — repeatedly pick the busiest
+    /// server still holding a deletable replica and delete from it.
+    fn cleanup_phase(&mut self) {
+        loop {
+            let mut best: Option<(Slots, Slots, ServerId)> = None;
+            for m in 0..self.load.len() {
+                if self.load[m] == 0 {
+                    continue;
+                }
+                if self.peek_deletable(m).is_some() {
+                    let key = (self.busy(m), self.inst.busy[m], m);
+                    match best {
+                        Some((bb, bi, _)) if (bb, bi) >= (key.0, key.1) => {}
+                        _ => best = Some(key),
+                    }
+                }
+            }
+            let Some((_, _, m)) = best else { return };
+            self.delete_one(m);
+        }
+    }
+
+    /// Collect the final one-replica-per-task allocation per group.
+    fn extract(&self) -> Vec<Vec<(ServerId, TaskCount)>> {
+        let mut acc: Vec<std::collections::BTreeMap<ServerId, TaskCount>> =
+            vec![Default::default(); self.inst.groups.len()];
+        for t in 0..self.task_group.len() {
+            debug_assert_eq!(self.copies[t], 1, "task {t} not reduced to one replica");
+            debug_assert_eq!(self.holders[t].len(), 1);
+            let m = self.holders[t][0];
+            *acc[self.task_group[t]].entry(m).or_insert(0) += 1;
+        }
+        acc.into_iter()
+            .map(|m| m.into_iter().collect())
+            .collect()
+    }
+}
+
+impl Assigner for Rd {
+    fn name(&self) -> &'static str {
+        "rd"
+    }
+
+    fn assign(&mut self, inst: &Instance) -> Assignment {
+        let mut st = RdState::new(inst, &mut self.rng);
+        st.deletion_phase();
+        st.cleanup_phase();
+        let per_group = st.extract();
+        let phi = program_phi(inst, &per_group);
+        Assignment { per_group, phi }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assign::testutil::random_instance;
+    use crate::assign::{validate_assignment, AssignPolicy};
+    use crate::job::TaskGroup;
+
+    #[test]
+    fn every_task_assigned_exactly_once() {
+        let mut rng = Rng::seed_from(200);
+        for _ in 0..50 {
+            let owned = random_instance(&mut rng, 6, 4, 30, 6);
+            let inst = owned.view();
+            let a = Rd::new(1).assign(&inst);
+            validate_assignment(&inst, &a).unwrap();
+        }
+    }
+
+    #[test]
+    fn single_group_unit_mu_balances() {
+        // 9 tasks over 3 idle unit-capacity servers: perfect balance = 3.
+        let groups = vec![TaskGroup::new(9, vec![0, 1, 2])];
+        let mu = vec![1, 1, 1];
+        let busy = vec![0, 0, 0];
+        let inst = Instance {
+            groups: &groups,
+            mu: &mu,
+            busy: &busy,
+        };
+        let a = Rd::new(2).assign(&inst);
+        validate_assignment(&inst, &a).unwrap();
+        assert_eq!(a.phi, 3);
+    }
+
+    #[test]
+    fn respects_single_replica_tasks() {
+        // A group pinned to one server cannot move; RD must keep it there.
+        let groups = vec![
+            TaskGroup::new(5, vec![0]),
+            TaskGroup::new(3, vec![0, 1]),
+        ];
+        let mu = vec![1, 1];
+        let busy = vec![0, 0];
+        let inst = Instance {
+            groups: &groups,
+            mu: &mu,
+            busy: &busy,
+        };
+        let a = Rd::new(3).assign(&inst);
+        validate_assignment(&inst, &a).unwrap();
+        assert_eq!(a.per_group[0], vec![(0, 5)]);
+        // Group 2's flexible tasks should flee the loaded server 0.
+        assert_eq!(a.per_group[1], vec![(1, 3)]);
+        assert_eq!(a.phi, 5);
+    }
+
+    #[test]
+    fn prefers_deleting_from_larger_initial_busy_on_ties() {
+        // Two idle-capacity servers with equal current busy but different
+        // initial busy; the flexible task should end on the lower-initial
+        // server (Fig. 9's rule).
+        let groups = vec![TaskGroup::new(1, vec![0, 1])];
+        let mu = vec![1, 1];
+        let busy = vec![4, 1];
+        let inst = Instance {
+            groups: &groups,
+            mu: &mu,
+            busy: &busy,
+        };
+        let a = Rd::new(4).assign(&inst);
+        validate_assignment(&inst, &a).unwrap();
+        assert_eq!(a.per_group[0], vec![(1, 1)], "task should land on server 1");
+    }
+
+    #[test]
+    fn rd_between_wf_and_opt_on_nested_instance() {
+        // The nested-group instance where WF stacks badly; RD's global
+        // view should do at least as well as WF.
+        let groups = vec![
+            TaskGroup::new(8, vec![0, 1, 2, 3]),
+            TaskGroup::new(4, vec![2, 3]),
+        ];
+        let mu = vec![1, 1, 1, 1];
+        let busy = vec![0, 0, 0, 0];
+        let inst = Instance {
+            groups: &groups,
+            mu: &mu,
+            busy: &busy,
+        };
+        let rd = Rd::new(5).assign(&inst);
+        let wf = AssignPolicy::Wf.build(0).assign(&inst);
+        validate_assignment(&inst, &rd).unwrap();
+        assert!(rd.phi <= wf.phi, "RD {} vs WF {}", rd.phi, wf.phi);
+        assert_eq!(rd.phi, 3, "RD finds the balanced optimum here");
+    }
+
+    #[test]
+    fn busy_accounting_uses_mu() {
+        // μ = 3: 7 replicas = 3 slots (ceil), busy 0.
+        let groups = vec![TaskGroup::new(7, vec![0])];
+        let mu = vec![3];
+        let busy = vec![0];
+        let inst = Instance {
+            groups: &groups,
+            mu: &mu,
+            busy: &busy,
+        };
+        let a = Rd::new(6).assign(&inst);
+        assert_eq!(a.phi, 3);
+    }
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut rng = Rng::seed_from(201);
+        let owned = random_instance(&mut rng, 6, 4, 30, 6);
+        let inst = owned.view();
+        let a1 = Rd::new(42).assign(&inst);
+        let a2 = Rd::new(42).assign(&inst);
+        assert_eq!(a1, a2);
+    }
+}

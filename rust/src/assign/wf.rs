@@ -1,0 +1,222 @@
+//! Water-filling task assignment (paper §III-B, Algorithm 2).
+//!
+//! Groups are processed sequentially. For group k, the water level ξ_k is
+//! the minimal integer satisfying eq. (9); every available server below
+//! the level participates and receives `(ξ_k − b_m(k−1))·μ_m` tasks (the
+//! last participating server takes the remainder), after which busy times
+//! are raised to the level (eq. 10). WF is K_c-approximate and the bound
+//! is tight (Theorems 1–2) — both facts are property-tested in
+//! `rust/tests/`.
+//!
+//! Complexity: O(Σ_k |S_c^k| log |T_c^k|) — a binary search per group plus
+//! a walk over its servers.
+
+use crate::job::Slots;
+
+use super::bounds::water_level;
+use super::{Assigner, Assignment, Instance};
+
+/// The WF assigner. Stateless; a fresh busy-time scratch vector is built
+/// per call.
+#[derive(Clone, Debug, Default)]
+pub struct Wf {
+    /// Scratch: per-server busy times b_m(k), reused across calls to
+    /// avoid re-allocating on the hot path.
+    scratch_busy: Vec<Slots>,
+}
+
+impl Wf {
+    pub fn new() -> Self {
+        Wf::default()
+    }
+
+    /// Assign and also return the final per-server busy times b_m(K_c)
+    /// (needed by the OCWF reordering driver to accumulate state across
+    /// jobs in the new order).
+    pub fn assign_with_busy(&mut self, inst: &Instance) -> (Assignment, Vec<Slots>) {
+        self.scratch_busy.clear();
+        self.scratch_busy.extend_from_slice(inst.busy);
+        let busy = &mut self.scratch_busy;
+
+        let mut per_group = Vec::with_capacity(inst.groups.len());
+        // WF's estimated completion time (paper's WF(I)): the maximum
+        // estimated busy time over participating servers, i.e. the largest
+        // water level reached (eq. 15 with WF = WF_{K_c}).
+        let mut phi: Slots = 0;
+        for g in inst.groups {
+            if g.size == 0 {
+                per_group.push(Vec::new());
+                continue;
+            }
+            let xi = water_level(&g.servers, g.size, busy, inst.mu);
+            phi = phi.max(xi);
+            // Participating servers: estimated busy strictly below the
+            // level.
+            let mut remaining = g.size;
+            let mut alloc = Vec::new();
+            let participating: Vec<usize> = g
+                .servers
+                .iter()
+                .copied()
+                .filter(|&m| busy[m] < xi)
+                .collect();
+            debug_assert!(!participating.is_empty());
+            for (i, &m) in participating.iter().enumerate() {
+                let cap = (xi - busy[m]) * inst.mu[m];
+                let take = if i + 1 == participating.len() {
+                    // Last participating server: all the remaining tasks
+                    // (≤ cap by minimality of ξ).
+                    debug_assert!(remaining <= cap, "xi not minimal?");
+                    remaining
+                } else {
+                    cap.min(remaining)
+                };
+                if take > 0 {
+                    alloc.push((m, take));
+                    remaining -= take;
+                }
+                if remaining == 0 {
+                    break;
+                }
+            }
+            debug_assert_eq!(remaining, 0);
+            // eq. (10): raise participating servers to the level.
+            for &m in &participating {
+                busy[m] = xi;
+            }
+            per_group.push(alloc);
+        }
+
+        let final_busy = busy.clone();
+        (Assignment { per_group, phi }, final_busy)
+    }
+}
+
+impl Assigner for Wf {
+    fn name(&self) -> &'static str {
+        "wf"
+    }
+
+    fn assign(&mut self, inst: &Instance) -> Assignment {
+        self.assign_with_busy(inst).0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assign::{validate_assignment, AssignPolicy};
+    use crate::job::TaskGroup;
+
+    #[test]
+    fn single_group_balances_idle_servers() {
+        let groups = vec![TaskGroup::new(12, vec![0, 1, 2])];
+        let mu = vec![2, 2, 2];
+        let busy = vec![0, 0, 0];
+        let inst = Instance {
+            groups: &groups,
+            mu: &mu,
+            busy: &busy,
+        };
+        let mut wf = Wf::new();
+        let a = wf.assign(&inst);
+        validate_assignment(&inst, &a).unwrap();
+        // Level = 2 slots: every server takes 4 tasks.
+        assert_eq!(a.phi, 2);
+        assert_eq!(a.per_group[0], vec![(0, 4), (1, 4), (2, 4)]);
+    }
+
+    #[test]
+    fn busy_server_excluded_until_level_reaches_it() {
+        // Server 0 busy until slot 10; 4 tasks fit on server 1 alone.
+        let groups = vec![TaskGroup::new(4, vec![0, 1])];
+        let mu = vec![1, 1];
+        let busy = vec![10, 0];
+        let inst = Instance {
+            groups: &groups,
+            mu: &mu,
+            busy: &busy,
+        };
+        let a = Wf::new().assign(&inst);
+        validate_assignment(&inst, &a).unwrap();
+        assert_eq!(a.per_group[0], vec![(1, 4)]);
+        assert_eq!(a.phi, 4);
+    }
+
+    #[test]
+    fn sequential_groups_stack() {
+        // Group 1 fills servers {0,1} to level 2; group 2 on {1,2} then
+        // sees server 1 at 2.
+        let groups = vec![
+            TaskGroup::new(4, vec![0, 1]),
+            TaskGroup::new(4, vec![1, 2]),
+        ];
+        let mu = vec![1, 1, 1];
+        let busy = vec![0, 0, 0];
+        let inst = Instance {
+            groups: &groups,
+            mu: &mu,
+            busy: &busy,
+        };
+        let (a, final_busy) = Wf::new().assign_with_busy(&inst);
+        validate_assignment(&inst, &a).unwrap();
+        // Group 1: level 2, 2 tasks each on 0 and 1.
+        assert_eq!(a.per_group[0], vec![(0, 2), (1, 2)]);
+        // Group 2: server 1 at 2, server 2 at 0. Level 3: (3-2) + 3 = 4 ≥ 4.
+        assert_eq!(a.per_group[1], vec![(1, 1), (2, 3)]);
+        assert_eq!(final_busy, vec![2, 3, 3]);
+        assert_eq!(a.phi, 3);
+    }
+
+    #[test]
+    fn empty_groups_skipped() {
+        let groups = vec![TaskGroup::new(0, vec![0]), TaskGroup::new(2, vec![0])];
+        let mu = vec![1];
+        let busy = vec![0];
+        let inst = Instance {
+            groups: &groups,
+            mu: &mu,
+            busy: &busy,
+        };
+        let a = Wf::new().assign(&inst);
+        assert!(a.per_group[0].is_empty());
+        assert_eq!(a.per_group[1], vec![(0, 2)]);
+        assert_eq!(a.phi, 2);
+    }
+
+    #[test]
+    fn theorem1_instance_ratio_approaches_kc() {
+        // The Thm-1 construction: K groups, θ ≥ 2,
+        // |S_k| = Σ_{k'=1..K-k+1} θ^{k'}, nested S_1 ⊃ S_2 ⊃ … ⊃ S_K,
+        // |T_k| = θ·|S_k|, μ ≡ 1, b ≡ 0. WF yields K·θ; OPT yields θ+2.
+        let theta: u64 = 4;
+        let k_c = 3usize;
+        let sizes: Vec<u64> = (1..=k_c)
+            .map(|k| (1..=(k_c - k + 1) as u32).map(|e| theta.pow(e)).sum())
+            .collect();
+        let m_total = sizes[0] as usize;
+        // S_k = the first |S_k| servers (nested).
+        let groups: Vec<TaskGroup> = (0..k_c)
+            .map(|k| {
+                TaskGroup::new(theta * sizes[k], (0..sizes[k] as usize).collect())
+            })
+            .collect();
+        let mu = vec![1u64; m_total];
+        let busy = vec![0u64; m_total];
+        let inst = Instance {
+            groups: &groups,
+            mu: &mu,
+            busy: &busy,
+        };
+        let a = Wf::new().assign(&inst);
+        validate_assignment(&inst, &a).unwrap();
+        // WF fills every group across all its servers: θ slots per group,
+        // stacked K_c deep on the innermost servers.
+        assert_eq!(a.phi, k_c as u64 * theta, "WF = K_c·θ on the construction");
+        // The optimum (θ+2, eq. 13) is achievable — check with OBTA.
+        let mut obta = AssignPolicy::Obta.build(0);
+        let opt = obta.assign(&inst);
+        validate_assignment(&inst, &opt).unwrap();
+        assert_eq!(opt.phi, theta + 2, "OPT = θ+2 on the construction");
+    }
+}

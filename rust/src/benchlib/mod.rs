@@ -1,0 +1,269 @@
+//! A criterion-lite benchmarking harness (the `criterion` crate is not in
+//! the offline vendor set).
+//!
+//! Provides warmup, timed iterations with adaptive batching, summary
+//! statistics, and plain-text/JSON reporting. Bench binaries registered
+//! with `harness = false` in `Cargo.toml` use [`Bench`] directly; the
+//! figure-reproduction benches additionally emit the data series of the
+//! paper's tables/figures.
+
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Prevent the optimizer from eliminating a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Configuration for one benchmark run.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    /// Minimum measured samples regardless of duration.
+    pub min_samples: usize,
+    /// Maximum samples (caps very fast functions).
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(1000),
+            min_samples: 10,
+            max_samples: 2000,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// A faster profile for CI/test runs.
+    pub fn quick() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(20),
+            measure: Duration::from_millis(100),
+            min_samples: 5,
+            max_samples: 200,
+        }
+    }
+}
+
+/// Result of one benchmark: per-iteration wall-clock in microseconds.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+    pub samples_us: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        let s = &self.summary;
+        format!(
+            "{:<40} {:>10.2} us/iter (p50 {:>9.2}, p99 {:>10.2}, n={})",
+            self.name, s.mean, s.p50, s.p99, s.n
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("mean_us", Json::num(self.summary.mean)),
+            ("p50_us", Json::num(self.summary.p50)),
+            ("p99_us", Json::num(self.summary.p99)),
+            ("std_us", Json::num(self.summary.std)),
+            ("n", Json::num(self.summary.n as f64)),
+        ])
+    }
+}
+
+/// A group of benchmarks that share a config and print a report.
+pub struct Bench {
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // `cargo bench -- --quick` or TAOS_BENCH_QUICK=1 switches to the
+        // fast profile (used by CI and the Makefile test target).
+        let quick = std::env::args().any(|a| a == "--quick")
+            || std::env::var("TAOS_BENCH_QUICK").is_ok();
+        Bench {
+            cfg: if quick { BenchConfig::quick() } else { BenchConfig::default() },
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_config(cfg: BenchConfig) -> Self {
+        Bench { cfg, results: Vec::new() }
+    }
+
+    /// Run one benchmark. `f` is invoked once per sample; use
+    /// [`black_box`] on its result inside the closure.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        // Warmup.
+        let w0 = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while w0.elapsed() < self.cfg.warmup {
+            black_box(f());
+            warm_iters += 1;
+        }
+        // Estimate per-iter cost to size batches (aim ~1ms per sample so
+        // Instant overhead is negligible for fast functions).
+        let per_iter = w0.elapsed().as_secs_f64() / warm_iters.max(1) as f64;
+        let batch = ((1e-3 / per_iter.max(1e-9)).ceil() as u64).clamp(1, 1_000_000);
+
+        let mut samples = Vec::new();
+        let m0 = Instant::now();
+        while (m0.elapsed() < self.cfg.measure || samples.len() < self.cfg.min_samples)
+            && samples.len() < self.cfg.max_samples
+        {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            samples.push(t0.elapsed().as_secs_f64() * 1e6 / batch as f64);
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            summary: Summary::from(&samples),
+            samples_us: samples,
+        };
+        println!("{}", result.report_line());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Write all results as JSON lines to the given path.
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        use std::io::Write;
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        for r in &self.results {
+            writeln!(f, "{}", r.to_json().to_string())?;
+        }
+        Ok(())
+    }
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Render a plain-text table (used by the figure benches to print the same
+/// rows the paper reports, e.g. Table I).
+pub struct TextTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TextTable {
+    pub fn new(header: &[&str]) -> Self {
+        TextTable {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {c:>w$} |", w = w));
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleep() {
+        let mut b = Bench::with_config(BenchConfig {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(30),
+            min_samples: 3,
+            max_samples: 50,
+        });
+        let r = b.run("sleep_1ms", || std::thread::sleep(Duration::from_millis(1)));
+        assert!(r.summary.mean >= 900.0, "mean {} us", r.summary.mean);
+        assert!(r.summary.n >= 3);
+    }
+
+    #[test]
+    fn bench_fast_function_batches() {
+        let mut b = Bench::with_config(BenchConfig::quick());
+        let r = b.run("add", || black_box(2u64) + black_box(3u64));
+        assert!(r.summary.mean < 100.0, "fast fn should be well under 100us");
+    }
+
+    #[test]
+    fn json_output_roundtrips() {
+        let mut b = Bench::with_config(BenchConfig::quick());
+        b.run("noop", || ());
+        let path = std::env::temp_dir().join("taos_bench_test.jsonl");
+        b.write_json(path.to_str().unwrap()).unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        let parsed = crate::util::json::Json::parse(content.lines().next().unwrap()).unwrap();
+        assert_eq!(parsed.get("name").unwrap().as_str(), Some("noop"));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = TextTable::new(&["alg", "jct"]);
+        t.row(vec!["wf".into(), "6042".into()]);
+        t.row(vec!["obta".into(), "5870".into()]);
+        let s = t.render();
+        assert!(s.contains("alg |"), "header present: {s}");
+        assert!(s.contains("6042"));
+        assert_eq!(s.lines().count(), 4, "header + separator + 2 rows: {s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_row() {
+        let mut t = TextTable::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+}

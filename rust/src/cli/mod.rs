@@ -1,0 +1,272 @@
+//! Command-line argument parsing (the `clap` crate is not in the offline
+//! vendor set). Supports subcommands, `--flag value`, `--flag=value`,
+//! boolean switches, and generated help text.
+
+use std::collections::BTreeMap;
+
+/// Declarative spec of one flag.
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_switch: bool,
+}
+
+/// A parsed command line: subcommand + flag values + positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Parsed {
+    pub subcommand: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{name}: cannot parse `{v}`")),
+        }
+    }
+
+    pub fn has_switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+/// A subcommand-based CLI.
+pub struct Cli {
+    pub bin: &'static str,
+    pub about: &'static str,
+    subcommands: Vec<(&'static str, &'static str, Vec<FlagSpec>)>,
+}
+
+impl Cli {
+    pub fn new(bin: &'static str, about: &'static str) -> Self {
+        Cli {
+            bin,
+            about,
+            subcommands: Vec::new(),
+        }
+    }
+
+    pub fn subcommand(
+        mut self,
+        name: &'static str,
+        help: &'static str,
+        flags: Vec<FlagSpec>,
+    ) -> Self {
+        self.subcommands.push((name, help, flags));
+        self
+    }
+
+    pub fn help(&self) -> String {
+        let mut out = format!("{} — {}\n\nUSAGE:\n  {} <subcommand> [flags]\n\nSUBCOMMANDS:\n", self.bin, self.about, self.bin);
+        for (name, help, _) in &self.subcommands {
+            out.push_str(&format!("  {name:<14} {help}\n"));
+        }
+        out.push_str("\nRun with `<subcommand> --help` for flags.\n");
+        out
+    }
+
+    pub fn help_for(&self, sub: &str) -> Option<String> {
+        let (name, help, flags) = self.subcommands.iter().find(|(n, _, _)| *n == sub)?;
+        let mut out = format!("{} {name} — {help}\n\nFLAGS:\n", self.bin);
+        for f in flags {
+            let kind = if f.is_switch { "" } else { " <value>" };
+            let def = f
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            out.push_str(&format!("  --{}{kind:<10} {}{def}\n", f.name, f.help));
+        }
+        Some(out)
+    }
+
+    /// Parse args (not including argv[0]). Returns Err(message) on any
+    /// problem; the caller prints it and exits.
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, String> {
+        if args.is_empty() || args[0] == "--help" || args[0] == "-h" || args[0] == "help" {
+            return Err(self.help());
+        }
+        let sub = args[0].clone();
+        let (_, _, flags) = self
+            .subcommands
+            .iter()
+            .find(|(n, _, _)| *n == sub)
+            .ok_or_else(|| format!("unknown subcommand `{sub}`\n\n{}", self.help()))?;
+
+        let mut parsed = Parsed {
+            subcommand: sub.clone(),
+            ..Default::default()
+        };
+        // Apply defaults.
+        for f in flags {
+            if let Some(d) = f.default {
+                parsed.flags.insert(f.name.to_string(), d.to_string());
+            }
+        }
+
+        let mut i = 1;
+        while i < args.len() {
+            let arg = &args[i];
+            if arg == "--help" || arg == "-h" {
+                return Err(self.help_for(&sub).unwrap());
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name} for `{sub}`"))?;
+                if spec.is_switch {
+                    if inline_val.is_some() {
+                        return Err(format!("--{name} is a switch, no value allowed"));
+                    }
+                    parsed.switches.push(name.to_string());
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .ok_or_else(|| format!("--{name} requires a value"))?
+                                .clone()
+                        }
+                    };
+                    parsed.flags.insert(name.to_string(), val);
+                }
+            } else {
+                parsed.positionals.push(arg.clone());
+            }
+            i += 1;
+        }
+        Ok(parsed)
+    }
+}
+
+/// Shorthand constructors for flag specs.
+pub fn flag(name: &'static str, help: &'static str, default: &'static str) -> FlagSpec {
+    FlagSpec {
+        name,
+        help,
+        default: Some(default),
+        is_switch: false,
+    }
+}
+
+pub fn flag_req(name: &'static str, help: &'static str) -> FlagSpec {
+    FlagSpec {
+        name,
+        help,
+        default: None,
+        is_switch: false,
+    }
+}
+
+pub fn switch(name: &'static str, help: &'static str) -> FlagSpec {
+    FlagSpec {
+        name,
+        help,
+        default: None,
+        is_switch: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("taos", "test cli")
+            .subcommand(
+                "simulate",
+                "run a simulation",
+                vec![
+                    flag("alg", "algorithm", "wf"),
+                    flag("seed", "rng seed", "42"),
+                    switch("verbose", "chatty output"),
+                ],
+            )
+            .subcommand("repro", "reproduce a figure", vec![flag_req("fig", "figure id")])
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_defaults_and_overrides() {
+        let p = cli().parse(&argv(&["simulate", "--seed", "7"])).unwrap();
+        assert_eq!(p.subcommand, "simulate");
+        assert_eq!(p.get("alg"), Some("wf"));
+        assert_eq!(p.get_parse::<u64>("seed").unwrap(), Some(7));
+        assert!(!p.has_switch("verbose"));
+    }
+
+    #[test]
+    fn parses_equals_form_and_switch() {
+        let p = cli()
+            .parse(&argv(&["simulate", "--alg=obta", "--verbose"]))
+            .unwrap();
+        assert_eq!(p.get("alg"), Some("obta"));
+        assert!(p.has_switch("verbose"));
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(cli().parse(&argv(&["simulate", "--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn unknown_subcommand_rejected() {
+        let err = cli().parse(&argv(&["frobnicate"])).unwrap_err();
+        assert!(err.contains("unknown subcommand"));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cli().parse(&argv(&["simulate", "--alg"])).is_err());
+    }
+
+    #[test]
+    fn help_lists_subcommands() {
+        let err = cli().parse(&argv(&["--help"])).unwrap_err();
+        assert!(err.contains("simulate"));
+        assert!(err.contains("repro"));
+    }
+
+    #[test]
+    fn required_flag_has_no_default() {
+        let p = cli().parse(&argv(&["repro"])).unwrap();
+        assert_eq!(p.get("fig"), None);
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let p = cli()
+            .parse(&argv(&["simulate", "file1", "--alg", "rd", "file2"]))
+            .unwrap();
+        assert_eq!(p.positionals, vec!["file1", "file2"]);
+    }
+
+    #[test]
+    fn switch_with_value_rejected() {
+        assert!(cli().parse(&argv(&["simulate", "--verbose=yes"])).is_err());
+    }
+}

@@ -1,0 +1,127 @@
+//! The cluster model: `M` servers holding replicated data chunks.
+//!
+//! Experiments don't materialize individual chunks — following the paper's
+//! setup (§V-A), each task group's *available-server set* is drawn from the
+//! Zipf placement model in [`placement`], and per-(server, job) computing
+//! capacities `μ_m^c` are sampled uniformly from a configured range. The
+//! live coordinator (`crate::coordinator`) does materialize chunk ownership
+//! for its demo, using [`Cluster::chunk_holders`].
+
+pub mod placement;
+
+use crate::config::ClusterConfig;
+use crate::job::ServerId;
+use crate::util::rng::Rng;
+
+/// A distributed cluster of `m` servers.
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    cfg: ClusterConfig,
+}
+
+impl Cluster {
+    /// Build a cluster from its configuration. (`generate` name kept for
+    /// symmetry with `Trace::synth_alibaba`; placement state is sampled
+    /// lazily per group.)
+    pub fn generate(cfg: &ClusterConfig, _rng: &mut Rng) -> Cluster {
+        Cluster { cfg: cfg.clone() }
+    }
+
+    pub fn num_servers(&self) -> usize {
+        self.cfg.servers
+    }
+
+    pub fn config(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+
+    /// Sample the available-server set for one task group (paper §V-A):
+    /// Zipf-ranked anchor over a random permutation, then `p` consecutive
+    /// servers (wrapping), `p ~ U[avail_lo, avail_hi]`.
+    pub fn sample_available(&self, placement: &placement::Placement, rng: &mut Rng) -> Vec<ServerId> {
+        placement.sample_group_servers(rng, self.cfg.avail_lo, self.cfg.avail_hi)
+    }
+
+    /// Sample the per-server capacity vector `μ_·^c` for one job:
+    /// uniform integer in `[mu_lo, mu_hi]` per server (paper §V-A default
+    /// 3–5).
+    pub fn sample_mu(&self, rng: &mut Rng) -> Vec<u64> {
+        (0..self.cfg.servers)
+            .map(|_| rng.gen_range_incl(self.cfg.mu_lo, self.cfg.mu_hi))
+            .collect()
+    }
+
+    /// Mean per-server capacity, used for utilization calibration.
+    pub fn mean_mu(&self) -> f64 {
+        (self.cfg.mu_lo + self.cfg.mu_hi) as f64 / 2.0
+    }
+
+    /// For the live coordinator: the set of servers holding a chunk,
+    /// derived deterministically from the chunk id (consistent-hash-style
+    /// ring walk with `replicas` copies).
+    pub fn chunk_holders(&self, chunk_id: u64, replicas: usize) -> Vec<ServerId> {
+        let m = self.cfg.servers;
+        let replicas = replicas.min(m);
+        // Mix the chunk id and walk the ring from the mixed anchor.
+        let mut h = chunk_id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        h ^= h >> 32;
+        let anchor = (h % m as u64) as usize;
+        (0..replicas).map(|i| (anchor + i) % m).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn cluster() -> Cluster {
+        Cluster::generate(&ClusterConfig::default(), &mut Rng::seed_from(1))
+    }
+
+    #[test]
+    fn mu_within_configured_range() {
+        let c = cluster();
+        let mut rng = Rng::seed_from(2);
+        for _ in 0..20 {
+            let mu = c.sample_mu(&mut rng);
+            assert_eq!(mu.len(), 100);
+            assert!(mu.iter().all(|&x| (3..=5).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn mean_mu_matches_range() {
+        assert!((cluster().mean_mu() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chunk_holders_distinct_and_in_range() {
+        let c = cluster();
+        for chunk in 0..50u64 {
+            let holders = c.chunk_holders(chunk, 3);
+            assert_eq!(holders.len(), 3);
+            let mut dedup = holders.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            assert_eq!(dedup.len(), 3, "holders must be distinct");
+            assert!(holders.iter().all(|&s| s < 100));
+        }
+    }
+
+    #[test]
+    fn chunk_holders_deterministic() {
+        let c = cluster();
+        assert_eq!(c.chunk_holders(7, 3), c.chunk_holders(7, 3));
+    }
+
+    #[test]
+    fn chunk_holders_capped_at_cluster_size() {
+        let mut cfg = ClusterConfig::default();
+        cfg.servers = 2;
+        cfg.avail_lo = 1;
+        cfg.avail_hi = 2;
+        let c = Cluster::generate(&cfg, &mut Rng::seed_from(3));
+        assert_eq!(c.chunk_holders(1, 5).len(), 2);
+    }
+}

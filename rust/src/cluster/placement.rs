@@ -1,0 +1,115 @@
+//! Zipf data-placement model (paper §V-A, "Available Servers").
+//!
+//! For each task group: draw a rank `i` from Zipf(α) over `1..=M`, map it
+//! through a random permutation of the servers to get the *anchor* server
+//! `m`, then the group's available servers are `m, m+1, …, m+p−1` (mod M)
+//! with `p ~ U[p_lo, p_hi]`. α = 0 is the uniform distribution; α = 2 is
+//! heavily skewed (hot servers attract most groups), which is where the
+//! FIFO algorithms degrade and reordering shines (Figs 10–12).
+
+use crate::job::ServerId;
+use crate::util::rng::{Rng, Zipf};
+
+/// Placement sampler for one experiment: a fixed permutation + Zipf CDF.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    perm: Vec<ServerId>,
+    zipf: Zipf,
+}
+
+impl Placement {
+    pub fn new(num_servers: usize, alpha: f64, rng: &mut Rng) -> Placement {
+        assert!(num_servers > 0);
+        let mut perm: Vec<ServerId> = (0..num_servers).collect();
+        rng.shuffle(&mut perm);
+        Placement {
+            perm,
+            zipf: Zipf::new(num_servers, alpha),
+        }
+    }
+
+    pub fn num_servers(&self) -> usize {
+        self.perm.len()
+    }
+
+    /// Sample the anchor server for one task group.
+    pub fn sample_anchor(&self, rng: &mut Rng) -> ServerId {
+        self.perm[self.zipf.sample(rng)]
+    }
+
+    /// Sample a full available-server set: anchor + the following `p−1`
+    /// servers on the ring, `p ~ U[p_lo, p_hi]` (capped at M).
+    pub fn sample_group_servers(&self, rng: &mut Rng, p_lo: usize, p_hi: usize) -> Vec<ServerId> {
+        let m = self.perm.len();
+        let p = rng.gen_range_incl(p_lo as u64, p_hi as u64) as usize;
+        let p = p.min(m).max(1);
+        let anchor = self.sample_anchor(rng);
+        (0..p).map(|i| (anchor + i) % m).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn servers_contiguous_with_wrap() {
+        let mut rng = Rng::seed_from(20);
+        let pl = Placement::new(10, 1.0, &mut rng);
+        for _ in 0..200 {
+            let s = pl.sample_group_servers(&mut rng, 3, 5);
+            assert!(s.len() >= 3 && s.len() <= 5);
+            for w in s.windows(2) {
+                assert_eq!((w[0] + 1) % 10, w[1], "contiguous ring walk: {s:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn alpha_zero_spreads_anchors_uniformly() {
+        let mut rng = Rng::seed_from(21);
+        let pl = Placement::new(10, 0.0, &mut rng);
+        let mut counts = [0usize; 10];
+        for _ in 0..10_000 {
+            counts[pl.sample_anchor(&mut rng)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 1000.0).abs() < 150.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn alpha_two_concentrates_anchors() {
+        let mut rng = Rng::seed_from(22);
+        let pl = Placement::new(100, 2.0, &mut rng);
+        let mut counts = vec![0usize; 100];
+        for _ in 0..10_000 {
+            counts[pl.sample_anchor(&mut rng)] += 1;
+        }
+        let max = *counts.iter().max().unwrap();
+        // Zipf(2) over 100 ranks gives p(rank 1) ≈ 0.61.
+        assert!(max > 5000, "most-hit server got {max}/10000");
+    }
+
+    #[test]
+    fn p_capped_at_cluster_size() {
+        let mut rng = Rng::seed_from(23);
+        let pl = Placement::new(4, 0.0, &mut rng);
+        let s = pl.sample_group_servers(&mut rng, 8, 12);
+        assert_eq!(s.len(), 4);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut r1 = Rng::seed_from(24);
+        let mut r2 = Rng::seed_from(24);
+        let p1 = Placement::new(20, 1.5, &mut r1);
+        let p2 = Placement::new(20, 1.5, &mut r2);
+        for _ in 0..20 {
+            assert_eq!(
+                p1.sample_group_servers(&mut r1, 2, 4),
+                p2.sample_group_servers(&mut r2, 2, 4)
+            );
+        }
+    }
+}

@@ -1,0 +1,250 @@
+//! Experiment configuration: typed config structs with the paper's default
+//! parameters (§V-A), plus a small `key = value` config-file parser (TOML
+//! subset) so experiments are scriptable without `serde`/`toml`.
+
+use crate::{Error, Result};
+
+/// Cluster shape and data placement (paper §II and §V-A).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterConfig {
+    /// Number of servers M. Paper default: 100.
+    pub servers: usize,
+    /// Zipf skew α ∈ [0, 2] for placing task-group inputs (0 = uniform).
+    pub zipf_alpha: f64,
+    /// Number of available servers per task group: uniform in
+    /// [avail_lo, avail_hi]. Paper default: [8, 12].
+    pub avail_lo: usize,
+    pub avail_hi: usize,
+    /// Per-(server, job) computing capacity μ_m^c: uniform integer in
+    /// [mu_lo, mu_hi]. Paper default: [3, 5].
+    pub mu_lo: u64,
+    pub mu_hi: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            servers: 100,
+            zipf_alpha: 0.0,
+            avail_lo: 8,
+            avail_hi: 12,
+            mu_lo: 3,
+            mu_hi: 5,
+        }
+    }
+}
+
+/// Trace generation / loading parameters (paper §V-A).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceConfig {
+    /// Number of jobs. Paper default: 250.
+    pub jobs: usize,
+    /// Target total number of tasks across all jobs. Paper: 113,653.
+    pub total_tasks: usize,
+    /// Mean task groups per job. Paper: 5.52.
+    pub mean_groups: f64,
+    /// Target system utilization ρ ∈ (0, 1): the job interarrival times are
+    /// scaled so offered load / cluster capacity ≈ ρ. Paper: 0.25–0.75.
+    pub utilization: f64,
+    /// Optional path to a real `batch_task.csv` segment
+    /// (cluster-trace-v2017 schema); when set, jobs/groups come from the
+    /// file and only interarrival scaling is synthetic.
+    pub csv_path: Option<String>,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            jobs: 250,
+            total_tasks: 113_653,
+            mean_groups: 5.52,
+            utilization: 0.5,
+            csv_path: None,
+        }
+    }
+}
+
+/// Simulator knobs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimConfig {
+    /// Safety cap on simulated slots (guards against runaway configs).
+    pub max_slots: u64,
+    /// Record per-job completion times (needed for CDFs).
+    pub record_jct: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            max_slots: 50_000_000,
+            record_jct: true,
+        }
+    }
+}
+
+/// Top-level experiment configuration.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ExperimentConfig {
+    pub cluster: ClusterConfig,
+    pub trace: TraceConfig,
+    pub sim: SimConfig,
+    /// Master seed for all randomness.
+    pub seed: u64,
+}
+
+impl ExperimentConfig {
+    /// Validate invariants; call after construction/parsing.
+    pub fn validate(&self) -> Result<()> {
+        let c = &self.cluster;
+        if c.servers == 0 {
+            return Err(Error::Config("servers must be > 0".into()));
+        }
+        if c.avail_lo == 0 || c.avail_lo > c.avail_hi || c.avail_hi > c.servers {
+            return Err(Error::Config(format!(
+                "available-server range [{}, {}] invalid for {} servers",
+                c.avail_lo, c.avail_hi, c.servers
+            )));
+        }
+        if c.mu_lo == 0 || c.mu_lo > c.mu_hi {
+            return Err(Error::Config("mu range invalid".into()));
+        }
+        if !(0.0..=2.0).contains(&c.zipf_alpha) {
+            return Err(Error::Config("zipf_alpha must be in [0, 2]".into()));
+        }
+        let t = &self.trace;
+        if t.jobs == 0 || t.total_tasks < t.jobs {
+            return Err(Error::Config("trace must have >= 1 task per job".into()));
+        }
+        if !(t.utilization > 0.0 && t.utilization < 1.0) {
+            return Err(Error::Config("utilization must be in (0, 1)".into()));
+        }
+        if t.mean_groups < 1.0 {
+            return Err(Error::Config("mean_groups must be >= 1".into()));
+        }
+        Ok(())
+    }
+
+    /// Parse a config file: `key = value` lines, `#` comments, section
+    /// headers `[cluster] [trace] [sim]` optional (keys are unambiguous).
+    pub fn from_str(text: &str) -> Result<ExperimentConfig> {
+        let mut cfg = ExperimentConfig::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() || (line.starts_with('[') && line.ends_with(']')) {
+                continue;
+            }
+            let (key, val) = line.split_once('=').ok_or_else(|| Error::TraceParse {
+                line: lineno + 1,
+                msg: format!("expected key = value, got `{line}`"),
+            })?;
+            let key = key.trim();
+            let val = val.trim().trim_matches('"');
+            let perr = |msg: &str| Error::TraceParse {
+                line: lineno + 1,
+                msg: msg.to_string(),
+            };
+            match key {
+                "servers" => cfg.cluster.servers = val.parse().map_err(|_| perr("bad usize"))?,
+                "zipf_alpha" => cfg.cluster.zipf_alpha = val.parse().map_err(|_| perr("bad f64"))?,
+                "avail_lo" => cfg.cluster.avail_lo = val.parse().map_err(|_| perr("bad usize"))?,
+                "avail_hi" => cfg.cluster.avail_hi = val.parse().map_err(|_| perr("bad usize"))?,
+                "mu_lo" => cfg.cluster.mu_lo = val.parse().map_err(|_| perr("bad u64"))?,
+                "mu_hi" => cfg.cluster.mu_hi = val.parse().map_err(|_| perr("bad u64"))?,
+                "jobs" => cfg.trace.jobs = val.parse().map_err(|_| perr("bad usize"))?,
+                "total_tasks" => cfg.trace.total_tasks = val.parse().map_err(|_| perr("bad usize"))?,
+                "mean_groups" => cfg.trace.mean_groups = val.parse().map_err(|_| perr("bad f64"))?,
+                "utilization" => cfg.trace.utilization = val.parse().map_err(|_| perr("bad f64"))?,
+                "csv_path" => cfg.trace.csv_path = Some(val.to_string()),
+                "max_slots" => cfg.sim.max_slots = val.parse().map_err(|_| perr("bad u64"))?,
+                "record_jct" => cfg.sim.record_jct = val.parse().map_err(|_| perr("bad bool"))?,
+                "seed" => cfg.seed = val.parse().map_err(|_| perr("bad u64"))?,
+                other => {
+                    return Err(Error::TraceParse {
+                        line: lineno + 1,
+                        msg: format!("unknown key `{other}`"),
+                    })
+                }
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_str(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_section_5a() {
+        let cfg = ExperimentConfig::default();
+        assert_eq!(cfg.cluster.servers, 100);
+        assert_eq!((cfg.cluster.mu_lo, cfg.cluster.mu_hi), (3, 5));
+        assert_eq!((cfg.cluster.avail_lo, cfg.cluster.avail_hi), (8, 12));
+        assert_eq!(cfg.trace.jobs, 250);
+        assert_eq!(cfg.trace.total_tasks, 113_653);
+        assert!((cfg.trace.mean_groups - 5.52).abs() < 1e-9);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn parses_config_file() {
+        let text = r#"
+            # experiment: figure 12
+            [cluster]
+            servers = 50
+            zipf_alpha = 2.0
+            [trace]
+            jobs = 10
+            total_tasks = 500
+            utilization = 0.75
+            seed = 99
+        "#;
+        let cfg = ExperimentConfig::from_str(text).unwrap();
+        assert_eq!(cfg.cluster.servers, 50);
+        assert_eq!(cfg.cluster.zipf_alpha, 2.0);
+        assert_eq!(cfg.trace.jobs, 10);
+        assert_eq!(cfg.seed, 99);
+        // Unset keys keep defaults.
+        assert_eq!(cfg.cluster.mu_lo, 3);
+    }
+
+    #[test]
+    fn rejects_unknown_key() {
+        assert!(ExperimentConfig::from_str("bogus = 1").is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_ranges() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.cluster.avail_lo = 20;
+        cfg.cluster.avail_hi = 10;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = ExperimentConfig::default();
+        cfg.cluster.avail_hi = 1000; // > servers
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = ExperimentConfig::default();
+        cfg.trace.utilization = 1.5;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = ExperimentConfig::default();
+        cfg.cluster.mu_lo = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn reports_line_numbers() {
+        let err = ExperimentConfig::from_str("servers = 100\nbad line").unwrap_err();
+        match err {
+            Error::TraceParse { line, .. } => assert_eq!(line, 2),
+            other => panic!("unexpected error {other:?}"),
+        }
+    }
+}

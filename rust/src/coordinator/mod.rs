@@ -1,0 +1,24 @@
+//! The live coordinator: a leader/worker data plane that executes real
+//! task payloads through the PJRT runtime.
+//!
+//! The paper's contribution is the scheduling layer, so the coordinator is
+//! organized like a serving router: a **leader** ingests jobs, derives
+//! task groups from chunk placement, runs a task-assignment algorithm
+//! (§III) against live queue-depth estimates, and dispatches per-server
+//! task batches to **workers**; workers execute each batch's data-chunk
+//! compute by calling the **accelerator service**, a dedicated thread that
+//! owns the PJRT client and the AOT-compiled Pallas payload kernel and
+//! coalesces concurrent requests into batched executions. The same
+//! service exposes the batched water-filling evaluator used to
+//! cross-check the rust WF implementation against the L1 kernel.
+//!
+//! Python never runs here: the accelerator loads `artifacts/*.hlo.txt`
+//! produced once by `make artifacts`.
+
+pub mod accel;
+pub mod leader;
+pub mod reorder_offload;
+pub mod verify;
+
+pub use accel::{AccelHandle, WfPhiInput};
+pub use leader::{Leader, LiveJobSpec, LiveReport};

@@ -1,0 +1,184 @@
+//! OCWF candidate evaluation offloaded to the AOT water-filling kernel.
+//!
+//! The reordering round of §IV evaluates the estimated completion time Φ
+//! of every not-yet-placed outstanding job against the current busy
+//! vector — a batch of independent WF evaluations, which is exactly the
+//! shape of the L1 Pallas kernel (`python/compile/kernels/waterfill.py`).
+//! This module packs a reorder round into `(B, K, M)` kernel batches,
+//! runs them through the accelerator service, and rebuilds the same
+//! shortest-estimated-time-first order the native driver produces.
+//!
+//! The offloaded driver returns the *order* and per-step Φ values; the
+//! task allocations are then materialized natively (the kernel computes
+//! levels and busy vectors, not per-server task splits — allocation
+//! extraction is cheap and stays on the CPU side). Equality with the
+//! native [`crate::sched::ocwf::reorder`] is asserted in the
+//! `runtime_kernel` integration suite.
+
+use std::sync::Arc;
+
+use crate::assign::wf::Wf;
+use crate::assign::Instance;
+use crate::job::{Slots, TaskGroup};
+use crate::sched::ocwf::{reorder, Outstanding, ReorderOutcome};
+use crate::{Error, Result};
+
+use super::accel::{AccelHandle, WfPhiInput};
+
+/// A reorder driver that evaluates candidate Φ values on the accelerator.
+pub struct OffloadedReorder {
+    accel: Arc<AccelHandle>,
+}
+
+impl OffloadedReorder {
+    pub fn new(accel: Arc<AccelHandle>) -> Self {
+        OffloadedReorder { accel }
+    }
+
+    /// Check that every outstanding job fits the kernel's static (K, M)
+    /// shape.
+    pub fn fits(&self, outstanding: &[Outstanding], num_servers: usize) -> bool {
+        num_servers <= self.accel.wf_m
+            && outstanding
+                .iter()
+                .all(|o| o.job.groups.len() <= self.accel.wf_k)
+    }
+
+    /// Evaluate Φ for every candidate in one (or a few) kernel calls.
+    /// `busy` is the current per-server busy vector of the round.
+    fn phi_batch(
+        &self,
+        cands: &[&Outstanding],
+        busy: &[Slots],
+        num_servers: usize,
+    ) -> Result<Vec<Slots>> {
+        let (b, k, m) = (self.accel.wf_b, self.accel.wf_k, self.accel.wf_m);
+        let mut phis = Vec::with_capacity(cands.len());
+        for chunk in cands.chunks(b) {
+            let mut in_busy = vec![0i32; b * m];
+            let mut in_mu = vec![1i32; b * m];
+            let mut in_sizes = vec![0i32; b * k];
+            let mut in_avail = vec![0i32; b * k * m];
+            for (row, o) in chunk.iter().enumerate() {
+                for s in 0..num_servers {
+                    in_busy[row * m + s] = busy[s] as i32;
+                    in_mu[row * m + s] = o.job.mu[s] as i32;
+                }
+                for (g, (group, &rem)) in
+                    o.job.groups.iter().zip(&o.remaining).enumerate()
+                {
+                    in_sizes[row * k + g] = rem as i32;
+                    if rem > 0 {
+                        for &s in &group.servers {
+                            in_avail[row * k * m + g * m + s] = 1;
+                        }
+                    }
+                }
+            }
+            let (phi, _busy_out) = self.accel.wf_phi(WfPhiInput {
+                busy: in_busy,
+                mu: in_mu,
+                sizes: in_sizes,
+                avail: in_avail,
+            })?;
+            phis.extend(chunk.iter().enumerate().map(|(row, _)| phi[row] as Slots));
+        }
+        Ok(phis)
+    }
+
+    /// Run one full reordering with kernel-evaluated candidates. Produces
+    /// the identical order/assignments as the native OCWF driver (the
+    /// kernel and native WF are bit-equivalent).
+    pub fn reorder(
+        &self,
+        outstanding: &[Outstanding],
+        num_servers: usize,
+    ) -> Result<ReorderOutcome> {
+        if !self.fits(outstanding, num_servers) {
+            return Err(Error::Runtime(format!(
+                "outstanding set exceeds kernel shape (K ≤ {}, M ≤ {})",
+                self.accel.wf_k, self.accel.wf_m
+            )));
+        }
+        let n = outstanding.len();
+        let mut busy: Vec<Slots> = vec![0; num_servers];
+        let mut placed = vec![false; n];
+        let mut order = Vec::with_capacity(n);
+        let mut assignments = Vec::with_capacity(n);
+        let mut wf = Wf::new();
+        let mut wf_evals = 0u64;
+
+        for _ in 0..n {
+            let cands: Vec<usize> = (0..n).filter(|&i| !placed[i]).collect();
+            let cand_refs: Vec<&Outstanding> = cands.iter().map(|&i| &outstanding[i]).collect();
+            // One PJRT call evaluates the whole candidate set.
+            let phis = self.phi_batch(&cand_refs, &busy, num_servers)?;
+            wf_evals += cands.len() as u64;
+            // Winner: minimal (Φ, arrival index) — the OCWF tie rule.
+            let (&winner, &phi) = cands
+                .iter()
+                .zip(&phis)
+                .min_by_key(|(&i, &p)| (p, i))
+                .expect("non-empty candidate set");
+            let _ = phi;
+            // Materialize the winner's allocation natively and advance the
+            // busy vector.
+            let groups: Vec<TaskGroup> = outstanding[winner]
+                .job
+                .groups
+                .iter()
+                .zip(&outstanding[winner].remaining)
+                .map(|(g, &r)| TaskGroup {
+                    size: r,
+                    servers: g.servers.clone(),
+                })
+                .collect();
+            let inst = Instance {
+                groups: &groups,
+                mu: &outstanding[winner].job.mu,
+                busy: &busy,
+            };
+            let (a, final_busy) = wf.assign_with_busy(&inst);
+            debug_assert_eq!(a.phi, phis[cands.iter().position(|&i| i == winner).unwrap()]);
+            placed[winner] = true;
+            order.push(winner);
+            assignments.push(a);
+            busy = final_busy;
+        }
+        Ok(ReorderOutcome {
+            order,
+            assignments,
+            wf_evals,
+        })
+    }
+}
+
+/// Convenience for tests: native reorder result for comparison.
+pub fn native_reorder(outstanding: &[Outstanding], num_servers: usize) -> ReorderOutcome {
+    reorder(outstanding, num_servers, false, &mut Wf::new())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::Job;
+
+    #[test]
+    fn fits_checks_shapes() {
+        // A handle cannot be spawned without artifacts in unit tests; the
+        // shape logic is exercised via a stub-free path in the
+        // runtime_kernel integration suite. Here: sanity of the
+        // Outstanding plumbing only.
+        let job = Job {
+            id: 0,
+            arrival: 0,
+            groups: vec![TaskGroup::new(3, vec![0, 1])],
+            mu: vec![1, 1],
+        };
+        let o = Outstanding {
+            job: &job,
+            remaining: vec![3],
+        };
+        assert_eq!(o.total_remaining(), 3);
+    }
+}

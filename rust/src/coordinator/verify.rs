@@ -1,0 +1,162 @@
+//! Cross-layer verification: the AOT-compiled Pallas water-filling kernel
+//! (L1/L2) must agree exactly with the native rust WF (L3) — same water
+//! levels, same estimated completion times, same final busy vectors.
+//! Exercised by `taos verify-kernel` and the `runtime_kernel` integration
+//! test.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::assign::wf::Wf;
+use crate::assign::Instance;
+use crate::job::TaskGroup;
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+
+use super::accel::{AccelHandle, WfPhiInput};
+
+/// An instance padded into one row of the batched kernel input.
+pub struct PaddedInstance {
+    pub groups: Vec<TaskGroup>,
+    pub mu: Vec<u64>,
+    pub busy: Vec<u64>,
+}
+
+/// Generate a random instance that fits in (K, M) after padding.
+pub fn random_padded(rng: &mut Rng, k_max: usize, m_max: usize) -> PaddedInstance {
+    let m = 1 + rng.gen_range(m_max as u64) as usize;
+    let k = 1 + rng.gen_range(k_max as u64) as usize;
+    let mu: Vec<u64> = (0..m).map(|_| rng.gen_range_incl(1, 5)).collect();
+    let busy: Vec<u64> = (0..m).map(|_| rng.gen_range(30)).collect();
+    let groups: Vec<TaskGroup> = (0..k)
+        .map(|_| {
+            let ns = 1 + rng.gen_range(m as u64) as usize;
+            let mut sv: Vec<usize> = (0..m).collect();
+            rng.shuffle(&mut sv);
+            sv.truncate(ns);
+            TaskGroup::new(rng.gen_range_incl(1, 60), sv)
+        })
+        .collect();
+    PaddedInstance { groups, mu, busy }
+}
+
+/// Pack a slice of instances (each with ≤ K groups, ≤ M servers) into one
+/// batched kernel input of static shape (B, K, M). Unused batch rows get
+/// all-zero sizes (the kernel treats them as no-ops).
+pub fn pack_batch(
+    instances: &[PaddedInstance],
+    b: usize,
+    k: usize,
+    m: usize,
+) -> Result<WfPhiInput> {
+    if instances.len() > b {
+        return Err(Error::Runtime(format!(
+            "{} instances exceed batch {b}",
+            instances.len()
+        )));
+    }
+    let mut busy = vec![0i32; b * m];
+    let mut mu = vec![1i32; b * m]; // μ ≥ 1 keeps padded servers harmless
+    let mut sizes = vec![0i32; b * k];
+    let mut avail = vec![0i32; b * k * m];
+    for (row, inst) in instances.iter().enumerate() {
+        if inst.groups.len() > k || inst.mu.len() > m {
+            return Err(Error::Runtime("instance exceeds kernel shape".into()));
+        }
+        for (j, &x) in inst.busy.iter().enumerate() {
+            busy[row * m + j] = x as i32;
+        }
+        for (j, &x) in inst.mu.iter().enumerate() {
+            mu[row * m + j] = x as i32;
+        }
+        for (g, group) in inst.groups.iter().enumerate() {
+            sizes[row * k + g] = group.size as i32;
+            for &s in &group.servers {
+                avail[row * k * m + g * m + s] = 1;
+            }
+        }
+    }
+    Ok(WfPhiInput {
+        busy,
+        mu,
+        sizes,
+        avail,
+    })
+}
+
+/// Verify `cases` random instances against the native WF. Returns
+/// (instances checked, batch size used). Errors on any mismatch.
+pub fn verify_wf_kernel(artifacts: &Path, cases: usize, seed: u64) -> Result<(usize, usize)> {
+    let accel = Arc::new(AccelHandle::spawn(artifacts)?);
+    let (b, k, m) = (accel.wf_b, accel.wf_k, accel.wf_m);
+    let mut rng = Rng::seed_from(seed);
+    let mut checked = 0;
+    while checked < cases {
+        let n = b.min(cases - checked);
+        let instances: Vec<PaddedInstance> = (0..n)
+            .map(|_| random_padded(&mut rng, k.min(6), m.min(12)))
+            .collect();
+        let input = pack_batch(&instances, b, k, m)?;
+        let (phi, busy_out) = accel.wf_phi(input)?;
+        for (row, inst) in instances.iter().enumerate() {
+            let view = Instance {
+                groups: &inst.groups,
+                mu: &inst.mu,
+                busy: &inst.busy,
+            };
+            let (a, native_busy) = Wf::new().assign_with_busy(&view);
+            if phi[row] as u64 != a.phi {
+                return Err(Error::Runtime(format!(
+                    "phi mismatch on row {row}: kernel {} vs native {} ({inst:?})",
+                    phi[row],
+                    a.phi,
+                    inst = inst.groups
+                )));
+            }
+            for (j, &nb) in native_busy.iter().enumerate() {
+                let kb = busy_out[row * m + j] as u64;
+                if kb != nb {
+                    return Err(Error::Runtime(format!(
+                        "busy mismatch row {row} server {j}: kernel {kb} vs native {nb}"
+                    )));
+                }
+            }
+        }
+        checked += n;
+    }
+    let _ = Arc::try_unwrap(accel).map(|a| a.shutdown());
+    Ok((checked, b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_batch_layout() {
+        let inst = PaddedInstance {
+            groups: vec![TaskGroup::new(5, vec![0, 2])],
+            mu: vec![3, 4, 5],
+            busy: vec![7, 0, 1],
+        };
+        let input = pack_batch(&[inst], 2, 2, 4).unwrap();
+        // Row 0.
+        assert_eq!(&input.busy[..4], &[7, 0, 1, 0]);
+        assert_eq!(&input.mu[..4], &[3, 4, 5, 1]);
+        assert_eq!(&input.sizes[..2], &[5, 0]);
+        assert_eq!(&input.avail[..4], &[1, 0, 1, 0]);
+        // Row 1 fully padded.
+        assert!(input.sizes[2..].iter().all(|&s| s == 0));
+        assert!(input.busy[4..].iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn pack_batch_rejects_overflow() {
+        let inst = PaddedInstance {
+            groups: vec![TaskGroup::new(1, vec![0])],
+            mu: vec![1; 10],
+            busy: vec![0; 10],
+        };
+        assert!(pack_batch(&[inst], 1, 1, 4).is_err());
+    }
+}

@@ -1,0 +1,227 @@
+//! Dinic's max-flow algorithm with integer capacities.
+//!
+//! Complexity O(V²E) in general; on the unit-ish bipartite networks the
+//! assignment layer builds it behaves like O(E·√V), which is why OBTA's
+//! per-candidate-Φ feasibility check is cheap. The arena supports `reset`
+//! so the assignment loop can re-run flows without reallocating.
+
+/// Opaque handle to an edge, for querying its flow after `max_flow`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EdgeRef(usize);
+
+#[derive(Clone, Debug)]
+struct Edge {
+    to: usize,
+    cap: u64,
+    /// Original capacity (for `reset` / `flow_of`).
+    orig: u64,
+}
+
+/// Dinic max-flow solver over a fixed node set.
+#[derive(Clone, Debug)]
+pub struct Dinic {
+    /// Adjacency: node -> indices into `edges`. Edge `i^1` is the reverse
+    /// of edge `i` (edges are pushed in pairs).
+    adj: Vec<Vec<usize>>,
+    edges: Vec<Edge>,
+    level: Vec<i32>,
+    iter: Vec<usize>,
+}
+
+impl Dinic {
+    pub fn new(n: usize) -> Self {
+        Dinic {
+            adj: vec![Vec::new(); n],
+            edges: Vec::new(),
+            level: vec![-1; n],
+            iter: vec![0; n],
+        }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.adj.len()
+    }
+
+    /// Add a directed edge `u -> v` with capacity `cap`.
+    pub fn add_edge(&mut self, u: usize, v: usize, cap: u64) -> EdgeRef {
+        let id = self.edges.len();
+        self.edges.push(Edge { to: v, cap, orig: cap });
+        self.edges.push(Edge { to: u, cap: 0, orig: 0 });
+        self.adj[u].push(id);
+        self.adj[v].push(id + 1);
+        EdgeRef(id)
+    }
+
+    /// Flow currently pushed through the edge (after `max_flow`).
+    pub fn flow_of(&self, e: EdgeRef) -> u64 {
+        let edge = &self.edges[e.0];
+        edge.orig - edge.cap
+    }
+
+    /// Restore all residual capacities to their original values so another
+    /// `max_flow` can be run on the same topology.
+    pub fn reset(&mut self) {
+        for e in self.edges.iter_mut() {
+            e.cap = e.orig;
+        }
+    }
+
+    /// Update the capacity of an existing edge (also clears its flow).
+    /// Used by the feasibility oracle when re-trying a different Φ on the
+    /// same bipartite topology.
+    pub fn set_cap(&mut self, e: EdgeRef, cap: u64) {
+        self.edges[e.0].cap = cap;
+        self.edges[e.0].orig = cap;
+        self.edges[e.0 ^ 1].cap = 0;
+        self.edges[e.0 ^ 1].orig = 0;
+    }
+
+    fn bfs(&mut self, s: usize, t: usize) -> bool {
+        self.level.iter_mut().for_each(|l| *l = -1);
+        let mut queue = std::collections::VecDeque::with_capacity(self.adj.len());
+        self.level[s] = 0;
+        queue.push_back(s);
+        while let Some(u) = queue.pop_front() {
+            for &ei in &self.adj[u] {
+                let e = &self.edges[ei];
+                if e.cap > 0 && self.level[e.to] < 0 {
+                    self.level[e.to] = self.level[u] + 1;
+                    queue.push_back(e.to);
+                }
+            }
+        }
+        self.level[t] >= 0
+    }
+
+    fn dfs(&mut self, u: usize, t: usize, limit: u64) -> u64 {
+        if u == t {
+            return limit;
+        }
+        while self.iter[u] < self.adj[u].len() {
+            let ei = self.adj[u][self.iter[u]];
+            let (to, cap) = {
+                let e = &self.edges[ei];
+                (e.to, e.cap)
+            };
+            if cap > 0 && self.level[to] == self.level[u] + 1 {
+                let pushed = self.dfs(to, t, limit.min(cap));
+                if pushed > 0 {
+                    self.edges[ei].cap -= pushed;
+                    self.edges[ei ^ 1].cap += pushed;
+                    return pushed;
+                }
+            }
+            self.iter[u] += 1;
+        }
+        0
+    }
+
+    /// Compute the maximum s–t flow.
+    pub fn max_flow(&mut self, s: usize, t: usize) -> u64 {
+        assert_ne!(s, t);
+        let mut flow = 0;
+        while self.bfs(s, t) {
+            self.iter.iter_mut().for_each(|i| *i = 0);
+            loop {
+                let pushed = self.dfs(s, t, u64::MAX);
+                if pushed == 0 {
+                    break;
+                }
+                flow += pushed;
+            }
+        }
+        flow
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classic_diamond() {
+        // s=0, t=3; two disjoint paths of cap 10 and 5, plus a cross edge.
+        let mut d = Dinic::new(4);
+        d.add_edge(0, 1, 10);
+        d.add_edge(0, 2, 5);
+        d.add_edge(1, 3, 10);
+        d.add_edge(2, 3, 5);
+        d.add_edge(1, 2, 15);
+        assert_eq!(d.max_flow(0, 3), 15);
+    }
+
+    #[test]
+    fn bottleneck_respected() {
+        let mut d = Dinic::new(3);
+        d.add_edge(0, 1, 100);
+        d.add_edge(1, 2, 7);
+        assert_eq!(d.max_flow(0, 2), 7);
+    }
+
+    #[test]
+    fn disconnected_is_zero() {
+        let mut d = Dinic::new(4);
+        d.add_edge(0, 1, 5);
+        d.add_edge(2, 3, 5);
+        assert_eq!(d.max_flow(0, 3), 0);
+    }
+
+    #[test]
+    fn flow_conservation_and_edge_flows() {
+        let mut d = Dinic::new(5);
+        let e1 = d.add_edge(0, 1, 4);
+        let e2 = d.add_edge(0, 2, 3);
+        let e3 = d.add_edge(1, 3, 2);
+        let e4 = d.add_edge(1, 4, 9);
+        let e5 = d.add_edge(2, 4, 9);
+        let e6 = d.add_edge(3, 4, 9);
+        let f = d.max_flow(0, 4);
+        assert_eq!(f, 7);
+        // Conservation at node 1: in == out.
+        assert_eq!(d.flow_of(e1), d.flow_of(e3) + d.flow_of(e4));
+        // Conservation at node 2 / 3.
+        assert_eq!(d.flow_of(e2), d.flow_of(e5));
+        assert_eq!(d.flow_of(e3), d.flow_of(e6));
+        // Source outflow equals total.
+        assert_eq!(d.flow_of(e1) + d.flow_of(e2), f);
+        // Capacity respected.
+        assert!(d.flow_of(e3) <= 2);
+    }
+
+    #[test]
+    fn reset_allows_rerun() {
+        let mut d = Dinic::new(3);
+        d.add_edge(0, 1, 6);
+        d.add_edge(1, 2, 6);
+        assert_eq!(d.max_flow(0, 2), 6);
+        d.reset();
+        assert_eq!(d.max_flow(0, 2), 6);
+    }
+
+    #[test]
+    fn set_cap_changes_feasibility() {
+        let mut d = Dinic::new(3);
+        d.add_edge(0, 1, 10);
+        let sink_edge = d.add_edge(1, 2, 0);
+        assert_eq!(d.max_flow(0, 2), 0);
+        d.reset();
+        d.set_cap(sink_edge, 4);
+        assert_eq!(d.max_flow(0, 2), 4);
+    }
+
+    #[test]
+    fn parallel_edges_sum() {
+        let mut d = Dinic::new(2);
+        d.add_edge(0, 1, 3);
+        d.add_edge(0, 1, 4);
+        assert_eq!(d.max_flow(0, 1), 7);
+    }
+
+    #[test]
+    fn zero_capacity_edges_ignored() {
+        let mut d = Dinic::new(3);
+        d.add_edge(0, 1, 0);
+        d.add_edge(1, 2, 10);
+        assert_eq!(d.max_flow(0, 2), 0);
+    }
+}

@@ -1,0 +1,99 @@
+//! Max-flow substrate.
+//!
+//! The paper solves its assignment program `P` (eq. 4) with CPLEX. At a
+//! fixed candidate completion time Φ, `P` reduces to a bipartite
+//! *transportation feasibility* problem: can every task group push all its
+//! tasks through servers whose remaining capacity is `max{Φ − b_m, 0}·μ_m`?
+//! That is exactly a max-flow instance, and flow integrality yields the
+//! integer slot counts `n_m^k` the program asks for. This module provides
+//! the Dinic solver used by [`crate::assign::feasible`], plus a brute-force
+//! checker used by the property tests.
+
+mod dinic;
+
+pub use dinic::{Dinic, EdgeRef};
+
+#[cfg(test)]
+mod brute {
+    //! Exponential-time max-flow via augmenting-path DFS used only to
+    //! cross-check Dinic on tiny graphs in tests.
+
+    pub fn max_flow_brute(
+        n: usize,
+        edges: &[(usize, usize, u64)],
+        s: usize,
+        t: usize,
+    ) -> u64 {
+        // Build residual adjacency matrix (sums parallel edges).
+        let mut cap = vec![vec![0u64; n]; n];
+        for &(u, v, c) in edges {
+            cap[u][v] += c;
+        }
+        let mut total = 0;
+        loop {
+            // BFS for any augmenting path.
+            let mut parent = vec![usize::MAX; n];
+            parent[s] = s;
+            let mut queue = std::collections::VecDeque::from([s]);
+            while let Some(u) = queue.pop_front() {
+                for v in 0..n {
+                    if parent[v] == usize::MAX && cap[u][v] > 0 {
+                        parent[v] = u;
+                        queue.push_back(v);
+                    }
+                }
+            }
+            if parent[t] == usize::MAX {
+                return total;
+            }
+            // Find bottleneck.
+            let mut bottleneck = u64::MAX;
+            let mut v = t;
+            while v != s {
+                let u = parent[v];
+                bottleneck = bottleneck.min(cap[u][v]);
+                v = u;
+            }
+            let mut v = t;
+            while v != s {
+                let u = parent[v];
+                cap[u][v] -= bottleneck;
+                cap[v][u] += bottleneck;
+                v = u;
+            }
+            total += bottleneck;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::brute::max_flow_brute;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dinic_matches_brute_on_random_graphs() {
+        let mut rng = Rng::seed_from(100);
+        for case in 0..60 {
+            let n = 2 + rng.gen_range(6) as usize; // 2..=7 nodes
+            let m = rng.gen_range(12) as usize;
+            let mut edges = vec![];
+            for _ in 0..m {
+                let u = rng.gen_range(n as u64) as usize;
+                let v = rng.gen_range(n as u64) as usize;
+                if u != v {
+                    edges.push((u, v, rng.gen_range_incl(0, 10)));
+                }
+            }
+            let s = 0;
+            let t = n - 1;
+            let expected = max_flow_brute(n, &edges, s, t);
+            let mut d = Dinic::new(n);
+            for &(u, v, c) in &edges {
+                d.add_edge(u, v, c);
+            }
+            assert_eq!(d.max_flow(s, t), expected, "case {case}: edges {edges:?}");
+        }
+    }
+}

@@ -1,0 +1,97 @@
+//! Task-group derivation (eq. 3): given per-task available-server sets,
+//! partition the tasks so that each group contains exactly the tasks that
+//! share one available-server set.
+//!
+//! The trace-driven experiments take groups directly from trace entries
+//! (paper §V-A), but callers constructing jobs from raw per-task chunk
+//! placements (e.g. the live coordinator) use this derivation.
+
+use std::collections::HashMap;
+
+use super::{ServerId, TaskGroup};
+
+/// Partition tasks by identical available-server sets.
+///
+/// `task_servers[i]` is the available-server set of task `i` (order and
+/// duplicates are irrelevant). Returns groups in first-seen order.
+pub fn derive_groups(task_servers: &[Vec<ServerId>]) -> Vec<TaskGroup> {
+    let mut index: HashMap<Vec<ServerId>, usize> = HashMap::new();
+    let mut groups: Vec<TaskGroup> = Vec::new();
+    for servers in task_servers {
+        let mut key = servers.clone();
+        key.sort_unstable();
+        key.dedup();
+        assert!(!key.is_empty(), "task with no available servers");
+        match index.get(&key) {
+            Some(&gi) => groups[gi].size += 1,
+            None => {
+                index.insert(key.clone(), groups.len());
+                groups.push(TaskGroup { size: 1, servers: key });
+            }
+        }
+    }
+    groups
+}
+
+/// Merge groups that share an identical available-server set (used to
+/// canonicalize trace-derived groups, where distinct trace entries may
+/// carry the same set).
+pub fn merge_identical(groups: &[TaskGroup]) -> Vec<TaskGroup> {
+    let mut index: HashMap<Vec<ServerId>, usize> = HashMap::new();
+    let mut out: Vec<TaskGroup> = Vec::new();
+    for g in groups {
+        match index.get(&g.servers) {
+            Some(&gi) => out[gi].size += g.size,
+            None => {
+                index.insert(g.servers.clone(), out.len());
+                out.push(g.clone());
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn groups_by_identical_sets() {
+        let tasks = vec![
+            vec![1, 2, 3],
+            vec![3, 2, 1], // same set, different order
+            vec![1, 2],
+            vec![1, 2, 3],
+        ];
+        let groups = derive_groups(&tasks);
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0].size, 3);
+        assert_eq!(groups[0].servers, vec![1, 2, 3]);
+        assert_eq!(groups[1].size, 1);
+        assert_eq!(groups[1].servers, vec![1, 2]);
+    }
+
+    #[test]
+    fn duplicate_servers_within_task_deduped() {
+        let groups = derive_groups(&[vec![5, 5, 2]]);
+        assert_eq!(groups[0].servers, vec![2, 5]);
+    }
+
+    #[test]
+    fn empty_input_empty_output() {
+        assert!(derive_groups(&[]).is_empty());
+    }
+
+    #[test]
+    fn merge_identical_sums_sizes() {
+        let gs = vec![
+            TaskGroup::new(3, vec![0, 1]),
+            TaskGroup::new(2, vec![2]),
+            TaskGroup::new(5, vec![0, 1]),
+        ];
+        let merged = merge_identical(&gs);
+        assert_eq!(merged.len(), 2);
+        assert_eq!(merged[0].size, 8);
+        assert_eq!(merged[1].size, 2);
+    }
+}

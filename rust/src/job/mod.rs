@@ -1,0 +1,102 @@
+//! The job model (paper §II): jobs composed of independent tasks; tasks
+//! partitioned into *task groups* by their available-server sets (eq. 3).
+
+pub mod groups;
+
+/// Index of a server, `0..M`.
+pub type ServerId = usize;
+/// A count of tasks.
+pub type TaskCount = u64;
+/// A duration / point in slotted time.
+pub type Slots = u64;
+
+/// One task group `T_c^k`: `size` tasks, each runnable on any server in
+/// `servers` (the group's available-server set `S_c^k`, sorted, deduped).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TaskGroup {
+    pub size: TaskCount,
+    pub servers: Vec<ServerId>,
+}
+
+impl TaskGroup {
+    pub fn new(size: TaskCount, mut servers: Vec<ServerId>) -> Self {
+        servers.sort_unstable();
+        servers.dedup();
+        assert!(!servers.is_empty(), "task group with no available servers");
+        TaskGroup { size, servers }
+    }
+}
+
+/// A fully materialized job instance: arrival time, task groups with their
+/// available servers, and the profiled per-server capacity `μ_m^c` for
+/// this job (tasks per slot; same for every task of the job, per §II).
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub id: usize,
+    /// Absolute arrival slot.
+    pub arrival: Slots,
+    pub groups: Vec<TaskGroup>,
+    /// `mu[m]` = μ_m^c for every server m (length M).
+    pub mu: Vec<u64>,
+}
+
+impl Job {
+    /// Total number of tasks |T_c|.
+    pub fn total_tasks(&self) -> TaskCount {
+        self.groups.iter().map(|g| g.size).sum()
+    }
+
+    /// Number of task groups K_c.
+    pub fn num_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Union of available servers over all groups, sorted.
+    pub fn available_servers(&self) -> Vec<ServerId> {
+        let mut all: Vec<ServerId> = self
+            .groups
+            .iter()
+            .flat_map(|g| g.servers.iter().copied())
+            .collect();
+        all.sort_unstable();
+        all.dedup();
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job() -> Job {
+        Job {
+            id: 0,
+            arrival: 5,
+            groups: vec![
+                TaskGroup::new(10, vec![2, 0, 1]),
+                TaskGroup::new(4, vec![1, 3]),
+            ],
+            mu: vec![3, 3, 3, 3],
+        }
+    }
+
+    #[test]
+    fn group_sorts_and_dedups_servers() {
+        let g = TaskGroup::new(5, vec![3, 1, 3, 2]);
+        assert_eq!(g.servers, vec![1, 2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "no available servers")]
+    fn group_requires_servers() {
+        TaskGroup::new(1, vec![]);
+    }
+
+    #[test]
+    fn job_totals() {
+        let j = job();
+        assert_eq!(j.total_tasks(), 14);
+        assert_eq!(j.num_groups(), 2);
+        assert_eq!(j.available_servers(), vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,348 @@
+//! `taos` — the command-line launcher.
+//!
+//! Subcommands:
+//! - `simulate`   run one scheduling policy over a (synthetic or CSV)
+//!                trace and print JCT statistics + overhead.
+//! - `repro`      regenerate a paper table/figure (10, 11, 12, 13, 14,
+//!                or `table1`).
+//! - `compare`    run all six algorithms on one setting side by side.
+//! - `gen-trace`  emit a synthetic Alibaba-like trace as batch_task.csv.
+//! - `live`       run the live coordinator (leader/workers + PJRT
+//!                payload kernel) on a small workload; needs artifacts.
+//! - `verify-kernel`  cross-check the AOT water-filling kernel against
+//!                the native rust WF on random instances; needs artifacts.
+
+use std::path::Path;
+
+use taos::assign::AssignPolicy;
+use taos::cli::{flag, flag_req, switch, Cli};
+use taos::config::ExperimentConfig;
+use taos::sched::SchedPolicy;
+use taos::sim::run_experiment;
+use taos::sweep;
+use taos::util::json::Json;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = build_cli();
+    let parsed = match cli.parse(&args) {
+        Ok(p) => p,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(if msg.starts_with("taos") { 0 } else { 2 });
+        }
+    };
+    let result = match parsed.subcommand.as_str() {
+        "simulate" => cmd_simulate(&parsed),
+        "repro" => cmd_repro(&parsed),
+        "compare" => cmd_compare(&parsed),
+        "gen-trace" => cmd_gen_trace(&parsed),
+        "live" => cmd_live(&parsed),
+        "verify-kernel" => cmd_verify_kernel(&parsed),
+        other => Err(format!("unhandled subcommand {other}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn build_cli() -> Cli {
+    // No defaults here: unset flags fall through to the config file (or
+    // the paper defaults in `ExperimentConfig::default()`).
+    let common = || {
+        vec![
+            flag_req("servers", "number of servers M [default 100]"),
+            flag_req("alpha", "Zipf skew for data placement [default 0]"),
+            flag_req("util", "target system utilization [default 0.5]"),
+            flag_req("jobs", "number of jobs [default 250]"),
+            flag_req("tasks", "total tasks across jobs [default 113653]"),
+            flag_req("avail", "available servers per group, lo:hi [default 8:12]"),
+            flag_req("mu", "per-server capacity range, lo:hi [default 3:5]"),
+            flag_req("seed", "master RNG seed [default 42]"),
+            flag_req("csv", "path to a batch_task.csv trace (overrides synth)"),
+            flag_req("config", "config file (key = value lines)"),
+        ]
+    };
+    Cli::new("taos", "data-locality-aware task assignment & scheduling")
+        .subcommand("simulate", "run one policy over a trace", {
+            let mut f = common();
+            f.push(flag(
+                "alg",
+                "nlip | obta | wf | rd | ocwf | ocwf-acc",
+                "wf",
+            ));
+            f.push(switch("json", "emit JSON instead of text"));
+            f
+        })
+        .subcommand("compare", "run all six algorithms on one setting", {
+            let mut f = common();
+            f.push(switch("json", "emit JSON instead of text"));
+            f
+        })
+        .subcommand("repro", "regenerate a paper table/figure", {
+            let mut f = common();
+            f.push(flag("fig", "10 | 11 | 12 | 13 | 14 | table1", "12"));
+            f.push(switch("quick", "scaled-down workload for fast runs"));
+            f.push(flag("out", "also write JSON to this path", ""));
+            f
+        })
+        .subcommand(
+            "gen-trace",
+            "emit a synthetic trace in batch_task.csv schema",
+            vec![
+                flag("jobs", "number of jobs", "250"),
+                flag("tasks", "total tasks", "113653"),
+                flag("seed", "RNG seed", "42"),
+                flag("out", "output path", "trace.csv"),
+            ],
+        )
+        .subcommand(
+            "live",
+            "run the live coordinator on a small workload (needs artifacts)",
+            vec![
+                flag("servers", "number of worker servers", "4"),
+                flag("jobs", "number of jobs", "8"),
+                flag("tasks-per-job", "tasks per job", "32"),
+                flag("replicas", "chunk replication factor", "3"),
+                flag("alg", "assignment algorithm", "wf"),
+                flag("artifacts", "artifacts directory", "artifacts"),
+            ],
+        )
+        .subcommand(
+            "verify-kernel",
+            "cross-check AOT wf kernel vs native WF (needs artifacts)",
+            vec![
+                flag("artifacts", "artifacts directory", "artifacts"),
+                flag("cases", "random instances to check", "64"),
+                flag("seed", "RNG seed", "7"),
+            ],
+        )
+}
+
+fn parse_range(s: &str) -> Result<(u64, u64), String> {
+    let (lo, hi) = s
+        .split_once(':')
+        .ok_or_else(|| format!("expected lo:hi, got `{s}`"))?;
+    Ok((
+        lo.parse().map_err(|_| format!("bad lo `{lo}`"))?,
+        hi.parse().map_err(|_| format!("bad hi `{hi}`"))?,
+    ))
+}
+
+fn config_from(parsed: &taos::cli::Parsed) -> Result<ExperimentConfig, String> {
+    let mut cfg = match parsed.get("config") {
+        Some(path) if !path.is_empty() => {
+            ExperimentConfig::from_file(path).map_err(|e| e.to_string())?
+        }
+        _ => ExperimentConfig::default(),
+    };
+    if let Some(v) = parsed.get_parse::<usize>("servers")? {
+        cfg.cluster.servers = v;
+    }
+    if let Some(v) = parsed.get_parse::<f64>("alpha")? {
+        cfg.cluster.zipf_alpha = v;
+    }
+    if let Some(v) = parsed.get_parse::<f64>("util")? {
+        cfg.trace.utilization = v;
+    }
+    if let Some(v) = parsed.get_parse::<usize>("jobs")? {
+        cfg.trace.jobs = v;
+    }
+    if let Some(v) = parsed.get_parse::<usize>("tasks")? {
+        cfg.trace.total_tasks = v;
+    }
+    if let Some(v) = parsed.get_parse::<u64>("seed")? {
+        cfg.seed = v;
+    }
+    if let Some(s) = parsed.get("avail") {
+        let (lo, hi) = parse_range(s)?;
+        cfg.cluster.avail_lo = lo as usize;
+        cfg.cluster.avail_hi = hi as usize;
+    }
+    if let Some(s) = parsed.get("mu") {
+        let (lo, hi) = parse_range(s)?;
+        cfg.cluster.mu_lo = lo;
+        cfg.cluster.mu_hi = hi;
+    }
+    if let Some(p) = parsed.get("csv") {
+        if !p.is_empty() {
+            cfg.trace.csv_path = Some(p.to_string());
+        }
+    }
+    cfg.validate().map_err(|e| e.to_string())?;
+    Ok(cfg)
+}
+
+fn cmd_simulate(parsed: &taos::cli::Parsed) -> Result<(), String> {
+    let cfg = config_from(parsed)?;
+    let alg = parsed.get_or("alg", "wf");
+    let policy = SchedPolicy::parse(alg).ok_or_else(|| format!("unknown algorithm `{alg}`"))?;
+    let out = run_experiment(&cfg, policy).map_err(|e| e.to_string())?;
+    let stats = out.jct_stats();
+    if parsed.has_switch("json") {
+        let j = Json::obj(vec![
+            ("algorithm", Json::str(policy.name())),
+            ("jct", stats.to_json()),
+            ("overhead_us", Json::num(out.overhead.mean_us())),
+            ("makespan", Json::num(out.makespan as f64)),
+            ("wf_evals", Json::num(out.wf_evals as f64)),
+        ]);
+        println!("{}", j.to_string());
+    } else {
+        println!("algorithm      : {}", policy.name());
+        println!("jobs           : {}", stats.n);
+        println!("mean JCT       : {:.1} slots", stats.mean);
+        println!("p50 / p90 / p99: {:.0} / {:.0} / {:.0}", stats.p50, stats.p90, stats.p99);
+        println!("max JCT        : {:.0}", stats.max);
+        println!("makespan       : {} slots", out.makespan);
+        println!("overhead       : {:.1} us/arrival", out.overhead.mean_us());
+        if out.wf_evals > 0 {
+            println!("WF evaluations : {}", out.wf_evals);
+        }
+        if let Some(s) = out.oracle_stats {
+            println!(
+                "oracle tiers   : flow-infeasible {} / ceil {} / floor+residual {} / ilp {} (unknown {})",
+                s.flow_infeasible, s.ceil_feasible, s.floor_residual_feasible, s.ilp_calls, s.ilp_unknown
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_compare(parsed: &taos::cli::Parsed) -> Result<(), String> {
+    let cfg = config_from(parsed)?;
+    let mut rows = Vec::new();
+    for policy in SchedPolicy::ALL {
+        let out = run_experiment(&cfg, policy).map_err(|e| e.to_string())?;
+        rows.push((policy.name(), out.mean_jct(), out.overhead.mean_us()));
+    }
+    if parsed.has_switch("json") {
+        let j = Json::arr(rows.iter().map(|(name, jct, ov)| {
+            Json::obj(vec![
+                ("algorithm", Json::str(*name)),
+                ("mean_jct", Json::num(*jct)),
+                ("overhead_us", Json::num(*ov)),
+            ])
+        }));
+        println!("{}", j.to_string());
+    } else {
+        let mut t = taos::benchlib::TextTable::new(&["algorithm", "mean JCT", "overhead (us)"]);
+        for (name, jct, ov) in rows {
+            t.row(vec![name.into(), format!("{jct:.0}"), format!("{ov:.1}")]);
+        }
+        print!("{}", t.render());
+    }
+    Ok(())
+}
+
+fn cmd_repro(parsed: &taos::cli::Parsed) -> Result<(), String> {
+    let quick = parsed.has_switch("quick");
+    let seed = parsed.get_parse::<u64>("seed")?.unwrap_or(42);
+    let base = if quick {
+        sweep::quick_base(seed)
+    } else {
+        sweep::paper_base(seed)
+    };
+    let fig_id = parsed.get_or("fig", "12");
+    let alphas = [0.0, 0.5, 1.0, 1.5, 2.0];
+    let fig = match fig_id {
+        "10" => sweep::fig_alpha_util(&base, 0.25, &alphas),
+        "11" => sweep::fig_alpha_util(&base, 0.50, &alphas),
+        "12" => sweep::fig_alpha_util(&base, 0.75, &alphas),
+        "13" | "table1" => sweep::fig_servers(&base, &[4, 6, 8, 10, 12]),
+        "14" => sweep::fig_capacity(&base, &[2, 3, 4, 5, 6]),
+        other => return Err(format!("unknown figure `{other}`")),
+    };
+    println!("{}", fig.render());
+    if let Some(out) = parsed.get("out") {
+        if !out.is_empty() {
+            std::fs::write(out, fig.to_json().to_string()).map_err(|e| e.to_string())?;
+            println!("wrote {out}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_gen_trace(parsed: &taos::cli::Parsed) -> Result<(), String> {
+    use taos::trace::Trace;
+    use taos::util::rng::Rng;
+    let jobs = parsed.get_parse::<usize>("jobs")?.unwrap_or(250);
+    let tasks = parsed.get_parse::<usize>("tasks")?.unwrap_or(113_653);
+    let seed = parsed.get_parse::<u64>("seed")?.unwrap_or(42);
+    let out = parsed.get_or("out", "trace.csv");
+    let mut tcfg = taos::config::TraceConfig::default();
+    tcfg.jobs = jobs;
+    tcfg.total_tasks = tasks;
+    let trace = Trace::synth_alibaba(&tcfg, &mut Rng::seed_from(seed));
+    let mut text = String::new();
+    for (j, job) in trace.jobs.iter().enumerate() {
+        for (g, size) in job.group_sizes.iter().enumerate() {
+            text.push_str(&format!(
+                "{:.0},{:.0},j_{j},t_{g},{size},Terminated,100,0.5\n",
+                job.arrival_raw * 1000.0,
+                job.arrival_raw * 1000.0 + 1.0,
+            ));
+        }
+    }
+    std::fs::write(out, text).map_err(|e| e.to_string())?;
+    println!(
+        "wrote {out}: {} jobs, {} tasks, {} groups",
+        trace.jobs.len(),
+        trace.total_tasks(),
+        trace.total_groups()
+    );
+    Ok(())
+}
+
+fn cmd_live(parsed: &taos::cli::Parsed) -> Result<(), String> {
+    use std::sync::Arc;
+    use taos::cluster::Cluster;
+    use taos::config::ClusterConfig;
+    use taos::coordinator::{AccelHandle, Leader, LiveJobSpec};
+    use taos::util::rng::Rng;
+
+    let servers = parsed.get_parse::<usize>("servers")?.unwrap_or(4);
+    let jobs = parsed.get_parse::<usize>("jobs")?.unwrap_or(8);
+    let tpj = parsed.get_parse::<usize>("tasks-per-job")?.unwrap_or(32);
+    let replicas = parsed.get_parse::<usize>("replicas")?.unwrap_or(3);
+    let alg = parsed.get_or("alg", "wf");
+    let policy = AssignPolicy::parse(alg).ok_or_else(|| format!("unknown assigner `{alg}`"))?;
+    let artifacts = parsed.get_or("artifacts", "artifacts");
+
+    let accel =
+        Arc::new(AccelHandle::spawn(Path::new(artifacts)).map_err(|e| e.to_string())?);
+    let mut ccfg = ClusterConfig::default();
+    ccfg.servers = servers;
+    ccfg.avail_lo = 1;
+    ccfg.avail_hi = replicas.min(servers);
+    let cluster = Cluster::generate(&ccfg, &mut Rng::seed_from(1));
+    let leader = Leader::start(cluster, Arc::clone(&accel), replicas).map_err(|e| e.to_string())?;
+
+    let mut rng = Rng::seed_from(99);
+    let specs: Vec<LiveJobSpec> = (0..jobs)
+        .map(|id| LiveJobSpec {
+            id,
+            chunk_ids: (0..tpj).map(|_| rng.gen_range(10_000)).collect(),
+        })
+        .collect();
+    let report = leader.run_jobs(&specs, policy).map_err(|e| e.to_string())?;
+    let lat = report.latency_summary();
+    println!("live run: {} jobs x {} tasks on {} workers ({})", jobs, tpj, servers, policy.name());
+    println!("throughput : {:.0} tasks/s", report.throughput_tps());
+    println!("job latency: mean {:.2} ms, p50 {:.2} ms, p99 {:.2} ms", lat.mean, lat.p50, lat.p99);
+    println!("checksum   : {:.4} (payload kernel really ran)", report.checksum);
+    leader.shutdown();
+    Ok(())
+}
+
+fn cmd_verify_kernel(parsed: &taos::cli::Parsed) -> Result<(), String> {
+    let artifacts = parsed.get_or("artifacts", "artifacts");
+    let cases = parsed.get_parse::<usize>("cases")?.unwrap_or(64);
+    let seed = parsed.get_parse::<u64>("seed")?.unwrap_or(7);
+    let (checked, max_b) =
+        taos::coordinator::verify::verify_wf_kernel(Path::new(artifacts), cases, seed)
+            .map_err(|e| e.to_string())?;
+    println!("verified {checked} random instances (batches of {max_b}): AOT kernel == native WF");
+    Ok(())
+}

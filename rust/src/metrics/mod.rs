@@ -1,0 +1,103 @@
+//! Experiment metrics: job completion time statistics and per-arrival
+//! computation overhead — the paper's two evaluation axes (§V-A
+//! "Metrics": "average job completion time of all jobs to measure
+//! performance and the computation overhead of each algorithm to measure
+//! efficiency").
+
+use crate::util::json::Json;
+use crate::util::stats::{Ecdf, Summary};
+
+/// Summary of per-job completion times (in slots).
+#[derive(Clone, Debug)]
+pub struct JctStats {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl JctStats {
+    pub fn from_jcts(jcts: &[u64]) -> JctStats {
+        let xs: Vec<f64> = jcts.iter().map(|&x| x as f64).collect();
+        let s = Summary::from(&xs);
+        JctStats {
+            n: s.n,
+            mean: s.mean,
+            p50: s.p50,
+            p90: s.p90,
+            p99: s.p99,
+            max: s.max,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::num(self.n as f64)),
+            ("mean", Json::num(self.mean)),
+            ("p50", Json::num(self.p50)),
+            ("p90", Json::num(self.p90)),
+            ("p99", Json::num(self.p99)),
+            ("max", Json::num(self.max)),
+        ])
+    }
+}
+
+/// Build the empirical CDF series of completion times (the CDF subplots
+/// of Figs 10–14), sampled at `points` x-positions.
+pub fn jct_cdf(jcts: &[u64], points: usize) -> Vec<(f64, f64)> {
+    let xs: Vec<f64> = jcts.iter().map(|&x| x as f64).collect();
+    Ecdf::from(&xs).series(points)
+}
+
+/// One result row of a figure/table: algorithm → (mean JCT, overhead).
+#[derive(Clone, Debug)]
+pub struct ResultRow {
+    pub algorithm: String,
+    pub mean_jct: f64,
+    pub overhead_us: f64,
+}
+
+impl ResultRow {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("algorithm", Json::str(self.algorithm.clone())),
+            ("mean_jct", Json::num(self.mean_jct)),
+            ("overhead_us", Json::num(self.overhead_us)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_from_jcts() {
+        let s = JctStats::from_jcts(&[10, 20, 30, 40]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 25.0).abs() < 1e-12);
+        assert!((s.max - 40.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cdf_series_spans_range() {
+        let series = jct_cdf(&[1, 2, 3, 4, 5], 11);
+        assert_eq!(series.len(), 11);
+        assert!((series[0].0 - 1.0).abs() < 1e-12);
+        assert!((series.last().unwrap().1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn row_serializes() {
+        let r = ResultRow {
+            algorithm: "wf".into(),
+            mean_jct: 6042.0,
+            overhead_us: 12.5,
+        };
+        let j = r.to_json().to_string();
+        assert!(j.contains("\"algorithm\":\"wf\""));
+        assert!(j.contains("6042"));
+    }
+}

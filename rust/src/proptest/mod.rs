@@ -1,0 +1,237 @@
+//! A small property-based testing framework (the `proptest` crate is not in
+//! the offline vendor set).
+//!
+//! Design: a [`Gen`] is a function from `(&mut Rng, size)` to a value; a
+//! property is checked over `cases` random inputs. On failure the runner
+//! performs greedy shrinking using a caller-provided `shrink` function
+//! (defaulting to none) and panics with the seed + minimal counterexample,
+//! so failures are reproducible by re-running with the printed seed.
+//!
+//! ```no_run
+//! use taos::proptest::{forall, Config};
+//! forall(Config::default().cases(64), |rng| rng.gen_range(100) as i64, |&x| x < 100);
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Runner configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// Maximum shrink attempts.
+    pub max_shrinks: usize,
+    /// Size hint passed through to generators that want it.
+    pub size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Seed can be overridden via TAOS_PROPTEST_SEED for reproduction.
+        let seed = std::env::var("TAOS_PROPTEST_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Config {
+            cases: 128,
+            seed,
+            max_shrinks: 512,
+            size: 16,
+        }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+    pub fn size(mut self, s: usize) -> Self {
+        self.size = s;
+        self
+    }
+}
+
+/// Check `prop` on `cfg.cases` values drawn from `gen`. Panics with the
+/// failing case (no shrinking) on violation.
+pub fn forall<T: std::fmt::Debug>(
+    cfg: Config,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let mut rng = Rng::seed_from(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property falsified at case {case}/{} (seed {:#x}):\n{input:#?}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+/// Like [`forall`], but with greedy shrinking: `shrink(x)` returns a list of
+/// strictly "smaller" candidates; the runner walks down while the property
+/// keeps failing, then reports the local minimum.
+pub fn forall_shrink<T: Clone + std::fmt::Debug>(
+    cfg: Config,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    shrink: impl Fn(&T) -> Vec<T>,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let mut rng = Rng::seed_from(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            // Greedy shrink.
+            let mut current = input.clone();
+            let mut budget = cfg.max_shrinks;
+            'outer: while budget > 0 {
+                for cand in shrink(&current) {
+                    budget -= 1;
+                    if !prop(&cand) {
+                        current = cand;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property falsified at case {case}/{} (seed {:#x}):\noriginal: {input:#?}\nshrunk:   {current:#?}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+/// Shrinker for a `Vec<T>`: tries removing halves, then single elements,
+/// then shrinking individual elements with `elem_shrink`.
+pub fn shrink_vec<T: Clone>(xs: &[T], elem_shrink: impl Fn(&T) -> Vec<T>) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    let n = xs.len();
+    if n == 0 {
+        return out;
+    }
+    // Halves — only when strictly shorter than the input (n == 1 would
+    // reproduce the input itself and stall the greedy walk).
+    if n >= 2 {
+        out.push(xs[..n / 2].to_vec());
+        out.push(xs[n / 2..].to_vec());
+    }
+    // Drop one element.
+    for i in 0..n.min(8) {
+        let mut v = xs.to_vec();
+        v.remove(i);
+        out.push(v);
+    }
+    // Shrink one element.
+    for i in 0..n.min(8) {
+        for e in elem_shrink(&xs[i]) {
+            let mut v = xs.to_vec();
+            v[i] = e;
+            out.push(v);
+        }
+    }
+    out
+}
+
+/// Shrinker for unsigned integers: 0, halves, decrements.
+pub fn shrink_u64(x: u64) -> Vec<u64> {
+    let mut out = Vec::new();
+    if x == 0 {
+        return out;
+    }
+    out.push(0);
+    if x > 1 {
+        out.push(x / 2);
+    }
+    out.push(x - 1);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(
+            Config::default().cases(256),
+            |rng| rng.gen_range(1000),
+            |&x| x < 1000,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property falsified")]
+    fn failing_property_panics() {
+        forall(
+            Config::default().cases(256),
+            |rng| rng.gen_range(1000),
+            |&x| x < 500,
+        );
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        // Property: all vec elements < 50. Generator produces values up to
+        // 100, so it fails; the shrunk example should be a short vector
+        // whose only element is >= 50 and near-minimal.
+        let result = std::panic::catch_unwind(|| {
+            forall_shrink(
+                Config {
+                    cases: 64,
+                    seed: 42,
+                    max_shrinks: 16_384,
+                    size: 16,
+                },
+                |rng| {
+                    let n = rng.gen_range(10) as usize + 1;
+                    (0..n).map(|_| rng.gen_range(100)).collect::<Vec<u64>>()
+                },
+                |xs| shrink_vec(xs, |&x| shrink_u64(x)),
+                |xs| xs.iter().all(|&x| x < 50),
+            );
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().expect("panic payload"),
+            Ok(()) => panic!("expected property to fail"),
+        };
+        // The shrunk vector should be minimal: exactly one element, = 50.
+        let shrunk = msg.split("shrunk:").nth(1).unwrap();
+        assert!(shrunk.contains("50"), "shrunk to boundary: {shrunk}");
+    }
+
+    #[test]
+    fn shrink_u64_decreases() {
+        for x in [1u64, 2, 17, 1000] {
+            for s in shrink_u64(x) {
+                assert!(s < x);
+            }
+        }
+        assert!(shrink_u64(0).is_empty());
+    }
+
+    #[test]
+    fn same_seed_same_cases() {
+        let mut collected1 = Vec::new();
+        forall(Config::default().cases(16).seed(7), |rng| rng.next_u64(), |&x| {
+            collected1.push(x);
+            true
+        });
+        let mut collected2 = Vec::new();
+        forall(Config::default().cases(16).seed(7), |rng| rng.next_u64(), |&x| {
+            collected2.push(x);
+            true
+        });
+        assert_eq!(collected1, collected2);
+    }
+}

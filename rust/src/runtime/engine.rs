@@ -1,0 +1,249 @@
+//! The PJRT execution engine.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin): loads HLO **text**
+//! artifacts — the interchange format, because jax ≥ 0.5 emits serialized
+//! `HloModuleProto`s with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects, while the text parser reassigns ids — compiles them once, and
+//! executes them from the rust hot path. Python never runs at request
+//! time; `make artifacts` is the only compile step.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// A PJRT runtime holding the CPU client and the compiled executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PJRT CPU client: {e}")))?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| Error::Runtime(format!("non-utf8 path {path:?}")))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| Error::Runtime(format!("parse {path_str}: {e}")))?;
+        let computation = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&computation)
+            .map_err(|e| Error::Runtime(format!("compile {path_str}: {e}")))?;
+        Ok(Executable {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// A compiled XLA executable. All artifacts are lowered with
+/// `return_tuple=True`, so outputs arrive as one tuple literal.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with the given input literals; returns the flattened tuple
+    /// elements.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| Error::Runtime(format!("execute {}: {e}", self.name)))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch result {}: {e}", self.name)))?;
+        literal
+            .to_tuple()
+            .map_err(|e| Error::Runtime(format!("untuple {}: {e}", self.name)))
+    }
+
+    /// Convenience: run with `i32` tensors, returning `i32` outputs.
+    pub fn run_i32(&self, inputs: &[(&[i32], &[i64])]) -> Result<Vec<Vec<i32>>> {
+        let literals = inputs
+            .iter()
+            .map(|(data, dims)| make_literal_i32(data, dims))
+            .collect::<Result<Vec<_>>>()?;
+        let outs = self.run(&literals)?;
+        outs.into_iter()
+            .map(|l| {
+                l.to_vec::<i32>()
+                    .map_err(|e| Error::Runtime(format!("read i32 output: {e}")))
+            })
+            .collect()
+    }
+
+    /// Convenience: run with `f32` tensors, returning `f32` outputs.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let literals = inputs
+            .iter()
+            .map(|(data, dims)| make_literal_f32(data, dims))
+            .collect::<Result<Vec<_>>>()?;
+        let outs = self.run(&literals)?;
+        outs.into_iter()
+            .map(|l| {
+                l.to_vec::<f32>()
+                    .map_err(|e| Error::Runtime(format!("read f32 output: {e}")))
+            })
+            .collect()
+    }
+}
+
+fn make_literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        return Err(Error::Runtime(format!(
+            "literal shape {dims:?} wants {n} elements, got {}",
+            data.len()
+        )));
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| Error::Runtime(format!("reshape: {e}")))
+}
+
+fn make_literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        return Err(Error::Runtime(format!(
+            "literal shape {dims:?} wants {n} elements, got {}",
+            data.len()
+        )));
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| Error::Runtime(format!("reshape: {e}")))
+}
+
+/// One artifact entry from `artifacts/manifest.json` (written by
+/// `python/compile/aot.py`): file name plus its static shape parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub params: BTreeMap<String, i64>,
+}
+
+/// Index over the artifacts directory.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactIndex {
+    dir: PathBuf,
+    specs: BTreeMap<String, ArtifactSpec>,
+}
+
+impl ArtifactIndex {
+    /// Load `manifest.json` from the artifacts directory.
+    pub fn load(dir: &Path) -> Result<ArtifactIndex> {
+        let manifest = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest).map_err(|e| {
+            Error::Runtime(format!(
+                "{} not found ({e}); run `make artifacts` first",
+                manifest.display()
+            ))
+        })?;
+        let json =
+            Json::parse(&text).map_err(|e| Error::Runtime(format!("manifest parse: {e}")))?;
+        let obj = match &json {
+            Json::Obj(map) => map,
+            _ => return Err(Error::Runtime("manifest must be an object".into())),
+        };
+        let mut specs = BTreeMap::new();
+        for (name, entry) in obj {
+            let file = entry
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| Error::Runtime(format!("artifact {name}: missing file")))?
+                .to_string();
+            let mut params = BTreeMap::new();
+            if let Some(Json::Obj(p)) = entry.get("params") {
+                for (k, v) in p {
+                    let x = v
+                        .as_f64()
+                        .ok_or_else(|| Error::Runtime(format!("{name}.{k}: not a number")))?;
+                    params.insert(k.clone(), x as i64);
+                }
+            }
+            specs.insert(name.clone(), ArtifactSpec { file, params });
+        }
+        Ok(ArtifactIndex {
+            dir: dir.to_path_buf(),
+            specs,
+        })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.specs.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.specs
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("unknown artifact `{name}`")))
+    }
+
+    pub fn path_of(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.spec(name)?.file))
+    }
+
+    pub fn param(&self, name: &str, key: &str) -> Result<i64> {
+        self.spec(name)?
+            .params
+            .get(key)
+            .copied()
+            .ok_or_else(|| Error::Runtime(format!("artifact {name}: missing param {key}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(make_literal_i32(&[1, 2, 3], &[2, 2]).is_err());
+        assert!(make_literal_f32(&[1.0; 4], &[2, 2]).is_ok());
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        let dir = std::env::temp_dir().join("taos_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"wf_small":{"file":"wf_small.hlo.txt","params":{"B":8,"K":8,"M":32}}}"#,
+        )
+        .unwrap();
+        let idx = ArtifactIndex::load(&dir).unwrap();
+        assert_eq!(idx.names(), vec!["wf_small"]);
+        assert_eq!(idx.param("wf_small", "B").unwrap(), 8);
+        assert!(idx.path_of("wf_small").unwrap().ends_with("wf_small.hlo.txt"));
+        assert!(idx.spec("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_actionable() {
+        let err = ArtifactIndex::load(Path::new("/nonexistent-taos")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

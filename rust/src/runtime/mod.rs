@@ -1,0 +1,7 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! Implemented in `engine.rs`; this module re-exports the public surface.
+
+mod engine;
+
+pub use engine::{ArtifactIndex, Executable, PjrtRuntime};

@@ -1,0 +1,60 @@
+//! Scheduling policies (paper §II's two scenarios): FIFO queues, and
+//! prioritized reordering of outstanding jobs (§IV).
+
+pub mod ocwf;
+
+use crate::assign::AssignPolicy;
+
+/// The queueing/scheduling discipline for a simulation run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// FIFO queues; each arriving job is assigned once by the given
+    /// algorithm (paper §III).
+    Fifo(AssignPolicy),
+    /// Order-conscious water-filling (§IV): on every arrival, reorder all
+    /// outstanding jobs shortest-estimated-time-first and reassign their
+    /// remaining tasks with WF. `acc` enables the early-exit technique
+    /// (OCWF-ACC, Algorithm 3).
+    Ocwf { acc: bool },
+}
+
+impl SchedPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedPolicy::Fifo(p) => p.name(),
+            SchedPolicy::Ocwf { acc: false } => "ocwf",
+            SchedPolicy::Ocwf { acc: true } => "ocwf-acc",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SchedPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "ocwf" => Some(SchedPolicy::Ocwf { acc: false }),
+            "ocwf-acc" | "ocwfacc" | "ocwf_acc" => Some(SchedPolicy::Ocwf { acc: true }),
+            other => AssignPolicy::parse(other).map(SchedPolicy::Fifo),
+        }
+    }
+
+    /// All six algorithms evaluated in the paper (§V-A).
+    pub const ALL: [SchedPolicy; 6] = [
+        SchedPolicy::Fifo(AssignPolicy::Nlip),
+        SchedPolicy::Fifo(AssignPolicy::Obta),
+        SchedPolicy::Fifo(AssignPolicy::Wf),
+        SchedPolicy::Fifo(AssignPolicy::Rd),
+        SchedPolicy::Ocwf { acc: false },
+        SchedPolicy::Ocwf { acc: true },
+    ];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_names() {
+        for p in SchedPolicy::ALL {
+            assert_eq!(SchedPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(SchedPolicy::parse("nope"), None);
+    }
+}

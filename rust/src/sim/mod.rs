@@ -1,0 +1,490 @@
+//! The slotted discrete-event cluster simulator.
+//!
+//! Time is divided into identical slots (paper §II). Server `m` processes
+//! the job at the head of its queue at `μ_m^h` tasks per slot, and a job's
+//! tasks at a server occupy an integer number of slots (`ceil(o/μ)`,
+//! eq. 2) — a partial slot is never shared between jobs.
+//!
+//! Two engines:
+//! - [`run_fifo`]: queues are FIFO, so every queue entry's finish time is
+//!   determined at assignment time; the engine is *analytic* (no slot
+//!   stepping) and exactly equivalent to stepping slot-by-slot.
+//! - [`run_reordered`]: OCWF(-ACC) rebuilds all queues on every arrival,
+//!   so the engine drains queues between arrivals (also analytically, by
+//!   walking entries), tracks per-group remaining tasks, and invokes the
+//!   reordering driver of [`crate::sched::ocwf`].
+
+pub mod stepping;
+
+use crate::assign::wf::Wf;
+use crate::assign::{validate_assignment, AssignPolicy, Instance};
+use crate::config::{ExperimentConfig, SimConfig};
+use crate::job::{Job, ServerId, Slots, TaskCount};
+use crate::metrics::JctStats;
+use crate::sched::ocwf::{reorder, Outstanding};
+use crate::sched::SchedPolicy;
+use crate::util::ceil_div;
+use crate::util::timer::OverheadMeter;
+
+/// Result of one simulation run.
+#[derive(Clone, Debug)]
+pub struct SimOutcome {
+    /// Per-job completion time in slots (completion − arrival), in job
+    /// order.
+    pub jcts: Vec<Slots>,
+    /// Per-arrival computation overhead of the scheduling algorithm.
+    pub overhead: OverheadMeter,
+    /// Slot at which the last task finished.
+    pub makespan: Slots,
+    /// Total WF evaluations (reordered runs only; early-exit telemetry).
+    pub wf_evals: u64,
+    /// Feasibility-oracle tier counters (exact assigners only).
+    pub oracle_stats: Option<crate::assign::feasible::OracleStats>,
+}
+
+impl SimOutcome {
+    pub fn jct_stats(&self) -> JctStats {
+        JctStats::from_jcts(&self.jcts)
+    }
+
+    pub fn mean_jct(&self) -> f64 {
+        self.jct_stats().mean
+    }
+}
+
+/// FIFO simulation (paper §III): assign each arriving job once with the
+/// given algorithm; queues drain in arrival order.
+pub fn run_fifo(
+    jobs: &[Job],
+    num_servers: usize,
+    policy: AssignPolicy,
+    cfg: &SimConfig,
+    seed: u64,
+) -> SimOutcome {
+    let mut assigner = policy.build(seed);
+    // Absolute slot at which each server's queue empties.
+    let mut free: Vec<Slots> = vec![0; num_servers];
+    let mut busy: Vec<Slots> = vec![0; num_servers];
+    let mut jcts = Vec::with_capacity(jobs.len());
+    let mut overhead = OverheadMeter::new();
+    let mut makespan = 0;
+
+    for job in jobs {
+        debug_assert!(job.mu.len() == num_servers);
+        // Busy time at arrival (eq. 2): remaining queue length in slots.
+        for m in 0..num_servers {
+            busy[m] = free[m].saturating_sub(job.arrival);
+        }
+        let inst = Instance {
+            groups: &job.groups,
+            mu: &job.mu,
+            busy: &busy,
+        };
+        let a = overhead.measure(|| assigner.assign(&inst));
+        debug_assert_eq!(validate_assignment(&inst, &a), Ok(()));
+        let mut completion = job.arrival;
+        for (m, n) in a.per_server() {
+            let start = free[m].max(job.arrival);
+            let fin = start + ceil_div(n, job.mu[m]);
+            free[m] = fin;
+            completion = completion.max(fin);
+        }
+        assert!(
+            completion <= cfg.max_slots,
+            "simulation exceeded max_slots; check utilization config"
+        );
+        jcts.push(completion - job.arrival);
+        makespan = makespan.max(completion);
+    }
+
+    SimOutcome {
+        jcts,
+        overhead,
+        makespan,
+        wf_evals: 0,
+        oracle_stats: assigner.oracle_stats(),
+    }
+}
+
+/// One queue entry in the reordered engine: tasks of one job at one
+/// server, split by group.
+#[derive(Clone, Debug)]
+struct Entry {
+    job: usize,
+    /// (group index, tasks) with tasks > 0.
+    parts: Vec<(usize, TaskCount)>,
+}
+
+impl Entry {
+    fn total(&self) -> TaskCount {
+        self.parts.iter().map(|&(_, n)| n).sum()
+    }
+}
+
+/// OCWF / OCWF-ACC simulation (paper §IV): on every arrival, drain queues
+/// up to the arrival slot, then rebuild the order and all assignments.
+pub fn run_reordered(jobs: &[Job], num_servers: usize, acc: bool, cfg: &SimConfig) -> SimOutcome {
+    debug_assert!(
+        jobs.iter().enumerate().all(|(i, j)| j.id == i),
+        "run_reordered requires job ids to equal their slice positions"
+    );
+    let mut wf = Wf::new();
+    let mut queues: Vec<Vec<Entry>> = vec![Vec::new(); num_servers];
+    // Per job: remaining tasks per group, total remaining, completion.
+    let mut remaining: Vec<Vec<TaskCount>> = jobs
+        .iter()
+        .map(|j| j.groups.iter().map(|g| g.size).collect())
+        .collect();
+    let mut total_remaining: Vec<TaskCount> =
+        remaining.iter().map(|r| r.iter().sum()).collect();
+    let mut completion: Vec<Option<Slots>> = vec![None; jobs.len()];
+    let mut last_finish: Vec<Slots> = jobs.iter().map(|j| j.arrival).collect();
+    let mut overhead = OverheadMeter::new();
+    let mut wf_evals = 0u64;
+    let mut now: Slots = 0;
+
+    // Drain all queues from `now` to `to` (analytically, entry by entry).
+    let drain = |queues: &mut Vec<Vec<Entry>>,
+                 remaining: &mut Vec<Vec<TaskCount>>,
+                 total_remaining: &mut Vec<TaskCount>,
+                 completion: &mut Vec<Option<Slots>>,
+                 last_finish: &mut Vec<Slots>,
+                 from: Slots,
+                 to: Slots| {
+        for (m, q) in queues.iter_mut().enumerate() {
+            let mut t = from;
+            let mut consumed = 0usize;
+            for entry in q.iter_mut() {
+                if t >= to {
+                    break;
+                }
+                let mu = jobs[entry.job].mu[m];
+                let slots = ceil_div(entry.total(), mu);
+                if t + slots <= to {
+                    // Entry fully processed at t + slots.
+                    t += slots;
+                    for &(k, n) in &entry.parts {
+                        remaining[entry.job][k] -= n;
+                        total_remaining[entry.job] -= n;
+                    }
+                    last_finish[entry.job] = last_finish[entry.job].max(t);
+                    if total_remaining[entry.job] == 0 && completion[entry.job].is_none() {
+                        completion[entry.job] = Some(last_finish[entry.job]);
+                    }
+                    consumed += 1;
+                } else {
+                    // Partial: (to − t) whole slots of this entry.
+                    let mut budget = (to - t) * mu;
+                    for (k, n) in entry.parts.iter_mut() {
+                        let take = (*n).min(budget);
+                        *n -= take;
+                        remaining[entry.job][*k] -= take;
+                        total_remaining[entry.job] -= take;
+                        budget -= take;
+                        if budget == 0 {
+                            break;
+                        }
+                    }
+                    entry.parts.retain(|&(_, n)| n > 0);
+                    // The entry cannot have been exhausted: it needed more
+                    // than (to − t) slots.
+                    debug_assert!(entry.total() > 0);
+                    break;
+                }
+            }
+            q.drain(..consumed);
+        }
+    };
+
+    let mut arrival_idx = 0;
+    while arrival_idx < jobs.len() {
+        let job = &jobs[arrival_idx];
+        debug_assert!(job.mu.len() == num_servers);
+        // 1. Drain to the arrival slot.
+        drain(
+            &mut queues,
+            &mut remaining,
+            &mut total_remaining,
+            &mut completion,
+            &mut last_finish,
+            now,
+            job.arrival,
+        );
+        now = job.arrival;
+
+        // Collect every arrival at this exact slot before reordering
+        // (reordering once per distinct arrival time is equivalent and
+        // cheaper than once per job).
+        let mut newest = arrival_idx;
+        while newest + 1 < jobs.len() && jobs[newest + 1].arrival == now {
+            newest += 1;
+        }
+
+        // 2. Reorder all outstanding jobs (Alg. 3; busy times start at 0).
+        let outstanding: Vec<Outstanding> = (0..=newest)
+            .filter(|&i| total_remaining[i] > 0)
+            .map(|i| Outstanding {
+                job: &jobs[i],
+                remaining: remaining[i].clone(),
+            })
+            .collect();
+        let outcome = overhead.measure(|| reorder(&outstanding, num_servers, acc, &mut wf));
+        wf_evals += outcome.wf_evals;
+
+        // 3. Rebuild queues in the new order.
+        for q in queues.iter_mut() {
+            q.clear();
+        }
+        for (pos, &oi) in outcome.order.iter().enumerate() {
+            let job_idx = outstanding[oi].job.id;
+            let a = &outcome.assignments[pos];
+            debug_assert_eq!(a.total_assigned(), total_remaining[job_idx]);
+            // Group the assignment by server.
+            let mut per_server: std::collections::BTreeMap<ServerId, Vec<(usize, TaskCount)>> =
+                Default::default();
+            for (k, alloc) in a.per_group.iter().enumerate() {
+                for &(m, n) in alloc {
+                    per_server.entry(m).or_default().push((k, n));
+                }
+            }
+            for (m, parts) in per_server {
+                queues[m].push(Entry { job: job_idx, parts });
+            }
+        }
+
+        arrival_idx = newest + 1;
+    }
+
+    // 4. Drain everything that remains.
+    let horizon = cfg.max_slots;
+    drain(
+        &mut queues,
+        &mut remaining,
+        &mut total_remaining,
+        &mut completion,
+        &mut last_finish,
+        now,
+        horizon,
+    );
+    assert!(
+        completion.iter().all(|c| c.is_some()),
+        "jobs unfinished at max_slots horizon; check utilization config"
+    );
+
+    let jcts: Vec<Slots> = jobs
+        .iter()
+        .zip(&completion)
+        .map(|(j, c)| c.unwrap() - j.arrival)
+        .collect();
+    let makespan = completion.iter().map(|c| c.unwrap()).max().unwrap_or(0);
+    SimOutcome {
+        jcts,
+        overhead,
+        makespan,
+        wf_evals,
+        oracle_stats: None,
+    }
+}
+
+/// Dispatch on a [`SchedPolicy`].
+pub fn run_policy(
+    jobs: &[Job],
+    num_servers: usize,
+    policy: SchedPolicy,
+    cfg: &SimConfig,
+    seed: u64,
+) -> SimOutcome {
+    match policy {
+        SchedPolicy::Fifo(p) => run_fifo(jobs, num_servers, p, cfg, seed),
+        SchedPolicy::Ocwf { acc } => run_reordered(jobs, num_servers, acc, cfg),
+    }
+}
+
+/// Convenience: build cluster + trace from a config and run one policy.
+pub fn run_experiment(cfg: &ExperimentConfig, policy: SchedPolicy) -> crate::Result<SimOutcome> {
+    use crate::cluster::placement::Placement;
+    use crate::cluster::Cluster;
+    use crate::trace::Trace;
+    use crate::util::rng::Rng;
+
+    cfg.validate()?;
+    let root = Rng::seed_from(cfg.seed);
+    let mut rng = root.fork(1);
+    let cluster = Cluster::generate(&cfg.cluster, &mut rng);
+    let trace = Trace::build(&cfg.trace, &mut rng)?;
+    let placement = Placement::new(cfg.cluster.servers, cfg.cluster.zipf_alpha, &mut rng);
+    let jobs = trace.materialize(&cluster, &placement, cfg.trace.utilization, &mut rng)?;
+    Ok(run_policy(
+        &jobs,
+        cfg.cluster.servers,
+        policy,
+        &cfg.sim,
+        cfg.seed ^ 0xA55A,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::TaskGroup;
+
+    fn job(id: usize, arrival: Slots, sizes: &[u64], servers: &[&[usize]], mu: Vec<u64>) -> Job {
+        Job {
+            id,
+            arrival,
+            groups: sizes
+                .iter()
+                .zip(servers)
+                .map(|(&s, &sv)| TaskGroup::new(s, sv.to_vec()))
+                .collect(),
+            mu,
+        }
+    }
+
+    #[test]
+    fn fifo_single_job_single_server() {
+        let jobs = vec![job(0, 0, &[10], &[&[0]], vec![3])];
+        let out = run_fifo(&jobs, 1, AssignPolicy::Wf, &SimConfig::default(), 0);
+        assert_eq!(out.jcts, vec![4]); // ceil(10/3)
+        assert_eq!(out.makespan, 4);
+    }
+
+    #[test]
+    fn fifo_queueing_delay_accumulates() {
+        // Two identical jobs on one server, back to back.
+        let jobs = vec![
+            job(0, 0, &[4], &[&[0]], vec![1]),
+            job(1, 1, &[4], &[&[0]], vec![1]),
+        ];
+        let out = run_fifo(&jobs, 1, AssignPolicy::Wf, &SimConfig::default(), 0);
+        // Job 0: 0→4 (JCT 4). Job 1 arrives at 1, waits 3, runs 4 → JCT 7.
+        assert_eq!(out.jcts, vec![4, 7]);
+    }
+
+    #[test]
+    fn fifo_idle_gap_resets_busy() {
+        let jobs = vec![
+            job(0, 0, &[2], &[&[0]], vec![1]),
+            job(1, 10, &[2], &[&[0]], vec![1]),
+        ];
+        let out = run_fifo(&jobs, 1, AssignPolicy::Wf, &SimConfig::default(), 0);
+        assert_eq!(out.jcts, vec![2, 2]);
+        assert_eq!(out.makespan, 12);
+    }
+
+    #[test]
+    fn fifo_all_assigners_agree_on_single_server() {
+        let jobs = vec![
+            job(0, 0, &[7], &[&[0]], vec![2]),
+            job(1, 2, &[5], &[&[0]], vec![2]),
+        ];
+        for p in AssignPolicy::ALL {
+            let out = run_fifo(&jobs, 1, p, &SimConfig::default(), 0);
+            assert_eq!(out.jcts, vec![4, 2 + 3 + 2 - 2 /* wait + run */], "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn reordered_prioritizes_short_job() {
+        // Long job arrives at 0 on server 0; short job arrives at 1.
+        // FIFO: short job waits behind the long one. OCWF: the short job
+        // jumps the queue (its remaining time is smaller).
+        let jobs = vec![
+            job(0, 0, &[100], &[&[0]], vec![1]),
+            job(1, 1, &[2], &[&[0]], vec![1]),
+        ];
+        let fifo = run_fifo(&jobs, 1, AssignPolicy::Wf, &SimConfig::default(), 0);
+        let re = run_reordered(&jobs, 1, false, &SimConfig::default());
+        // FIFO: job 1 completes at 102 → JCT 101.
+        assert_eq!(fifo.jcts, vec![100, 101]);
+        // OCWF: at t=1 job 1 (2 tasks) goes first: completes at 3 (JCT 2);
+        // job 0 (99 left) completes at 102 → JCT 102.
+        assert_eq!(re.jcts, vec![102, 2]);
+        // Mean JCT improves.
+        assert!(re.mean_jct() < fifo.mean_jct());
+    }
+
+    #[test]
+    fn reordered_acc_matches_plain() {
+        use crate::util::rng::Rng;
+        let m = 5;
+        let mut rng = Rng::seed_from(400);
+        for _ in 0..10 {
+            let njobs = 2 + rng.gen_range(8) as usize;
+            let mut arrival = 0u64;
+            let jobs: Vec<Job> = (0..njobs)
+                .map(|id| {
+                    arrival += rng.gen_range(6);
+                    let k = 1 + rng.gen_range(3) as usize;
+                    let groups: Vec<TaskGroup> = (0..k)
+                        .map(|_| {
+                            let ns = 1 + rng.gen_range(m as u64) as usize;
+                            let mut sv: Vec<usize> = (0..m).collect();
+                            rng.shuffle(&mut sv);
+                            sv.truncate(ns);
+                            TaskGroup::new(rng.gen_range_incl(1, 25), sv)
+                        })
+                        .collect();
+                    Job {
+                        id,
+                        arrival,
+                        groups,
+                        mu: (0..m).map(|_| rng.gen_range_incl(1, 4)).collect(),
+                    }
+                })
+                .collect();
+            let plain = run_reordered(&jobs, m, false, &SimConfig::default());
+            let accd = run_reordered(&jobs, m, true, &SimConfig::default());
+            assert_eq!(plain.jcts, accd.jcts, "OCWF and OCWF-ACC must coincide");
+            assert!(accd.wf_evals <= plain.wf_evals);
+        }
+    }
+
+    #[test]
+    fn reordered_single_job_matches_fifo_wf() {
+        let jobs = vec![job(0, 0, &[12], &[&[0, 1, 2]], vec![2, 2, 2])];
+        let fifo = run_fifo(&jobs, 3, AssignPolicy::Wf, &SimConfig::default(), 0);
+        let re = run_reordered(&jobs, 3, true, &SimConfig::default());
+        assert_eq!(fifo.jcts, re.jcts);
+    }
+
+    #[test]
+    fn conservation_all_tasks_processed() {
+        use crate::util::rng::Rng;
+        let m = 4;
+        let mut rng = Rng::seed_from(401);
+        let jobs: Vec<Job> = (0..12)
+            .map(|id| {
+                let groups = vec![TaskGroup::new(
+                    rng.gen_range_incl(1, 30),
+                    (0..m).collect::<Vec<_>>(),
+                )];
+                Job {
+                    id,
+                    arrival: id as u64 * 2,
+                    groups,
+                    mu: (0..m).map(|_| rng.gen_range_incl(1, 3)).collect(),
+                }
+            })
+            .collect();
+        for policy in SchedPolicy::ALL {
+            let out = run_policy(&jobs, m, policy, &SimConfig::default(), 1);
+            assert_eq!(out.jcts.len(), jobs.len(), "{}", policy.name());
+            assert!(out.jcts.iter().all(|&j| j >= 1), "{}", policy.name());
+        }
+    }
+
+    #[test]
+    fn run_experiment_end_to_end_smoke() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.trace.jobs = 15;
+        cfg.trace.total_tasks = 600;
+        cfg.cluster.servers = 20;
+        cfg.cluster.avail_lo = 3;
+        cfg.cluster.avail_hi = 6;
+        let out = run_experiment(&cfg, SchedPolicy::Fifo(AssignPolicy::Wf)).unwrap();
+        assert_eq!(out.jcts.len(), 15);
+        let out2 = run_experiment(&cfg, SchedPolicy::Ocwf { acc: true }).unwrap();
+        assert_eq!(out2.jcts.len(), 15);
+    }
+}

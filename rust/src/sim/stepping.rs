@@ -1,0 +1,212 @@
+//! A literal slot-by-slot reference engine.
+//!
+//! [`super::run_fifo`] computes queue-entry finish times analytically
+//! (eq. 2 telescopes, so no slot stepping is needed). This module is the
+//! *semantic ground truth*: it advances time one slot at a time, each
+//! server processing at most `μ_m^h` tasks of its head-of-queue job per
+//! slot, never sharing a partial slot between jobs — exactly the model of
+//! paper §II. A property test asserts the two engines produce identical
+//! completion times on random traces; the analytic engine is what the
+//! benches run (it is O(assignments) instead of O(makespan · M)).
+
+use crate::assign::{AssignPolicy, Instance};
+use crate::config::SimConfig;
+use crate::job::{Job, Slots, TaskCount};
+use crate::util::ceil_div;
+use crate::util::timer::OverheadMeter;
+
+use super::SimOutcome;
+
+/// One queue entry: `remaining` tasks of `job` at this server, plus the
+/// per-slot progress state (tasks already processed within the current
+/// "ceil block" — the paper's model charges whole slots per job, so a
+/// slot that finishes a job's tasks cannot start the next job's).
+#[derive(Clone, Debug)]
+struct Entry {
+    job: usize,
+    remaining: TaskCount,
+}
+
+/// Slot-stepping FIFO simulation. Semantically identical to
+/// [`super::run_fifo`]; use only for validation (cost O(makespan · M)).
+pub fn run_fifo_stepping(
+    jobs: &[Job],
+    num_servers: usize,
+    policy: AssignPolicy,
+    cfg: &SimConfig,
+    seed: u64,
+) -> SimOutcome {
+    let mut assigner = policy.build(seed);
+    let mut queues: Vec<std::collections::VecDeque<Entry>> =
+        vec![Default::default(); num_servers];
+    let mut completion: Vec<Option<Slots>> = vec![None; jobs.len()];
+    let mut remaining_total: Vec<TaskCount> = jobs.iter().map(|j| j.total_tasks()).collect();
+    let mut last_finish: Vec<Slots> = jobs.iter().map(|j| j.arrival).collect();
+    let mut overhead = OverheadMeter::new();
+    let mut busy_scratch = vec![0u64; num_servers];
+
+    let mut next_arrival = 0usize;
+    let mut now: Slots = 0;
+    loop {
+        // 1. Admit arrivals at `now`.
+        while next_arrival < jobs.len() && jobs[next_arrival].arrival == now {
+            let job = &jobs[next_arrival];
+            // Busy time per eq. 2: Σ_h ceil(o_m^h / μ_m^h) over queued
+            // entries.
+            for (m, q) in queues.iter().enumerate() {
+                busy_scratch[m] = q
+                    .iter()
+                    .map(|e| ceil_div(e.remaining, jobs[e.job].mu[m]))
+                    .sum();
+            }
+            let inst = Instance {
+                groups: &job.groups,
+                mu: &job.mu,
+                busy: &busy_scratch,
+            };
+            let a = overhead.measure(|| assigner.assign(&inst));
+            for (m, n) in a.per_server() {
+                queues[m].push_back(Entry {
+                    job: job.id,
+                    remaining: n,
+                });
+            }
+            if job.total_tasks() == 0 {
+                completion[job.id] = Some(now);
+            }
+            next_arrival += 1;
+        }
+
+        // 2. Termination.
+        let queues_empty = queues.iter().all(|q| q.is_empty());
+        if queues_empty && next_arrival >= jobs.len() {
+            break;
+        }
+        assert!(now < cfg.max_slots, "stepping engine exceeded max_slots");
+
+        // 3. Process one slot on every server: μ tasks of the head job;
+        // the slot is charged to that job even if it finishes early
+        // (integer slots per job, eq. 2).
+        for (m, q) in queues.iter_mut().enumerate() {
+            if let Some(head) = q.front_mut() {
+                let mu = jobs[head.job].mu[m];
+                let processed = head.remaining.min(mu);
+                head.remaining -= processed;
+                remaining_total[head.job] -= processed;
+                if head.remaining == 0 {
+                    let job = head.job;
+                    q.pop_front();
+                    last_finish[job] = last_finish[job].max(now + 1);
+                    if remaining_total[job] == 0 && completion[job].is_none() {
+                        completion[job] = Some(last_finish[job]);
+                    }
+                }
+            }
+        }
+        now += 1;
+    }
+
+    let jcts: Vec<Slots> = jobs
+        .iter()
+        .zip(&completion)
+        .map(|(j, c)| c.expect("job must complete") - j.arrival)
+        .collect();
+    let makespan = completion.iter().map(|c| c.unwrap()).max().unwrap_or(0);
+    SimOutcome {
+        jcts,
+        overhead,
+        makespan,
+        wf_evals: 0,
+        oracle_stats: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::TaskGroup;
+    use crate::proptest::{forall, Config};
+    use crate::sim::run_fifo;
+    use crate::util::rng::Rng;
+
+    fn random_jobs(rng: &mut Rng, m: usize) -> Vec<Job> {
+        let njobs = 1 + rng.gen_range(10) as usize;
+        let mut arrival = 0u64;
+        (0..njobs)
+            .map(|id| {
+                arrival += rng.gen_range(8);
+                let k = 1 + rng.gen_range(3) as usize;
+                let groups: Vec<TaskGroup> = (0..k)
+                    .map(|_| {
+                        let ns = 1 + rng.gen_range(m as u64) as usize;
+                        let mut sv: Vec<usize> = (0..m).collect();
+                        rng.shuffle(&mut sv);
+                        sv.truncate(ns);
+                        TaskGroup::new(rng.gen_range_incl(1, 30), sv)
+                    })
+                    .collect();
+                Job {
+                    id,
+                    arrival,
+                    groups,
+                    mu: (0..m).map(|_| rng.gen_range_incl(1, 4)).collect(),
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn stepping_single_server_basics() {
+        let jobs = vec![Job {
+            id: 0,
+            arrival: 0,
+            groups: vec![TaskGroup::new(10, vec![0])],
+            mu: vec![3],
+        }];
+        let out = run_fifo_stepping(&jobs, 1, AssignPolicy::Wf, &SimConfig::default(), 0);
+        assert_eq!(out.jcts, vec![4]);
+        assert_eq!(out.makespan, 4);
+    }
+
+    #[test]
+    fn stepping_charges_whole_slots_per_job() {
+        // Job 0: 1 task (μ=3) takes a WHOLE slot; job 1 starts at slot 1.
+        let jobs = vec![
+            Job {
+                id: 0,
+                arrival: 0,
+                groups: vec![TaskGroup::new(1, vec![0])],
+                mu: vec![3],
+            },
+            Job {
+                id: 1,
+                arrival: 0,
+                groups: vec![TaskGroup::new(3, vec![0])],
+                mu: vec![3],
+            },
+        ];
+        let out = run_fifo_stepping(&jobs, 1, AssignPolicy::Wf, &SimConfig::default(), 0);
+        assert_eq!(out.jcts, vec![1, 2]);
+    }
+
+    #[test]
+    fn property_analytic_engine_equals_stepping_engine() {
+        // The core semantic claim of the fast simulator: identical
+        // completion times on arbitrary traces, for every assigner.
+        let m = 4;
+        forall(
+            Config::default().cases(25).seed(0x57E9),
+            |rng| random_jobs(rng, m),
+            |jobs| {
+                [AssignPolicy::Wf, AssignPolicy::Rd, AssignPolicy::Obta]
+                    .into_iter()
+                    .all(|p| {
+                        let fast = run_fifo(jobs, m, p, &SimConfig::default(), 3);
+                        let slow =
+                            run_fifo_stepping(jobs, m, p, &SimConfig::default(), 3);
+                        fast.jcts == slow.jcts && fast.makespan == slow.makespan
+                    })
+            },
+        );
+    }
+}

@@ -1,0 +1,279 @@
+//! Experiment sweeps that regenerate every table and figure of the
+//! paper's evaluation (§V). Shared by the `taos repro` CLI subcommand and
+//! the `cargo bench` figure harnesses.
+//!
+//! | Paper artifact | Function |
+//! |---|---|
+//! | Fig 10 (25% util) | [`fig_alpha_util`] with `util = 0.25` |
+//! | Fig 11 (50% util) | [`fig_alpha_util`] with `util = 0.50` |
+//! | Fig 12 (75% util) | [`fig_alpha_util`] with `util = 0.75` |
+//! | Fig 13 + Table I | [`fig_servers`] |
+//! | Fig 14 | [`fig_capacity`] |
+
+use crate::benchlib::TextTable;
+use crate::config::ExperimentConfig;
+use crate::metrics::jct_cdf;
+use crate::sched::SchedPolicy;
+use crate::sim::run_experiment;
+use crate::util::json::Json;
+
+/// Result of one (policy, setting) cell: the paper's two metrics plus the
+/// CDF series for the CDF subplots.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub policy: &'static str,
+    pub setting: f64,
+    pub mean_jct: f64,
+    pub overhead_us: f64,
+    pub cdf: Vec<(f64, f64)>,
+}
+
+/// A complete figure: one cell per (policy, x-axis setting).
+#[derive(Clone, Debug)]
+pub struct Figure {
+    pub name: String,
+    pub x_label: &'static str,
+    pub cells: Vec<Cell>,
+}
+
+impl Figure {
+    /// The x-axis values, deduped in order.
+    pub fn settings(&self) -> Vec<f64> {
+        let mut xs: Vec<f64> = Vec::new();
+        for c in &self.cells {
+            if !xs.iter().any(|&x| x == c.setting) {
+                xs.push(c.setting);
+            }
+        }
+        xs
+    }
+
+    pub fn cell(&self, policy: &str, setting: f64) -> Option<&Cell> {
+        self.cells
+            .iter()
+            .find(|c| c.policy == policy && c.setting == setting)
+    }
+
+    /// Render the figure's headline table: mean JCT (and overhead) per
+    /// algorithm × setting, exactly the rows the paper plots.
+    pub fn render(&self) -> String {
+        let settings = self.settings();
+        let mut header: Vec<String> = vec!["algorithm".into()];
+        for s in &settings {
+            header.push(format!("{}={}", self.x_label, s));
+        }
+        header.push("avg".into());
+        let hdr_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+
+        let mut out = format!("== {} : mean JCT (slots) ==\n", self.name);
+        let mut t = TextTable::new(&hdr_refs);
+        for policy in SchedPolicy::ALL {
+            let mut row = vec![policy.name().to_string()];
+            let mut sum = 0.0;
+            let mut cnt = 0;
+            for &s in &settings {
+                match self.cell(policy.name(), s) {
+                    Some(c) => {
+                        row.push(format!("{:.0}", c.mean_jct));
+                        sum += c.mean_jct;
+                        cnt += 1;
+                    }
+                    None => row.push("-".into()),
+                }
+            }
+            row.push(if cnt > 0 {
+                format!("{:.0}", sum / cnt as f64)
+            } else {
+                "-".into()
+            });
+            t.row(row);
+        }
+        out.push_str(&t.render());
+
+        out.push_str(&format!("\n== {} : overhead per arrival (us) ==\n", self.name));
+        let mut t2 = TextTable::new(&hdr_refs);
+        for policy in SchedPolicy::ALL {
+            let mut row = vec![policy.name().to_string()];
+            let mut sum = 0.0;
+            let mut cnt = 0;
+            for &s in &settings {
+                match self.cell(policy.name(), s) {
+                    Some(c) => {
+                        row.push(format!("{:.1}", c.overhead_us));
+                        sum += c.overhead_us;
+                        cnt += 1;
+                    }
+                    None => row.push("-".into()),
+                }
+            }
+            row.push(if cnt > 0 {
+                format!("{:.1}", sum / cnt as f64)
+            } else {
+                "-".into()
+            });
+            t2.row(row);
+        }
+        out.push_str(&t2.render());
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("x_label", Json::str(self.x_label)),
+            (
+                "cells",
+                Json::arr(self.cells.iter().map(|c| {
+                    Json::obj(vec![
+                        ("policy", Json::str(c.policy)),
+                        ("setting", Json::num(c.setting)),
+                        ("mean_jct", Json::num(c.mean_jct)),
+                        ("overhead_us", Json::num(c.overhead_us)),
+                        (
+                            "cdf",
+                            Json::arr(c.cdf.iter().map(|&(x, y)| {
+                                Json::arr(vec![Json::num(x), Json::num(y)])
+                            })),
+                        ),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+/// Run one (config, policy) cell.
+fn run_cell(cfg: &ExperimentConfig, policy: SchedPolicy, setting: f64) -> Cell {
+    let out = run_experiment(cfg, policy).expect("sweep cell failed");
+    Cell {
+        policy: policy.name(),
+        setting,
+        mean_jct: out.mean_jct(),
+        overhead_us: out.overhead.mean_us(),
+        cdf: jct_cdf(&out.jcts, 64),
+    }
+}
+
+/// Figs 10–12: sweep Zipf α at fixed utilization, all six algorithms.
+pub fn fig_alpha_util(base: &ExperimentConfig, util: f64, alphas: &[f64]) -> Figure {
+    let mut cells = Vec::new();
+    for &alpha in alphas {
+        let mut cfg = base.clone();
+        cfg.cluster.zipf_alpha = alpha;
+        cfg.trace.utilization = util;
+        for policy in SchedPolicy::ALL {
+            cells.push(run_cell(&cfg, policy, alpha));
+        }
+    }
+    Figure {
+        name: format!("fig-alpha-util-{:.0}%", util * 100.0),
+        x_label: "alpha",
+        cells,
+    }
+}
+
+/// Fig 13 + Table I: sweep the number of available servers p at α = 2,
+/// 75% utilization (the paper fixes p per sweep point: avail_lo =
+/// avail_hi = p).
+pub fn fig_servers(base: &ExperimentConfig, ps: &[usize]) -> Figure {
+    let mut cells = Vec::new();
+    for &p in ps {
+        let mut cfg = base.clone();
+        cfg.cluster.zipf_alpha = 2.0;
+        cfg.trace.utilization = 0.75;
+        cfg.cluster.avail_lo = p;
+        cfg.cluster.avail_hi = p;
+        for policy in SchedPolicy::ALL {
+            cells.push(run_cell(&cfg, policy, p as f64));
+        }
+    }
+    Figure {
+        name: "fig13-table1-available-servers".into(),
+        x_label: "p",
+        cells,
+    }
+}
+
+/// Fig 14: sweep computing capacity (μ ranges centred on the x value) at
+/// α = 2, 75% utilization.
+pub fn fig_capacity(base: &ExperimentConfig, mu_mids: &[u64]) -> Figure {
+    let mut cells = Vec::new();
+    for &mid in mu_mids {
+        let mut cfg = base.clone();
+        cfg.cluster.zipf_alpha = 2.0;
+        cfg.trace.utilization = 0.75;
+        cfg.cluster.mu_lo = mid - 1;
+        cfg.cluster.mu_hi = mid + 1;
+        for policy in SchedPolicy::ALL {
+            cells.push(run_cell(&cfg, policy, mid as f64));
+        }
+    }
+    Figure {
+        name: "fig14-computing-capacity".into(),
+        x_label: "mu",
+        cells,
+    }
+}
+
+/// A scaled-down base config for quick runs (CI, `--quick`): same
+/// structure as the paper's setup, smaller trace.
+pub fn quick_base(seed: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.trace.jobs = 40;
+    cfg.trace.total_tasks = 4_000;
+    cfg.cluster.servers = 40;
+    cfg.cluster.avail_lo = 4;
+    cfg.cluster.avail_hi = 6;
+    cfg.seed = seed;
+    cfg
+}
+
+/// The paper-scale base config (250 jobs, 113,653 tasks, 100 servers).
+pub fn paper_base(seed: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.seed = seed;
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_alpha_sweep_has_all_cells() {
+        let base = quick_base(7);
+        let fig = fig_alpha_util(&base, 0.5, &[0.0, 2.0]);
+        assert_eq!(fig.cells.len(), 2 * 6);
+        assert_eq!(fig.settings(), vec![0.0, 2.0]);
+        for c in &fig.cells {
+            assert!(c.mean_jct.is_finite() && c.mean_jct > 0.0);
+            assert!(!c.cdf.is_empty());
+        }
+        let text = fig.render();
+        assert!(text.contains("obta"));
+        assert!(text.contains("ocwf-acc"));
+    }
+
+    #[test]
+    fn reordering_beats_fifo_at_high_skew() {
+        // The paper's central qualitative claim (Figs 10-12): at α = 2 the
+        // reordered algorithms achieve far lower mean JCT than FIFO WF.
+        let base = quick_base(11);
+        let fig = fig_alpha_util(&base, 0.75, &[2.0]);
+        let wf = fig.cell("wf", 2.0).unwrap().mean_jct;
+        let ocwf = fig.cell("ocwf", 2.0).unwrap().mean_jct;
+        assert!(
+            ocwf < wf,
+            "reordering must win under skew: ocwf {ocwf} vs wf {wf}"
+        );
+    }
+
+    #[test]
+    fn figure_json_parses() {
+        let base = quick_base(5);
+        let fig = fig_servers(&base, &[4]);
+        let j = fig.to_json().to_string();
+        let parsed = crate::util::json::Json::parse(&j).unwrap();
+        assert!(parsed.get("cells").unwrap().as_arr().unwrap().len() == 6);
+    }
+}

@@ -1,0 +1,132 @@
+//! Parser for the Alibaba `cluster-trace-v2017 batch_task.csv` schema.
+//!
+//! Columns (no header):
+//! `create_timestamp, modify_timestamp, job_id, task_id, instance_num,
+//!  status, plan_cpu, plan_mem`
+//!
+//! Following the paper (§V-A): each row (task event) becomes one task
+//! group of its job with `instance_num` tasks; a job's arrival time is the
+//! minimum `create_timestamp` over its rows. Jobs are emitted in arrival
+//! order. Rows with `instance_num <= 0` or unparsable fields are rejected
+//! with a line number so trace problems are debuggable.
+
+use std::collections::BTreeMap;
+
+use super::{Trace, TraceJob};
+use crate::{Error, Result};
+
+/// Parse CSV text in the `batch_task.csv` schema into a [`Trace`].
+pub fn parse_batch_task(text: &str) -> Result<Trace> {
+    // job key -> (min create ts, group sizes in row order)
+    let mut jobs: BTreeMap<String, (f64, Vec<u64>)> = BTreeMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(|f| f.trim()).collect();
+        if fields.len() < 5 {
+            return Err(Error::TraceParse {
+                line: lineno + 1,
+                msg: format!("expected >= 5 comma-separated fields, got {}", fields.len()),
+            });
+        }
+        let create_ts: f64 = fields[0].parse().map_err(|_| Error::TraceParse {
+            line: lineno + 1,
+            msg: format!("bad create_timestamp `{}`", fields[0]),
+        })?;
+        let job_id = fields[2].to_string();
+        if job_id.is_empty() {
+            return Err(Error::TraceParse {
+                line: lineno + 1,
+                msg: "empty job_id".into(),
+            });
+        }
+        let instances: i64 = fields[4].parse().map_err(|_| Error::TraceParse {
+            line: lineno + 1,
+            msg: format!("bad instance_num `{}`", fields[4]),
+        })?;
+        if instances <= 0 {
+            return Err(Error::TraceParse {
+                line: lineno + 1,
+                msg: format!("instance_num must be positive, got {instances}"),
+            });
+        }
+        let entry = jobs.entry(job_id).or_insert((f64::INFINITY, Vec::new()));
+        entry.0 = entry.0.min(create_ts);
+        entry.1.push(instances as u64);
+    }
+    if jobs.is_empty() {
+        return Err(Error::TraceParse {
+            line: 0,
+            msg: "trace contains no rows".into(),
+        });
+    }
+    let mut ordered: Vec<(f64, Vec<u64>)> = jobs.into_values().collect();
+    ordered.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let t0 = ordered[0].0;
+    Ok(Trace {
+        jobs: ordered
+            .into_iter()
+            .map(|(ts, group_sizes)| TraceJob {
+                arrival_raw: ts - t0,
+                group_sizes,
+            })
+            .collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+100,200,j_42,t_1,16,Terminated,100,0.5
+120,220,j_42,t_2,4,Terminated,100,0.5
+90,300,j_7,t_1,8,Terminated,50,0.25
+150,400,j_99,t_1,1,Terminated,50,0.25
+";
+
+    #[test]
+    fn parses_jobs_groups_and_arrival_order() {
+        let t = parse_batch_task(SAMPLE).unwrap();
+        assert_eq!(t.jobs.len(), 3);
+        // j_7 arrives first (ts 90), then j_42 (min ts 100), then j_99.
+        assert_eq!(t.jobs[0].group_sizes, vec![8]);
+        assert_eq!(t.jobs[1].group_sizes, vec![16, 4]);
+        assert_eq!(t.jobs[2].group_sizes, vec![1]);
+        // Arrivals normalized to start at 0.
+        assert_eq!(t.jobs[0].arrival_raw, 0.0);
+        assert_eq!(t.jobs[1].arrival_raw, 10.0);
+        assert_eq!(t.jobs[2].arrival_raw, 60.0);
+        assert_eq!(t.total_tasks(), 29);
+    }
+
+    #[test]
+    fn skips_blank_and_comment_lines() {
+        let t = parse_batch_task("# header\n\n1,2,j_1,t_1,3,T,1,1\n").unwrap();
+        assert_eq!(t.jobs.len(), 1);
+        assert_eq!(t.jobs[0].group_sizes, vec![3]);
+    }
+
+    #[test]
+    fn rejects_bad_instance_count() {
+        let err = parse_batch_task("1,2,j_1,t_1,0,T,1,1").unwrap_err();
+        assert!(matches!(err, Error::TraceParse { line: 1, .. }), "{err}");
+        assert!(parse_batch_task("1,2,j_1,t_1,abc,T,1,1").is_err());
+    }
+
+    #[test]
+    fn rejects_short_rows_with_line_number() {
+        let err = parse_batch_task("1,2,j_1,t_1,3,T,1,1\n1,2,j_2").unwrap_err();
+        match err {
+            Error::TraceParse { line, .. } => assert_eq!(line, 2),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_empty_trace() {
+        assert!(parse_batch_task("\n\n").is_err());
+    }
+}

@@ -1,0 +1,56 @@
+//! Small self-contained utilities: deterministic PRNG, statistics, timers,
+//! JSON emission, and integer math helpers.
+//!
+//! The build environment is fully offline with only the `xla`, `anyhow` and
+//! `thiserror` crates vendored, so everything that would normally come from
+//! `rand`, `serde_json` or `statrs` is implemented here (and unit-tested).
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+/// Ceiling division for non-negative integers: `ceil(a / b)`.
+///
+/// Used pervasively for the busy-time estimate of eq. (2) in the paper,
+/// `b_m^c = Σ_h ceil(o_m^h / μ_m^h)`.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0, "ceil_div by zero");
+    a.div_ceil(b)
+}
+
+/// Argmax over a slice of `u64`, returning the first maximal index.
+/// Returns `None` on an empty slice.
+pub fn argmax_u64(xs: &[u64]) -> Option<usize> {
+    let mut best: Option<(usize, u64)> = None;
+    for (i, &x) in xs.iter().enumerate() {
+        match best {
+            Some((_, bx)) if bx >= x => {}
+            _ => best = Some((i, x)),
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_exact_and_remainder() {
+        assert_eq!(ceil_div(0, 3), 0);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(1, 1), 1);
+        assert_eq!(ceil_div(u64::MAX - 1, u64::MAX), 1);
+    }
+
+    #[test]
+    fn argmax_picks_first_max() {
+        assert_eq!(argmax_u64(&[]), None);
+        assert_eq!(argmax_u64(&[5]), Some(0));
+        assert_eq!(argmax_u64(&[1, 7, 7, 3]), Some(1));
+        assert_eq!(argmax_u64(&[9, 1, 9]), Some(0));
+    }
+}

@@ -1,0 +1,205 @@
+//! Descriptive statistics and empirical CDFs, used by the metrics layer and
+//! the bench harness.
+
+/// Summary statistics over a sample of `f64`s.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    /// Compute a summary; returns an all-NaN summary for empty input
+    /// (`n == 0` signals it).
+    pub fn from(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary {
+                n: 0,
+                mean: f64::NAN,
+                std: f64::NAN,
+                min: f64::NAN,
+                max: f64::NAN,
+                p50: f64::NAN,
+                p90: f64::NAN,
+                p99: f64::NAN,
+            };
+        }
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 0.50),
+            p90: percentile_sorted(&sorted, 0.90),
+            p99: percentile_sorted(&sorted, 0.99),
+        }
+    }
+}
+
+/// Linear-interpolation percentile over a pre-sorted slice, `q ∈ [0,1]`.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// An empirical CDF: for plotting the job-completion-time distributions
+/// shown in the paper's Figs 10–14 (four CDF subplots per figure).
+#[derive(Clone, Debug)]
+pub struct Ecdf {
+    /// Sorted sample values.
+    pub xs: Vec<f64>,
+}
+
+impl Ecdf {
+    pub fn from(sample: &[f64]) -> Ecdf {
+        let mut xs = sample.to_vec();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Ecdf { xs }
+    }
+
+    /// P(X <= x).
+    pub fn eval(&self, x: f64) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        let idx = self.xs.partition_point(|&v| v <= x);
+        idx as f64 / self.xs.len() as f64
+    }
+
+    /// Evaluate the CDF at `k` evenly spaced points spanning the sample
+    /// range; returns `(x, F(x))` pairs — the series a plot consumes.
+    pub fn series(&self, k: usize) -> Vec<(f64, f64)> {
+        assert!(k >= 2);
+        if self.xs.is_empty() {
+            return vec![];
+        }
+        let (lo, hi) = (self.xs[0], *self.xs.last().unwrap());
+        (0..k)
+            .map(|i| {
+                let x = lo + (hi - lo) * i as f64 / (k - 1) as f64;
+                (x, self.eval(x))
+            })
+            .collect()
+    }
+}
+
+/// Online mean/variance accumulator (Welford) for streaming timers.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_known_values() {
+        let s = Summary::from(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.min - 1.0).abs() < 1e-12);
+        assert!((s.max - 4.0).abs() < 1e-12);
+        assert!((s.p50 - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty() {
+        let s = Summary::from(&[]);
+        assert_eq!(s.n, 0);
+        assert!(s.mean.is_nan());
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [10.0, 20.0, 30.0];
+        assert!((percentile_sorted(&xs, 0.0) - 10.0).abs() < 1e-12);
+        assert!((percentile_sorted(&xs, 0.5) - 20.0).abs() < 1e-12);
+        assert!((percentile_sorted(&xs, 1.0) - 30.0).abs() < 1e-12);
+        assert!((percentile_sorted(&xs, 0.25) - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ecdf_eval() {
+        let e = Ecdf::from(&[1.0, 2.0, 2.0, 4.0]);
+        assert!((e.eval(0.5) - 0.0).abs() < 1e-12);
+        assert!((e.eval(1.0) - 0.25).abs() < 1e-12);
+        assert!((e.eval(2.0) - 0.75).abs() < 1e-12);
+        assert!((e.eval(5.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ecdf_series_monotone() {
+        let e = Ecdf::from(&[3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0]);
+        let s = e.series(16);
+        assert_eq!(s.len(), 16);
+        for w in s.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+            assert!(w[0].0 <= w[1].0);
+        }
+        assert!((s.last().unwrap().1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 5.0).abs() < 1e-12);
+        // Sample variance of this classic dataset = 32/7.
+        assert!((w.var() - 32.0 / 7.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,81 @@
+//! Wall-clock timers for measuring per-arrival computation overhead —
+//! the paper's efficiency metric (§V-A "Metrics").
+
+use std::time::{Duration, Instant};
+
+use super::stats::Welford;
+
+/// Accumulates wall-clock durations of a repeated operation (e.g. the task
+/// assignment performed on each job arrival) and reports the average
+/// overhead per invocation in microseconds — the left y-axis of the first
+/// subplot of Figs 10–12.
+#[derive(Clone, Debug, Default)]
+pub struct OverheadMeter {
+    acc: Welford,
+    total: Duration,
+}
+
+impl OverheadMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure and record its duration; returns the closure result.
+    pub fn measure<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(t0.elapsed());
+        out
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.total += d;
+        self.acc.push(d.as_secs_f64() * 1e6);
+    }
+
+    /// Number of recorded invocations.
+    pub fn count(&self) -> u64 {
+        self.acc.n()
+    }
+
+    /// Mean overhead per invocation, microseconds.
+    pub fn mean_us(&self) -> f64 {
+        self.acc.mean()
+    }
+
+    /// Standard deviation of per-invocation overhead, microseconds.
+    pub fn std_us(&self) -> f64 {
+        self.acc.std()
+    }
+
+    /// Total accumulated time.
+    pub fn total(&self) -> Duration {
+        self.total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_counts() {
+        let mut m = OverheadMeter::new();
+        let v = m.measure(|| {
+            std::thread::sleep(Duration::from_millis(2));
+            42
+        });
+        assert_eq!(v, 42);
+        m.measure(|| ());
+        assert_eq!(m.count(), 2);
+        assert!(m.mean_us() >= 900.0, "mean {}", m.mean_us());
+        assert!(m.total() >= Duration::from_millis(2));
+    }
+
+    #[test]
+    fn empty_meter_is_nan() {
+        let m = OverheadMeter::new();
+        assert_eq!(m.count(), 0);
+        assert!(m.mean_us().is_nan());
+    }
+}

@@ -1,0 +1,125 @@
+//! Black-box tests of the `taos` binary (launcher, config plumbing,
+//! figure reproduction, trace generation).
+
+use std::process::Command;
+
+fn taos() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_taos"))
+}
+
+fn run_ok(args: &[&str]) -> String {
+    let out = taos().args(args).output().expect("spawn taos");
+    assert!(
+        out.status.success(),
+        "taos {args:?} failed:\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let out = taos().arg("--help").output().unwrap();
+    let text = String::from_utf8_lossy(&out.stderr).into_owned()
+        + &String::from_utf8_lossy(&out.stdout);
+    for sub in ["simulate", "compare", "repro", "gen-trace", "live", "verify-kernel"] {
+        assert!(text.contains(sub), "help missing {sub}: {text}");
+    }
+}
+
+#[test]
+fn simulate_small_run_text_and_json() {
+    let args = [
+        "simulate", "--alg", "wf", "--jobs", "15", "--tasks", "600", "--servers", "20",
+        "--avail", "3:5", "--seed", "5",
+    ];
+    let text = run_ok(&args);
+    assert!(text.contains("mean JCT"), "{text}");
+
+    let mut jargs = args.to_vec();
+    jargs.push("--json");
+    let json = run_ok(&jargs);
+    let parsed = taos::util::json::Json::parse(json.trim()).expect("valid json");
+    assert_eq!(
+        parsed.get("algorithm").and_then(|a| a.as_str()),
+        Some("wf")
+    );
+    assert!(parsed.get("jct").and_then(|j| j.get("mean")).is_some());
+}
+
+#[test]
+fn simulate_reordered_policy() {
+    let text = run_ok(&[
+        "simulate", "--alg", "ocwf-acc", "--jobs", "12", "--tasks", "400", "--servers", "15",
+        "--avail", "3:5",
+    ]);
+    assert!(text.contains("WF evaluations"), "{text}");
+}
+
+#[test]
+fn unknown_algorithm_rejected() {
+    let out = taos()
+        .args(["simulate", "--alg", "frobnicate"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown algorithm"));
+}
+
+#[test]
+fn repro_quick_fig13_prints_table1_rows() {
+    let text = run_ok(&["repro", "--fig", "table1", "--quick", "--seed", "3"]);
+    for alg in ["nlip", "obta", "wf", "rd", "ocwf", "ocwf-acc"] {
+        assert!(text.contains(alg), "missing {alg} row: {text}");
+    }
+    assert!(text.contains("p=4"), "{text}");
+    assert!(text.contains("p=12"), "{text}");
+    assert!(text.contains("overhead"), "{text}");
+}
+
+#[test]
+fn gen_trace_roundtrips_through_simulate() {
+    let dir = std::env::temp_dir().join("taos_cli_trace_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.csv");
+    let out = run_ok(&[
+        "gen-trace", "--jobs", "10", "--tasks", "300", "--out",
+        path.to_str().unwrap(),
+    ]);
+    assert!(out.contains("10 jobs"));
+    assert!(out.contains("300 tasks"));
+
+    let text = run_ok(&[
+        "simulate", "--alg", "rd", "--csv", path.to_str().unwrap(), "--servers", "15",
+        "--avail", "3:5",
+    ]);
+    assert!(text.contains("jobs           : 10"), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn compare_runs_all_algorithms() {
+    let text = run_ok(&[
+        "compare", "--jobs", "10", "--tasks", "300", "--servers", "15", "--avail", "3:5",
+        "--json",
+    ]);
+    let parsed = taos::util::json::Json::parse(text.trim()).expect("valid json");
+    let rows = parsed.as_arr().expect("array");
+    assert_eq!(rows.len(), 6);
+}
+
+#[test]
+fn config_file_respected() {
+    let dir = std::env::temp_dir().join("taos_cli_cfg_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("exp.cfg");
+    std::fs::write(
+        &cfg,
+        "servers = 12\njobs = 8\ntotal_tasks = 200\navail_lo = 2\navail_hi = 4\nseed = 9\n",
+    )
+    .unwrap();
+    let text = run_ok(&["simulate", "--config", cfg.to_str().unwrap(), "--alg", "wf"]);
+    assert!(text.contains("jobs           : 8"), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
