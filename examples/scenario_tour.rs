@@ -1,0 +1,50 @@
+//! Scenario tour: run FIFO water-filling and OCWF-ACC across every named
+//! workload scenario, in parallel, and print the catalog side by side.
+//!
+//! ```text
+//! cargo run --release --offline --example scenario_tour
+//! ```
+
+use taos::sched::SchedPolicy;
+use taos::sweep::{pool, run_specs, CellSpec};
+use taos::trace::scenarios::Scenario;
+
+fn main() {
+    // One spec per (scenario, policy): small enough to finish in seconds,
+    // fanned out across all cores by the sweep pool.
+    let policies = [
+        SchedPolicy::Fifo(taos::assign::AssignPolicy::Wf),
+        SchedPolicy::Ocwf { acc: true },
+    ];
+    let mut specs = Vec::new();
+    for (i, sc) in Scenario::ALL.iter().enumerate() {
+        let mut cfg = taos::sweep::quick_base(7);
+        sc.apply(&mut cfg);
+        for policy in policies {
+            specs.push(CellSpec {
+                cfg: cfg.clone(),
+                policy,
+                setting: i as f64,
+                trial: 0,
+            });
+        }
+    }
+
+    let threads = pool::available_threads();
+    println!("running {} cells on {threads} threads\n", specs.len());
+    let outcomes = run_specs(&specs, threads);
+
+    println!("{:<12} {:>10} {:>10}  note", "scenario", "wf", "ocwf-acc");
+    for (i, sc) in Scenario::ALL.iter().enumerate() {
+        let wf = outcomes[i * 2].mean_jct();
+        let ocwf = outcomes[i * 2 + 1].mean_jct();
+        println!(
+            "{:<12} {:>10.1} {:>10.1}  {}",
+            sc.name(),
+            wf,
+            ocwf,
+            sc.describe()
+        );
+    }
+    println!("\n(`taos repro --fig scenarios --quick --threads 0` runs all six algorithms)");
+}

@@ -4,7 +4,9 @@
 //!
 //! `cargo bench --bench fig10_12_alpha_util` (full paper scale) or with
 //! `TAOS_BENCH_QUICK=1` / `-- --quick` for the scaled-down workload.
-//! JSON series land in `bench_results/`.
+//! Cells fan out across all cores (override with `TAOS_BENCH_THREADS=N`;
+//! results are bit-identical at any thread count). JSON series land in
+//! `bench_results/`.
 
 use taos::sweep;
 
@@ -16,12 +18,13 @@ fn main() {
     } else {
         sweep::paper_base(42)
     };
+    let opts = sweep::SweepOptions::from_env();
     let alphas = [0.0, 0.5, 1.0, 1.5, 2.0];
     std::fs::create_dir_all("bench_results").ok();
 
     for (fig, util) in [("fig10", 0.25), ("fig11", 0.50), ("fig12", 0.75)] {
         let t0 = std::time::Instant::now();
-        let figure = sweep::fig_alpha_util(&base, util, &alphas);
+        let figure = sweep::fig_alpha_util_opts(&base, util, &alphas, &opts);
         println!(
             "\n================ {} (paper Fig {}) — {:.0}% utilization ({:.1}s) ================",
             figure.name,

@@ -4,6 +4,7 @@
 //!
 //! `cargo bench --bench fig13_table1_servers` (paper scale) or
 //! `TAOS_BENCH_QUICK=1` for CI. Prints the exact row layout of Table I.
+//! Cells fan out across all cores (`TAOS_BENCH_THREADS=N` to override).
 
 use taos::sweep;
 
@@ -15,9 +16,10 @@ fn main() {
     } else {
         sweep::paper_base(42)
     };
+    let opts = sweep::SweepOptions::from_env();
     let ps = [4usize, 6, 8, 10, 12];
     let t0 = std::time::Instant::now();
-    let figure = sweep::fig_servers(&base, &ps);
+    let figure = sweep::fig_servers_opts(&base, &ps, &opts);
     println!(
         "================ Fig 13 / Table I — #available servers ({:.1}s) ================",
         t0.elapsed().as_secs_f64()

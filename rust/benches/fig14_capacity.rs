@@ -4,6 +4,7 @@
 //!
 //! `cargo bench --bench fig14_capacity` (paper scale) or
 //! `TAOS_BENCH_QUICK=1` for CI.
+//! Cells fan out across all cores (`TAOS_BENCH_THREADS=N` to override).
 
 use taos::sweep;
 
@@ -15,9 +16,10 @@ fn main() {
     } else {
         sweep::paper_base(42)
     };
+    let opts = sweep::SweepOptions::from_env();
     let mids = [2u64, 3, 4, 5, 6];
     let t0 = std::time::Instant::now();
-    let figure = sweep::fig_capacity(&base, &mids);
+    let figure = sweep::fig_capacity_opts(&base, &mids, &opts);
     println!(
         "================ Fig 14 — computing capacity ({:.1}s) ================",
         t0.elapsed().as_secs_f64()

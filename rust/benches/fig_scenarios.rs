@@ -1,0 +1,69 @@
+//! Scenario-catalog sweep: every named workload of
+//! `taos::trace::scenarios` × all six algorithms, emitting the same
+//! `Figure`/JSON artifacts as the paper figures.
+//!
+//! `cargo bench --bench fig_scenarios` (paper scale) or
+//! `TAOS_BENCH_QUICK=1` / `-- --quick` for CI. Cells fan out across all
+//! cores (`TAOS_BENCH_THREADS=N` to override; results are bit-identical
+//! at any thread count).
+
+use taos::sweep;
+use taos::trace::scenarios::Scenario;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("TAOS_BENCH_QUICK").is_ok();
+    let base = if quick {
+        sweep::quick_base(42)
+    } else {
+        sweep::paper_base(42)
+    };
+    let opts = sweep::SweepOptions::from_env();
+
+    let t0 = std::time::Instant::now();
+    let figure = sweep::fig_scenarios(&base, &opts);
+    println!(
+        "================ scenario catalog ({:.1}s, {} threads) ================",
+        t0.elapsed().as_secs_f64(),
+        opts.effective_threads()
+    );
+    println!("scenario legend:");
+    for (i, sc) in Scenario::ALL.iter().enumerate() {
+        println!("  {i} = {:<11} {}", sc.name(), sc.describe());
+    }
+    println!("{}", figure.render());
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write(
+        "bench_results/fig_scenarios.json",
+        figure.to_json().to_string(),
+    )
+    .expect("write json");
+    println!("wrote bench_results/fig_scenarios.json");
+
+    // Qualitative checks: reordering must keep its edge on every
+    // scenario, and the skewed scenarios must stress FIFO WF harder than
+    // the uniform baseline stresses it.
+    let baseline = Scenario::ALL
+        .iter()
+        .position(|s| *s == Scenario::Alibaba)
+        .unwrap() as f64;
+    for (i, sc) in Scenario::ALL.iter().enumerate() {
+        let wf = figure.cell("wf", i as f64).unwrap().mean_jct;
+        let ocwf = figure.cell("ocwf-acc", i as f64).unwrap().mean_jct;
+        println!(
+            "check {:<11} wf {wf:.0} vs ocwf-acc {ocwf:.0} ({})",
+            sc.name(),
+            if ocwf <= wf * 1.05 { "reordering holds" } else { "REGRESSION?" }
+        );
+    }
+    let wf_base = figure.cell("wf", baseline).unwrap().mean_jct;
+    let hotspot = Scenario::ALL
+        .iter()
+        .position(|s| *s == Scenario::Hotspot)
+        .unwrap() as f64;
+    let wf_hot = figure.cell("wf", hotspot).unwrap().mean_jct;
+    println!(
+        "check hotspot stresses FIFO: baseline {wf_base:.0} vs hotspot {wf_hot:.0} ({})",
+        if wf_hot > wf_base { "skew bites OK" } else { "unexpectedly mild" }
+    );
+}

@@ -17,14 +17,45 @@ use crate::util::rng::Rng;
 #[derive(Clone, Debug)]
 pub struct Cluster {
     cfg: ClusterConfig,
+    /// Per-server speed factors (mean ≈ 1), non-empty only when
+    /// `cfg.mu_skew > 0` (`hetero-cap` scenario): `μ_m^c` draws are
+    /// multiplied by `speed[m]`, so a few servers are fast and the tail
+    /// is slow.
+    speed: Vec<f64>,
 }
 
 impl Cluster {
     /// Build a cluster from its configuration. (`generate` name kept for
     /// symmetry with `Trace::synth_alibaba`; placement state is sampled
-    /// lazily per group.)
-    pub fn generate(cfg: &ClusterConfig, _rng: &mut Rng) -> Cluster {
-        Cluster { cfg: cfg.clone() }
+    /// lazily per group.) With `mu_skew > 0` this draws the per-server
+    /// speed profile from `rng`; the homogeneous default consumes no
+    /// randomness, so historical seeds reproduce.
+    pub fn generate(cfg: &ClusterConfig, rng: &mut Rng) -> Cluster {
+        let speed = if cfg.mu_skew > 0.0 {
+            // Zipf(s)-shaped factors over server ranks, normalized to
+            // mean 1 so utilization calibration stays anchored, assigned
+            // to servers in a random order.
+            let mut raw: Vec<f64> = (1..=cfg.servers)
+                .map(|rank| 1.0 / (rank as f64).powf(cfg.mu_skew))
+                .collect();
+            let mean = raw.iter().sum::<f64>() / cfg.servers as f64;
+            for v in raw.iter_mut() {
+                *v /= mean;
+            }
+            rng.shuffle(&mut raw);
+            raw
+        } else {
+            Vec::new()
+        };
+        Cluster {
+            cfg: cfg.clone(),
+            speed,
+        }
+    }
+
+    /// Per-server speed factors (empty for a homogeneous cluster).
+    pub fn speed_profile(&self) -> &[f64] {
+        &self.speed
     }
 
     pub fn num_servers(&self) -> usize {
@@ -44,16 +75,41 @@ impl Cluster {
 
     /// Sample the per-server capacity vector `μ_·^c` for one job:
     /// uniform integer in `[mu_lo, mu_hi]` per server (paper §V-A default
-    /// 3–5).
+    /// 3–5), scaled by the server's speed factor in a heterogeneous
+    /// cluster (min 1 task/slot — a server never fully stalls).
     pub fn sample_mu(&self, rng: &mut Rng) -> Vec<u64> {
         (0..self.cfg.servers)
-            .map(|_| rng.gen_range_incl(self.cfg.mu_lo, self.cfg.mu_hi))
+            .map(|m| {
+                let base = rng.gen_range_incl(self.cfg.mu_lo, self.cfg.mu_hi);
+                match self.speed.get(m) {
+                    Some(&w) => ((base as f64 * w).round() as u64).max(1),
+                    None => base,
+                }
+            })
             .collect()
     }
 
-    /// Mean per-server capacity, used for utilization calibration.
+    /// Mean per-server capacity, used for utilization calibration: the
+    /// exact expectation of what [`Cluster::sample_mu`] draws, including
+    /// the per-draw rounding and min-1 clamp of the speed profile (a
+    /// `max(base·w, 1)` shortcut underestimates slow-tail servers by up
+    /// to ~15% and would bias the realized utilization of `hetero-cap`
+    /// runs below the configured target).
     pub fn mean_mu(&self) -> f64 {
-        (self.cfg.mu_lo + self.cfg.mu_hi) as f64 / 2.0
+        if self.speed.is_empty() {
+            return (self.cfg.mu_lo + self.cfg.mu_hi) as f64 / 2.0;
+        }
+        let n = (self.cfg.mu_hi - self.cfg.mu_lo + 1) as f64;
+        self.speed
+            .iter()
+            .map(|&w| {
+                (self.cfg.mu_lo..=self.cfg.mu_hi)
+                    .map(|u| (u as f64 * w).round().max(1.0))
+                    .sum::<f64>()
+                    / n
+            })
+            .sum::<f64>()
+            / self.speed.len() as f64
     }
 
     /// For the live coordinator: the set of servers holding a chunk,
@@ -93,6 +149,41 @@ mod tests {
     #[test]
     fn mean_mu_matches_range() {
         assert!((cluster().mean_mu() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hetero_speed_profile_skews_mu() {
+        let mut cfg = ClusterConfig::default();
+        cfg.mu_skew = 1.0;
+        let c = Cluster::generate(&cfg, &mut Rng::seed_from(40));
+        let speed = c.speed_profile();
+        assert_eq!(speed.len(), 100);
+        // Normalized to mean ~1, with real spread.
+        let mean: f64 = speed.iter().sum::<f64>() / 100.0;
+        assert!((mean - 1.0).abs() < 1e-9, "mean {mean}");
+        let max = speed.iter().cloned().fold(0.0, f64::max);
+        let min = speed.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min > 10.0, "skew should spread speeds: {min}..{max}");
+        // Sampled capacities stay >= 1 everywhere.
+        let mut rng = Rng::seed_from(41);
+        for _ in 0..10 {
+            let mu = c.sample_mu(&mut rng);
+            assert!(mu.iter().all(|&x| x >= 1));
+            // The fast end must exceed the homogeneous ceiling somewhere.
+            assert!(mu.iter().any(|&x| x > 5), "{mu:?}");
+        }
+        // Calibration mean reflects the clamped profile.
+        assert!(c.mean_mu() > 0.9 && c.mean_mu() < 8.0, "{}", c.mean_mu());
+    }
+
+    #[test]
+    fn homogeneous_cluster_consumes_no_rng() {
+        // Cluster::generate must not disturb the shared RNG stream in the
+        // default configuration (historical seeds reproduce).
+        let mut a = Rng::seed_from(42);
+        let mut b = Rng::seed_from(42);
+        let _ = Cluster::generate(&ClusterConfig::default(), &mut a);
+        assert_eq!(a.next_u64(), b.next_u64());
     }
 
     #[test]

@@ -2,29 +2,79 @@
 //!
 //! For each task group: draw a rank `i` from Zipf(α) over `1..=M`, map it
 //! through a random permutation of the servers to get the *anchor* server
-//! `m`, then the group's available servers are `m, m+1, …, m+p−1` (mod M)
-//! with `p ~ U[p_lo, p_hi]`. α = 0 is the uniform distribution; α = 2 is
-//! heavily skewed (hot servers attract most groups), which is where the
-//! FIFO algorithms degrade and reordering shines (Figs 10–12).
+//! `m`. From the anchor, the available-server set is built in one of two
+//! modes:
+//!
+//! - [`PlacementMode::Ring`] (the paper's model): `m, m+1, …, m+p−1`
+//!   (mod M) with `p ~ U[p_lo, p_hi]`.
+//! - [`PlacementMode::Scatter`] (the `hotspot` scenario): `p` *distinct*
+//!   servers, each drawn independently through the Zipf anchor — the
+//!   replica sets of different groups pile onto the same few hot servers
+//!   instead of forming contiguous runs, modeling popularity-skewed
+//!   replica placement.
+//!
+//! α = 0 is the uniform distribution; α = 2 is heavily skewed (hot
+//! servers attract most groups), which is where the FIFO algorithms
+//! degrade and reordering shines (Figs 10–12).
 
 use crate::job::ServerId;
 use crate::util::rng::{Rng, Zipf};
+
+/// How a group's available-server set grows from its Zipf anchor.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PlacementMode {
+    /// Contiguous ring walk from the anchor (the paper's §V-A model).
+    #[default]
+    Ring,
+    /// Independent Zipf draws per replica (hot-spot placement).
+    Scatter,
+}
+
+impl PlacementMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementMode::Ring => "ring",
+            PlacementMode::Scatter => "scatter",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PlacementMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "ring" => Some(PlacementMode::Ring),
+            "scatter" | "hotspot" => Some(PlacementMode::Scatter),
+            _ => None,
+        }
+    }
+}
 
 /// Placement sampler for one experiment: a fixed permutation + Zipf CDF.
 #[derive(Clone, Debug)]
 pub struct Placement {
     perm: Vec<ServerId>,
     zipf: Zipf,
+    mode: PlacementMode,
 }
 
 impl Placement {
+    /// Ring-mode placement (the historical constructor; consumes the same
+    /// RNG stream as ever, so existing seeds reproduce).
     pub fn new(num_servers: usize, alpha: f64, rng: &mut Rng) -> Placement {
+        Placement::with_mode(num_servers, alpha, PlacementMode::Ring, rng)
+    }
+
+    pub fn with_mode(
+        num_servers: usize,
+        alpha: f64,
+        mode: PlacementMode,
+        rng: &mut Rng,
+    ) -> Placement {
         assert!(num_servers > 0);
         let mut perm: Vec<ServerId> = (0..num_servers).collect();
         rng.shuffle(&mut perm);
         Placement {
             perm,
             zipf: Zipf::new(num_servers, alpha),
+            mode,
         }
     }
 
@@ -32,19 +82,57 @@ impl Placement {
         self.perm.len()
     }
 
+    pub fn mode(&self) -> PlacementMode {
+        self.mode
+    }
+
     /// Sample the anchor server for one task group.
     pub fn sample_anchor(&self, rng: &mut Rng) -> ServerId {
         self.perm[self.zipf.sample(rng)]
     }
 
-    /// Sample a full available-server set: anchor + the following `p−1`
-    /// servers on the ring, `p ~ U[p_lo, p_hi]` (capped at M).
+    /// Sample a full available-server set of size `p ~ U[p_lo, p_hi]`
+    /// (capped at M): a contiguous ring walk in [`PlacementMode::Ring`],
+    /// `p` distinct Zipf-skewed servers in [`PlacementMode::Scatter`].
     pub fn sample_group_servers(&self, rng: &mut Rng, p_lo: usize, p_hi: usize) -> Vec<ServerId> {
         let m = self.perm.len();
         let p = rng.gen_range_incl(p_lo as u64, p_hi as u64) as usize;
         let p = p.min(m).max(1);
-        let anchor = self.sample_anchor(rng);
-        (0..p).map(|i| (anchor + i) % m).collect()
+        match self.mode {
+            PlacementMode::Ring => {
+                let anchor = self.sample_anchor(rng);
+                (0..p).map(|i| (anchor + i) % m).collect()
+            }
+            PlacementMode::Scatter => {
+                let mut chosen = vec![false; m];
+                let mut out = Vec::with_capacity(p);
+                // Rejection-sample distinct servers through the Zipf
+                // anchor. Under heavy skew the last few replicas of a
+                // large set can take many retries, so after a bounded
+                // number of attempts fall back to filling from the Zipf
+                // rank order (deterministic, still hot-first).
+                let mut attempts = 0;
+                while out.len() < p && attempts < 32 * p {
+                    attempts += 1;
+                    let s = self.sample_anchor(rng);
+                    if !chosen[s] {
+                        chosen[s] = true;
+                        out.push(s);
+                    }
+                }
+                for &s in &self.perm {
+                    if out.len() == p {
+                        break;
+                    }
+                    if !chosen[s] {
+                        chosen[s] = true;
+                        out.push(s);
+                    }
+                }
+                out.sort_unstable();
+                out
+            }
+        }
     }
 }
 
@@ -111,5 +199,58 @@ mod tests {
                 p2.sample_group_servers(&mut r2, 2, 4)
             );
         }
+    }
+
+    #[test]
+    fn scatter_returns_distinct_in_range_servers() {
+        let mut rng = Rng::seed_from(25);
+        let pl = Placement::with_mode(30, 1.5, PlacementMode::Scatter, &mut rng);
+        for _ in 0..300 {
+            let s = pl.sample_group_servers(&mut rng, 3, 8);
+            assert!(s.len() >= 3 && s.len() <= 8, "{s:?}");
+            assert!(s.iter().all(|&x| x < 30));
+            let mut dedup = s.clone();
+            dedup.dedup(); // already sorted
+            assert_eq!(dedup.len(), s.len(), "distinct servers: {s:?}");
+        }
+    }
+
+    #[test]
+    fn scatter_full_cluster_sets_terminate() {
+        // p == M under heavy skew exercises the rank-order fallback.
+        let mut rng = Rng::seed_from(26);
+        let pl = Placement::with_mode(6, 2.0, PlacementMode::Scatter, &mut rng);
+        for _ in 0..50 {
+            let s = pl.sample_group_servers(&mut rng, 6, 6);
+            assert_eq!(s, vec![0, 1, 2, 3, 4, 5]);
+        }
+    }
+
+    #[test]
+    fn scatter_concentrates_replicas_on_hot_servers() {
+        let mut rng = Rng::seed_from(27);
+        let pl = Placement::with_mode(50, 2.0, PlacementMode::Scatter, &mut rng);
+        let mut counts = vec![0usize; 50];
+        for _ in 0..2_000 {
+            for s in pl.sample_group_servers(&mut rng, 3, 3) {
+                counts[s] += 1;
+            }
+        }
+        let mut sorted = counts.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        let top3: usize = sorted[..3].iter().sum();
+        let total: usize = sorted.iter().sum();
+        assert!(
+            top3 * 2 > total,
+            "3 hottest servers should hold >50% of replicas: {top3}/{total}"
+        );
+    }
+
+    #[test]
+    fn placement_mode_parse_roundtrip() {
+        for m in [PlacementMode::Ring, PlacementMode::Scatter] {
+            assert_eq!(PlacementMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(PlacementMode::parse("bogus"), None);
     }
 }

@@ -2,6 +2,8 @@
 //! parameters (§V-A), plus a small `key = value` config-file parser (TOML
 //! subset) so experiments are scriptable without `serde`/`toml`.
 
+use crate::cluster::placement::PlacementMode;
+use crate::trace::scenarios::Scenario;
 use crate::{Error, Result};
 
 /// Cluster shape and data placement (paper §II and §V-A).
@@ -19,6 +21,15 @@ pub struct ClusterConfig {
     /// [mu_lo, mu_hi]. Paper default: [3, 5].
     pub mu_lo: u64,
     pub mu_hi: u64,
+    /// Server-speed heterogeneity: 0 (default) gives the paper's i.i.d.
+    /// uniform capacities; s > 0 multiplies each server's μ by a fixed
+    /// Zipf(s)-shaped speed factor (normalized to mean 1, assigned in a
+    /// random server order), so a few servers are fast and the long tail
+    /// is slow (`hetero-cap` scenario).
+    pub mu_skew: f64,
+    /// How available-server sets grow from their Zipf anchor: contiguous
+    /// `ring` (paper §V-A) or per-replica `scatter` (`hotspot` scenario).
+    pub placement_mode: PlacementMode,
 }
 
 impl Default for ClusterConfig {
@@ -30,6 +41,8 @@ impl Default for ClusterConfig {
             avail_hi: 12,
             mu_lo: 3,
             mu_hi: 5,
+            mu_skew: 0.0,
+            placement_mode: PlacementMode::Ring,
         }
     }
 }
@@ -50,6 +63,9 @@ pub struct TraceConfig {
     /// (cluster-trace-v2017 schema); when set, jobs/groups come from the
     /// file and only interarrival scaling is synthetic.
     pub csv_path: Option<String>,
+    /// Named workload shape for synthetic traces (ignored when `csv_path`
+    /// is set). See [`crate::trace::scenarios`] for the catalog.
+    pub scenario: Scenario,
 }
 
 impl Default for TraceConfig {
@@ -60,6 +76,7 @@ impl Default for TraceConfig {
             mean_groups: 5.52,
             utilization: 0.5,
             csv_path: None,
+            scenario: Scenario::Alibaba,
         }
     }
 }
@@ -111,6 +128,9 @@ impl ExperimentConfig {
         if !(0.0..=2.0).contains(&c.zipf_alpha) {
             return Err(Error::Config("zipf_alpha must be in [0, 2]".into()));
         }
+        if !(0.0..=4.0).contains(&c.mu_skew) {
+            return Err(Error::Config("mu_skew must be in [0, 4]".into()));
+        }
         let t = &self.trace;
         if t.jobs == 0 || t.total_tasks < t.jobs {
             return Err(Error::Config("trace must have >= 1 task per job".into()));
@@ -150,6 +170,19 @@ impl ExperimentConfig {
                 "avail_hi" => cfg.cluster.avail_hi = val.parse().map_err(|_| perr("bad usize"))?,
                 "mu_lo" => cfg.cluster.mu_lo = val.parse().map_err(|_| perr("bad u64"))?,
                 "mu_hi" => cfg.cluster.mu_hi = val.parse().map_err(|_| perr("bad u64"))?,
+                "mu_skew" => cfg.cluster.mu_skew = val.parse().map_err(|_| perr("bad f64"))?,
+                "placement" => {
+                    cfg.cluster.placement_mode = PlacementMode::parse(val)
+                        .ok_or_else(|| perr("placement must be `ring` or `scatter`"))?
+                }
+                // `scenario` applies the named workload's whole knob set
+                // (trace shape + cluster skew); later explicit keys still
+                // override individual knobs.
+                "scenario" => {
+                    let sc = Scenario::parse(val)
+                        .ok_or_else(|| perr("unknown scenario (see `taos repro --fig scenarios`)"))?;
+                    sc.apply(&mut cfg);
+                }
                 "jobs" => cfg.trace.jobs = val.parse().map_err(|_| perr("bad usize"))?,
                 "total_tasks" => cfg.trace.total_tasks = val.parse().map_err(|_| perr("bad usize"))?,
                 "mean_groups" => cfg.trace.mean_groups = val.parse().map_err(|_| perr("bad f64"))?,
@@ -237,6 +270,21 @@ mod tests {
         let mut cfg = ExperimentConfig::default();
         cfg.cluster.mu_lo = 0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn parses_scenario_and_cluster_skew_keys() {
+        let cfg = ExperimentConfig::from_str("scenario = hotspot").unwrap();
+        assert_eq!(cfg.trace.scenario, Scenario::Hotspot);
+        assert_eq!(cfg.cluster.placement_mode, PlacementMode::Scatter);
+
+        let cfg = ExperimentConfig::from_str("mu_skew = 1.5\nplacement = scatter").unwrap();
+        assert!((cfg.cluster.mu_skew - 1.5).abs() < 1e-12);
+        assert_eq!(cfg.cluster.placement_mode, PlacementMode::Scatter);
+
+        assert!(ExperimentConfig::from_str("scenario = bogus").is_err());
+        assert!(ExperimentConfig::from_str("placement = bogus").is_err());
+        assert!(ExperimentConfig::from_str("mu_skew = 99").is_err());
     }
 
     #[test]

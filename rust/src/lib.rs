@@ -60,19 +60,44 @@ pub mod prelude {
     pub use crate::util::rng::Rng;
 }
 
-/// Library-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Library-wide error type. Implemented by hand (this crate builds
+/// offline with zero dependencies, so no `thiserror`).
+#[derive(Debug)]
 pub enum Error {
-    #[error("infeasible assignment: {0}")]
     Infeasible(String),
-    #[error("invalid configuration: {0}")]
     Config(String),
-    #[error("trace parse error at line {line}: {msg}")]
     TraceParse { line: usize, msg: String },
-    #[error("runtime error: {0}")]
     Runtime(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Infeasible(msg) => write!(f, "infeasible assignment: {msg}"),
+            Error::Config(msg) => write!(f, "invalid configuration: {msg}"),
+            Error::TraceParse { line, msg } => {
+                write!(f, "trace parse error at line {line}: {msg}")
+            }
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;

@@ -4,7 +4,9 @@
 //! - `simulate`   run one scheduling policy over a (synthetic or CSV)
 //!                trace and print JCT statistics + overhead.
 //! - `repro`      regenerate a paper table/figure (10, 11, 12, 13, 14,
-//!                or `table1`).
+//!                `table1`, or the `scenarios` catalog sweep); fans the
+//!                (policy × setting × trial) cells across `--threads`
+//!                worker threads with bit-identical results.
 //! - `compare`    run all six algorithms on one setting side by side.
 //! - `gen-trace`  emit a synthetic Alibaba-like trace as batch_task.csv.
 //! - `live`       run the live coordinator (leader/workers + PJRT
@@ -62,6 +64,10 @@ fn build_cli() -> Cli {
             flag_req("seed", "master RNG seed [default 42]"),
             flag_req("csv", "path to a batch_task.csv trace (overrides synth)"),
             flag_req("config", "config file (key = value lines)"),
+            flag_req(
+                "scenario",
+                "named workload: alibaba | bursty | heavy-tail | hetero-cap | hotspot",
+            ),
         ]
     };
     Cli::new("taos", "data-locality-aware task assignment & scheduling")
@@ -82,9 +88,11 @@ fn build_cli() -> Cli {
         })
         .subcommand("repro", "regenerate a paper table/figure", {
             let mut f = common();
-            f.push(flag("fig", "10 | 11 | 12 | 13 | 14 | table1", "12"));
+            f.push(flag("fig", "10 | 11 | 12 | 13 | 14 | table1 | scenarios", "12"));
             f.push(switch("quick", "scaled-down workload for fast runs"));
             f.push(flag("out", "also write JSON to this path", ""));
+            f.push(flag("threads", "sweep worker threads (0 = all cores)", "1"));
+            f.push(flag("trials", "independent trials per cell, averaged", "1"));
             f
         })
         .subcommand(
@@ -95,6 +103,7 @@ fn build_cli() -> Cli {
                 flag("tasks", "total tasks", "113653"),
                 flag("seed", "RNG seed", "42"),
                 flag("out", "output path", "trace.csv"),
+                flag("scenario", "workload shape (alibaba | bursty | heavy-tail | ...)", "alibaba"),
             ],
         )
         .subcommand(
@@ -137,6 +146,14 @@ fn config_from(parsed: &taos::cli::Parsed) -> Result<ExperimentConfig, String> {
         }
         _ => ExperimentConfig::default(),
     };
+    // Scenario before the explicit flags: apply() sets the scenario's
+    // characteristic knobs unconditionally, so flag overrides below
+    // (e.g. `--scenario hotspot --alpha 0`) always win.
+    if let Some(s) = parsed.get("scenario") {
+        let sc = taos::trace::scenarios::Scenario::parse(s)
+            .ok_or_else(|| format!("unknown scenario `{s}`"))?;
+        sc.apply(&mut cfg);
+    }
     if let Some(v) = parsed.get_parse::<usize>("servers")? {
         cfg.cluster.servers = v;
     }
@@ -237,21 +254,46 @@ fn cmd_compare(parsed: &taos::cli::Parsed) -> Result<(), String> {
 }
 
 fn cmd_repro(parsed: &taos::cli::Parsed) -> Result<(), String> {
+    use taos::trace::scenarios::Scenario;
+
     let quick = parsed.has_switch("quick");
     let seed = parsed.get_parse::<u64>("seed")?.unwrap_or(42);
-    let base = if quick {
+    let fig_id = parsed.get_or("fig", "12");
+    let mut base = if quick {
         sweep::quick_base(seed)
     } else {
         sweep::paper_base(seed)
     };
-    let fig_id = parsed.get_or("fig", "12");
+    // A numbered figure can be re-run under a named workload (`--fig 12
+    // --scenario bursty`); the catalog sweep already iterates every
+    // scenario itself, so combining the two is a user error.
+    if let Some(s) = parsed.get("scenario") {
+        if fig_id == "scenarios" {
+            return Err("--scenario cannot be combined with --fig scenarios \
+                        (that sweep runs the whole catalog)"
+                .into());
+        }
+        let sc = Scenario::parse(s).ok_or_else(|| format!("unknown scenario `{s}`"))?;
+        sc.apply(&mut base);
+    }
+    let opts = taos::sweep::SweepOptions::default()
+        .with_threads(parsed.get_parse::<usize>("threads")?.unwrap_or(1))
+        .with_trials(parsed.get_parse::<usize>("trials")?.unwrap_or(1));
     let alphas = [0.0, 0.5, 1.0, 1.5, 2.0];
     let fig = match fig_id {
-        "10" => sweep::fig_alpha_util(&base, 0.25, &alphas),
-        "11" => sweep::fig_alpha_util(&base, 0.50, &alphas),
-        "12" => sweep::fig_alpha_util(&base, 0.75, &alphas),
-        "13" | "table1" => sweep::fig_servers(&base, &[4, 6, 8, 10, 12]),
-        "14" => sweep::fig_capacity(&base, &[2, 3, 4, 5, 6]),
+        "10" => sweep::fig_alpha_util_opts(&base, 0.25, &alphas, &opts),
+        "11" => sweep::fig_alpha_util_opts(&base, 0.50, &alphas, &opts),
+        "12" => sweep::fig_alpha_util_opts(&base, 0.75, &alphas, &opts),
+        "13" | "table1" => sweep::fig_servers_opts(&base, &[4, 6, 8, 10, 12], &opts),
+        "14" => sweep::fig_capacity_opts(&base, &[2, 3, 4, 5, 6], &opts),
+        "scenarios" => {
+            println!("scenario legend:");
+            for (i, sc) in Scenario::ALL.iter().enumerate() {
+                println!("  {i} = {:<11} {}", sc.name(), sc.describe());
+            }
+            println!();
+            sweep::fig_scenarios(&base, &opts)
+        }
         other => return Err(format!("unknown figure `{other}`")),
     };
     println!("{}", fig.render());
@@ -265,32 +307,36 @@ fn cmd_repro(parsed: &taos::cli::Parsed) -> Result<(), String> {
 }
 
 fn cmd_gen_trace(parsed: &taos::cli::Parsed) -> Result<(), String> {
-    use taos::trace::Trace;
+    use taos::trace::scenarios::Scenario;
     use taos::util::rng::Rng;
     let jobs = parsed.get_parse::<usize>("jobs")?.unwrap_or(250);
     let tasks = parsed.get_parse::<usize>("tasks")?.unwrap_or(113_653);
     let seed = parsed.get_parse::<u64>("seed")?.unwrap_or(42);
     let out = parsed.get_or("out", "trace.csv");
+    let sc_name = parsed.get_or("scenario", "alibaba");
+    let scenario =
+        Scenario::parse(sc_name).ok_or_else(|| format!("unknown scenario `{sc_name}`"))?;
+    if scenario.is_cluster_side() {
+        eprintln!(
+            "note: `{}` is a cluster-side scenario — its twist lives in the cluster \
+             model, so the emitted trace shape equals the baseline; pass \
+             --scenario {} at simulation time to get the twist",
+            scenario.name(),
+            scenario.name()
+        );
+    }
     let mut tcfg = taos::config::TraceConfig::default();
     tcfg.jobs = jobs;
     tcfg.total_tasks = tasks;
-    let trace = Trace::synth_alibaba(&tcfg, &mut Rng::seed_from(seed));
-    let mut text = String::new();
-    for (j, job) in trace.jobs.iter().enumerate() {
-        for (g, size) in job.group_sizes.iter().enumerate() {
-            text.push_str(&format!(
-                "{:.0},{:.0},j_{j},t_{g},{size},Terminated,100,0.5\n",
-                job.arrival_raw * 1000.0,
-                job.arrival_raw * 1000.0 + 1.0,
-            ));
-        }
-    }
+    let trace = scenario.synth(&tcfg, &mut Rng::seed_from(seed));
+    let text = taos::trace::csv::to_batch_task_csv(&trace);
     std::fs::write(out, text).map_err(|e| e.to_string())?;
     println!(
-        "wrote {out}: {} jobs, {} tasks, {} groups",
+        "wrote {out}: {} jobs, {} tasks, {} groups ({} scenario)",
         trace.jobs.len(),
         trace.total_tasks(),
-        trace.total_groups()
+        trace.total_groups(),
+        scenario.name()
     );
     Ok(())
 }

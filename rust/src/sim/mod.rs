@@ -312,7 +312,12 @@ pub fn run_experiment(cfg: &ExperimentConfig, policy: SchedPolicy) -> crate::Res
     let mut rng = root.fork(1);
     let cluster = Cluster::generate(&cfg.cluster, &mut rng);
     let trace = Trace::build(&cfg.trace, &mut rng)?;
-    let placement = Placement::new(cfg.cluster.servers, cfg.cluster.zipf_alpha, &mut rng);
+    let placement = Placement::with_mode(
+        cfg.cluster.servers,
+        cfg.cluster.zipf_alpha,
+        cfg.cluster.placement_mode,
+        &mut rng,
+    );
     let jobs = trace.materialize(&cluster, &placement, cfg.trace.utilization, &mut rng)?;
     Ok(run_policy(
         &jobs,

@@ -1,6 +1,7 @@
 //! Experiment sweeps that regenerate every table and figure of the
-//! paper's evaluation (§V). Shared by the `taos repro` CLI subcommand and
-//! the `cargo bench` figure harnesses.
+//! paper's evaluation (§V), plus the scenario sweep that drives the named
+//! workloads of [`crate::trace::scenarios`]. Shared by the `taos repro`
+//! CLI subcommand and the `cargo bench` figure harnesses.
 //!
 //! | Paper artifact | Function |
 //! |---|---|
@@ -9,16 +10,31 @@
 //! | Fig 12 (75% util) | [`fig_alpha_util`] with `util = 0.75` |
 //! | Fig 13 + Table I | [`fig_servers`] |
 //! | Fig 14 | [`fig_capacity`] |
+//! | Scenario catalog | [`fig_scenarios`] |
+//!
+//! ## Parallel execution
+//!
+//! Every sweep expands into a flat list of [`CellSpec`]s — one per
+//! (policy × setting × trial) — and runs them through the scoped-thread
+//! pool in [`pool`]. Each cell's randomness is derived solely from its own
+//! spec ([`trial_seed`]), and results are re-ordered by spec index, so a
+//! sweep's output is bit-identical at any thread count (asserted by
+//! `rust/tests/sweep_determinism.rs`). Wall-clock overhead metrics are the
+//! one exception: they time real execution and are never compared bitwise.
+
+pub mod pool;
 
 use crate::benchlib::TextTable;
 use crate::config::ExperimentConfig;
+use crate::job::Slots;
 use crate::metrics::jct_cdf;
 use crate::sched::SchedPolicy;
-use crate::sim::run_experiment;
+use crate::sim::{run_experiment, SimOutcome};
 use crate::util::json::Json;
 
 /// Result of one (policy, setting) cell: the paper's two metrics plus the
-/// CDF series for the CDF subplots.
+/// CDF series for the CDF subplots. With `trials > 1` the metrics are
+/// averaged over trials and the CDF pools every trial's JCTs.
 #[derive(Clone, Debug)]
 pub struct Cell {
     pub policy: &'static str,
@@ -142,77 +158,269 @@ impl Figure {
     }
 }
 
-/// Run one (config, policy) cell.
-fn run_cell(cfg: &ExperimentConfig, policy: SchedPolicy, setting: f64) -> Cell {
-    let out = run_experiment(cfg, policy).expect("sweep cell failed");
-    Cell {
-        policy: policy.name(),
-        setting,
-        mean_jct: out.mean_jct(),
-        overhead_us: out.overhead.mean_us(),
-        cdf: jct_cdf(&out.jcts, 64),
+/// Execution options for a sweep: worker-thread count and independent
+/// trials per cell.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SweepOptions {
+    /// Worker threads. `0` means "all available cores"; `1` is the serial
+    /// reference path.
+    pub threads: usize,
+    /// Independent trials per (policy, setting) cell; metrics are averaged
+    /// and CDFs pooled. Trial `t` runs with [`trial_seed`]`(seed, t)`.
+    pub trials: usize,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        SweepOptions {
+            threads: 1,
+            trials: 1,
+        }
     }
 }
 
-/// Figs 10–12: sweep Zipf α at fixed utilization, all six algorithms.
-pub fn fig_alpha_util(base: &ExperimentConfig, util: f64, alphas: &[f64]) -> Figure {
-    let mut cells = Vec::new();
-    for &alpha in alphas {
-        let mut cfg = base.clone();
-        cfg.cluster.zipf_alpha = alpha;
-        cfg.trace.utilization = util;
-        for policy in SchedPolicy::ALL {
-            cells.push(run_cell(&cfg, policy, alpha));
+impl SweepOptions {
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    pub fn with_trials(mut self, trials: usize) -> Self {
+        self.trials = trials.max(1);
+        self
+    }
+
+    /// Options for the bench harnesses: worker threads from
+    /// `TAOS_BENCH_THREADS` (unset or unparsable → 0 = all cores),
+    /// single trial. One definition so the env contract lives in one
+    /// place.
+    pub fn from_env() -> Self {
+        let threads = std::env::var("TAOS_BENCH_THREADS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0);
+        SweepOptions::default().with_threads(threads)
+    }
+
+    /// Resolve `threads == 0` to the hardware parallelism.
+    pub fn effective_threads(&self) -> usize {
+        if self.threads == 0 {
+            pool::available_threads()
+        } else {
+            self.threads
         }
     }
-    Figure {
-        name: format!("fig-alpha-util-{:.0}%", util * 100.0),
-        x_label: "alpha",
-        cells,
+}
+
+/// One fully specified sweep cell: everything a worker needs to run it,
+/// independent of every other cell.
+#[derive(Clone, Debug)]
+pub struct CellSpec {
+    pub cfg: ExperimentConfig,
+    pub policy: SchedPolicy,
+    /// The figure's x-axis value this cell belongs to.
+    pub setting: f64,
+    /// Trial index within the (policy, setting) cell.
+    pub trial: u64,
+}
+
+/// Deterministic per-trial seed derivation (splitmix64-style mixing).
+/// Trial 0 keeps the base seed unchanged so single-trial sweeps reproduce
+/// the historical serial results bit for bit.
+pub fn trial_seed(base: u64, trial: u64) -> u64 {
+    if trial == 0 {
+        return base;
     }
+    let mut z = base ^ trial.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Run every spec — in parallel when `threads > 1` — and return the
+/// outcomes in spec order. The output is bit-identical at any thread
+/// count because each cell's simulation is a pure function of its spec.
+pub fn run_specs(specs: &[CellSpec], threads: usize) -> Vec<SimOutcome> {
+    pool::parallel_map(specs.len(), threads, |i| {
+        let s = &specs[i];
+        run_experiment(&s.cfg, s.policy).expect("sweep cell failed")
+    })
+}
+
+/// Expand (settings × policies × trials) into a flat spec list. `mutate`
+/// applies one x-axis setting to a config clone.
+fn specs_for(
+    base: &ExperimentConfig,
+    settings: &[f64],
+    trials: usize,
+    mutate: &dyn Fn(&mut ExperimentConfig, f64),
+) -> Vec<CellSpec> {
+    let trials = trials.max(1);
+    let mut specs = Vec::with_capacity(settings.len() * SchedPolicy::ALL.len() * trials);
+    for &setting in settings {
+        let mut cfg = base.clone();
+        mutate(&mut cfg, setting);
+        for policy in SchedPolicy::ALL {
+            for trial in 0..trials as u64 {
+                let mut cell_cfg = cfg.clone();
+                cell_cfg.seed = trial_seed(base.seed, trial);
+                specs.push(CellSpec {
+                    cfg: cell_cfg,
+                    policy,
+                    setting,
+                    trial,
+                });
+            }
+        }
+    }
+    specs
+}
+
+/// Collapse per-trial outcomes (grouped as `trials` consecutive specs per
+/// cell) into figure cells.
+fn cells_from(specs: &[CellSpec], outcomes: &[SimOutcome], trials: usize) -> Vec<Cell> {
+    let trials = trials.max(1);
+    debug_assert_eq!(specs.len(), outcomes.len());
+    debug_assert_eq!(specs.len() % trials, 0);
+    let mut cells = Vec::with_capacity(specs.len() / trials);
+    let mut i = 0;
+    while i < specs.len() {
+        let spec = &specs[i];
+        let group = &outcomes[i..i + trials];
+        let mut jcts: Vec<Slots> = Vec::new();
+        let mut jct_sum = 0.0;
+        let mut ov_sum = 0.0;
+        for o in group {
+            jct_sum += o.mean_jct();
+            ov_sum += o.overhead.mean_us();
+            jcts.extend_from_slice(&o.jcts);
+        }
+        cells.push(Cell {
+            policy: spec.policy.name(),
+            setting: spec.setting,
+            mean_jct: jct_sum / trials as f64,
+            overhead_us: ov_sum / trials as f64,
+            cdf: jct_cdf(&jcts, 64),
+        });
+        i += trials;
+    }
+    cells
+}
+
+fn run_figure(
+    name: String,
+    x_label: &'static str,
+    base: &ExperimentConfig,
+    settings: &[f64],
+    opts: &SweepOptions,
+    mutate: &dyn Fn(&mut ExperimentConfig, f64),
+) -> Figure {
+    let specs = specs_for(base, settings, opts.trials, mutate);
+    let outcomes = run_specs(&specs, opts.effective_threads());
+    Figure {
+        name,
+        x_label,
+        cells: cells_from(&specs, &outcomes, opts.trials),
+    }
+}
+
+/// Figs 10–12: sweep Zipf α at fixed utilization, all six algorithms
+/// (serial single-trial path; see [`fig_alpha_util_opts`]).
+pub fn fig_alpha_util(base: &ExperimentConfig, util: f64, alphas: &[f64]) -> Figure {
+    fig_alpha_util_opts(base, util, alphas, &SweepOptions::default())
+}
+
+/// Figs 10–12 with explicit execution options.
+pub fn fig_alpha_util_opts(
+    base: &ExperimentConfig,
+    util: f64,
+    alphas: &[f64],
+    opts: &SweepOptions,
+) -> Figure {
+    run_figure(
+        format!("fig-alpha-util-{:.0}%", util * 100.0),
+        "alpha",
+        base,
+        alphas,
+        opts,
+        &|cfg, alpha| {
+            cfg.cluster.zipf_alpha = alpha;
+            cfg.trace.utilization = util;
+        },
+    )
 }
 
 /// Fig 13 + Table I: sweep the number of available servers p at α = 2,
 /// 75% utilization (the paper fixes p per sweep point: avail_lo =
 /// avail_hi = p).
 pub fn fig_servers(base: &ExperimentConfig, ps: &[usize]) -> Figure {
-    let mut cells = Vec::new();
-    for &p in ps {
-        let mut cfg = base.clone();
-        cfg.cluster.zipf_alpha = 2.0;
-        cfg.trace.utilization = 0.75;
-        cfg.cluster.avail_lo = p;
-        cfg.cluster.avail_hi = p;
-        for policy in SchedPolicy::ALL {
-            cells.push(run_cell(&cfg, policy, p as f64));
-        }
-    }
-    Figure {
-        name: "fig13-table1-available-servers".into(),
-        x_label: "p",
-        cells,
-    }
+    fig_servers_opts(base, ps, &SweepOptions::default())
+}
+
+/// Fig 13 + Table I with explicit execution options.
+pub fn fig_servers_opts(base: &ExperimentConfig, ps: &[usize], opts: &SweepOptions) -> Figure {
+    let settings: Vec<f64> = ps.iter().map(|&p| p as f64).collect();
+    run_figure(
+        "fig13-table1-available-servers".into(),
+        "p",
+        base,
+        &settings,
+        opts,
+        &|cfg, p| {
+            cfg.cluster.zipf_alpha = 2.0;
+            cfg.trace.utilization = 0.75;
+            cfg.cluster.avail_lo = p as usize;
+            cfg.cluster.avail_hi = p as usize;
+        },
+    )
 }
 
 /// Fig 14: sweep computing capacity (μ ranges centred on the x value) at
 /// α = 2, 75% utilization.
 pub fn fig_capacity(base: &ExperimentConfig, mu_mids: &[u64]) -> Figure {
-    let mut cells = Vec::new();
-    for &mid in mu_mids {
-        let mut cfg = base.clone();
-        cfg.cluster.zipf_alpha = 2.0;
-        cfg.trace.utilization = 0.75;
-        cfg.cluster.mu_lo = mid - 1;
-        cfg.cluster.mu_hi = mid + 1;
-        for policy in SchedPolicy::ALL {
-            cells.push(run_cell(&cfg, policy, mid as f64));
-        }
-    }
-    Figure {
-        name: "fig14-computing-capacity".into(),
-        x_label: "mu",
-        cells,
-    }
+    fig_capacity_opts(base, mu_mids, &SweepOptions::default())
+}
+
+/// Fig 14 with explicit execution options.
+pub fn fig_capacity_opts(
+    base: &ExperimentConfig,
+    mu_mids: &[u64],
+    opts: &SweepOptions,
+) -> Figure {
+    let settings: Vec<f64> = mu_mids.iter().map(|&m| m as f64).collect();
+    run_figure(
+        "fig14-computing-capacity".into(),
+        "mu",
+        base,
+        &settings,
+        opts,
+        &|cfg, mid| {
+            let mid = mid as u64;
+            cfg.cluster.zipf_alpha = 2.0;
+            cfg.trace.utilization = 0.75;
+            cfg.cluster.mu_lo = mid - 1;
+            cfg.cluster.mu_hi = mid + 1;
+        },
+    )
+}
+
+/// Scenario sweep: every named workload of
+/// [`crate::trace::scenarios::Scenario`] × all six algorithms. The x-axis
+/// is the scenario index into `Scenario::ALL` (the CLI prints the
+/// index → name legend next to the table).
+pub fn fig_scenarios(base: &ExperimentConfig, opts: &SweepOptions) -> Figure {
+    use crate::trace::scenarios::Scenario;
+    let settings: Vec<f64> = (0..Scenario::ALL.len()).map(|i| i as f64).collect();
+    run_figure(
+        "fig-scenarios".into(),
+        "scenario",
+        base,
+        &settings,
+        opts,
+        &|cfg, idx| {
+            Scenario::ALL[idx as usize].apply(cfg);
+        },
+    )
 }
 
 /// A scaled-down base config for quick runs (CI, `--quick`): same
@@ -275,5 +483,60 @@ mod tests {
         let j = fig.to_json().to_string();
         let parsed = crate::util::json::Json::parse(&j).unwrap();
         assert!(parsed.get("cells").unwrap().as_arr().unwrap().len() == 6);
+    }
+
+    #[test]
+    fn trial_seeds_distinct_and_stable() {
+        assert_eq!(trial_seed(42, 0), 42, "trial 0 must keep the base seed");
+        let mut seen = std::collections::BTreeSet::new();
+        for t in 0..64 {
+            assert!(seen.insert(trial_seed(42, t)), "collision at trial {t}");
+        }
+        assert_eq!(trial_seed(42, 7), trial_seed(42, 7));
+        assert_ne!(trial_seed(42, 7), trial_seed(43, 7));
+    }
+
+    #[test]
+    fn specs_grouped_by_trial_runs() {
+        let base = quick_base(3);
+        let specs = specs_for(&base, &[0.0, 1.0], 2, &|cfg, a| {
+            cfg.cluster.zipf_alpha = a;
+        });
+        assert_eq!(specs.len(), 2 * 6 * 2);
+        // Consecutive trials share (setting, policy), differ in seed.
+        assert_eq!(specs[0].setting, specs[1].setting);
+        assert_eq!(specs[0].policy.name(), specs[1].policy.name());
+        assert_eq!(specs[0].trial, 0);
+        assert_eq!(specs[1].trial, 1);
+        assert_ne!(specs[0].cfg.seed, specs[1].cfg.seed);
+        assert_eq!(specs[0].cfg.seed, base.seed);
+    }
+
+    #[test]
+    fn multi_trial_cells_average() {
+        let base = quick_base(9);
+        let fig = fig_alpha_util_opts(
+            &base,
+            0.5,
+            &[1.0],
+            &SweepOptions::default().with_trials(2).with_threads(2),
+        );
+        assert_eq!(fig.cells.len(), 6);
+        for c in &fig.cells {
+            assert!(c.mean_jct.is_finite() && c.mean_jct > 0.0);
+            // Pooled CDF covers 2 × 40 jobs.
+            assert!(!c.cdf.is_empty());
+        }
+    }
+
+    #[test]
+    fn scenario_sweep_covers_catalog() {
+        use crate::trace::scenarios::Scenario;
+        let base = quick_base(13);
+        let fig = fig_scenarios(&base, &SweepOptions::default().with_threads(0));
+        assert_eq!(fig.cells.len(), Scenario::ALL.len() * 6);
+        for c in &fig.cells {
+            assert!(c.mean_jct.is_finite() && c.mean_jct > 0.0, "{}", c.policy);
+        }
     }
 }

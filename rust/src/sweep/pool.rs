@@ -1,0 +1,106 @@
+//! A std-only scoped-thread worker pool for embarrassingly parallel
+//! index-addressed work.
+//!
+//! The sweep engine fans (policy × setting × trial) cells across cores
+//! with [`parallel_map`]: workers pull indices from a shared atomic
+//! counter, compute `f(i)` and stash `(i, value)` pairs; results are
+//! re-sorted by index before returning, so the output is **bit-identical
+//! to the serial path at any thread count** as long as `f` itself is a
+//! pure function of `i` (every sweep cell derives its RNG stream from its
+//! own config seed, so it is).
+//!
+//! No rayon / crossbeam: `std::thread::scope` (Rust ≥ 1.63) is enough,
+//! and panics inside workers propagate to the caller on scope exit.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of hardware threads available, with a safe fallback of 1.
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Map `f` over `0..n` using up to `threads` worker threads and return
+/// the results in index order. `threads <= 1` (or `n <= 1`) degenerates
+/// to a plain serial loop — the reference path the determinism tests
+/// compare against.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.min(n).max(1);
+    if threads == 1 {
+        return (0..n).map(f).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let done: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                // Collect locally, publish once: keeps the mutex out of
+                // the per-cell hot path.
+                let mut local: Vec<(usize, T)> = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local.push((i, f(i)));
+                }
+                done.lock().unwrap().extend(local);
+            });
+        }
+    });
+
+    let mut pairs = done.into_inner().unwrap();
+    debug_assert_eq!(pairs.len(), n);
+    pairs.sort_unstable_by_key(|&(i, _)| i);
+    pairs.into_iter().map(|(_, v)| v).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_serial_at_every_thread_count() {
+        let serial: Vec<u64> = (0..97).map(|i| (i as u64).wrapping_mul(i as u64)).collect();
+        for threads in [1, 2, 3, 8, 64] {
+            let par = parallel_map(97, threads, |i| (i as u64).wrapping_mul(i as u64));
+            assert_eq!(par, serial, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton_inputs() {
+        assert_eq!(parallel_map(0, 8, |i| i), Vec::<usize>::new());
+        assert_eq!(parallel_map(1, 8, |i| i + 10), vec![10]);
+    }
+
+    #[test]
+    fn oversubscribed_thread_count_is_clamped() {
+        // More threads than items must not deadlock or drop results.
+        let out = parallel_map(3, 100, |i| i * 2);
+        assert_eq!(out, vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn available_threads_is_positive() {
+        assert!(available_threads() >= 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn worker_panic_propagates() {
+        parallel_map(16, 4, |i| {
+            if i == 7 {
+                panic!("boom");
+            }
+            i
+        });
+    }
+}

@@ -76,6 +76,25 @@ pub fn parse_batch_task(text: &str) -> Result<Trace> {
     })
 }
 
+/// Serialize a [`Trace`] back into the `batch_task.csv` schema — the
+/// exact inverse of [`parse_batch_task`] up to timestamp quantization
+/// (raw arrivals are emitted in milliseconds with 3 decimals). Job ids
+/// are zero-padded so ties in the quantized timestamp keep the original
+/// job order through the parser's stable sort.
+pub fn to_batch_task_csv(trace: &Trace) -> String {
+    let mut out = String::new();
+    for (j, job) in trace.jobs.iter().enumerate() {
+        let ts = job.arrival_raw * 1000.0;
+        for (g, size) in job.group_sizes.iter().enumerate() {
+            out.push_str(&format!(
+                "{ts:.3},{:.3},j_{j:06},t_{g},{size},Terminated,100,0.5\n",
+                ts + 1.0,
+            ));
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

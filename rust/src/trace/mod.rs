@@ -13,6 +13,7 @@
 //! the real CSV can pass it through [`Trace::from_csv`] instead.
 
 pub mod csv;
+pub mod scenarios;
 
 use crate::cluster::placement::Placement;
 use crate::cluster::Cluster;
@@ -35,75 +36,104 @@ pub struct Trace {
     pub jobs: Vec<TraceJob>,
 }
 
+/// Per-job group counts: shifted geometric with mean `cfg.mean_groups`.
+/// `P(K = 1 + g) = (1-q) q^g` has mean `1 + q/(1-q)`; solve for q.
+/// Shared by the baseline generator and every scenario variant.
+pub(crate) fn gen_group_counts(cfg: &TraceConfig, rng: &mut Rng) -> Vec<usize> {
+    let extra = (cfg.mean_groups - 1.0).max(0.0);
+    let q = extra / (extra + 1.0);
+    (0..cfg.jobs)
+        .map(|_| {
+            let mut k = 1usize;
+            while rng.gen_f64() < q && k < 200 {
+                k += 1;
+            }
+            k
+        })
+        .collect()
+}
+
+/// Turn raw positive size draws into integer group sizes whose grand
+/// total is exactly `max(total_tasks, #groups)` (min 1 task per group):
+/// rescale, round, then distribute the rounding residue over the largest
+/// groups. When `total_tasks < #groups` the target is unreachable with
+/// 1-task minimums; the loop detects the stall (a full pass with no
+/// progress) and settles on one task per group instead of spinning.
+pub(crate) fn calibrate_sizes(raw: &[f64], total_tasks: usize) -> Vec<u64> {
+    let raw_sum: f64 = raw.iter().sum();
+    let scale = total_tasks as f64 / raw_sum;
+    let mut sizes: Vec<u64> = raw
+        .iter()
+        .map(|&x| (x * scale).max(1.0).round().max(1.0) as u64)
+        .collect();
+    let mut current: i64 = sizes.iter().map(|&s| s as i64).sum();
+    let target = total_tasks as i64;
+    let mut order: Vec<usize> = (0..sizes.len()).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(sizes[i]));
+    let mut oi = 0;
+    let mut stalled = 0;
+    while current != target && stalled < order.len() {
+        let i = order[oi % order.len()];
+        if current < target {
+            sizes[i] += 1;
+            current += 1;
+            stalled = 0;
+        } else if sizes[i] > 1 {
+            sizes[i] -= 1;
+            current -= 1;
+            stalled = 0;
+        } else {
+            stalled += 1;
+        }
+        oi += 1;
+    }
+    sizes
+}
+
+/// Poisson arrivals: exponential(1) interarrivals, abstract units
+/// (materialization rescales the timeline).
+pub(crate) fn gen_exp_arrivals(n: usize, rng: &mut Rng) -> Vec<f64> {
+    let mut arrivals = Vec::with_capacity(n);
+    let mut t = 0.0;
+    for _ in 0..n {
+        arrivals.push(t);
+        t += rng.gen_exp(1.0);
+    }
+    arrivals
+}
+
+/// Stitch arrivals + per-job group counts + flat group sizes into a
+/// [`Trace`].
+pub(crate) fn assemble(arrivals: &[f64], group_counts: &[usize], sizes: &[u64]) -> Trace {
+    debug_assert_eq!(arrivals.len(), group_counts.len());
+    debug_assert_eq!(group_counts.iter().sum::<usize>(), sizes.len());
+    let mut jobs = Vec::with_capacity(arrivals.len());
+    let mut cursor = 0;
+    for (j, &k) in group_counts.iter().enumerate() {
+        jobs.push(TraceJob {
+            arrival_raw: arrivals[j],
+            group_sizes: sizes[cursor..cursor + k].to_vec(),
+        });
+        cursor += k;
+    }
+    Trace { jobs }
+}
+
 impl Trace {
     /// Generate a synthetic trace matched to the aggregate statistics the
     /// paper reports for its Alibaba segment (§V-A). See module docs.
     pub fn synth_alibaba(cfg: &TraceConfig, rng: &mut Rng) -> Trace {
         assert!(cfg.jobs > 0);
-        // --- group counts: shifted geometric with mean `mean_groups` ---
-        // P(K = 1 + g) = (1-q) q^g has mean 1 + q/(1-q); solve for q.
-        let extra = (cfg.mean_groups - 1.0).max(0.0);
-        let q = extra / (extra + 1.0);
-        let group_counts: Vec<usize> = (0..cfg.jobs)
-            .map(|_| {
-                let mut k = 1usize;
-                while rng.gen_f64() < q && k < 200 {
-                    k += 1;
-                }
-                k
-            })
-            .collect();
+        let group_counts = gen_group_counts(cfg, rng);
         let total_groups: usize = group_counts.iter().sum();
-
-        // --- group sizes: lognormal(μ=0, σ=1.6) — heavy-tailed like batch
-        // instance counts — then rescaled so the grand total matches
-        // cfg.total_tasks (min 1 task per group). ---
-        let mut raw: Vec<f64> = (0..total_groups)
+        // Group sizes: lognormal(μ=0, σ=1.6) — heavy-tailed like batch
+        // instance counts — calibrated to hit cfg.total_tasks exactly.
+        let raw: Vec<f64> = (0..total_groups)
             .map(|_| rng.gen_lognormal(0.0, 1.6))
             .collect();
-        let raw_sum: f64 = raw.iter().sum();
-        let scale = cfg.total_tasks as f64 / raw_sum;
-        for x in raw.iter_mut() {
-            *x = (*x * scale).max(1.0);
-        }
-        let mut sizes: Vec<u64> = raw.iter().map(|&x| x.round().max(1.0) as u64).collect();
-        // Exact-total correction: distribute the rounding residue over the
-        // largest groups so the trace hits total_tasks exactly.
-        let mut current: i64 = sizes.iter().map(|&s| s as i64).sum();
-        let target = cfg.total_tasks as i64;
-        let mut order: Vec<usize> = (0..sizes.len()).collect();
-        order.sort_by_key(|&i| std::cmp::Reverse(sizes[i]));
-        let mut oi = 0;
-        while current != target && !order.is_empty() {
-            let i = order[oi % order.len()];
-            if current < target {
-                sizes[i] += 1;
-                current += 1;
-            } else if sizes[i] > 1 {
-                sizes[i] -= 1;
-                current -= 1;
-            }
-            oi += 1;
-        }
-
-        // --- arrivals: exponential interarrivals, abstract units ---
-        let mut arrivals = Vec::with_capacity(cfg.jobs);
-        let mut t = 0.0;
-        for _ in 0..cfg.jobs {
-            arrivals.push(t);
-            t += rng.gen_exp(1.0);
-        }
-
-        let mut jobs = Vec::with_capacity(cfg.jobs);
-        let mut cursor = 0;
-        for (j, &k) in group_counts.iter().enumerate() {
-            jobs.push(TraceJob {
-                arrival_raw: arrivals[j],
-                group_sizes: sizes[cursor..cursor + k].to_vec(),
-            });
-            cursor += k;
-        }
-        Trace { jobs }
+        let sizes = calibrate_sizes(&raw, cfg.total_tasks);
+        let arrivals = gen_exp_arrivals(cfg.jobs, rng);
+        assemble(&arrivals, &group_counts, &sizes)
     }
 
     /// Load a trace from a `batch_task.csv`-schema file (see [`csv`]).
@@ -113,11 +143,11 @@ impl Trace {
     }
 
     /// Build a trace per config: from CSV when `csv_path` is set, else
-    /// synthetic.
+    /// synthetic in the configured scenario's shape.
     pub fn build(cfg: &TraceConfig, rng: &mut Rng) -> Result<Trace> {
         match &cfg.csv_path {
             Some(p) => Trace::from_csv_file(p),
-            None => Ok(Trace::synth_alibaba(cfg, rng)),
+            None => Ok(cfg.scenario.synth(cfg, rng)),
         }
     }
 
@@ -196,7 +226,7 @@ mod tests {
             total_tasks: 5_000,
             mean_groups: 5.52,
             utilization: 0.5,
-            csv_path: None,
+            ..Default::default()
         }
     }
 

@@ -1,0 +1,322 @@
+//! Named workload scenarios beyond the paper's single Alibaba-matched
+//! synthetic trace.
+//!
+//! The paper's evaluation (§V) drives every figure with one workload
+//! shape. Related work shows the regimes that shape cannot express:
+//! placement-constrained scheduling degrades under *placement skew*
+//! (Shafiee & Ghaderi), and replication/latency tradeoffs hinge on
+//! *workload burstiness and tail weight* (Wang, Joshi & Wornell). Each
+//! [`Scenario`] twists exactly one axis of the generator so those regimes
+//! are reachable from the CLI (`--scenario`, `taos repro --fig
+//! scenarios`) and the config file (`scenario = …`):
+//!
+//! | name | twist |
+//! |---|---|
+//! | `alibaba` | the paper's baseline (lognormal sizes, Poisson arrivals) |
+//! | `bursty` | on/off arrival bursts instead of smooth Poisson |
+//! | `heavy-tail` | Pareto(1.5) task-group sizes (infinite variance) |
+//! | `hetero-cap` | Zipf-skewed per-server speeds (few fast, many slow) |
+//! | `hotspot` | scattered Zipf replica placement onto hot servers |
+//!
+//! Trace-shape scenarios act in [`Scenario::synth`]; cluster-side
+//! scenarios act through [`Scenario::apply`], which unconditionally sets
+//! the matching [`ClusterConfig`](crate::config::ClusterConfig) knobs
+//! (`mu_skew`, `placement_mode`, `zipf_alpha = 1.5` for `hotspot`) —
+//! precedence is by ordering, so callers apply the scenario first and
+//! explicit user knobs after.
+
+use crate::cluster::placement::PlacementMode;
+use crate::config::{ExperimentConfig, TraceConfig};
+use crate::trace::{self, Trace};
+use crate::util::rng::Rng;
+
+/// A named workload scenario. `Alibaba` is the paper's baseline; the
+/// others each twist one axis of the generator.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Scenario {
+    /// The paper's §V-A synthetic: lognormal group sizes, exponential
+    /// interarrivals, homogeneous servers, ring placement.
+    #[default]
+    Alibaba,
+    /// On/off bursty arrivals: trains of closely spaced jobs separated by
+    /// long idle gaps (same marginal totals as the baseline).
+    Bursty,
+    /// Pareto(1.5) task-group sizes — heavier than the baseline's
+    /// lognormal; a few giant groups dominate the load.
+    HeavyTail,
+    /// Heterogeneous server speeds: per-server μ multipliers follow a
+    /// Zipf profile (`mu_skew = 1`), so capacity concentrates on a few
+    /// fast servers.
+    HeteroCap,
+    /// Hot-spot replica placement: available-server sets are scattered
+    /// Zipf draws (`placement_mode = scatter`), piling the replicas of
+    /// most groups onto the same few servers.
+    Hotspot,
+}
+
+impl Scenario {
+    pub const ALL: [Scenario; 5] = [
+        Scenario::Alibaba,
+        Scenario::Bursty,
+        Scenario::HeavyTail,
+        Scenario::HeteroCap,
+        Scenario::Hotspot,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::Alibaba => "alibaba",
+            Scenario::Bursty => "bursty",
+            Scenario::HeavyTail => "heavy-tail",
+            Scenario::HeteroCap => "hetero-cap",
+            Scenario::Hotspot => "hotspot",
+        }
+    }
+
+    /// One-line catalog entry (CLI legend, docs).
+    pub fn describe(&self) -> &'static str {
+        match self {
+            Scenario::Alibaba => "paper baseline: lognormal sizes, Poisson arrivals",
+            Scenario::Bursty => "on/off arrival bursts separated by idle gaps",
+            Scenario::HeavyTail => "Pareto(1.5) group sizes, infinite variance",
+            Scenario::HeteroCap => "Zipf-skewed server speeds (few fast, many slow)",
+            Scenario::Hotspot => "scattered Zipf replica placement on hot servers",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Scenario> {
+        match s.to_ascii_lowercase().as_str() {
+            "alibaba" | "baseline" | "default" => Some(Scenario::Alibaba),
+            "bursty" | "burst" | "onoff" | "on-off" => Some(Scenario::Bursty),
+            "heavy-tail" | "heavytail" | "heavy_tail" | "pareto" => Some(Scenario::HeavyTail),
+            "hetero-cap" | "heterocap" | "hetero_cap" | "hetero" => Some(Scenario::HeteroCap),
+            "hotspot" | "hot-spot" | "zipf-hotspot" => Some(Scenario::Hotspot),
+            _ => None,
+        }
+    }
+
+    /// True for scenarios whose twist lives in the cluster model rather
+    /// than the trace shape (their synthetic trace equals the baseline).
+    pub fn is_cluster_side(&self) -> bool {
+        matches!(self, Scenario::HeteroCap | Scenario::Hotspot)
+    }
+
+    /// Select this scenario on a config: sets `trace.scenario` and fully
+    /// determines the scenario-owned cluster knobs — `mu_skew` and
+    /// `placement_mode` are reset to their baselines first, so applying
+    /// `alibaba` after `hotspot` really restores ring placement instead
+    /// of silently keeping the previous twist. `hotspot` additionally
+    /// sets `zipf_alpha = 1.5` (its twist needs skew). Precedence is by
+    /// ordering, never by guessing whether a current value "looks
+    /// explicit": callers that want user knobs to win apply the scenario
+    /// first and the explicit overrides after (which is what the CLI and
+    /// the config-file parser do).
+    pub fn apply(&self, cfg: &mut ExperimentConfig) {
+        cfg.trace.scenario = *self;
+        cfg.cluster.mu_skew = 0.0;
+        cfg.cluster.placement_mode = PlacementMode::Ring;
+        match self {
+            Scenario::HeteroCap => {
+                cfg.cluster.mu_skew = 1.0;
+            }
+            Scenario::Hotspot => {
+                cfg.cluster.placement_mode = PlacementMode::Scatter;
+                cfg.cluster.zipf_alpha = 1.5;
+            }
+            // Trace-shape scenarios (and the baseline) need no cluster
+            // twist beyond the reset above. zipf_alpha is deliberately
+            // left alone for them: it is a first-class experiment axis,
+            // not a scenario-owned knob.
+            _ => {}
+        }
+    }
+
+    /// Generate the scenario's synthetic trace. Cluster-side scenarios
+    /// (`hetero-cap`, `hotspot`) share the baseline trace shape — their
+    /// twist lives in [`Scenario::apply`]'s cluster knobs.
+    pub fn synth(&self, cfg: &TraceConfig, rng: &mut Rng) -> Trace {
+        match self {
+            Scenario::Alibaba | Scenario::HeteroCap | Scenario::Hotspot => {
+                Trace::synth_alibaba(cfg, rng)
+            }
+            Scenario::Bursty => synth_bursty(cfg, rng),
+            Scenario::HeavyTail => synth_heavy_tail(cfg, rng),
+        }
+    }
+}
+
+/// Bursty variant: baseline group structure, on/off arrivals.
+fn synth_bursty(cfg: &TraceConfig, rng: &mut Rng) -> Trace {
+    assert!(cfg.jobs > 0);
+    let group_counts = trace::gen_group_counts(cfg, rng);
+    let total_groups: usize = group_counts.iter().sum();
+    let raw: Vec<f64> = (0..total_groups)
+        .map(|_| rng.gen_lognormal(0.0, 1.6))
+        .collect();
+    let sizes = trace::calibrate_sizes(&raw, cfg.total_tasks);
+    let arrivals = gen_bursty_arrivals(cfg.jobs, rng);
+    trace::assemble(&arrivals, &group_counts, &sizes)
+}
+
+/// Heavy-tail variant: Pareto(1.5) group sizes, baseline arrivals.
+fn synth_heavy_tail(cfg: &TraceConfig, rng: &mut Rng) -> Trace {
+    assert!(cfg.jobs > 0);
+    let group_counts = trace::gen_group_counts(cfg, rng);
+    let total_groups: usize = group_counts.iter().sum();
+    let raw: Vec<f64> = (0..total_groups).map(|_| rng.gen_pareto(1.5)).collect();
+    let sizes = trace::calibrate_sizes(&raw, cfg.total_tasks);
+    let arrivals = trace::gen_exp_arrivals(cfg.jobs, rng);
+    trace::assemble(&arrivals, &group_counts, &sizes)
+}
+
+/// On/off modulated arrivals: trains of `~1..16` jobs with intra-burst
+/// gaps 80× shorter than the idle gaps separating trains. Only the
+/// *shape* matters — materialization rescales the whole timeline to hit
+/// the target utilization — so no absolute-rate calibration is needed.
+fn gen_bursty_arrivals(n: usize, rng: &mut Rng) -> Vec<f64> {
+    const IDLE_MEAN: f64 = 8.0;
+    const INTRA_MEAN: f64 = 0.1;
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0;
+    let mut left_in_burst = 0u64;
+    for _ in 0..n {
+        if left_in_burst == 0 {
+            t += rng.gen_exp(1.0 / IDLE_MEAN);
+            left_in_burst = 1 + rng.gen_range(15);
+        }
+        out.push(t);
+        t += rng.gen_exp(1.0 / INTRA_MEAN);
+        left_in_burst -= 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(jobs: usize, tasks: usize) -> TraceConfig {
+        let mut c = TraceConfig::default();
+        c.jobs = jobs;
+        c.total_tasks = tasks;
+        c
+    }
+
+    #[test]
+    fn every_scenario_hits_exact_totals() {
+        let c = cfg(60, 6_000);
+        for sc in Scenario::ALL {
+            let mut rng = Rng::seed_from(100);
+            let t = sc.synth(&c, &mut rng);
+            assert_eq!(t.jobs.len(), 60, "{}", sc.name());
+            assert_eq!(t.total_tasks(), 6_000, "{}", sc.name());
+            assert!(
+                t.jobs.iter().flat_map(|j| &j.group_sizes).all(|&s| s >= 1),
+                "{}",
+                sc.name()
+            );
+            for w in t.jobs.windows(2) {
+                assert!(w[0].arrival_raw <= w[1].arrival_raw, "{}", sc.name());
+            }
+        }
+    }
+
+    #[test]
+    fn bursty_arrivals_are_overdispersed() {
+        let mut rng = Rng::seed_from(101);
+        let t = Scenario::Bursty.synth(&cfg(400, 20_000), &mut rng);
+        let gaps: Vec<f64> = t
+            .jobs
+            .windows(2)
+            .map(|w| w[1].arrival_raw - w[0].arrival_raw)
+            .collect();
+        let n = gaps.len() as f64;
+        let mean = gaps.iter().sum::<f64>() / n;
+        let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / n;
+        let cv = var.sqrt() / mean;
+        // A Poisson process has CV = 1; the on/off mixture is far above.
+        assert!(cv > 1.5, "coefficient of variation {cv}");
+    }
+
+    #[test]
+    fn heavy_tail_has_heavier_max_than_baseline() {
+        let c = cfg(100, 50_000);
+        let mut r1 = Rng::seed_from(102);
+        let t = Scenario::HeavyTail.synth(&c, &mut r1);
+        let max = *t.jobs.iter().flat_map(|j| &j.group_sizes).max().unwrap();
+        let mean = 50_000.0 / t.total_groups() as f64;
+        assert!(
+            max as f64 > 5.0 * mean,
+            "Pareto tail: max {max} vs mean {mean:.1}"
+        );
+    }
+
+    #[test]
+    fn apply_sets_cluster_knobs() {
+        let mut c = ExperimentConfig::default();
+        Scenario::HeteroCap.apply(&mut c);
+        assert_eq!(c.trace.scenario, Scenario::HeteroCap);
+        assert!(c.cluster.mu_skew > 0.0);
+
+        let mut c = ExperimentConfig::default();
+        Scenario::Hotspot.apply(&mut c);
+        assert_eq!(c.cluster.placement_mode, PlacementMode::Scatter);
+        assert_eq!(c.cluster.zipf_alpha, 1.5);
+
+        // apply is unconditional — precedence is by ordering, so a knob
+        // set *before* apply is overwritten (callers that want user
+        // choices to win apply the scenario first)...
+        let mut c = ExperimentConfig::default();
+        c.cluster.zipf_alpha = 0.5;
+        Scenario::Hotspot.apply(&mut c);
+        assert_eq!(c.cluster.zipf_alpha, 1.5);
+        // ...and a knob set *after* apply stays — including values equal
+        // to the neutral default, like alpha = 0.
+        let mut c = ExperimentConfig::default();
+        Scenario::Hotspot.apply(&mut c);
+        c.cluster.zipf_alpha = 0.0;
+        assert_eq!(c.cluster.zipf_alpha, 0.0);
+        assert_eq!(c.cluster.placement_mode, PlacementMode::Scatter);
+
+        let mut c = ExperimentConfig::default();
+        Scenario::Alibaba.apply(&mut c);
+        assert_eq!(c, ExperimentConfig::default());
+
+        // Re-selecting the baseline after a cluster-side scenario must
+        // restore the baseline cluster knobs, not keep the old twist.
+        let mut c = ExperimentConfig::default();
+        Scenario::Hotspot.apply(&mut c);
+        Scenario::Alibaba.apply(&mut c);
+        assert_eq!(c.cluster.placement_mode, PlacementMode::Ring);
+        assert_eq!(c.cluster.mu_skew, 0.0);
+        let mut c = ExperimentConfig::default();
+        Scenario::HeteroCap.apply(&mut c);
+        Scenario::Bursty.apply(&mut c);
+        assert_eq!(c.cluster.mu_skew, 0.0);
+    }
+
+    #[test]
+    fn parse_roundtrip_and_aliases() {
+        for sc in Scenario::ALL {
+            assert_eq!(Scenario::parse(sc.name()), Some(sc));
+        }
+        assert_eq!(Scenario::parse("pareto"), Some(Scenario::HeavyTail));
+        assert_eq!(Scenario::parse("hetero"), Some(Scenario::HeteroCap));
+        assert_eq!(Scenario::parse("nope"), None);
+    }
+
+    #[test]
+    fn scenarios_runnable_end_to_end() {
+        use crate::sched::SchedPolicy;
+        use crate::sim::run_experiment;
+        for sc in Scenario::ALL {
+            let mut c = crate::sweep::quick_base(7);
+            c.trace.jobs = 15;
+            c.trace.total_tasks = 900;
+            sc.apply(&mut c);
+            let out = run_experiment(&c, SchedPolicy::Ocwf { acc: true })
+                .unwrap_or_else(|e| panic!("{}: {e}", sc.name()));
+            assert_eq!(out.jcts.len(), 15, "{}", sc.name());
+        }
+    }
+}

@@ -98,6 +98,20 @@ impl Rng {
         (mu + sigma * self.gen_normal()).exp()
     }
 
+    /// Pareto with shape `alpha` and minimum 1 (heavy-tailed; the mean is
+    /// `alpha/(alpha-1)` for `alpha > 1`, infinite otherwise). Used by the
+    /// heavy-tail workload scenario for task-group sizes.
+    pub fn gen_pareto(&mut self, alpha: f64) -> f64 {
+        debug_assert!(alpha > 0.0);
+        let u = loop {
+            let u = self.gen_f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        u.powf(-1.0 / alpha)
+    }
+
     /// Exponential with rate `lambda` (mean `1/lambda`).
     pub fn gen_exp(&mut self, lambda: f64) -> f64 {
         debug_assert!(lambda > 0.0);
@@ -253,6 +267,20 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
         assert!(mean.abs() < 0.05, "mean {mean}");
         assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn pareto_min_and_mean() {
+        let mut rng = Rng::seed_from(14);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.gen_pareto(2.5)).collect();
+        assert!(xs.iter().all(|&x| x >= 1.0), "Pareto support is [1, inf)");
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        // E[X] = alpha/(alpha-1) = 2.5/1.5 ~ 1.667.
+        assert!((mean - 5.0 / 3.0).abs() < 0.1, "mean {mean}");
+        // Heavy tail: the max dwarfs the mean.
+        let max = xs.iter().cloned().fold(0.0, f64::max);
+        assert!(max > 10.0, "max {max}");
     }
 
     #[test]

@@ -1,0 +1,112 @@
+//! Golden-trace regression tests: a small fixed-seed experiment with a
+//! snapshotted mean JCT per policy (the four FIFO assigners plus
+//! OCWF/OCWF-ACC), and an exact round-trip through the `batch_task.csv`
+//! serializer/parser.
+//!
+//! Snapshot protocol: the expected values live in
+//! `rust/tests/golden/jct_snapshot.txt`. When the file is missing the
+//! test *blesses* it (writes the observed values and passes, printing a
+//! note); when it exists the observed values must match exactly. CI runs
+//! `cargo test` twice back-to-back so the second run always verifies the
+//! freshly blessed snapshot — any nondeterminism or cross-platform drift
+//! in the simulation pipeline fails the build. Regenerate intentionally
+//! with `TAOS_BLESS=1 cargo test -q --test golden_regression`.
+
+use taos::config::ExperimentConfig;
+use taos::sched::SchedPolicy;
+use taos::sim::run_experiment;
+
+fn golden_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.trace.jobs = 25;
+    cfg.trace.total_tasks = 1_500;
+    cfg.trace.utilization = 0.6;
+    cfg.cluster.servers = 20;
+    cfg.cluster.zipf_alpha = 1.0;
+    cfg.cluster.avail_lo = 4;
+    cfg.cluster.avail_hi = 6;
+    cfg.seed = 2024;
+    cfg
+}
+
+/// Render the snapshot: one `policy mean_jct` line per algorithm, mean
+/// formatted to 6 decimals (JCTs are integer slots, so the mean of 25 of
+/// them is exactly representable at this precision).
+fn observed_snapshot() -> String {
+    let cfg = golden_cfg();
+    let mut out = String::new();
+    for policy in SchedPolicy::ALL {
+        let res = run_experiment(&cfg, policy).expect(policy.name());
+        out.push_str(&format!("{} {:.6}\n", policy.name(), res.mean_jct()));
+    }
+    out
+}
+
+fn snapshot_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust")
+        .join("tests")
+        .join("golden")
+        .join("jct_snapshot.txt")
+}
+
+#[test]
+fn golden_mean_jct_per_policy() {
+    let observed = observed_snapshot();
+    let path = snapshot_path();
+    let bless = std::env::var("TAOS_BLESS").is_ok() || !path.exists();
+    if bless {
+        std::fs::create_dir_all(path.parent().unwrap()).expect("mkdir golden/");
+        std::fs::write(&path, &observed).expect("write snapshot");
+        eprintln!("blessed golden snapshot at {}:\n{observed}", path.display());
+        return;
+    }
+    let expected = std::fs::read_to_string(&path).expect("read snapshot");
+    assert_eq!(
+        observed,
+        expected,
+        "mean JCT drifted from the golden snapshot ({}); if the change is \
+         intentional, regenerate with TAOS_BLESS=1",
+        path.display()
+    );
+}
+
+#[test]
+fn golden_run_is_deterministic_in_process() {
+    // The snapshot is only meaningful if two in-process runs agree.
+    assert_eq!(observed_snapshot(), observed_snapshot());
+}
+
+#[test]
+fn csv_roundtrip_exact() {
+    use taos::trace::csv::{parse_batch_task, to_batch_task_csv};
+    use taos::trace::Trace;
+    use taos::util::rng::Rng;
+
+    let mut tcfg = taos::config::TraceConfig::default();
+    tcfg.jobs = 30;
+    tcfg.total_tasks = 2_000;
+    let trace = Trace::synth_alibaba(&tcfg, &mut Rng::seed_from(77));
+    let csv = to_batch_task_csv(&trace);
+    let parsed = parse_batch_task(&csv).expect("parse generated csv");
+
+    assert_eq!(parsed.jobs.len(), trace.jobs.len());
+    assert_eq!(parsed.total_tasks(), trace.total_tasks());
+    assert_eq!(parsed.total_groups(), trace.total_groups());
+    for (i, (a, b)) in parsed.jobs.iter().zip(&trace.jobs).enumerate() {
+        assert_eq!(a.group_sizes, b.group_sizes, "job {i} group sizes");
+    }
+    // Arrival order survives quantization (normalized to start at 0, in
+    // milliseconds of raw time).
+    for w in parsed.jobs.windows(2) {
+        assert!(w[0].arrival_raw <= w[1].arrival_raw);
+    }
+    assert_eq!(parsed.jobs[0].arrival_raw, 0.0);
+
+    // A second round trip is a fixed point: parse(serialize(parse(x)))
+    // equals parse(x) exactly.
+    let again = parse_batch_task(&to_batch_task_csv(&parsed)).expect("reparse");
+    for (a, b) in again.jobs.iter().zip(&parsed.jobs) {
+        assert_eq!(a.group_sizes, b.group_sizes);
+    }
+}

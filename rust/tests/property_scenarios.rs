@@ -1,0 +1,206 @@
+//! Property tests (via the in-repo `taos::proptest` framework) for the
+//! paper's approximation guarantees and the scenario-generator subsystem.
+//!
+//! - Thms 1–2: on random instances, WF's estimated completion time Φ is
+//!   at most K_c × OBTA's exact Φ (K_c = number of task groups), and the
+//!   bound holds for the realized program-P objective of the returned
+//!   allocations too.
+//! - Every assigner's output passes `validate_assignment` — including on
+//!   scatter-shaped (non-contiguous) available-server sets.
+//! - Every named scenario generates calibrated traces: exact task totals,
+//!   ≥ 1 task per group, chronological arrivals, and materializations
+//!   that respect the cluster's ranges.
+
+use taos::assign::{program_phi, validate_assignment, AssignPolicy, Instance};
+use taos::cluster::placement::{Placement, PlacementMode};
+use taos::cluster::Cluster;
+use taos::config::{ClusterConfig, TraceConfig};
+use taos::job::TaskGroup;
+use taos::proptest::{forall, Config};
+use taos::trace::scenarios::Scenario;
+use taos::util::rng::Rng;
+
+/// Random instance whose group server-sets come from a (possibly
+/// scattered) placement sampler — the shapes the scenario subsystem
+/// actually produces, unlike the uniform-random sets of the older tests.
+fn random_placed_instance(rng: &mut Rng) -> (Vec<TaskGroup>, Vec<u64>, Vec<u64>) {
+    let m = 3 + rng.gen_range(10) as usize;
+    let k = 1 + rng.gen_range(4) as usize;
+    let alpha = rng.gen_f64() * 2.0;
+    let mode = if rng.gen_range(2) == 0 {
+        PlacementMode::Ring
+    } else {
+        PlacementMode::Scatter
+    };
+    let pl = Placement::with_mode(m, alpha, mode, rng);
+    let p_hi = 2 + rng.gen_range((m - 1) as u64) as usize;
+    let mu: Vec<u64> = (0..m).map(|_| rng.gen_range_incl(1, 5)).collect();
+    let busy: Vec<u64> = (0..m).map(|_| rng.gen_range(12)).collect();
+    let groups: Vec<TaskGroup> = (0..k)
+        .map(|_| {
+            let servers = pl.sample_group_servers(rng, 1, p_hi);
+            TaskGroup::new(rng.gen_range_incl(1, 40), servers)
+        })
+        .collect();
+    (groups, mu, busy)
+}
+
+#[test]
+fn property_all_assigners_valid_on_placed_instances() {
+    forall(
+        Config::default().cases(96).seed(0xB01),
+        random_placed_instance,
+        |(groups, mu, busy)| {
+            let inst = Instance { groups, mu, busy };
+            AssignPolicy::ALL.iter().all(|p| {
+                let a = p.build(3).assign(&inst);
+                validate_assignment(&inst, &a).is_ok()
+            })
+        },
+    );
+}
+
+#[test]
+fn property_wf_phi_within_kc_times_obta() {
+    // Theorem 2: WF(I) <= K_c · Φ*(I). OBTA solves P exactly, so its Φ
+    // is the optimum. Checked on the reported Φ and on the program-P
+    // objective of the concrete allocations.
+    forall(
+        Config::default().cases(72).seed(0xB02),
+        random_placed_instance,
+        |(groups, mu, busy)| {
+            let inst = Instance { groups, mu, busy };
+            let k_c = groups.iter().filter(|g| g.size > 0).count() as u64;
+            let wf = AssignPolicy::Wf.build(0).assign(&inst);
+            let opt = AssignPolicy::Obta.build(0).assign(&inst);
+            wf.phi <= k_c * opt.phi
+                && program_phi(&inst, &wf.per_group) <= k_c * program_phi(&inst, &opt.per_group)
+        },
+    );
+}
+
+#[test]
+fn property_obta_never_above_wf() {
+    // The exact optimum lower-bounds the approximation on every instance.
+    forall(
+        Config::default().cases(72).seed(0xB03),
+        random_placed_instance,
+        |(groups, mu, busy)| {
+            let inst = Instance { groups, mu, busy };
+            let wf = AssignPolicy::Wf.build(0).assign(&inst);
+            let opt = AssignPolicy::Obta.build(0).assign(&inst);
+            opt.phi <= wf.phi
+        },
+    );
+}
+
+#[test]
+fn property_scenarios_generate_calibrated_traces() {
+    forall(
+        Config::default().cases(40).seed(0xB04),
+        |rng| {
+            let jobs = 5 + rng.gen_range(40) as usize;
+            let tasks = jobs * (2 + rng.gen_range(60) as usize);
+            let scenario = Scenario::ALL[rng.gen_range(Scenario::ALL.len() as u64) as usize];
+            let seed = rng.next_u64();
+            (jobs, tasks, scenario, seed)
+        },
+        |&(jobs, tasks, scenario, seed)| {
+            let mut cfg = TraceConfig::default();
+            cfg.jobs = jobs;
+            cfg.total_tasks = tasks;
+            let trace = scenario.synth(&cfg, &mut Rng::seed_from(seed));
+            // Calibration contract: exact total, except it never shrinks a
+            // group below one task.
+            let expected = (tasks as u64).max(trace.total_groups() as u64);
+            trace.jobs.len() == jobs
+                && trace.total_tasks() == expected
+                && trace.jobs.iter().flat_map(|j| &j.group_sizes).all(|&s| s >= 1)
+                && trace.jobs.windows(2).all(|w| w[0].arrival_raw <= w[1].arrival_raw)
+        },
+    );
+}
+
+#[test]
+fn property_scatter_sets_distinct_and_sized() {
+    forall(
+        Config::default().cases(80).seed(0xB05),
+        |rng| {
+            let m = 2 + rng.gen_range(40) as usize;
+            let alpha = rng.gen_f64() * 2.0;
+            let p_lo = 1 + rng.gen_range(m as u64) as usize;
+            let p_hi = p_lo + rng.gen_range(8) as usize;
+            let seed = rng.next_u64();
+            (m, alpha, p_lo, p_hi, seed)
+        },
+        |&(m, alpha, p_lo, p_hi, seed)| {
+            let mut rng = Rng::seed_from(seed);
+            let pl = Placement::with_mode(m, alpha, PlacementMode::Scatter, &mut rng);
+            (0..20).all(|_| {
+                let s = pl.sample_group_servers(&mut rng, p_lo, p_hi);
+                let mut d = s.clone();
+                d.dedup(); // scatter output is sorted
+                s.len() >= p_lo.min(m)
+                    && s.len() <= p_hi.min(m).max(1)
+                    && d.len() == s.len()
+                    && s.iter().all(|&x| x < m)
+            })
+        },
+    );
+}
+
+#[test]
+fn property_hetero_cluster_mu_positive_and_calibrated() {
+    forall(
+        Config::default().cases(48).seed(0xB06),
+        |rng| {
+            let servers = 2 + rng.gen_range(60) as usize;
+            let skew = rng.gen_f64() * 2.0;
+            let seed = rng.next_u64();
+            (servers, skew, seed)
+        },
+        |&(servers, skew, seed)| {
+            let mut cfg = ClusterConfig::default();
+            cfg.servers = servers;
+            cfg.mu_skew = skew;
+            let mut rng = Rng::seed_from(seed);
+            let cluster = Cluster::generate(&cfg, &mut rng);
+            let mu = cluster.sample_mu(&mut rng);
+            mu.len() == servers
+                && mu.iter().all(|&x| x >= 1)
+                && cluster.mean_mu().is_finite()
+                && cluster.mean_mu() >= 1.0
+        },
+    );
+}
+
+#[test]
+fn property_csv_roundtrip_preserves_structure() {
+    use taos::trace::csv::{parse_batch_task, to_batch_task_csv};
+    forall(
+        Config::default().cases(32).seed(0xB07),
+        |rng| {
+            let jobs = 2 + rng.gen_range(25) as usize;
+            let tasks = jobs * (3 + rng.gen_range(30) as usize);
+            let seed = rng.next_u64();
+            (jobs, tasks, seed)
+        },
+        |&(jobs, tasks, seed)| {
+            let mut cfg = TraceConfig::default();
+            cfg.jobs = jobs;
+            cfg.total_tasks = tasks;
+            let trace = Scenario::Bursty.synth(&cfg, &mut Rng::seed_from(seed));
+            let parsed = match parse_batch_task(&to_batch_task_csv(&trace)) {
+                Ok(t) => t,
+                Err(_) => return false,
+            };
+            parsed.jobs.len() == trace.jobs.len()
+                && parsed.total_tasks() == trace.total_tasks()
+                && parsed
+                    .jobs
+                    .iter()
+                    .zip(&trace.jobs)
+                    .all(|(a, b)| a.group_sizes == b.group_sizes)
+        },
+    );
+}
