@@ -34,12 +34,12 @@ fn main() {
     println!("running {} cells on {threads} threads\n", specs.len());
     let outcomes = run_specs(&specs, threads);
 
-    println!("{:<12} {:>10} {:>10}  note", "scenario", "wf", "ocwf-acc");
+    println!("{:<18} {:>10} {:>10}  note", "scenario", "wf", "ocwf-acc");
     for (i, sc) in Scenario::ALL.iter().enumerate() {
         let wf = outcomes[i * 2].mean_jct();
         let ocwf = outcomes[i * 2 + 1].mean_jct();
         println!(
-            "{:<12} {:>10.1} {:>10.1}  {}",
+            "{:<18} {:>10.1} {:>10.1}  {}",
             sc.name(),
             wf,
             ocwf,

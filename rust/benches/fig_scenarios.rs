@@ -29,7 +29,7 @@ fn main() {
     );
     println!("scenario legend:");
     for (i, sc) in Scenario::ALL.iter().enumerate() {
-        println!("  {i} = {:<11} {}", sc.name(), sc.describe());
+        println!("  {i} = {:<18} {}", sc.name(), sc.describe());
     }
     println!("{}", figure.render());
     std::fs::create_dir_all("bench_results").ok();
@@ -51,7 +51,7 @@ fn main() {
         let wf = figure.cell("wf", i as f64).unwrap().mean_jct;
         let ocwf = figure.cell("ocwf-acc", i as f64).unwrap().mean_jct;
         println!(
-            "check {:<11} wf {wf:.0} vs ocwf-acc {ocwf:.0} ({})",
+            "check {:<18} wf {wf:.0} vs ocwf-acc {ocwf:.0} ({})",
             sc.name(),
             if ocwf <= wf * 1.05 { "reordering holds" } else { "REGRESSION?" }
         );

@@ -11,7 +11,7 @@ use taos::assign::feasible::Oracle;
 use taos::assign::{bounds, AssignPolicy, Assigner, Instance};
 use taos::benchlib::{black_box, Bench};
 use taos::job::TaskGroup;
-use taos::sched::ocwf::{reorder, Outstanding};
+use taos::sched::ocwf::{reorder_into, Outstanding, ReorderOutcome, ReorderWorkspace};
 use taos::util::rng::Rng;
 
 /// A paper-shaped instance: `k` groups over `m` servers.
@@ -89,14 +89,30 @@ fn main() {
                 remaining: j.groups.iter().map(|g| g.size).collect(),
             })
             .collect();
-        let mut wf = taos::assign::wf::Wf::new();
+        // Pooled workspace + outcome: the zero-alloc steady-state path the
+        // simulator runs.
+        let mut ws = ReorderWorkspace::default();
+        let mut out = ReorderOutcome::default();
         bench.run("sched/ocwf_acc_reorder@12jobs", || {
-            black_box(reorder(&outstanding, m, true, &mut wf).order.len())
+            reorder_into(&outstanding, m, true, 1, &mut ws, &mut out);
+            black_box(out.order.len())
         });
-        let mut wf2 = taos::assign::wf::Wf::new();
         bench.run("sched/ocwf_reorder@12jobs", || {
-            black_box(reorder(&outstanding, m, false, &mut wf2).order.len())
+            reorder_into(&outstanding, m, false, 1, &mut ws, &mut out);
+            black_box(out.order.len())
         });
+        // Parallel reorder rounds (bit-identical; wall-clock only).
+        for threads in [2, 0] {
+            let label = if threads == 0 {
+                "sched/ocwf_reorder@12jobs_allcores".to_string()
+            } else {
+                format!("sched/ocwf_reorder@12jobs_{threads}thr")
+            };
+            bench.run(&label, || {
+                reorder_into(&outstanding, m, false, threads, &mut ws, &mut out);
+                black_box(out.order.len())
+            });
+        }
     }
 
     std::fs::create_dir_all("bench_results").ok();

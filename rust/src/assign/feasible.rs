@@ -54,71 +54,115 @@ impl OracleStats {
     }
 }
 
+/// Reusable buffers behind an [`Oracle`]: the Dinic arena plus every
+/// topology vector. An exact assigner builds one oracle per job arrival;
+/// pooling these buffers in the assigner ([`super::obta::Obta`],
+/// [`super::nlip::Nlip`]) makes the steady-state rebuild allocation-free
+/// (the graph is re-derived per instance, but into recycled arenas).
+#[derive(Debug, Default)]
+pub struct OracleWorkspace {
+    net: Dinic,
+    /// Non-empty group indices.
+    groups: Vec<usize>,
+    /// Union of available servers, sorted; `server_pos[m]` is its index.
+    union: Vec<ServerId>,
+    server_pos: std::collections::HashMap<ServerId, usize>,
+    /// Per group (in `groups` order): the (server, edge) pairs. Row pool
+    /// never shrinks.
+    group_edges: Vec<Vec<(ServerId, EdgeRef)>>,
+    /// Per union server: the server→sink edge (capacity = f(Φ)).
+    sink_edges: Vec<EdgeRef>,
+}
+
+impl OracleWorkspace {
+    /// Reserved capacity across the pooled buffers (allocation-stability
+    /// tests). The `server_pos` hash map is excluded: `HashMap` exposes
+    /// no stable capacity accessor, but it is cleared (not dropped)
+    /// between instances just like the vectors.
+    pub fn footprint(&self) -> usize {
+        self.net.footprint()
+            + self.groups.capacity()
+            + self.union.capacity()
+            + self.group_edges.capacity()
+            + self.group_edges.iter().map(|r| r.capacity()).sum::<usize>()
+            + self.sink_edges.capacity()
+    }
+}
+
 /// Feasibility oracle for one instance; reusable across candidate Φ values
 /// (binary search). The flow network is built once — only the sink-edge
 /// capacities depend on Φ, so each probe is a reset + recapacitate +
 /// max-flow, with zero graph construction.
 pub struct Oracle<'a> {
     inst: &'a Instance<'a>,
-    /// Non-empty group indices.
-    groups: Vec<usize>,
-    /// Union of available servers, sorted; `server_pos[m]` is its index.
-    union: Vec<ServerId>,
-    server_pos: std::collections::HashMap<ServerId, usize>,
+    ws: OracleWorkspace,
     total: TaskCount,
-    net: Dinic,
-    /// Per group (in `groups` order): the (server, edge) pairs.
-    group_edges: Vec<Vec<(ServerId, EdgeRef)>>,
-    /// Per union server: the server→sink edge (capacity = f(Φ)).
-    sink_edges: Vec<EdgeRef>,
     pub stats: OracleStats,
 }
 
 impl<'a> Oracle<'a> {
     pub fn new(inst: &'a Instance<'a>) -> Self {
-        let groups: Vec<usize> = (0..inst.groups.len())
-            .filter(|&k| inst.groups[k].size > 0)
-            .collect();
-        let union = inst.union_servers();
-        let server_pos: std::collections::HashMap<ServerId, usize> =
-            union.iter().enumerate().map(|(i, &m)| (m, i)).collect();
+        Self::with_workspace(inst, OracleWorkspace::default())
+    }
+
+    /// Build the oracle into a recycled workspace (see
+    /// [`OracleWorkspace`]); reclaim it afterwards with
+    /// [`Oracle::into_workspace`].
+    pub fn with_workspace(inst: &'a Instance<'a>, mut ws: OracleWorkspace) -> Self {
+        ws.groups.clear();
+        ws.groups
+            .extend((0..inst.groups.len()).filter(|&k| inst.groups[k].size > 0));
+        ws.union.clear();
+        for &k in &ws.groups {
+            ws.union.extend(inst.groups[k].servers.iter().copied());
+        }
+        ws.union.sort_unstable();
+        ws.union.dedup();
+        ws.server_pos.clear();
+        for (i, &m) in ws.union.iter().enumerate() {
+            ws.server_pos.insert(m, i);
+        }
         let total = inst.total_tasks();
 
-        // Build the bipartite flow network once.
+        // Build the bipartite flow network into the recycled arena.
         // Nodes: 0 = source, 1..=G groups, G+1..=G+S servers, last = sink.
-        let g_n = groups.len();
-        let s_n = union.len();
-        let mut net = Dinic::new(2 + g_n + s_n);
+        let g_n = ws.groups.len();
+        let s_n = ws.union.len();
+        ws.net.reinit(2 + g_n + s_n);
         let src = 0;
-        let mut group_edges = Vec::with_capacity(g_n);
-        for (gi, &k) in groups.iter().enumerate() {
+        while ws.group_edges.len() < g_n {
+            ws.group_edges.push(Vec::new());
+        }
+        for row in ws.group_edges.iter_mut() {
+            row.clear();
+        }
+        for (gi, &k) in ws.groups.iter().enumerate() {
             let g = &inst.groups[k];
-            net.add_edge(src, 1 + gi, g.size);
-            let mut edges = Vec::with_capacity(g.servers.len());
+            ws.net.add_edge(src, 1 + gi, g.size);
             for &m in &g.servers {
-                let si = server_pos[&m];
-                edges.push((m, net.add_edge(1 + gi, 1 + g_n + si, g.size)));
+                let si = ws.server_pos[&m];
+                let e = ws.net.add_edge(1 + gi, 1 + g_n + si, g.size);
+                ws.group_edges[gi].push((m, e));
             }
-            group_edges.push(edges);
         }
         let sink = 1 + g_n + s_n;
-        let sink_edges: Vec<EdgeRef> = union
-            .iter()
-            .enumerate()
-            .map(|(si, _)| net.add_edge(1 + g_n + si, sink, 0))
-            .collect();
+        ws.sink_edges.clear();
+        for si in 0..s_n {
+            let e = ws.net.add_edge(1 + g_n + si, sink, 0);
+            ws.sink_edges.push(e);
+        }
 
         Oracle {
             inst,
-            groups,
-            union,
-            server_pos,
+            ws,
             total,
-            net,
-            group_edges,
-            sink_edges,
             stats: OracleStats::default(),
         }
+    }
+
+    /// Reclaim the workspace for the next instance.
+    pub fn into_workspace(self) -> OracleWorkspace {
+        self.ws
     }
 
     /// Decide feasibility at Φ; on success return the per-group
@@ -129,28 +173,29 @@ impl<'a> Oracle<'a> {
             return Some(vec![Vec::new(); self.inst.groups.len()]);
         }
         let caps: Vec<Slots> = self
+            .ws
             .union
             .iter()
             .map(|&m| phi.saturating_sub(self.inst.busy[m]))
             .collect();
 
         // --- Tier 1: max-flow relaxation in task units ---
-        let g_n = self.groups.len();
-        let s_n = self.union.len();
+        let g_n = self.ws.groups.len();
+        let s_n = self.ws.union.len();
         let src = 0;
         let sink = 1 + g_n + s_n;
-        self.net.reset();
-        for (si, &m) in self.union.iter().enumerate() {
+        self.ws.net.reset();
+        for (si, &m) in self.ws.union.iter().enumerate() {
             let task_cap = caps[si].saturating_mul(self.inst.mu[m]);
-            self.net.set_cap(self.sink_edges[si], task_cap);
+            self.ws.net.set_cap(self.ws.sink_edges[si], task_cap);
         }
-        let flow = self.net.max_flow(src, sink);
+        let flow = self.ws.net.max_flow(src, sink);
         if flow < self.total {
             self.stats.flow_infeasible += 1;
             return None;
         }
-        let net = &self.net;
-        let group_edges = &self.group_edges;
+        let net = &self.ws.net;
+        let group_edges = &self.ws.group_edges;
 
         // --- Tier 2: ceil extraction ---
         let mut alloc: Vec<Vec<(ServerId, TaskCount)>> =
@@ -158,13 +203,13 @@ impl<'a> Oracle<'a> {
         let mut slot_use = vec![0u64; s_n];
         // Per (group, server): the flow amount, for tiers 2–3.
         let mut flows: Vec<Vec<(ServerId, TaskCount)>> = vec![Vec::new(); g_n];
-        for (gi, &k) in self.groups.iter().enumerate() {
+        for (gi, &k) in self.ws.groups.iter().enumerate() {
             for &(m, e) in &group_edges[gi] {
                 let f = net.flow_of(e);
                 if f > 0 {
                     alloc[k].push((m, f));
                     flows[gi].push((m, f));
-                    slot_use[self.server_pos[&m]] += ceil_div(f, self.inst.mu[m]);
+                    slot_use[self.ws.server_pos[&m]] += ceil_div(f, self.inst.mu[m]);
                 }
             }
         }
@@ -184,16 +229,16 @@ impl<'a> Oracle<'a> {
         // Variables: one per (group, server) edge, in deterministic order.
         let mut var_of: Vec<Vec<usize>> = Vec::with_capacity(g_n);
         let mut nvars = 0;
-        for &k in &self.groups {
+        for &k in &self.ws.groups {
             let g = &self.inst.groups[k];
             var_of.push((0..g.servers.len()).map(|j| nvars + j).collect());
             nvars += g.servers.len();
         }
         let mut constraints = Vec::new();
         // Slot budgets per server.
-        for (si, &m) in self.union.iter().enumerate() {
+        for (si, &m) in self.ws.union.iter().enumerate() {
             let mut terms = Vec::new();
-            for (gi, &k) in self.groups.iter().enumerate() {
+            for (gi, &k) in self.ws.groups.iter().enumerate() {
                 let g = &self.inst.groups[k];
                 if let Some(j) = g.servers.iter().position(|&x| x == m) {
                     terms.push((var_of[gi][j], 1.0));
@@ -208,7 +253,7 @@ impl<'a> Oracle<'a> {
             }
         }
         // Coverage per group.
-        for (gi, &k) in self.groups.iter().enumerate() {
+        for (gi, &k) in self.ws.groups.iter().enumerate() {
             let g = &self.inst.groups[k];
             let terms = g
                 .servers
@@ -234,7 +279,7 @@ impl<'a> Oracle<'a> {
                 // remainder (coverage guarantees enough capacity).
                 let mut alloc: Vec<Vec<(ServerId, TaskCount)>> =
                     vec![Vec::new(); self.inst.groups.len()];
-                for (gi, &k) in self.groups.iter().enumerate() {
+                for (gi, &k) in self.ws.groups.iter().enumerate() {
                     let g = &self.inst.groups[k];
                     let mut remaining = g.size;
                     for (j, &m) in g.servers.iter().enumerate() {
@@ -261,14 +306,14 @@ impl<'a> Oracle<'a> {
     /// instance only. Residuals are < μ per (group, server) pair, so the
     /// residual ILP is tiny and its B&B converges immediately.
     fn floor_residual(
-        &mut self,
+        &self,
         flows: &[Vec<(ServerId, TaskCount)>],
         caps: &[Slots],
     ) -> Option<Vec<Vec<(ServerId, TaskCount)>>> {
-        let g_n = self.groups.len();
+        let g_n = self.ws.groups.len();
         // Floored allocation + spare capacity.
         let mut floored: Vec<Vec<(ServerId, TaskCount)>> = vec![Vec::new(); g_n];
-        let mut used_slots = vec![0u64; self.union.len()];
+        let mut used_slots = vec![0u64; self.ws.union.len()];
         let mut residual = vec![0u64; g_n];
         for (gi, f) in flows.iter().enumerate() {
             for &(m, t) in f {
@@ -276,7 +321,7 @@ impl<'a> Oracle<'a> {
                 let whole = t / mu;
                 if whole > 0 {
                     floored[gi].push((m, whole * mu));
-                    used_slots[self.server_pos[&m]] += whole;
+                    used_slots[self.ws.server_pos[&m]] += whole;
                 }
                 residual[gi] += t % mu;
             }
@@ -295,7 +340,7 @@ impl<'a> Oracle<'a> {
             // Floors alone cover everything (flow was slot-aligned).
             let mut alloc: Vec<Vec<(ServerId, TaskCount)>> =
                 vec![Vec::new(); self.inst.groups.len()];
-            for (gi, &k) in self.groups.iter().enumerate() {
+            for (gi, &k) in self.ws.groups.iter().enumerate() {
                 let g = &self.inst.groups[k];
                 let mut remaining = g.size;
                 for &(m, t) in &floored[gi] {
@@ -320,9 +365,9 @@ impl<'a> Oracle<'a> {
             &active,
             &residual,
             &spare,
-            &self.groups,
+            &self.ws.groups,
             self.inst,
-            &self.server_pos,
+            &self.ws.server_pos,
         ) {
             Some(cover) => self.combine_floor_cover(&floored, &cover),
             None => None,
@@ -339,7 +384,7 @@ impl<'a> Oracle<'a> {
     ) -> Option<Vec<Vec<(ServerId, TaskCount)>>> {
         let mut alloc: Vec<Vec<(ServerId, TaskCount)>> =
             vec![Vec::new(); self.inst.groups.len()];
-        for (gi, &k) in self.groups.iter().enumerate() {
+        for (gi, &k) in self.ws.groups.iter().enumerate() {
             let g = &self.inst.groups[k];
             // Capacity per server: floored amount + residual slots · μ.
             let mut cap_here: std::collections::BTreeMap<ServerId, u64> = Default::default();

@@ -10,18 +10,26 @@
 //! computation, which is precisely the efficiency gap the paper reports.
 
 use super::bounds::phi_upper_trivial;
-use super::feasible::{Oracle, OracleStats};
+use super::feasible::{Oracle, OracleStats, OracleWorkspace};
 use super::{Assigner, Assignment, Instance};
 
-/// The NLIP assigner.
-#[derive(Clone, Debug, Default)]
+/// The NLIP assigner. Like OBTA it pools an [`OracleWorkspace`] across
+/// arrivals.
+#[derive(Debug, Default)]
 pub struct Nlip {
     pub stats: OracleStats,
+    ws: OracleWorkspace,
 }
 
 impl Nlip {
     pub fn new() -> Self {
         Nlip::default()
+    }
+
+    /// Reserved capacity of the pooled oracle arenas
+    /// (allocation-stability tests).
+    pub fn workspace_footprint(&self) -> usize {
+        self.ws.footprint()
     }
 }
 
@@ -38,9 +46,10 @@ impl Assigner for Nlip {
             };
         }
         let hi = phi_upper_trivial(inst);
-        let mut oracle = Oracle::new(inst);
+        let mut oracle = Oracle::with_workspace(inst, std::mem::take(&mut self.ws));
         let (phi, per_group) = oracle.search_min_phi(1, hi, inst.groups.len() as u64 + 1);
         self.stats.merge(&oracle.stats);
+        self.ws = oracle.into_workspace();
         Assignment { per_group, phi }
     }
 

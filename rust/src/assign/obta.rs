@@ -10,19 +10,28 @@
 //! remaining sub-intervals cannot contain a smaller Φ_c".
 
 use super::bounds::{phi_lower, phi_upper};
-use super::feasible::{Oracle, OracleStats};
+use super::feasible::{Oracle, OracleStats, OracleWorkspace};
 use super::{program_phi, Assigner, Assignment, Instance};
 
-/// The OBTA assigner.
-#[derive(Clone, Debug, Default)]
+/// The OBTA assigner. Carries the pooled [`OracleWorkspace`] so the
+/// per-arrival flow network is rebuilt into recycled arenas instead of
+/// freshly allocated ones.
+#[derive(Debug, Default)]
 pub struct Obta {
     /// Accumulated oracle tier counters (perf telemetry).
     pub stats: OracleStats,
+    ws: OracleWorkspace,
 }
 
 impl Obta {
     pub fn new() -> Self {
         Obta::default()
+    }
+
+    /// Reserved capacity of the pooled oracle arenas
+    /// (allocation-stability tests).
+    pub fn workspace_footprint(&self) -> usize {
+        self.ws.footprint()
     }
 }
 
@@ -40,13 +49,14 @@ impl Assigner for Obta {
         }
         let lo = phi_lower(inst);
         let hi = phi_upper(inst);
-        let mut oracle = Oracle::new(inst);
+        let mut oracle = Oracle::with_workspace(inst, std::mem::take(&mut self.ws));
         // Φ⁺ assumes each group can pile onto a single server; with
         // integer slots per (group, server) pair the bound can be short
         // by at most K_c − 1 slots when groups collide — search_min_phi
         // widens lazily if that ever binds.
         let (phi, per_group) = oracle.search_min_phi(lo, hi, inst.groups.len() as u64 + 1);
         self.stats.merge(&oracle.stats);
+        self.ws = oracle.into_workspace();
         debug_assert_eq!(program_phi(inst, &per_group), phi);
         Assignment { per_group, phi }
     }

@@ -22,88 +22,114 @@ use crate::util::rng::Rng;
 
 use super::{program_phi, Assigner, Assignment, Instance};
 
-/// The RD assigner. Carries an RNG for the paper's random tie-breaking.
+/// Pooled replica tables and per-server heaps, reused across arrivals so
+/// the steady-state RD rebuild is allocation-free once warmed.
+#[derive(Clone, Debug, Default)]
+struct RdWorkspace {
+    /// Group index of each task.
+    task_group: Vec<usize>,
+    /// Current copy count per task.
+    copies: Vec<u32>,
+    /// Per-task live holder list (row pool; rows `0..task_group.len()`
+    /// are live).
+    holders: Vec<Vec<ServerId>>,
+    /// Live replica count per server.
+    load: Vec<u64>,
+    /// Per-server lazy max-heap of (copies_at_push, tiebreak, task).
+    heaps: Vec<BinaryHeap<(u32, u32, usize)>>,
+}
+
+/// The RD assigner. Carries an RNG for the paper's random tie-breaking
+/// plus the pooled workspace.
 #[derive(Clone, Debug)]
 pub struct Rd {
     rng: Rng,
+    ws: RdWorkspace,
 }
 
 impl Rd {
     pub fn new(seed: u64) -> Self {
         Rd {
             rng: Rng::seed_from(seed ^ 0x5D_D3_1E_57),
+            ws: RdWorkspace::default(),
         }
+    }
+
+    /// Reserved capacity of the pooled buffers (allocation-stability
+    /// tests).
+    pub fn scratch_footprint(&self) -> usize {
+        self.ws.task_group.capacity()
+            + self.ws.copies.capacity()
+            + self.ws.load.capacity()
+            + self.ws.holders.capacity()
+            + self.ws.holders.iter().map(|h| h.capacity()).sum::<usize>()
+            + self.ws.heaps.capacity()
+            + self.ws.heaps.iter().map(|h| h.capacity()).sum::<usize>()
     }
 }
 
-/// Replica state for one job's assignment.
+/// Replica state for one job's assignment: a view over the pooled
+/// workspace.
 struct RdState<'a> {
     inst: &'a Instance<'a>,
-    /// Group index of each task.
-    task_group: Vec<usize>,
-    /// Current copy count per task.
-    copies: Vec<u32>,
-    /// Whether replica (task, server) is live: per-task sorted holder list.
-    holders: Vec<Vec<ServerId>>,
-    /// Live replica count per server.
-    load: Vec<u64>,
-    /// Per-server lazy max-heap of (copies_at_push, tiebreak, task).
-    heap: Vec<BinaryHeap<(u32, u32, usize)>>,
+    ws: &'a mut RdWorkspace,
 }
 
 impl<'a> RdState<'a> {
-    fn new(inst: &'a Instance<'a>, rng: &mut Rng) -> Self {
+    fn bind(inst: &'a Instance<'a>, ws: &'a mut RdWorkspace, rng: &mut Rng) -> Self {
         let m = inst.mu.len();
-        let mut task_group = Vec::new();
-        let mut copies = Vec::new();
-        let mut holders: Vec<Vec<ServerId>> = Vec::new();
-        let mut load = vec![0u64; m];
-        let mut heap: Vec<BinaryHeap<(u32, u32, usize)>> = (0..m).map(|_| BinaryHeap::new()).collect();
+        ws.task_group.clear();
+        ws.copies.clear();
+        ws.load.clear();
+        ws.load.resize(m, 0);
+        while ws.heaps.len() < m {
+            ws.heaps.push(BinaryHeap::new());
+        }
+        for h in ws.heaps.iter_mut() {
+            h.clear();
+        }
         for (k, g) in inst.groups.iter().enumerate() {
             for _ in 0..g.size {
-                let t = task_group.len();
-                task_group.push(k);
-                copies.push(g.servers.len() as u32);
-                holders.push(g.servers.clone());
+                let t = ws.task_group.len();
+                ws.task_group.push(k);
+                ws.copies.push(g.servers.len() as u32);
+                if t == ws.holders.len() {
+                    ws.holders.push(Vec::new());
+                }
+                ws.holders[t].clear();
+                ws.holders[t].extend_from_slice(&g.servers);
                 for &s in &g.servers {
-                    load[s] += 1;
-                    heap[s].push((g.servers.len() as u32, rng.next_u64() as u32, t));
+                    ws.load[s] += 1;
+                    ws.heaps[s].push((g.servers.len() as u32, rng.next_u64() as u32, t));
                 }
             }
         }
-        RdState {
-            inst,
-            task_group,
-            copies,
-            holders,
-            load,
-            heap,
-        }
+        RdState { inst, ws }
     }
 
     #[inline]
     fn busy(&self, m: ServerId) -> Slots {
-        if self.load[m] == 0 {
+        if self.ws.load[m] == 0 {
             self.inst.busy[m]
         } else {
-            self.inst.busy[m] + ceil_div(self.load[m], self.inst.mu[m])
+            self.inst.busy[m] + ceil_div(self.ws.load[m], self.inst.mu[m])
         }
     }
 
     /// Peek server m's best deletable replica (copies ≥ 2), lazily
     /// discarding stale heap entries. Returns its current copy count.
     fn peek_deletable(&mut self, m: ServerId) -> Option<u32> {
-        while let Some(&(c, tb, t)) = self.heap[m].peek() {
-            let live = self.holders[t].contains(&m);
+        while let Some(&(c, tb, t)) = self.ws.heaps[m].peek() {
+            let live = self.ws.holders[t].contains(&m);
             if !live {
-                self.heap[m].pop();
+                self.ws.heaps[m].pop();
                 continue;
             }
-            let cur = self.copies[t];
+            let cur = self.ws.copies[t];
             if cur != c {
                 // Stale count: reinsert with the current count.
-                self.heap[m].pop();
-                self.heap[m].push((cur, tb, t));
+                self.ws.heaps[m].pop();
+                self.ws.heaps[m].push((cur, tb, t));
                 continue;
             }
             if cur < 2 {
@@ -121,24 +147,24 @@ impl<'a> RdState<'a> {
         if self.peek_deletable(m).is_none() {
             return false;
         }
-        let (_, _, t) = self.heap[m].pop().unwrap();
-        let pos = self.holders[t].iter().position(|&x| x == m).unwrap();
-        self.holders[t].swap_remove(pos);
-        self.copies[t] -= 1;
-        self.load[m] -= 1;
+        let (_, _, t) = self.ws.heaps[m].pop().unwrap();
+        let pos = self.ws.holders[t].iter().position(|&x| x == m).unwrap();
+        self.ws.holders[t].swap_remove(pos);
+        self.ws.copies[t] -= 1;
+        self.ws.load[m] -= 1;
         true
     }
 
     /// Servers currently holding at least one replica, with max busy.
     fn target_servers(&self) -> Vec<ServerId> {
-        let max = (0..self.load.len())
-            .filter(|&m| self.load[m] > 0)
+        let max = (0..self.ws.load.len())
+            .filter(|&m| self.ws.load[m] > 0)
             .map(|m| self.busy(m))
             .max();
         match max {
             None => Vec::new(),
-            Some(mx) => (0..self.load.len())
-                .filter(|&m| self.load[m] > 0 && self.busy(m) == mx)
+            Some(mx) => (0..self.ws.load.len())
+                .filter(|&m| self.ws.load[m] > 0 && self.busy(m) == mx)
                 .collect(),
         }
     }
@@ -170,8 +196,8 @@ impl<'a> RdState<'a> {
             // Remove enough replicas from m to drop its busy time by one
             // slot (up to μ_m replicas), stopping early if deletables run
             // out.
-            let slots = ceil_div(self.load[m], self.inst.mu[m]);
-            let want = self.load[m] - self.inst.mu[m] * (slots - 1);
+            let slots = ceil_div(self.ws.load[m], self.inst.mu[m]);
+            let want = self.ws.load[m] - self.inst.mu[m] * (slots - 1);
             for _ in 0..want {
                 if !self.delete_one(m) {
                     break;
@@ -185,8 +211,8 @@ impl<'a> RdState<'a> {
     fn cleanup_phase(&mut self) {
         loop {
             let mut best: Option<(Slots, Slots, ServerId)> = None;
-            for m in 0..self.load.len() {
-                if self.load[m] == 0 {
+            for m in 0..self.ws.load.len() {
+                if self.ws.load[m] == 0 {
                     continue;
                 }
                 if self.peek_deletable(m).is_some() {
@@ -206,11 +232,11 @@ impl<'a> RdState<'a> {
     fn extract(&self) -> Vec<Vec<(ServerId, TaskCount)>> {
         let mut acc: Vec<std::collections::BTreeMap<ServerId, TaskCount>> =
             vec![Default::default(); self.inst.groups.len()];
-        for t in 0..self.task_group.len() {
-            debug_assert_eq!(self.copies[t], 1, "task {t} not reduced to one replica");
-            debug_assert_eq!(self.holders[t].len(), 1);
-            let m = self.holders[t][0];
-            *acc[self.task_group[t]].entry(m).or_insert(0) += 1;
+        for t in 0..self.ws.task_group.len() {
+            debug_assert_eq!(self.ws.copies[t], 1, "task {t} not reduced to one replica");
+            debug_assert_eq!(self.ws.holders[t].len(), 1);
+            let m = self.ws.holders[t][0];
+            *acc[self.ws.task_group[t]].entry(m).or_insert(0) += 1;
         }
         acc.into_iter()
             .map(|m| m.into_iter().collect())
@@ -224,7 +250,7 @@ impl Assigner for Rd {
     }
 
     fn assign(&mut self, inst: &Instance) -> Assignment {
-        let mut st = RdState::new(inst, &mut self.rng);
+        let mut st = RdState::bind(inst, &mut self.ws, &mut self.rng);
         st.deletion_phase();
         st.cleanup_phase();
         let per_group = st.extract();

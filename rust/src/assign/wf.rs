@@ -10,19 +10,106 @@
 //!
 //! Complexity: O(Σ_k |S_c^k| log |T_c^k|) — a binary search per group plus
 //! a walk over its servers.
+//!
+//! ## Zero-allocation hot path
+//!
+//! WF is the inner loop of the OCWF reordering driver (one evaluation per
+//! candidate per round, §IV), so the steady-state path must not touch the
+//! allocator. [`Wf::assign_into`] writes into a caller-owned
+//! [`WfOutcome`] whose buffers (per-group allocation lists, final busy
+//! vector) are reused across calls; the internal scratch (busy vector,
+//! participating-server list) is pooled in the `Wf` value. After warmup
+//! no call allocates — asserted by the capacity-stability test in
+//! `rust/tests/alloc_stability.rs`. The [`Assigner`] entry point and
+//! [`Wf::assign_with_busy`] wrap `assign_into` and clone the outcome into
+//! owned values for callers that want them.
 
-use crate::job::Slots;
+use crate::job::{ServerId, Slots, TaskCount};
 
 use super::bounds::water_level;
 use super::{Assigner, Assignment, Instance};
 
-/// The WF assigner. Stateless; a fresh busy-time scratch vector is built
-/// per call.
+/// A reusable WF evaluation result: the per-group allocation, the WF
+/// estimate Φ, and the post-assignment busy vector `b_m(K_c)`. The
+/// per-group buffer pool never shrinks (`groups_len` tracks the logical
+/// arity), so alternating between jobs of different shapes stays
+/// allocation-free once warmed.
+#[derive(Clone, Debug, Default)]
+pub struct WfOutcome {
+    /// Physical row pool; rows `0..groups_len` are the live allocation.
+    per_group: Vec<Vec<(ServerId, TaskCount)>>,
+    groups_len: usize,
+    /// WF's estimated completion time (the largest water level reached).
+    pub phi: Slots,
+    final_busy: Vec<Slots>,
+}
+
+impl WfOutcome {
+    /// `per_group()[k]` lists `(server, tasks)` with tasks > 0, aligned
+    /// with the instance's groups.
+    pub fn per_group(&self) -> &[Vec<(ServerId, TaskCount)>] {
+        &self.per_group[..self.groups_len]
+    }
+
+    /// Final per-server busy times `b_m(K_c)` after this assignment.
+    pub fn final_busy(&self) -> &[Slots] {
+        &self.final_busy
+    }
+
+    /// Clone into an owned [`Assignment`].
+    pub fn to_assignment(&self) -> Assignment {
+        Assignment {
+            per_group: self.per_group().to_vec(),
+            phi: self.phi,
+        }
+    }
+
+    /// Copy into an existing [`Assignment`], reusing its nested buffers.
+    pub fn write_assignment(&self, dst: &mut Assignment) {
+        dst.phi = self.phi;
+        let src = self.per_group();
+        dst.per_group.truncate(src.len());
+        for (d, s) in dst.per_group.iter_mut().zip(src) {
+            d.clear();
+            d.extend_from_slice(s);
+        }
+        while dst.per_group.len() < src.len() {
+            dst.per_group.push(src[dst.per_group.len()].clone());
+        }
+    }
+
+    /// Reserved capacity of every internal buffer (allocation-stability
+    /// tests).
+    pub fn footprint(&self) -> usize {
+        self.final_busy.capacity()
+            + self.per_group.capacity()
+            + self.per_group.iter().map(|g| g.capacity()).sum::<usize>()
+    }
+
+    /// Prepare for `k` groups: grow the row pool as needed, clear the
+    /// live rows, keep every allocation.
+    fn begin(&mut self, k: usize) {
+        while self.per_group.len() < k {
+            self.per_group.push(Vec::new());
+        }
+        for row in self.per_group.iter_mut().take(k) {
+            row.clear();
+        }
+        self.groups_len = k;
+        self.phi = 0;
+    }
+}
+
+/// The WF assigner with its pooled scratch (busy vector, participating
+/// list, and a spare outcome backing the owned-result wrappers).
 #[derive(Clone, Debug, Default)]
 pub struct Wf {
-    /// Scratch: per-server busy times b_m(k), reused across calls to
-    /// avoid re-allocating on the hot path.
+    /// Scratch: per-server busy times b_m(k), reused across calls.
     scratch_busy: Vec<Slots>,
+    /// Scratch: the group's participating servers (busy < level).
+    participating: Vec<ServerId>,
+    /// Backing buffer for the cloning wrappers ([`Wf::assign_with_busy`]).
+    outcome: WfOutcome,
 }
 
 impl Wf {
@@ -30,37 +117,29 @@ impl Wf {
         Wf::default()
     }
 
-    /// Assign and also return the final per-server busy times b_m(K_c)
-    /// (needed by the OCWF reordering driver to accumulate state across
-    /// jobs in the new order).
-    pub fn assign_with_busy(&mut self, inst: &Instance) -> (Assignment, Vec<Slots>) {
-        self.scratch_busy.clear();
-        self.scratch_busy.extend_from_slice(inst.busy);
+    /// Run WF and write the result into `out`, reusing both the caller's
+    /// outcome buffers and the internal scratch — the allocation-free
+    /// steady-state path.
+    pub fn assign_into(&mut self, inst: &Instance, out: &mut WfOutcome) {
         let busy = &mut self.scratch_busy;
+        let participating = &mut self.participating;
+        busy.clear();
+        busy.extend_from_slice(inst.busy);
+        out.begin(inst.groups.len());
 
-        let mut per_group = Vec::with_capacity(inst.groups.len());
-        // WF's estimated completion time (paper's WF(I)): the maximum
-        // estimated busy time over participating servers, i.e. the largest
-        // water level reached (eq. 15 with WF = WF_{K_c}).
-        let mut phi: Slots = 0;
-        for g in inst.groups {
+        for (gi, g) in inst.groups.iter().enumerate() {
             if g.size == 0 {
-                per_group.push(Vec::new());
-                continue;
+                continue; // row gi stays empty
             }
             let xi = water_level(&g.servers, g.size, busy, inst.mu);
-            phi = phi.max(xi);
+            out.phi = out.phi.max(xi);
             // Participating servers: estimated busy strictly below the
             // level.
             let mut remaining = g.size;
-            let mut alloc = Vec::new();
-            let participating: Vec<usize> = g
-                .servers
-                .iter()
-                .copied()
-                .filter(|&m| busy[m] < xi)
-                .collect();
+            participating.clear();
+            participating.extend(g.servers.iter().copied().filter(|&m| busy[m] < xi));
             debug_assert!(!participating.is_empty());
+            let alloc = &mut out.per_group[gi];
             for (i, &m) in participating.iter().enumerate() {
                 let cap = (xi - busy[m]) * inst.mu[m];
                 let take = if i + 1 == participating.len() {
@@ -81,14 +160,30 @@ impl Wf {
             }
             debug_assert_eq!(remaining, 0);
             // eq. (10): raise participating servers to the level.
-            for &m in &participating {
+            for &m in participating.iter() {
                 busy[m] = xi;
             }
-            per_group.push(alloc);
         }
 
-        let final_busy = busy.clone();
-        (Assignment { per_group, phi }, final_busy)
+        out.final_busy.clear();
+        out.final_busy.extend_from_slice(busy);
+    }
+
+    /// Assign and also return the final per-server busy times b_m(K_c)
+    /// as owned values (clones of the pooled outcome).
+    pub fn assign_with_busy(&mut self, inst: &Instance) -> (Assignment, Vec<Slots>) {
+        let mut out = std::mem::take(&mut self.outcome);
+        self.assign_into(inst, &mut out);
+        let assignment = out.to_assignment();
+        let final_busy = out.final_busy.clone();
+        self.outcome = out;
+        (assignment, final_busy)
+    }
+
+    /// Reserved capacity of the internal scratch (allocation-stability
+    /// tests).
+    pub fn scratch_footprint(&self) -> usize {
+        self.scratch_busy.capacity() + self.participating.capacity() + self.outcome.footprint()
     }
 }
 
@@ -182,6 +277,71 @@ mod tests {
         assert!(a.per_group[0].is_empty());
         assert_eq!(a.per_group[1], vec![(0, 2)]);
         assert_eq!(a.phi, 2);
+    }
+
+    #[test]
+    fn assign_into_reuses_buffers_across_shapes() {
+        // Alternating between a 3-group and a 1-group job must keep the
+        // outcome's row pool intact (logical arity shrinks, capacity
+        // does not) and keep results correct.
+        let big = vec![
+            TaskGroup::new(4, vec![0, 1]),
+            TaskGroup::new(2, vec![1]),
+            TaskGroup::new(3, vec![0]),
+        ];
+        let small = vec![TaskGroup::new(5, vec![0, 1])];
+        let mu = vec![1, 1];
+        let busy = vec![0, 0];
+        let mut wf = Wf::new();
+        let mut out = WfOutcome::default();
+        for _ in 0..3 {
+            let inst = Instance {
+                groups: &big,
+                mu: &mu,
+                busy: &busy,
+            };
+            wf.assign_into(&inst, &mut out);
+            assert_eq!(out.per_group().len(), 3);
+            let a = out.to_assignment();
+            validate_assignment(&inst, &a).unwrap();
+
+            let inst = Instance {
+                groups: &small,
+                mu: &mu,
+                busy: &busy,
+            };
+            wf.assign_into(&inst, &mut out);
+            assert_eq!(out.per_group().len(), 1);
+            let a = out.to_assignment();
+            validate_assignment(&inst, &a).unwrap();
+            assert_eq!(a.phi, 3); // 5 tasks over two μ=1 servers
+        }
+    }
+
+    #[test]
+    fn write_assignment_matches_to_assignment() {
+        let groups = vec![
+            TaskGroup::new(6, vec![0, 1, 2]),
+            TaskGroup::new(2, vec![2]),
+        ];
+        let mu = vec![2, 2, 2];
+        let busy = vec![1, 0, 0];
+        let inst = Instance {
+            groups: &groups,
+            mu: &mu,
+            busy: &busy,
+        };
+        let mut wf = Wf::new();
+        let mut out = WfOutcome::default();
+        wf.assign_into(&inst, &mut out);
+        let owned = out.to_assignment();
+        // Write into a dirty, differently-shaped assignment.
+        let mut reused = Assignment {
+            per_group: vec![vec![(9, 9)], vec![(8, 8)], vec![(7, 7)]],
+            phi: 99,
+        };
+        out.write_assignment(&mut reused);
+        assert_eq!(owned, reused);
     }
 
     #[test]

@@ -18,6 +18,21 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Format a counter with thousands separators (`1234567` → `1,234,567`).
+/// Used by the telemetry tables (`taos repro`, `taos simulate`) so large
+/// wf_evals / oracle-tier counts stay readable.
+pub fn fmt_count(n: u64) -> String {
+    let digits = n.to_string();
+    let mut out = String::with_capacity(digits.len() + digits.len() / 3);
+    for (i, c) in digits.chars().enumerate() {
+        if i > 0 && (digits.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
 /// Configuration for one benchmark run.
 #[derive(Clone, Debug)]
 pub struct BenchConfig {
@@ -216,6 +231,16 @@ impl TextTable {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fmt_count_groups_thousands() {
+        assert_eq!(fmt_count(0), "0");
+        assert_eq!(fmt_count(7), "7");
+        assert_eq!(fmt_count(999), "999");
+        assert_eq!(fmt_count(1_000), "1,000");
+        assert_eq!(fmt_count(1_234_567), "1,234,567");
+        assert_eq!(fmt_count(12_345), "12,345");
+    }
 
     #[test]
     fn bench_measures_sleep() {

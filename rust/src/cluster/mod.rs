@@ -8,6 +8,7 @@
 //! for its demo, using [`Cluster::chunk_holders`].
 
 pub mod placement;
+pub mod state;
 
 use crate::config::ClusterConfig;
 use crate::job::ServerId;

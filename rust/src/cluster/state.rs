@@ -1,0 +1,328 @@
+//! The unified cluster-state core shared by the assignment layer
+//! ([`crate::assign`]), the reordering scheduler ([`crate::sched::ocwf`])
+//! and both simulation engines ([`crate::sim`]).
+//!
+//! Before this module existed every layer carried its own ad-hoc
+//! `Vec<Slots>` busy vector and the reordered engine inlined its queue
+//! drain logic as a closure. The three pieces here factor that state out:
+//!
+//! - [`ClusterState`] — the per-server estimated busy times `b_m` (eq. 2),
+//!   with allocation-free reset/reload so hot loops can reuse one
+//!   instance across arrivals and reorder rounds.
+//! - [`ServerQueues`] — per-server FIFO queues of job task batches with
+//!   the *analytic* drain (entry-by-entry, no slot stepping) the
+//!   reordered engine uses between arrivals.
+//! - [`JobProgress`] — per-job remaining-task and completion bookkeeping
+//!   that draining updates.
+//!
+//! All three are plain data + methods: no interior mutability, no
+//! threading assumptions. Parallel candidate evaluation in the OCWF
+//! driver shares a `ClusterState` immutably during a round and mutates it
+//! only between rounds.
+
+use crate::assign::Instance;
+use crate::job::{Job, ServerId, Slots, TaskCount, TaskGroup};
+use crate::util::ceil_div;
+
+/// Per-server estimated busy times `b_m^c` (eq. 2): the number of whole
+/// slots each server needs to drain its current queue. This is the state
+/// every assigner scores candidate allocations against.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterState {
+    busy: Vec<Slots>,
+}
+
+impl ClusterState {
+    pub fn new(num_servers: usize) -> Self {
+        ClusterState {
+            busy: vec![0; num_servers],
+        }
+    }
+
+    pub fn num_servers(&self) -> usize {
+        self.busy.len()
+    }
+
+    /// The busy-time vector, for building [`Instance`]s.
+    #[inline]
+    pub fn busy(&self) -> &[Slots] {
+        &self.busy
+    }
+
+    /// Mutable access for engines that compute busy times directly from
+    /// their own queue representation (e.g. the slot-stepping validator).
+    #[inline]
+    pub fn busy_mut(&mut self) -> &mut [Slots] {
+        &mut self.busy
+    }
+
+    /// Resize to `num_servers` and zero every entry, reusing the existing
+    /// allocation (the OCWF driver resets to "all servers empty" at the
+    /// start of every reorder round sequence — Alg. 3 line 4).
+    pub fn reset(&mut self, num_servers: usize) {
+        self.busy.clear();
+        self.busy.resize(num_servers, 0);
+    }
+
+    /// Load busy times from absolute queue-empty slots: `b_m = max(free_m
+    /// − now, 0)` (the FIFO engine's arrival-time view).
+    pub fn observe_free(&mut self, free: &[Slots], now: Slots) {
+        self.busy.clear();
+        self.busy
+            .extend(free.iter().map(|&f| f.saturating_sub(now)));
+    }
+
+    /// Overwrite from a computed busy vector (e.g. WF's post-assignment
+    /// `b_m(K_c)`), reusing the allocation.
+    pub fn copy_from(&mut self, src: &[Slots]) {
+        self.busy.clear();
+        self.busy.extend_from_slice(src);
+    }
+
+    /// View this state as an assignment-problem instance for one job.
+    pub fn instance<'a>(&'a self, groups: &'a [TaskGroup], mu: &'a [u64]) -> Instance<'a> {
+        Instance {
+            groups,
+            mu,
+            busy: &self.busy,
+        }
+    }
+
+    /// Reserved capacity of the internal buffer (allocation-stability
+    /// tests).
+    pub fn footprint(&self) -> usize {
+        self.busy.capacity()
+    }
+}
+
+/// One queue entry: the tasks of one job assigned to one server, split by
+/// task group (`(group index, tasks)` with tasks > 0).
+#[derive(Clone, Debug)]
+pub struct QueueEntry {
+    pub job: usize,
+    pub parts: Vec<(usize, TaskCount)>,
+}
+
+impl QueueEntry {
+    pub fn total(&self) -> TaskCount {
+        self.parts.iter().map(|&(_, n)| n).sum()
+    }
+}
+
+/// Per-job progress bookkeeping updated by [`ServerQueues::drain`].
+#[derive(Clone, Debug)]
+pub struct JobProgress {
+    /// Remaining tasks per group (aligned with `jobs[i].groups`).
+    pub remaining: Vec<Vec<TaskCount>>,
+    /// Total remaining tasks per job.
+    pub total_remaining: Vec<TaskCount>,
+    /// Absolute completion slot, once all of a job's tasks finished.
+    pub completion: Vec<Option<Slots>>,
+    /// Latest finish observed so far per job (starts at the arrival).
+    pub last_finish: Vec<Slots>,
+}
+
+impl JobProgress {
+    pub fn new(jobs: &[Job]) -> Self {
+        JobProgress {
+            remaining: jobs
+                .iter()
+                .map(|j| j.groups.iter().map(|g| g.size).collect())
+                .collect(),
+            total_remaining: jobs.iter().map(|j| j.total_tasks()).collect(),
+            completion: vec![None; jobs.len()],
+            last_finish: jobs.iter().map(|j| j.arrival).collect(),
+        }
+    }
+
+    pub fn all_complete(&self) -> bool {
+        self.completion.iter().all(|c| c.is_some())
+    }
+}
+
+/// Per-server FIFO queues of [`QueueEntry`]s with analytic draining —
+/// the reordered engine's execution substrate. Queues are rebuilt from
+/// scratch on every arrival (OCWF reassigns every remaining task), so
+/// [`ServerQueues::clear`] keeps the outer allocations alive.
+#[derive(Clone, Debug, Default)]
+pub struct ServerQueues {
+    queues: Vec<Vec<QueueEntry>>,
+}
+
+impl ServerQueues {
+    pub fn new(num_servers: usize) -> Self {
+        ServerQueues {
+            queues: vec![Vec::new(); num_servers],
+        }
+    }
+
+    /// Drop every entry, keeping the per-server queue allocations.
+    pub fn clear(&mut self) {
+        for q in self.queues.iter_mut() {
+            q.clear();
+        }
+    }
+
+    pub fn push(&mut self, server: ServerId, entry: QueueEntry) {
+        self.queues[server].push(entry);
+    }
+
+    /// Advance every server's queue analytically from slot `from` to slot
+    /// `to`: whole entries complete at `t + ceil(total/μ)`; the entry at
+    /// the boundary is partially consumed by whole slots only (a partial
+    /// slot is never shared between jobs, eq. 2). Updates `progress`
+    /// (remaining counts, last-finish, completion) as entries retire.
+    pub fn drain(&mut self, jobs: &[Job], progress: &mut JobProgress, from: Slots, to: Slots) {
+        for (m, q) in self.queues.iter_mut().enumerate() {
+            let mut t = from;
+            let mut consumed = 0usize;
+            for entry in q.iter_mut() {
+                if t >= to {
+                    break;
+                }
+                let mu = jobs[entry.job].mu[m];
+                let slots = ceil_div(entry.total(), mu);
+                if t + slots <= to {
+                    // Entry fully processed at t + slots.
+                    t += slots;
+                    for &(k, n) in &entry.parts {
+                        progress.remaining[entry.job][k] -= n;
+                        progress.total_remaining[entry.job] -= n;
+                    }
+                    progress.last_finish[entry.job] = progress.last_finish[entry.job].max(t);
+                    if progress.total_remaining[entry.job] == 0
+                        && progress.completion[entry.job].is_none()
+                    {
+                        progress.completion[entry.job] = Some(progress.last_finish[entry.job]);
+                    }
+                    consumed += 1;
+                } else {
+                    // Partial: (to − t) whole slots of this entry.
+                    let mut budget = (to - t) * mu;
+                    for (k, n) in entry.parts.iter_mut() {
+                        let take = (*n).min(budget);
+                        *n -= take;
+                        progress.remaining[entry.job][*k] -= take;
+                        progress.total_remaining[entry.job] -= take;
+                        budget -= take;
+                        if budget == 0 {
+                            break;
+                        }
+                    }
+                    entry.parts.retain(|&(_, n)| n > 0);
+                    // The entry cannot have been exhausted: it needed more
+                    // than (to − t) slots.
+                    debug_assert!(entry.total() > 0);
+                    break;
+                }
+            }
+            q.drain(..consumed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: usize, arrival: Slots, sizes: &[u64], servers: &[&[usize]], mu: Vec<u64>) -> Job {
+        Job {
+            id,
+            arrival,
+            groups: sizes
+                .iter()
+                .zip(servers)
+                .map(|(&s, &sv)| TaskGroup::new(s, sv.to_vec()))
+                .collect(),
+            mu,
+        }
+    }
+
+    #[test]
+    fn observe_free_saturates() {
+        let mut st = ClusterState::new(3);
+        st.observe_free(&[10, 2, 7], 5);
+        assert_eq!(st.busy(), &[5, 0, 2]);
+        assert_eq!(st.num_servers(), 3);
+    }
+
+    #[test]
+    fn reset_reuses_allocation() {
+        let mut st = ClusterState::new(8);
+        st.copy_from(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        let cap = st.footprint();
+        st.reset(8);
+        assert_eq!(st.busy(), &[0; 8]);
+        assert_eq!(st.footprint(), cap);
+        st.reset(4);
+        assert_eq!(st.num_servers(), 4);
+        assert_eq!(st.footprint(), cap, "shrinking must not reallocate");
+    }
+
+    #[test]
+    fn instance_view_borrows_busy() {
+        let mut st = ClusterState::new(2);
+        st.copy_from(&[3, 0]);
+        let groups = vec![TaskGroup::new(4, vec![0, 1])];
+        let mu = vec![1, 1];
+        let inst = st.instance(&groups, &mu);
+        assert_eq!(inst.busy, &[3, 0]);
+        assert_eq!(inst.total_tasks(), 4);
+    }
+
+    #[test]
+    fn drain_whole_and_partial_entries() {
+        // Server 0, μ = 2: entry of 5 tasks = 3 slots.
+        let jobs = vec![job(0, 0, &[5], &[&[0]], vec![2])];
+        let mut progress = JobProgress::new(&jobs);
+        let mut queues = ServerQueues::new(1);
+        queues.push(
+            0,
+            QueueEntry {
+                job: 0,
+                parts: vec![(0, 5)],
+            },
+        );
+        // Drain 2 of the 3 slots: 4 tasks consumed, 1 remains.
+        queues.drain(&jobs, &mut progress, 0, 2);
+        assert_eq!(progress.remaining[0], vec![1]);
+        assert_eq!(progress.total_remaining[0], 1);
+        assert!(progress.completion[0].is_none());
+        // Drain the final slot: entry retires, job completes at 3.
+        queues.drain(&jobs, &mut progress, 2, 3);
+        assert_eq!(progress.total_remaining[0], 0);
+        assert_eq!(progress.completion[0], Some(3));
+        assert!(progress.all_complete());
+    }
+
+    #[test]
+    fn drain_respects_fifo_order_per_server() {
+        // Two entries on one μ=1 server: job 0 (2 tasks) then job 1
+        // (2 tasks). Draining 3 slots finishes job 0 at 2 and eats one
+        // task of job 1.
+        let jobs = vec![
+            job(0, 0, &[2], &[&[0]], vec![1]),
+            job(1, 0, &[2], &[&[0]], vec![1]),
+        ];
+        let mut progress = JobProgress::new(&jobs);
+        let mut queues = ServerQueues::new(1);
+        queues.push(
+            0,
+            QueueEntry {
+                job: 0,
+                parts: vec![(0, 2)],
+            },
+        );
+        queues.push(
+            0,
+            QueueEntry {
+                job: 1,
+                parts: vec![(0, 2)],
+            },
+        );
+        queues.drain(&jobs, &mut progress, 0, 3);
+        assert_eq!(progress.completion[0], Some(2));
+        assert_eq!(progress.total_remaining[1], 1);
+        assert!(progress.completion[1].is_none());
+    }
+}

@@ -88,6 +88,11 @@ pub struct SimConfig {
     pub max_slots: u64,
     /// Record per-job completion times (needed for CDFs).
     pub record_jct: bool,
+    /// Worker threads for the OCWF(-ACC) reorder rounds (0 = all cores,
+    /// 1 = serial). Schedules are bit-identical at any value; this is a
+    /// wall-clock knob only. Keep at 1 when a sweep already parallelizes
+    /// across cells, or the two levels oversubscribe each other.
+    pub reorder_threads: usize,
 }
 
 impl Default for SimConfig {
@@ -95,6 +100,7 @@ impl Default for SimConfig {
         SimConfig {
             max_slots: 50_000_000,
             record_jct: true,
+            reorder_threads: 1,
         }
     }
 }
@@ -190,6 +196,9 @@ impl ExperimentConfig {
                 "csv_path" => cfg.trace.csv_path = Some(val.to_string()),
                 "max_slots" => cfg.sim.max_slots = val.parse().map_err(|_| perr("bad u64"))?,
                 "record_jct" => cfg.sim.record_jct = val.parse().map_err(|_| perr("bad bool"))?,
+                "reorder_threads" => {
+                    cfg.sim.reorder_threads = val.parse().map_err(|_| perr("bad usize"))?
+                }
                 "seed" => cfg.seed = val.parse().map_err(|_| perr("bad u64"))?,
                 other => {
                     return Err(Error::TraceParse {
@@ -270,6 +279,14 @@ mod tests {
         let mut cfg = ExperimentConfig::default();
         cfg.cluster.mu_lo = 0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn parses_reorder_threads_key() {
+        let cfg = ExperimentConfig::from_str("reorder_threads = 4").unwrap();
+        assert_eq!(cfg.sim.reorder_threads, 4);
+        assert_eq!(SimConfig::default().reorder_threads, 1);
+        assert!(ExperimentConfig::from_str("reorder_threads = x").is_err());
     }
 
     #[test]

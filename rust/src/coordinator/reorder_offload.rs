@@ -155,7 +155,7 @@ impl OffloadedReorder {
 
 /// Convenience for tests: native reorder result for comparison.
 pub fn native_reorder(outstanding: &[Outstanding], num_servers: usize) -> ReorderOutcome {
-    reorder(outstanding, num_servers, false, &mut Wf::new())
+    reorder(outstanding, num_servers, false)
 }
 
 #[cfg(test)]

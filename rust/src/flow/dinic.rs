@@ -17,29 +17,64 @@ struct Edge {
     orig: u64,
 }
 
-/// Dinic max-flow solver over a fixed node set.
-#[derive(Clone, Debug)]
+/// Dinic max-flow solver over a fixed node set. The arena is reusable two
+/// ways: [`Dinic::reset`] re-runs flows on the same topology, and
+/// [`Dinic::reinit`] rebuilds a fresh graph while keeping every
+/// allocation (adjacency rows, edge arena, BFS queue) — the feasibility
+/// oracle's per-arrival pooling relies on the latter.
+#[derive(Clone, Debug, Default)]
 pub struct Dinic {
     /// Adjacency: node -> indices into `edges`. Edge `i^1` is the reverse
-    /// of edge `i` (edges are pushed in pairs).
+    /// of edge `i` (edges are pushed in pairs). Rows beyond the active
+    /// node count are kept (empty) for reuse.
     adj: Vec<Vec<usize>>,
+    /// Active node count (≤ `adj.len()` after a shrinking `reinit`).
+    nodes: usize,
     edges: Vec<Edge>,
     level: Vec<i32>,
     iter: Vec<usize>,
+    /// Pooled BFS frontier.
+    queue: std::collections::VecDeque<usize>,
 }
 
 impl Dinic {
     pub fn new(n: usize) -> Self {
-        Dinic {
-            adj: vec![Vec::new(); n],
-            edges: Vec::new(),
-            level: vec![-1; n],
-            iter: vec![0; n],
+        let mut d = Dinic::default();
+        d.reinit(n);
+        d
+    }
+
+    /// Clear the graph for reuse with `n` nodes, keeping all allocations.
+    pub fn reinit(&mut self, n: usize) {
+        self.edges.clear();
+        for row in self.adj.iter_mut() {
+            row.clear();
         }
+        if self.adj.len() < n {
+            self.adj.resize_with(n, Vec::new);
+        }
+        if self.level.len() < n {
+            self.level.resize(n, -1);
+        }
+        if self.iter.len() < n {
+            self.iter.resize(n, 0);
+        }
+        self.nodes = n;
     }
 
     pub fn num_nodes(&self) -> usize {
-        self.adj.len()
+        self.nodes
+    }
+
+    /// Reserved capacity across the internal arenas (allocation-stability
+    /// tests).
+    pub fn footprint(&self) -> usize {
+        self.adj.capacity()
+            + self.adj.iter().map(|a| a.capacity()).sum::<usize>()
+            + self.edges.capacity()
+            + self.level.capacity()
+            + self.iter.capacity()
+            + self.queue.capacity()
     }
 
     /// Add a directed edge `u -> v` with capacity `cap`.
@@ -78,15 +113,15 @@ impl Dinic {
 
     fn bfs(&mut self, s: usize, t: usize) -> bool {
         self.level.iter_mut().for_each(|l| *l = -1);
-        let mut queue = std::collections::VecDeque::with_capacity(self.adj.len());
+        self.queue.clear();
         self.level[s] = 0;
-        queue.push_back(s);
-        while let Some(u) = queue.pop_front() {
+        self.queue.push_back(s);
+        while let Some(u) = self.queue.pop_front() {
             for &ei in &self.adj[u] {
                 let e = &self.edges[ei];
                 if e.cap > 0 && self.level[e.to] < 0 {
                     self.level[e.to] = self.level[u] + 1;
-                    queue.push_back(e.to);
+                    self.queue.push_back(e.to);
                 }
             }
         }
@@ -215,6 +250,29 @@ mod tests {
         d.add_edge(0, 1, 3);
         d.add_edge(0, 1, 4);
         assert_eq!(d.max_flow(0, 1), 7);
+    }
+
+    #[test]
+    fn reinit_rebuilds_without_growth() {
+        let mut d = Dinic::new(4);
+        d.add_edge(0, 1, 10);
+        d.add_edge(1, 3, 10);
+        assert_eq!(d.max_flow(0, 3), 10);
+        let fp = d.footprint();
+        // Same-shape rebuild: capacities must not grow.
+        for _ in 0..3 {
+            d.reinit(4);
+            d.add_edge(0, 1, 7);
+            d.add_edge(1, 3, 9);
+            assert_eq!(d.max_flow(0, 3), 7);
+            assert_eq!(d.footprint(), fp, "reinit must reuse arenas");
+        }
+        // Shrinking keeps the larger arenas alive.
+        d.reinit(2);
+        assert_eq!(d.num_nodes(), 2);
+        d.add_edge(0, 1, 3);
+        assert_eq!(d.max_flow(0, 1), 3);
+        assert_eq!(d.footprint(), fp);
     }
 
     #[test]

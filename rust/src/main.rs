@@ -66,7 +66,12 @@ fn build_cli() -> Cli {
             flag_req("config", "config file (key = value lines)"),
             flag_req(
                 "scenario",
-                "named workload: alibaba | bursty | heavy-tail | hetero-cap | hotspot",
+                "named workload: alibaba | bursty | heavy-tail | hetero-cap | hotspot | \
+                 bursty-hetero | hotspot-heavy-tail",
+            ),
+            flag_req(
+                "reorder-threads",
+                "worker threads for OCWF reorder rounds (0 = all cores) [default 1]",
             ),
         ]
     };
@@ -187,6 +192,9 @@ fn config_from(parsed: &taos::cli::Parsed) -> Result<ExperimentConfig, String> {
             cfg.trace.csv_path = Some(p.to_string());
         }
     }
+    if let Some(v) = parsed.get_parse::<usize>("reorder-threads")? {
+        cfg.sim.reorder_threads = v;
+    }
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(cfg)
 }
@@ -215,7 +223,15 @@ fn cmd_simulate(parsed: &taos::cli::Parsed) -> Result<(), String> {
         println!("makespan       : {} slots", out.makespan);
         println!("overhead       : {:.1} us/arrival", out.overhead.mean_us());
         if out.wf_evals > 0 {
-            println!("WF evaluations : {}", out.wf_evals);
+            println!(
+                "WF evaluations : {} ({} reorder thread(s))",
+                taos::benchlib::fmt_count(out.wf_evals),
+                if cfg.sim.reorder_threads == 0 {
+                    "all".to_string()
+                } else {
+                    cfg.sim.reorder_threads.to_string()
+                }
+            );
         }
         if let Some(s) = out.oracle_stats {
             println!(
@@ -276,6 +292,12 @@ fn cmd_repro(parsed: &taos::cli::Parsed) -> Result<(), String> {
         let sc = Scenario::parse(s).ok_or_else(|| format!("unknown scenario `{s}`"))?;
         sc.apply(&mut base);
     }
+    // Within-cell parallelism (OCWF reorder rounds); the schedule is
+    // bit-identical at any value, so this composes with --threads — but
+    // prefer one level or the other to avoid oversubscription.
+    if let Some(v) = parsed.get_parse::<usize>("reorder-threads")? {
+        base.sim.reorder_threads = v;
+    }
     let opts = taos::sweep::SweepOptions::default()
         .with_threads(parsed.get_parse::<usize>("threads")?.unwrap_or(1))
         .with_trials(parsed.get_parse::<usize>("trials")?.unwrap_or(1));
@@ -289,7 +311,7 @@ fn cmd_repro(parsed: &taos::cli::Parsed) -> Result<(), String> {
         "scenarios" => {
             println!("scenario legend:");
             for (i, sc) in Scenario::ALL.iter().enumerate() {
-                println!("  {i} = {:<11} {}", sc.name(), sc.describe());
+                println!("  {i} = {:<18} {}", sc.name(), sc.describe());
             }
             println!();
             sweep::fig_scenarios(&base, &opts)
@@ -316,11 +338,11 @@ fn cmd_gen_trace(parsed: &taos::cli::Parsed) -> Result<(), String> {
     let sc_name = parsed.get_or("scenario", "alibaba");
     let scenario =
         Scenario::parse(sc_name).ok_or_else(|| format!("unknown scenario `{sc_name}`"))?;
-    if scenario.is_cluster_side() {
+    if scenario.has_cluster_twist() {
         eprintln!(
-            "note: `{}` is a cluster-side scenario — its twist lives in the cluster \
-             model, so the emitted trace shape equals the baseline; pass \
-             --scenario {} at simulation time to get the twist",
+            "note: `{}` includes a cluster-side twist — a CSV trace captures only \
+             the workload shape, so pass --scenario {} at simulation time to get \
+             the full twist",
             scenario.name(),
             scenario.name()
         );

@@ -16,11 +16,46 @@
 //! arrival) and the two schedulers produce bit-identical schedules — the
 //! equivalence the paper's Table I reports. The weaker test gives up a
 //! negligible amount of pruning.
+//!
+//! ## Two-phase driver, parallel rounds, zero-allocation steady state
+//!
+//! [`reorder_into`] splits every round into an **evaluate** phase — the
+//! candidate WF evaluations, which all score against the *same* busy
+//! vector and are therefore independent — and a serial **replay** phase
+//! that walks the candidates in the exact order the sequential algorithm
+//! would and applies its acceptance/early-exit rules. With `threads > 1`
+//! the evaluate phase fans out across
+//! [`pool::parallel_for_each`](crate::sweep::pool::parallel_for_each)
+//! workers, each owning a private [`Wf`] + outcome arena.
+//!
+//! Because replay re-applies the serial decision rules verbatim, the
+//! outcome (`order`, `assignments`, `wf_evals`) is **bit-identical at any
+//! thread count**:
+//!
+//! - plain OCWF evaluates every unplaced candidate anyway, so the fan-out
+//!   wastes nothing;
+//! - OCWF-ACC evaluates *speculatively* in small chunks (2×threads).
+//!   Replay consumes a chunk under the serial rules — candidates the
+//!   serial path would have skipped are simply discarded (not counted in
+//!   `wf_evals`, their stale bounds untouched), and the strict-`>` early
+//!   exit abandons the rest of the chunk exactly where the serial scan
+//!   would break. Speculation can waste up to one chunk of evaluations
+//!   per round, so parallel ACC trades work for latency; it pays off when
+//!   rounds are wide (many outstanding jobs).
+//!
+//! All per-call state — materialized remaining-groups, stale bounds, the
+//! accumulated [`ClusterState`], candidate lists, per-worker WF arenas —
+//! lives in a caller-pooled [`ReorderWorkspace`], and results are written
+//! into a reusable [`ReorderOutcome`], so the steady-state driver touches
+//! the allocator zero times per call (asserted by
+//! `rust/tests/alloc_stability.rs`).
 
 use crate::assign::bounds::phi_lower;
-use crate::assign::wf::Wf;
+use crate::assign::wf::{Wf, WfOutcome};
 use crate::assign::{Assignment, Instance};
+use crate::cluster::state::ClusterState;
 use crate::job::{Job, Slots, TaskCount, TaskGroup};
+use crate::sweep::pool;
 
 /// An outstanding job at a reorder point: the original job plus the
 /// per-group counts of not-yet-processed tasks.
@@ -35,25 +70,13 @@ impl<'a> Outstanding<'a> {
     pub fn total_remaining(&self) -> TaskCount {
         self.remaining.iter().sum()
     }
-
-    /// Materialize the remaining work as task groups (sizes = remaining).
-    fn remaining_groups(&self) -> Vec<TaskGroup> {
-        self.job
-            .groups
-            .iter()
-            .zip(&self.remaining)
-            .map(|(g, &r)| TaskGroup {
-                size: r,
-                servers: g.servers.clone(),
-            })
-            .collect()
-    }
 }
 
 /// The outcome of one reorder: for each position in the new order, the
 /// index into the `outstanding` slice and the WF assignment of that job's
 /// remaining tasks (computed against the busy times of its predecessors).
-#[derive(Clone, Debug)]
+/// Reused across calls by [`reorder_into`] (buffers are recycled).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct ReorderOutcome {
     pub order: Vec<usize>,
     pub assignments: Vec<Assignment>,
@@ -62,25 +85,208 @@ pub struct ReorderOutcome {
     pub wf_evals: u64,
 }
 
-/// Run one OCWF(-ACC) reordering round over the outstanding jobs.
-///
-/// `num_servers` is M; each outstanding job carries its own μ vector.
-pub fn reorder(
+impl ReorderOutcome {
+    fn begin(&mut self, n: usize) {
+        self.order.clear();
+        self.wf_evals = 0;
+        // Keep up to n assignment buffers for in-place reuse; each round
+        // overwrites (or appends) exactly one.
+        self.assignments.truncate(n);
+    }
+
+    /// Reserved capacity across the reusable buffers
+    /// (allocation-stability tests).
+    pub fn footprint(&self) -> usize {
+        self.order.capacity()
+            + self.assignments.capacity()
+            + self
+                .assignments
+                .iter()
+                .map(|a| {
+                    a.per_group.capacity()
+                        + a.per_group.iter().map(|g| g.capacity()).sum::<usize>()
+                })
+                .sum::<usize>()
+    }
+}
+
+/// One evaluation worker: a private WF instance plus an arena of outcome
+/// slots it fills during a round. Workers are index-striped over the
+/// candidates (see [`pool::parallel_for_each`]), so each worker's arena
+/// evolves deterministically.
+#[derive(Clone, Debug, Default)]
+struct EvalSlot {
+    wf: Wf,
+    /// Live outcome count this round (`outs[..used]`).
+    used: usize,
+    /// Round-global scan position of each live outcome.
+    pos: Vec<usize>,
+    /// Outcome arena; never shrinks.
+    outs: Vec<WfOutcome>,
+}
+
+impl EvalSlot {
+    fn begin(&mut self) {
+        self.used = 0;
+        self.pos.clear();
+    }
+
+    /// Evaluate one candidate into the next arena slot. Recording
+    /// `scan_pos` explicitly (rather than deriving it from the striping
+    /// arithmetic) keeps the replay's lookup independent of
+    /// `parallel_for_each`'s scheduling contract.
+    fn eval(&mut self, scan_pos: usize, inst: &Instance) {
+        if self.outs.len() == self.used {
+            self.outs.push(WfOutcome::default());
+        }
+        self.wf.assign_into(inst, &mut self.outs[self.used]);
+        self.pos.push(scan_pos);
+        self.used += 1;
+    }
+
+    fn footprint(&self) -> usize {
+        self.wf.scratch_footprint()
+            + self.pos.capacity()
+            + self.outs.capacity()
+            + self.outs.iter().map(|o| o.footprint()).sum::<usize>()
+    }
+}
+
+/// Caller-pooled scratch for [`reorder_into`]: everything a reordering
+/// needs beyond the outstanding set itself. One workspace per simulation
+/// (or per thread of a sweep cell); reuse across arrivals makes the
+/// steady-state driver allocation-free.
+#[derive(Clone, Debug, Default)]
+pub struct ReorderWorkspace {
+    /// Per-worker evaluation state (≥ the thread count of the call).
+    slots: Vec<EvalSlot>,
+    /// Materialized remaining-task groups per outstanding job (row pool;
+    /// rows `0..n` are live). Server lists are copied from the jobs, so
+    /// rows only reallocate when a larger job lands on them.
+    groups: Vec<Vec<TaskGroup>>,
+    /// OCWF-ACC lazily maintained lower bounds (see `reorder_into`).
+    stale_bounds: Vec<Slots>,
+    placed: Vec<bool>,
+    /// Candidate scan order of the current round.
+    cands: Vec<usize>,
+    /// Per-slot arena watermarks at the start of the current chunk.
+    marks: Vec<usize>,
+    /// Scan position → (slot, arena index) of its evaluation.
+    lookup: Vec<(u32, u32)>,
+    /// Busy times accumulated by the jobs placed so far this reordering.
+    state: ClusterState,
+}
+
+impl ReorderWorkspace {
+    fn ensure(&mut self, n: usize, num_servers: usize, threads: usize) {
+        while self.slots.len() < threads.max(1) {
+            self.slots.push(EvalSlot::default());
+        }
+        while self.groups.len() < n {
+            self.groups.push(Vec::new());
+        }
+        self.stale_bounds.clear();
+        self.stale_bounds.resize(n, 0);
+        self.placed.clear();
+        self.placed.resize(n, false);
+        self.cands.clear();
+        self.marks.clear();
+        self.marks.resize(self.slots.len(), 0);
+        self.lookup.clear();
+        self.lookup.resize(n, (0, 0));
+        self.state.reset(num_servers);
+    }
+
+    /// Rebuild row `i` in place: sizes from the outstanding job's
+    /// remaining counts, server lists copied (capacity reused).
+    fn materialize(&mut self, outstanding: &[Outstanding]) {
+        for (i, o) in outstanding.iter().enumerate() {
+            let row = &mut self.groups[i];
+            row.truncate(o.job.groups.len());
+            for (j, g) in o.job.groups.iter().enumerate() {
+                if j < row.len() {
+                    let tg = &mut row[j];
+                    tg.size = o.remaining[j];
+                    tg.servers.clear();
+                    tg.servers.extend_from_slice(&g.servers);
+                } else {
+                    // Direct construction: the job's groups are already
+                    // sorted/deduped by `TaskGroup::new`.
+                    row.push(TaskGroup {
+                        size: o.remaining[j],
+                        servers: g.servers.clone(),
+                    });
+                }
+            }
+        }
+    }
+
+    /// Reserved capacity across every pooled buffer
+    /// (allocation-stability tests).
+    pub fn footprint(&self) -> usize {
+        self.slots.capacity()
+            + self.slots.iter().map(|s| s.footprint()).sum::<usize>()
+            + self.groups.capacity()
+            + self
+                .groups
+                .iter()
+                .map(|row| {
+                    row.capacity()
+                        + row.iter().map(|tg| tg.servers.capacity()).sum::<usize>()
+                })
+                .sum::<usize>()
+            + self.stale_bounds.capacity()
+            + self.placed.capacity()
+            + self.cands.capacity()
+            + self.marks.capacity()
+            + self.lookup.capacity()
+            + self.state.footprint()
+    }
+}
+
+/// Run one OCWF(-ACC) reordering round over the outstanding jobs,
+/// allocating fresh workspace and outcome (convenience path for tests and
+/// one-shot callers; simulations pool both via [`reorder_into`]).
+pub fn reorder(outstanding: &[Outstanding], num_servers: usize, acc: bool) -> ReorderOutcome {
+    let mut ws = ReorderWorkspace::default();
+    let mut out = ReorderOutcome::default();
+    reorder_into(outstanding, num_servers, acc, 1, &mut ws, &mut out);
+    out
+}
+
+/// Run one OCWF(-ACC) reordering into pooled buffers, fanning candidate Φ
+/// evaluations across `threads` workers (`0` = all cores, `1` = the
+/// serial reference path). The outcome is bit-identical at every thread
+/// count (see the module docs); `num_servers` is M; each outstanding job
+/// carries its own μ vector.
+pub fn reorder_into(
     outstanding: &[Outstanding],
     num_servers: usize,
     acc: bool,
-    wf: &mut Wf,
-) -> ReorderOutcome {
+    threads: usize,
+    ws: &mut ReorderWorkspace,
+    out: &mut ReorderOutcome,
+) {
     let n = outstanding.len();
-    let mut busy: Vec<Slots> = vec![0; num_servers];
-    let mut placed = vec![false; n];
-    let mut order = Vec::with_capacity(n);
-    let mut assignments = Vec::with_capacity(n);
-    let mut wf_evals = 0u64;
+    let threads = if threads == 0 {
+        pool::available_threads()
+    } else {
+        threads.max(1)
+    };
+    ws.ensure(n, num_servers, threads);
+    ws.materialize(outstanding);
+    out.begin(n);
 
-    // Pre-materialize remaining groups once per job (server sets don't
-    // change during the round; sizes are fixed at the reorder point).
-    let groups: Vec<Vec<TaskGroup>> = outstanding.iter().map(|o| o.remaining_groups()).collect();
+    let ReorderWorkspace {
+        slots,
+        groups,
+        stale_bounds,
+        placed,
+        cands,
+        marks,
+        lookup,
+        state,
+    } = ws;
 
     // OCWF-ACC: lazily maintained lower bounds. Busy times only grow as
     // jobs are placed, so a bound computed against an older busy vector
@@ -88,90 +294,155 @@ pub fn reorder(
     // Bounds are refreshed only when a stale value survives the early-
     // exit test, which cuts both the Φ⁻ recomputations and the full WF
     // evaluations.
-    let mut stale_bounds: Vec<Slots> = if acc {
-        (0..n)
-            .map(|i| {
-                let inst = Instance {
-                    groups: &groups[i],
-                    mu: &outstanding[i].job.mu,
-                    busy: &busy,
-                };
-                phi_lower(&inst)
-            })
-            .collect()
-    } else {
-        vec![0; n]
-    };
-
-    for _ in 0..n {
-        // Candidate exploration order: arrival order for OCWF; ascending
-        // stale Φ⁻ for OCWF-ACC (enables the early exit).
-        let mut cands: Vec<usize> = (0..n).filter(|&i| !placed[i]).collect();
-        if acc {
-            cands.sort_by_key(|&i| (stale_bounds[i], i));
+    if acc {
+        for i in 0..n {
+            let inst = state.instance(&groups[i], &outstanding[i].job.mu);
+            stale_bounds[i] = phi_lower(&inst);
         }
-
-        let mut best: Option<(Slots, usize, Assignment, Vec<Slots>)> = None;
-        for &i in &cands {
-            if acc {
-                if let Some((best_phi, _, _, _)) = &best {
-                    // Early exit: Φ⁻ is a valid lower bound on Φ, so once
-                    // the (ascending) stale bounds exceed the incumbent no
-                    // later candidate can strictly improve. Strict `>`
-                    // keeps tie handling identical to OCWF (module docs).
-                    if stale_bounds[i] > *best_phi {
-                        break;
-                    }
-                    // Refresh the bound against the current busy vector;
-                    // skip the full WF evaluation if it now disqualifies.
-                    let inst = Instance {
-                        groups: &groups[i],
-                        mu: &outstanding[i].job.mu,
-                        busy: &busy,
-                    };
-                    let fresh = phi_lower(&inst);
-                    stale_bounds[i] = fresh;
-                    if fresh > *best_phi {
-                        continue;
-                    }
-                }
-            }
-            let inst = Instance {
-                groups: &groups[i],
-                mu: &outstanding[i].job.mu,
-                busy: &busy,
-            };
-            let (a, final_busy) = wf.assign_with_busy(&inst);
-            wf_evals += 1;
-            // WF's estimate is itself a valid (tighter) lower bound for
-            // later rounds.
-            if acc {
-                stale_bounds[i] = a.phi;
-            }
-            let accept = match &best {
-                None => true,
-                // Strict improvement, ties to the earliest arrival (the
-                // iteration order of OCWF guarantees this; for ACC the
-                // explicit index tie-break restores it).
-                Some((bphi, bi, _, _)) => a.phi < *bphi || (a.phi == *bphi && i < *bi),
-            };
-            if accept {
-                best = Some((a.phi, i, a, final_busy));
-            }
-        }
-
-        let (_, i, assignment, final_busy) =
-            best.expect("reorder round must place one job");
-        placed[i] = true;
-        order.push(i);
-        assignments.push(assignment);
-        busy = final_busy;
     }
 
-    ReorderOutcome {
-        order,
-        assignments,
-        wf_evals,
+    for _round in 0..n {
+        // Candidate exploration order: arrival order for OCWF; ascending
+        // stale Φ⁻ for OCWF-ACC (enables the early exit). Keys are unique
+        // (index tiebreak), so the unstable sort is deterministic.
+        cands.clear();
+        cands.extend((0..n).filter(|&i| !placed[i]));
+        if acc {
+            cands.sort_unstable_by_key(|&i| (stale_bounds[i], i));
+        }
+        let total = cands.len();
+
+        for s in slots.iter_mut() {
+            s.begin();
+        }
+        // best = (Φ, candidate, slot, arena index of its evaluation).
+        let mut best: Option<(Slots, usize, usize, usize)> = None;
+
+        if threads == 1 {
+            // Serial reference path: evaluate lazily, one candidate at a
+            // time, with the bound checks *before* each evaluation — the
+            // exact sequential Algorithm 3 (+ strict-`>` ACC early exit).
+            let s0 = &mut slots[0];
+            for (scan, &i) in cands.iter().enumerate() {
+                if acc {
+                    if let Some((best_phi, _, _, _)) = best {
+                        // Early exit: Φ⁻ is a valid lower bound on Φ, so
+                        // once the (ascending) stale bounds exceed the
+                        // incumbent no later candidate can strictly
+                        // improve. Strict `>` keeps tie handling identical
+                        // to OCWF (module docs).
+                        if stale_bounds[i] > best_phi {
+                            break;
+                        }
+                        // Refresh the bound against the current busy
+                        // vector; skip the full WF evaluation if it now
+                        // disqualifies.
+                        let inst = state.instance(&groups[i], &outstanding[i].job.mu);
+                        let fresh = phi_lower(&inst);
+                        stale_bounds[i] = fresh;
+                        if fresh > best_phi {
+                            continue;
+                        }
+                    }
+                }
+                let inst = state.instance(&groups[i], &outstanding[i].job.mu);
+                s0.eval(scan, &inst);
+                out.wf_evals += 1;
+                let idx = s0.used - 1;
+                let phi = s0.outs[idx].phi;
+                // WF's estimate is itself a valid (tighter) lower bound
+                // for later rounds.
+                if acc {
+                    stale_bounds[i] = phi;
+                }
+                let accept = match best {
+                    None => true,
+                    // Strict improvement, ties to the earliest arrival.
+                    Some((bphi, bi, _, _)) => phi < bphi || (phi == bphi && i < bi),
+                };
+                if accept {
+                    best = Some((phi, i, 0, idx));
+                }
+            }
+        } else {
+            // Two-phase path: speculative chunked evaluation + serial
+            // replay. Plain OCWF evaluates everything, so the chunk is
+            // the whole candidate list; ACC speculates 2×threads ahead.
+            let chunk_cap = if acc { (threads * 2).max(2) } else { usize::MAX };
+            let mut scan = 0;
+            'scan: while scan < total {
+                let clen = chunk_cap.min(total - scan);
+                for (si, s) in slots.iter().enumerate() {
+                    marks[si] = s.used;
+                }
+                {
+                    // Evaluate phase: all candidates of the chunk score
+                    // against the same (frozen) busy vector.
+                    let busy = state.busy();
+                    let groups_ref: &[Vec<TaskGroup>] = groups;
+                    let chunk: &[usize] = &cands[scan..scan + clen];
+                    pool::parallel_for_each(clen, &mut slots[..threads], |slot, j| {
+                        let i = chunk[j];
+                        let inst = Instance {
+                            groups: &groups_ref[i],
+                            mu: &outstanding[i].job.mu,
+                            busy,
+                        };
+                        slot.eval(scan + j, &inst);
+                    });
+                }
+                for (si, s) in slots.iter().enumerate() {
+                    for t in marks[si]..s.used {
+                        lookup[s.pos[t]] = (si as u32, t as u32);
+                    }
+                }
+                // Replay phase: the serial decision rules, consuming the
+                // precomputed evaluations. Discarded speculation leaves no
+                // trace (no count, no bound update).
+                for j in 0..clen {
+                    let i = cands[scan + j];
+                    if acc {
+                        if let Some((best_phi, _, _, _)) = best {
+                            if stale_bounds[i] > best_phi {
+                                break 'scan;
+                            }
+                            let inst = state.instance(&groups[i], &outstanding[i].job.mu);
+                            let fresh = phi_lower(&inst);
+                            stale_bounds[i] = fresh;
+                            if fresh > best_phi {
+                                continue;
+                            }
+                        }
+                    }
+                    let (si, ti) = lookup[scan + j];
+                    let phi = slots[si as usize].outs[ti as usize].phi;
+                    out.wf_evals += 1;
+                    if acc {
+                        stale_bounds[i] = phi;
+                    }
+                    let accept = match best {
+                        None => true,
+                        Some((bphi, bi, _, _)) => phi < bphi || (phi == bphi && i < bi),
+                    };
+                    if accept {
+                        best = Some((phi, i, si as usize, ti as usize));
+                    }
+                }
+                scan += clen;
+            }
+        }
+
+        let (_, bi, si, ti) = best.expect("reorder round must place one job");
+        placed[bi] = true;
+        out.order.push(bi);
+        let chosen = &slots[si].outs[ti];
+        let pos = out.order.len() - 1;
+        if pos < out.assignments.len() {
+            chosen.write_assignment(&mut out.assignments[pos]);
+        } else {
+            out.assignments.push(chosen.to_assignment());
+        }
+        state.copy_from(chosen.final_busy());
     }
 }
 
@@ -179,6 +450,7 @@ pub fn reorder(
 mod tests {
     use super::*;
     use crate::job::TaskGroup;
+    use crate::util::rng::Rng;
 
     fn mk_job(id: usize, sizes: &[u64], servers: &[&[usize]], m: usize) -> Job {
         Job {
@@ -202,6 +474,30 @@ mod tests {
             .collect()
     }
 
+    fn random_jobs(rng: &mut Rng, m: usize, max_jobs: u64) -> Vec<Job> {
+        let njobs = 1 + rng.gen_range(max_jobs) as usize;
+        (0..njobs)
+            .map(|id| {
+                let k = 1 + rng.gen_range(3) as usize;
+                let groups: Vec<TaskGroup> = (0..k)
+                    .map(|_| {
+                        let ns = 1 + rng.gen_range(m as u64) as usize;
+                        let mut sv: Vec<usize> = (0..m).collect();
+                        rng.shuffle(&mut sv);
+                        sv.truncate(ns);
+                        TaskGroup::new(rng.gen_range_incl(1, 20), sv)
+                    })
+                    .collect();
+                Job {
+                    id,
+                    arrival: id as u64,
+                    groups,
+                    mu: (0..m).map(|_| rng.gen_range_incl(1, 4)).collect(),
+                }
+            })
+            .collect()
+    }
+
     #[test]
     fn shortest_job_first() {
         // Big job arrived first, small job second; reorder should put the
@@ -212,40 +508,19 @@ mod tests {
             mk_job(1, &[2], &[&[0, 1]], m),
         ];
         let out = outstanding(&jobs);
-        let r = reorder(&out, m, false, &mut Wf::new());
+        let r = reorder(&out, m, false);
         assert_eq!(r.order, vec![1, 0]);
     }
 
     #[test]
     fn acc_and_plain_agree_exactly() {
-        use crate::util::rng::Rng;
         let m = 6;
         let mut rng = Rng::seed_from(300);
         for _ in 0..30 {
-            let njobs = 1 + rng.gen_range(6) as usize;
-            let jobs: Vec<Job> = (0..njobs)
-                .map(|id| {
-                    let k = 1 + rng.gen_range(3) as usize;
-                    let groups: Vec<TaskGroup> = (0..k)
-                        .map(|_| {
-                            let ns = 1 + rng.gen_range(m as u64) as usize;
-                            let mut sv: Vec<usize> = (0..m).collect();
-                            rng.shuffle(&mut sv);
-                            sv.truncate(ns);
-                            TaskGroup::new(rng.gen_range_incl(1, 20), sv)
-                        })
-                        .collect();
-                    Job {
-                        id,
-                        arrival: id as u64,
-                        groups,
-                        mu: (0..m).map(|_| rng.gen_range_incl(1, 4)).collect(),
-                    }
-                })
-                .collect();
+            let jobs = random_jobs(&mut rng, m, 6);
             let out = outstanding(&jobs);
-            let plain = reorder(&out, m, false, &mut Wf::new());
-            let accd = reorder(&out, m, true, &mut Wf::new());
+            let plain = reorder(&out, m, false);
+            let accd = reorder(&out, m, true);
             assert_eq!(plain.order, accd.order, "order must match");
             assert_eq!(
                 plain.assignments, accd.assignments,
@@ -268,8 +543,8 @@ mod tests {
             .map(|id| mk_job(id, &[(id as u64 + 1) * 10], &[&[0, 1, 2, 3]], m))
             .collect();
         let out = outstanding(&jobs);
-        let plain = reorder(&out, m, false, &mut Wf::new());
-        let accd = reorder(&out, m, true, &mut Wf::new());
+        let plain = reorder(&out, m, false);
+        let accd = reorder(&out, m, true);
         assert_eq!(plain.order, accd.order);
         assert!(
             accd.wf_evals < plain.wf_evals,
@@ -277,6 +552,52 @@ mod tests {
             accd.wf_evals,
             plain.wf_evals
         );
+    }
+
+    #[test]
+    fn parallel_rounds_bit_identical_to_serial() {
+        // The tentpole invariant: same ReorderOutcome (order, assignments,
+        // wf_evals) at 1 / 2 / 8 reorder threads, for both OCWF variants.
+        let m = 6;
+        let mut rng = Rng::seed_from(301);
+        for case in 0..20 {
+            let jobs = random_jobs(&mut rng, m, 10);
+            let out = outstanding(&jobs);
+            for acc in [false, true] {
+                let mut ws = ReorderWorkspace::default();
+                let mut serial = ReorderOutcome::default();
+                reorder_into(&out, m, acc, 1, &mut ws, &mut serial);
+                for threads in [2, 8] {
+                    let mut wsp = ReorderWorkspace::default();
+                    let mut par = ReorderOutcome::default();
+                    reorder_into(&out, m, acc, threads, &mut wsp, &mut par);
+                    assert_eq!(
+                        serial, par,
+                        "case {case} acc={acc} threads={threads} diverged"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_across_calls_is_stable() {
+        // Re-running the same reordering through one pooled workspace must
+        // give identical outcomes and, after warmup, a frozen footprint.
+        let m = 5;
+        let mut rng = Rng::seed_from(302);
+        let jobs = random_jobs(&mut rng, m, 8);
+        let out = outstanding(&jobs);
+        let mut ws = ReorderWorkspace::default();
+        let mut buf = ReorderOutcome::default();
+        reorder_into(&out, m, true, 1, &mut ws, &mut buf);
+        let reference = buf.clone();
+        let fp = ws.footprint() + buf.footprint();
+        for _ in 0..5 {
+            reorder_into(&out, m, true, 1, &mut ws, &mut buf);
+            assert_eq!(reference, buf);
+            assert_eq!(fp, ws.footprint() + buf.footprint(), "allocation crept in");
+        }
     }
 
     #[test]
@@ -288,7 +609,7 @@ mod tests {
         ];
         let mut out = outstanding(&jobs);
         out[0].remaining = vec![4, 1]; // partially processed
-        let r = reorder(&out, m, true, &mut Wf::new());
+        let r = reorder(&out, m, true);
         for (pos, &i) in r.order.iter().enumerate() {
             let total: u64 = r.assignments[pos].total_assigned();
             assert_eq!(total, out[i].total_remaining());
@@ -297,7 +618,13 @@ mod tests {
 
     #[test]
     fn empty_outstanding_set() {
-        let r = reorder(&[], 4, true, &mut Wf::new());
+        let r = reorder(&[], 4, true);
         assert!(r.order.is_empty());
+        // Parallel path with nothing to do is also fine.
+        let mut ws = ReorderWorkspace::default();
+        let mut out = ReorderOutcome::default();
+        reorder_into(&[], 4, true, 8, &mut ws, &mut out);
+        assert!(out.order.is_empty());
+        assert_eq!(out.wf_evals, 0);
     }
 }

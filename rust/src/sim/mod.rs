@@ -16,12 +16,12 @@
 
 pub mod stepping;
 
-use crate::assign::wf::Wf;
-use crate::assign::{validate_assignment, AssignPolicy, Instance};
+use crate::assign::{validate_assignment, AssignPolicy};
+use crate::cluster::state::{ClusterState, JobProgress, QueueEntry, ServerQueues};
 use crate::config::{ExperimentConfig, SimConfig};
 use crate::job::{Job, ServerId, Slots, TaskCount};
 use crate::metrics::JctStats;
-use crate::sched::ocwf::{reorder, Outstanding};
+use crate::sched::ocwf::{reorder_into, Outstanding, ReorderOutcome, ReorderWorkspace};
 use crate::sched::SchedPolicy;
 use crate::util::ceil_div;
 use crate::util::timer::OverheadMeter;
@@ -64,22 +64,16 @@ pub fn run_fifo(
     let mut assigner = policy.build(seed);
     // Absolute slot at which each server's queue empties.
     let mut free: Vec<Slots> = vec![0; num_servers];
-    let mut busy: Vec<Slots> = vec![0; num_servers];
+    // Busy time at arrival (eq. 2): remaining queue length in slots.
+    let mut state = ClusterState::new(num_servers);
     let mut jcts = Vec::with_capacity(jobs.len());
     let mut overhead = OverheadMeter::new();
     let mut makespan = 0;
 
     for job in jobs {
         debug_assert!(job.mu.len() == num_servers);
-        // Busy time at arrival (eq. 2): remaining queue length in slots.
-        for m in 0..num_servers {
-            busy[m] = free[m].saturating_sub(job.arrival);
-        }
-        let inst = Instance {
-            groups: &job.groups,
-            mu: &job.mu,
-            busy: &busy,
-        };
+        state.observe_free(&free, job.arrival);
+        let inst = state.instance(&job.groups, &job.mu);
         let a = overhead.measure(|| assigner.assign(&inst));
         debug_assert_eq!(validate_assignment(&inst, &a), Ok(()));
         let mut completion = job.arrival;
@@ -106,110 +100,29 @@ pub fn run_fifo(
     }
 }
 
-/// One queue entry in the reordered engine: tasks of one job at one
-/// server, split by group.
-#[derive(Clone, Debug)]
-struct Entry {
-    job: usize,
-    /// (group index, tasks) with tasks > 0.
-    parts: Vec<(usize, TaskCount)>,
-}
-
-impl Entry {
-    fn total(&self) -> TaskCount {
-        self.parts.iter().map(|&(_, n)| n).sum()
-    }
-}
-
 /// OCWF / OCWF-ACC simulation (paper §IV): on every arrival, drain queues
 /// up to the arrival slot, then rebuild the order and all assignments.
+/// The reordering rounds run on `cfg.reorder_threads` workers (1 = the
+/// serial reference; the schedule is bit-identical at any thread count).
 pub fn run_reordered(jobs: &[Job], num_servers: usize, acc: bool, cfg: &SimConfig) -> SimOutcome {
     debug_assert!(
         jobs.iter().enumerate().all(|(i, j)| j.id == i),
         "run_reordered requires job ids to equal their slice positions"
     );
-    let mut wf = Wf::new();
-    let mut queues: Vec<Vec<Entry>> = vec![Vec::new(); num_servers];
-    // Per job: remaining tasks per group, total remaining, completion.
-    let mut remaining: Vec<Vec<TaskCount>> = jobs
-        .iter()
-        .map(|j| j.groups.iter().map(|g| g.size).collect())
-        .collect();
-    let mut total_remaining: Vec<TaskCount> =
-        remaining.iter().map(|r| r.iter().sum()).collect();
-    let mut completion: Vec<Option<Slots>> = vec![None; jobs.len()];
-    let mut last_finish: Vec<Slots> = jobs.iter().map(|j| j.arrival).collect();
+    let mut ws = ReorderWorkspace::default();
+    let mut outcome = ReorderOutcome::default();
+    let mut queues = ServerQueues::new(num_servers);
+    let mut progress = JobProgress::new(jobs);
     let mut overhead = OverheadMeter::new();
     let mut wf_evals = 0u64;
     let mut now: Slots = 0;
-
-    // Drain all queues from `now` to `to` (analytically, entry by entry).
-    let drain = |queues: &mut Vec<Vec<Entry>>,
-                 remaining: &mut Vec<Vec<TaskCount>>,
-                 total_remaining: &mut Vec<TaskCount>,
-                 completion: &mut Vec<Option<Slots>>,
-                 last_finish: &mut Vec<Slots>,
-                 from: Slots,
-                 to: Slots| {
-        for (m, q) in queues.iter_mut().enumerate() {
-            let mut t = from;
-            let mut consumed = 0usize;
-            for entry in q.iter_mut() {
-                if t >= to {
-                    break;
-                }
-                let mu = jobs[entry.job].mu[m];
-                let slots = ceil_div(entry.total(), mu);
-                if t + slots <= to {
-                    // Entry fully processed at t + slots.
-                    t += slots;
-                    for &(k, n) in &entry.parts {
-                        remaining[entry.job][k] -= n;
-                        total_remaining[entry.job] -= n;
-                    }
-                    last_finish[entry.job] = last_finish[entry.job].max(t);
-                    if total_remaining[entry.job] == 0 && completion[entry.job].is_none() {
-                        completion[entry.job] = Some(last_finish[entry.job]);
-                    }
-                    consumed += 1;
-                } else {
-                    // Partial: (to − t) whole slots of this entry.
-                    let mut budget = (to - t) * mu;
-                    for (k, n) in entry.parts.iter_mut() {
-                        let take = (*n).min(budget);
-                        *n -= take;
-                        remaining[entry.job][*k] -= take;
-                        total_remaining[entry.job] -= take;
-                        budget -= take;
-                        if budget == 0 {
-                            break;
-                        }
-                    }
-                    entry.parts.retain(|&(_, n)| n > 0);
-                    // The entry cannot have been exhausted: it needed more
-                    // than (to − t) slots.
-                    debug_assert!(entry.total() > 0);
-                    break;
-                }
-            }
-            q.drain(..consumed);
-        }
-    };
 
     let mut arrival_idx = 0;
     while arrival_idx < jobs.len() {
         let job = &jobs[arrival_idx];
         debug_assert!(job.mu.len() == num_servers);
-        // 1. Drain to the arrival slot.
-        drain(
-            &mut queues,
-            &mut remaining,
-            &mut total_remaining,
-            &mut completion,
-            &mut last_finish,
-            now,
-            job.arrival,
-        );
+        // 1. Drain to the arrival slot (analytically, entry by entry).
+        queues.drain(jobs, &mut progress, now, job.arrival);
         now = job.arrival;
 
         // Collect every arrival at this exact slot before reordering
@@ -222,23 +135,30 @@ pub fn run_reordered(jobs: &[Job], num_servers: usize, acc: bool, cfg: &SimConfi
 
         // 2. Reorder all outstanding jobs (Alg. 3; busy times start at 0).
         let outstanding: Vec<Outstanding> = (0..=newest)
-            .filter(|&i| total_remaining[i] > 0)
+            .filter(|&i| progress.total_remaining[i] > 0)
             .map(|i| Outstanding {
                 job: &jobs[i],
-                remaining: remaining[i].clone(),
+                remaining: progress.remaining[i].clone(),
             })
             .collect();
-        let outcome = overhead.measure(|| reorder(&outstanding, num_servers, acc, &mut wf));
+        overhead.measure(|| {
+            reorder_into(
+                &outstanding,
+                num_servers,
+                acc,
+                cfg.reorder_threads,
+                &mut ws,
+                &mut outcome,
+            )
+        });
         wf_evals += outcome.wf_evals;
 
         // 3. Rebuild queues in the new order.
-        for q in queues.iter_mut() {
-            q.clear();
-        }
+        queues.clear();
         for (pos, &oi) in outcome.order.iter().enumerate() {
             let job_idx = outstanding[oi].job.id;
             let a = &outcome.assignments[pos];
-            debug_assert_eq!(a.total_assigned(), total_remaining[job_idx]);
+            debug_assert_eq!(a.total_assigned(), progress.total_remaining[job_idx]);
             // Group the assignment by server.
             let mut per_server: std::collections::BTreeMap<ServerId, Vec<(usize, TaskCount)>> =
                 Default::default();
@@ -248,7 +168,7 @@ pub fn run_reordered(jobs: &[Job], num_servers: usize, acc: bool, cfg: &SimConfi
                 }
             }
             for (m, parts) in per_server {
-                queues[m].push(Entry { job: job_idx, parts });
+                queues.push(m, QueueEntry { job: job_idx, parts });
             }
         }
 
@@ -256,27 +176,23 @@ pub fn run_reordered(jobs: &[Job], num_servers: usize, acc: bool, cfg: &SimConfi
     }
 
     // 4. Drain everything that remains.
-    let horizon = cfg.max_slots;
-    drain(
-        &mut queues,
-        &mut remaining,
-        &mut total_remaining,
-        &mut completion,
-        &mut last_finish,
-        now,
-        horizon,
-    );
+    queues.drain(jobs, &mut progress, now, cfg.max_slots);
     assert!(
-        completion.iter().all(|c| c.is_some()),
+        progress.all_complete(),
         "jobs unfinished at max_slots horizon; check utilization config"
     );
 
     let jcts: Vec<Slots> = jobs
         .iter()
-        .zip(&completion)
+        .zip(&progress.completion)
         .map(|(j, c)| c.unwrap() - j.arrival)
         .collect();
-    let makespan = completion.iter().map(|c| c.unwrap()).max().unwrap_or(0);
+    let makespan = progress
+        .completion
+        .iter()
+        .map(|c| c.unwrap())
+        .max()
+        .unwrap_or(0);
     SimOutcome {
         jcts,
         overhead,

@@ -9,7 +9,8 @@
 //! completion times on random traces; the analytic engine is what the
 //! benches run (it is O(assignments) instead of O(makespan · M)).
 
-use crate::assign::{AssignPolicy, Instance};
+use crate::assign::AssignPolicy;
+use crate::cluster::state::ClusterState;
 use crate::config::SimConfig;
 use crate::job::{Job, Slots, TaskCount};
 use crate::util::ceil_div;
@@ -43,7 +44,7 @@ pub fn run_fifo_stepping(
     let mut remaining_total: Vec<TaskCount> = jobs.iter().map(|j| j.total_tasks()).collect();
     let mut last_finish: Vec<Slots> = jobs.iter().map(|j| j.arrival).collect();
     let mut overhead = OverheadMeter::new();
-    let mut busy_scratch = vec![0u64; num_servers];
+    let mut state = ClusterState::new(num_servers);
 
     let mut next_arrival = 0usize;
     let mut now: Slots = 0;
@@ -53,17 +54,14 @@ pub fn run_fifo_stepping(
             let job = &jobs[next_arrival];
             // Busy time per eq. 2: Σ_h ceil(o_m^h / μ_m^h) over queued
             // entries.
+            let busy = state.busy_mut();
             for (m, q) in queues.iter().enumerate() {
-                busy_scratch[m] = q
+                busy[m] = q
                     .iter()
                     .map(|e| ceil_div(e.remaining, jobs[e.job].mu[m]))
                     .sum();
             }
-            let inst = Instance {
-                groups: &job.groups,
-                mu: &job.mu,
-                busy: &busy_scratch,
-            };
+            let inst = state.instance(&job.groups, &job.mu);
             let a = overhead.measure(|| assigner.assign(&inst));
             for (m, n) in a.per_server() {
                 queues[m].push_back(Entry {

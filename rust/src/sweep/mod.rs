@@ -24,7 +24,8 @@
 
 pub mod pool;
 
-use crate::benchlib::TextTable;
+use crate::assign::feasible::OracleStats;
+use crate::benchlib::{fmt_count, TextTable};
 use crate::config::ExperimentConfig;
 use crate::job::Slots;
 use crate::metrics::jct_cdf;
@@ -42,6 +43,34 @@ pub struct Cell {
     pub mean_jct: f64,
     pub overhead_us: f64,
     pub cdf: Vec<(f64, f64)>,
+    /// Full WF evaluations, summed over the cell's trials (reordered
+    /// policies; 0 for the FIFO assigners). Totals — not per-trial means —
+    /// so they stay on the same scale as `oracle`.
+    pub wf_evals: u64,
+    /// Feasibility-oracle tier counters, summed over the cell's trials
+    /// (exact assigners only).
+    pub oracle: Option<OracleStats>,
+}
+
+impl Cell {
+    /// Compact scheduler-work summary for the telemetry table: WF
+    /// evaluations for the reordered policies, oracle tier hits for the
+    /// exact assigners, `-` when the cell tracked neither.
+    pub fn work_summary(&self) -> String {
+        if self.wf_evals > 0 {
+            return fmt_count(self.wf_evals);
+        }
+        match &self.oracle {
+            Some(o) => format!(
+                "{}/{}/{}/{}",
+                fmt_count(o.flow_infeasible),
+                fmt_count(o.ceil_feasible),
+                fmt_count(o.floor_residual_feasible),
+                fmt_count(o.ilp_calls)
+            ),
+            None => "-".into(),
+        }
+    }
 }
 
 /// A complete figure: one cell per (policy, x-axis setting).
@@ -130,6 +159,32 @@ impl Figure {
             t2.row(row);
         }
         out.push_str(&t2.render());
+
+        out.push_str(&format!(
+            "\n== {} : scheduler work, totals across trials (WF evals; oracle tiers flow-inf/ceil/floor+res/ilp) ==\n",
+            self.name
+        ));
+        let mut t3 = TextTable::new(&hdr_refs);
+        for policy in SchedPolicy::ALL {
+            let mut row = vec![policy.name().to_string()];
+            let mut any = false;
+            for &s in &settings {
+                row.push(match self.cell(policy.name(), s) {
+                    Some(c) => {
+                        let txt = c.work_summary();
+                        if txt != "-" {
+                            any = true;
+                        }
+                        txt
+                    }
+                    None => "-".into(),
+                });
+            }
+            let avg_cell: &str = if any { "" } else { "-" };
+            row.push(avg_cell.into());
+            t3.row(row);
+        }
+        out.push_str(&t3.render());
         out
     }
 
@@ -140,18 +195,35 @@ impl Figure {
             (
                 "cells",
                 Json::arr(self.cells.iter().map(|c| {
-                    Json::obj(vec![
+                    let mut fields = vec![
                         ("policy", Json::str(c.policy)),
                         ("setting", Json::num(c.setting)),
                         ("mean_jct", Json::num(c.mean_jct)),
                         ("overhead_us", Json::num(c.overhead_us)),
+                        ("wf_evals", Json::num(c.wf_evals as f64)),
                         (
                             "cdf",
                             Json::arr(c.cdf.iter().map(|&(x, y)| {
                                 Json::arr(vec![Json::num(x), Json::num(y)])
                             })),
                         ),
-                    ])
+                    ];
+                    if let Some(o) = &c.oracle {
+                        fields.push((
+                            "oracle",
+                            Json::obj(vec![
+                                ("flow_infeasible", Json::num(o.flow_infeasible as f64)),
+                                ("ceil_feasible", Json::num(o.ceil_feasible as f64)),
+                                (
+                                    "floor_residual_feasible",
+                                    Json::num(o.floor_residual_feasible as f64),
+                                ),
+                                ("ilp_calls", Json::num(o.ilp_calls as f64)),
+                                ("ilp_unknown", Json::num(o.ilp_unknown as f64)),
+                            ]),
+                        ));
+                    }
+                    Json::obj(fields)
                 })),
             ),
         ])
@@ -290,10 +362,16 @@ fn cells_from(specs: &[CellSpec], outcomes: &[SimOutcome], trials: usize) -> Vec
         let mut jcts: Vec<Slots> = Vec::new();
         let mut jct_sum = 0.0;
         let mut ov_sum = 0.0;
+        let mut wf_evals_sum = 0u64;
+        let mut oracle: Option<OracleStats> = None;
         for o in group {
             jct_sum += o.mean_jct();
             ov_sum += o.overhead.mean_us();
             jcts.extend_from_slice(&o.jcts);
+            wf_evals_sum += o.wf_evals;
+            if let Some(st) = &o.oracle_stats {
+                oracle.get_or_insert_with(OracleStats::default).merge(st);
+            }
         }
         cells.push(Cell {
             policy: spec.policy.name(),
@@ -301,6 +379,8 @@ fn cells_from(specs: &[CellSpec], outcomes: &[SimOutcome], trials: usize) -> Vec
             mean_jct: jct_sum / trials as f64,
             overhead_us: ov_sum / trials as f64,
             cdf: jct_cdf(&jcts, 64),
+            wf_evals: wf_evals_sum,
+            oracle,
         });
         i += trials;
     }

@@ -62,6 +62,50 @@ where
     pairs.into_iter().map(|(_, v)| v).collect()
 }
 
+/// Run `f(state, i)` for every `i in 0..n`, fanning the indices across
+/// the worker states: worker `w` (of `W = min(states.len(), n)`) handles
+/// exactly the indices `i ≡ w (mod W)`, in ascending order.
+///
+/// The **static stride** (instead of an atomic work queue) is deliberate:
+/// which worker computes which index is a pure function of `(n, W)`, so
+/// each worker's scratch state evolves identically run-to-run — the
+/// property the OCWF reorder driver's allocation-stability test asserts.
+/// With one state (or `n ≤ 1`) this degenerates to a plain serial loop,
+/// the reference path of the determinism tests.
+///
+/// Workers write results into their own `&mut S`; nothing is collected
+/// here, so the call itself performs no allocation.
+pub fn parallel_for_each<S, F>(n: usize, states: &mut [S], f: F)
+where
+    S: Send,
+    F: Fn(&mut S, usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    assert!(!states.is_empty(), "parallel_for_each needs >= 1 state");
+    let workers = states.len().min(n);
+    if workers == 1 {
+        let s = &mut states[0];
+        for i in 0..n {
+            f(&mut *s, i);
+        }
+        return;
+    }
+    let f = &f;
+    std::thread::scope(|scope| {
+        for (w, s) in states.iter_mut().take(workers).enumerate() {
+            scope.spawn(move || {
+                let mut i = w;
+                while i < n {
+                    f(&mut *s, i);
+                    i += workers;
+                }
+            });
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -86,6 +130,32 @@ mod tests {
         // More threads than items must not deadlock or drop results.
         let out = parallel_map(3, 100, |i| i * 2);
         assert_eq!(out, vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn for_each_static_stride_partitions_all_indices() {
+        // Each worker state collects its indices; together they must cover
+        // 0..n exactly once, with worker w owning i ≡ w (mod W).
+        let mut states: Vec<Vec<usize>> = vec![Vec::new(); 3];
+        parallel_for_each(11, &mut states, |s, i| s.push(i));
+        let mut all: Vec<usize> = states.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..11).collect::<Vec<_>>());
+        for (w, s) in states.iter().enumerate() {
+            assert!(s.iter().all(|&i| i % 3 == w), "worker {w}: {s:?}");
+            // Static stride: ascending within a worker.
+            assert!(s.windows(2).all(|p| p[0] < p[1]));
+        }
+    }
+
+    #[test]
+    fn for_each_serial_degenerate_cases() {
+        let mut states = vec![0u64];
+        parallel_for_each(5, &mut states, |s, i| *s += i as u64);
+        assert_eq!(states[0], 10);
+        // n == 0: untouched even with empty states.
+        let mut none: Vec<u64> = Vec::new();
+        parallel_for_each(0, &mut none, |_s, _i| unreachable!());
     }
 
     #[test]

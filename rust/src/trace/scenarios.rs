@@ -17,6 +17,13 @@
 //! | `heavy-tail` | Pareto(1.5) task-group sizes (infinite variance) |
 //! | `hetero-cap` | Zipf-skewed per-server speeds (few fast, many slow) |
 //! | `hotspot` | scattered Zipf replica placement onto hot servers |
+//! | `bursty-hetero` | compound: bursty arrivals × Zipf server speeds |
+//! | `hotspot-heavy-tail` | compound: Pareto sizes × hot-spot placement |
+//!
+//! The two compound presets close the one-axis-per-scenario gap: stress
+//! regimes that only emerge when axes interact (bursts landing on a
+//! capacity-skewed cluster; giant groups replicated onto hot servers)
+//! are reachable by name instead of requiring a hand-written config.
 //!
 //! Trace-shape scenarios act in [`Scenario::synth`]; cluster-side
 //! scenarios act through [`Scenario::apply`], which unconditionally sets
@@ -52,15 +59,25 @@ pub enum Scenario {
     /// Zipf draws (`placement_mode = scatter`), piling the replicas of
     /// most groups onto the same few servers.
     Hotspot,
+    /// Compound preset: bursty on/off arrivals landing on a
+    /// capacity-skewed cluster (`mu_skew = 1`) — arrival trains pile onto
+    /// the few fast servers everyone wants.
+    BurstyHetero,
+    /// Compound preset: Pareto(1.5) group sizes with scattered Zipf
+    /// replica placement — the giant groups' replicas concentrate on the
+    /// same hot servers.
+    HotspotHeavyTail,
 }
 
 impl Scenario {
-    pub const ALL: [Scenario; 5] = [
+    pub const ALL: [Scenario; 7] = [
         Scenario::Alibaba,
         Scenario::Bursty,
         Scenario::HeavyTail,
         Scenario::HeteroCap,
         Scenario::Hotspot,
+        Scenario::BurstyHetero,
+        Scenario::HotspotHeavyTail,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -70,6 +87,8 @@ impl Scenario {
             Scenario::HeavyTail => "heavy-tail",
             Scenario::HeteroCap => "hetero-cap",
             Scenario::Hotspot => "hotspot",
+            Scenario::BurstyHetero => "bursty-hetero",
+            Scenario::HotspotHeavyTail => "hotspot-heavy-tail",
         }
     }
 
@@ -81,6 +100,8 @@ impl Scenario {
             Scenario::HeavyTail => "Pareto(1.5) group sizes, infinite variance",
             Scenario::HeteroCap => "Zipf-skewed server speeds (few fast, many slow)",
             Scenario::Hotspot => "scattered Zipf replica placement on hot servers",
+            Scenario::BurstyHetero => "compound: arrival bursts x Zipf-skewed speeds",
+            Scenario::HotspotHeavyTail => "compound: Pareto sizes x hot-spot placement",
         }
     }
 
@@ -91,14 +112,31 @@ impl Scenario {
             "heavy-tail" | "heavytail" | "heavy_tail" | "pareto" => Some(Scenario::HeavyTail),
             "hetero-cap" | "heterocap" | "hetero_cap" | "hetero" => Some(Scenario::HeteroCap),
             "hotspot" | "hot-spot" | "zipf-hotspot" => Some(Scenario::Hotspot),
+            "bursty-hetero" | "bursty_hetero" | "burstyhetero" => Some(Scenario::BurstyHetero),
+            "hotspot-heavy-tail" | "hotspot_heavy_tail" | "hotspotheavytail" => {
+                Some(Scenario::HotspotHeavyTail)
+            }
             _ => None,
         }
     }
 
-    /// True for scenarios whose twist lives in the cluster model rather
-    /// than the trace shape (their synthetic trace equals the baseline).
+    /// True for scenarios whose twist lives *entirely* in the cluster
+    /// model (their synthetic trace equals the baseline).
     pub fn is_cluster_side(&self) -> bool {
         matches!(self, Scenario::HeteroCap | Scenario::Hotspot)
+    }
+
+    /// True when any part of the twist lives in the cluster model — for
+    /// compounds this is true even though their trace shape also differs
+    /// from the baseline (a CSV export cannot capture the cluster side).
+    pub fn has_cluster_twist(&self) -> bool {
+        matches!(
+            self,
+            Scenario::HeteroCap
+                | Scenario::Hotspot
+                | Scenario::BurstyHetero
+                | Scenario::HotspotHeavyTail
+        )
     }
 
     /// Select this scenario on a config: sets `trace.scenario` and fully
@@ -116,10 +154,10 @@ impl Scenario {
         cfg.cluster.mu_skew = 0.0;
         cfg.cluster.placement_mode = PlacementMode::Ring;
         match self {
-            Scenario::HeteroCap => {
+            Scenario::HeteroCap | Scenario::BurstyHetero => {
                 cfg.cluster.mu_skew = 1.0;
             }
-            Scenario::Hotspot => {
+            Scenario::Hotspot | Scenario::HotspotHeavyTail => {
                 cfg.cluster.placement_mode = PlacementMode::Scatter;
                 cfg.cluster.zipf_alpha = 1.5;
             }
@@ -139,8 +177,8 @@ impl Scenario {
             Scenario::Alibaba | Scenario::HeteroCap | Scenario::Hotspot => {
                 Trace::synth_alibaba(cfg, rng)
             }
-            Scenario::Bursty => synth_bursty(cfg, rng),
-            Scenario::HeavyTail => synth_heavy_tail(cfg, rng),
+            Scenario::Bursty | Scenario::BurstyHetero => synth_bursty(cfg, rng),
+            Scenario::HeavyTail | Scenario::HotspotHeavyTail => synth_heavy_tail(cfg, rng),
         }
     }
 }
@@ -293,6 +331,52 @@ mod tests {
         Scenario::HeteroCap.apply(&mut c);
         Scenario::Bursty.apply(&mut c);
         assert_eq!(c.cluster.mu_skew, 0.0);
+
+        // Compound presets set both axes...
+        let mut c = ExperimentConfig::default();
+        Scenario::BurstyHetero.apply(&mut c);
+        assert_eq!(c.trace.scenario, Scenario::BurstyHetero);
+        assert!(c.cluster.mu_skew > 0.0);
+        assert_eq!(c.cluster.placement_mode, PlacementMode::Ring);
+
+        let mut c = ExperimentConfig::default();
+        Scenario::HotspotHeavyTail.apply(&mut c);
+        assert_eq!(c.cluster.placement_mode, PlacementMode::Scatter);
+        assert_eq!(c.cluster.zipf_alpha, 1.5);
+        assert_eq!(c.cluster.mu_skew, 0.0);
+
+        // ...and re-selecting the baseline clears them again.
+        Scenario::Alibaba.apply(&mut c);
+        assert_eq!(c.cluster.placement_mode, PlacementMode::Ring);
+    }
+
+    #[test]
+    fn compound_scenarios_compose_their_axes() {
+        // bursty-hetero: the trace really is bursty (same generator as
+        // `bursty` for the same rng stream)...
+        let c = cfg(50, 3_000);
+        let mut r1 = Rng::seed_from(500);
+        let mut r2 = Rng::seed_from(500);
+        let a = Scenario::Bursty.synth(&c, &mut r1);
+        let b = Scenario::BurstyHetero.synth(&c, &mut r2);
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(x.arrival_raw, y.arrival_raw);
+            assert_eq!(x.group_sizes, y.group_sizes);
+        }
+        // ...and hotspot-heavy-tail shares the heavy-tail generator.
+        let mut r1 = Rng::seed_from(501);
+        let mut r2 = Rng::seed_from(501);
+        let a = Scenario::HeavyTail.synth(&c, &mut r1);
+        let b = Scenario::HotspotHeavyTail.synth(&c, &mut r2);
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(x.group_sizes, y.group_sizes);
+        }
+        // Cluster-twist classification.
+        assert!(Scenario::BurstyHetero.has_cluster_twist());
+        assert!(Scenario::HotspotHeavyTail.has_cluster_twist());
+        assert!(!Scenario::BurstyHetero.is_cluster_side());
+        assert!(!Scenario::HotspotHeavyTail.is_cluster_side());
+        assert!(!Scenario::Bursty.has_cluster_twist());
     }
 
     #[test]

@@ -1,0 +1,213 @@
+//! Capacity-stability tests for the zero-allocation hot paths.
+//!
+//! The assignment workspaces (WF scratch + outcome arenas, the OCWF
+//! reorder workspace, the feasibility-oracle arenas, RD's replica tables)
+//! must stop growing once warmed: re-running the same workload through a
+//! pooled workspace may not change any reserved capacity. A capacity that
+//! creeps between identical passes means a buffer is being dropped and
+//! re-allocated per call — exactly the regression these tests guard
+//! against. (Capacities are compared, not allocator calls: capacity
+//! growth is the only way a `Vec`-based hot path can allocate.)
+
+use taos::assign::wf::{Wf, WfOutcome};
+use taos::assign::{Assigner, Instance};
+use taos::job::TaskGroup;
+use taos::sched::ocwf::{reorder_into, Outstanding, ReorderOutcome, ReorderWorkspace};
+use taos::util::rng::Rng;
+
+/// An owned random instance mixing shapes (group counts, server sets).
+struct OwnedInst {
+    groups: Vec<TaskGroup>,
+    mu: Vec<u64>,
+    busy: Vec<u64>,
+}
+
+impl OwnedInst {
+    fn view(&self) -> Instance<'_> {
+        Instance {
+            groups: &self.groups,
+            mu: &self.mu,
+            busy: &self.busy,
+        }
+    }
+}
+
+fn workload(rng: &mut Rng, m: usize, count: usize) -> Vec<OwnedInst> {
+    (0..count)
+        .map(|_| {
+            let k = 1 + rng.gen_range(5) as usize;
+            let groups: Vec<TaskGroup> = (0..k)
+                .map(|_| {
+                    let ns = 1 + rng.gen_range(m as u64) as usize;
+                    let mut sv: Vec<usize> = (0..m).collect();
+                    rng.shuffle(&mut sv);
+                    sv.truncate(ns);
+                    TaskGroup::new(rng.gen_range_incl(1, 60), sv)
+                })
+                .collect();
+            OwnedInst {
+                groups,
+                mu: (0..m).map(|_| rng.gen_range_incl(1, 5)).collect(),
+                busy: (0..m).map(|_| rng.gen_range(12)).collect(),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn wf_assign_into_capacity_freezes_after_warmup() {
+    let mut rng = Rng::seed_from(0xA110C);
+    let insts = workload(&mut rng, 12, 24);
+    let mut wf = Wf::new();
+    let mut out = WfOutcome::default();
+    // Warmup pass: buffers grow to the workload's high-water mark.
+    for inst in &insts {
+        wf.assign_into(&inst.view(), &mut out);
+    }
+    let fp = wf.scratch_footprint() + out.footprint();
+    assert!(fp > 0, "warmup must have reserved scratch");
+    // Steady state: identical passes may not move a single capacity.
+    for pass in 0..4 {
+        for inst in &insts {
+            wf.assign_into(&inst.view(), &mut out);
+        }
+        assert_eq!(
+            fp,
+            wf.scratch_footprint() + out.footprint(),
+            "WF scratch grew on steady-state pass {pass}"
+        );
+    }
+}
+
+#[test]
+fn wf_outcomes_unchanged_by_buffer_reuse() {
+    // Reusing one outcome across a mixed workload must give the same
+    // results as a fresh outcome per call.
+    let mut rng = Rng::seed_from(0xA110D);
+    let insts = workload(&mut rng, 10, 16);
+    let mut pooled_wf = Wf::new();
+    let mut pooled_out = WfOutcome::default();
+    for inst in &insts {
+        pooled_wf.assign_into(&inst.view(), &mut pooled_out);
+        let mut fresh_out = WfOutcome::default();
+        Wf::new().assign_into(&inst.view(), &mut fresh_out);
+        assert_eq!(pooled_out.to_assignment(), fresh_out.to_assignment());
+        assert_eq!(pooled_out.final_busy(), fresh_out.final_busy());
+    }
+}
+
+fn reorder_workload<'a>(jobs: &'a [taos::job::Job]) -> Vec<Outstanding<'a>> {
+    jobs.iter()
+        .map(|j| Outstanding {
+            job: j,
+            remaining: j.groups.iter().map(|g| g.size).collect(),
+        })
+        .collect()
+}
+
+fn random_jobs(rng: &mut Rng, m: usize, njobs: usize) -> Vec<taos::job::Job> {
+    (0..njobs)
+        .map(|id| {
+            let k = 1 + rng.gen_range(3) as usize;
+            let groups: Vec<TaskGroup> = (0..k)
+                .map(|_| {
+                    let ns = 1 + rng.gen_range(m as u64) as usize;
+                    let mut sv: Vec<usize> = (0..m).collect();
+                    rng.shuffle(&mut sv);
+                    sv.truncate(ns);
+                    TaskGroup::new(rng.gen_range_incl(1, 30), sv)
+                })
+                .collect();
+            taos::job::Job {
+                id,
+                arrival: id as u64,
+                groups,
+                mu: (0..m).map(|_| rng.gen_range_incl(1, 4)).collect(),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn reorder_capacity_freezes_after_warmup_serial_and_parallel() {
+    let m = 10;
+    let mut rng = Rng::seed_from(0xA110E);
+    let jobs = random_jobs(&mut rng, m, 12);
+    let outstanding = reorder_workload(&jobs);
+    for (threads, acc) in [(1, false), (1, true), (2, false), (2, true)] {
+        let mut ws = ReorderWorkspace::default();
+        let mut out = ReorderOutcome::default();
+        reorder_into(&outstanding, m, acc, threads, &mut ws, &mut out);
+        let reference = out.clone();
+        let fp = ws.footprint() + out.footprint();
+        for pass in 0..4 {
+            reorder_into(&outstanding, m, acc, threads, &mut ws, &mut out);
+            assert_eq!(reference, out, "threads={threads} acc={acc}");
+            assert_eq!(
+                fp,
+                ws.footprint() + out.footprint(),
+                "reorder scratch grew: threads={threads} acc={acc} pass={pass}"
+            );
+        }
+    }
+}
+
+#[test]
+fn reorder_workspace_survives_alternating_shapes() {
+    // Alternating between a wide and a narrow outstanding set through one
+    // workspace: results stay correct and, after one full cycle, the
+    // footprint freezes (row pools never shrink).
+    let m = 8;
+    let mut rng = Rng::seed_from(0xA110F);
+    let wide_jobs = random_jobs(&mut rng, m, 14);
+    let narrow_jobs = random_jobs(&mut rng, m, 3);
+    let wide = reorder_workload(&wide_jobs);
+    let narrow = reorder_workload(&narrow_jobs);
+    let mut ws = ReorderWorkspace::default();
+    let mut out = ReorderOutcome::default();
+    // Warmup cycle.
+    reorder_into(&wide, m, true, 1, &mut ws, &mut out);
+    let wide_ref = out.clone();
+    reorder_into(&narrow, m, true, 1, &mut ws, &mut out);
+    let narrow_ref = out.clone();
+    let fp = ws.footprint();
+    for _ in 0..3 {
+        reorder_into(&wide, m, true, 1, &mut ws, &mut out);
+        assert_eq!(wide_ref, out);
+        reorder_into(&narrow, m, true, 1, &mut ws, &mut out);
+        assert_eq!(narrow_ref, out);
+        assert_eq!(fp, ws.footprint(), "workspace churned between shapes");
+    }
+}
+
+#[test]
+fn exact_assigner_workspaces_freeze_after_warmup() {
+    // OBTA / NLIP pool the feasibility-oracle arenas; RD pools its
+    // replica tables. Cycling the same workload twice must not grow them.
+    let mut rng = Rng::seed_from(0xA1110);
+    let insts = workload(&mut rng, 8, 10);
+
+    let mut obta = taos::assign::obta::Obta::new();
+    for inst in &insts {
+        obta.assign(&inst.view());
+    }
+    let fp = obta.workspace_footprint();
+    for _ in 0..2 {
+        for inst in &insts {
+            obta.assign(&inst.view());
+        }
+        assert_eq!(fp, obta.workspace_footprint(), "OBTA oracle arena grew");
+    }
+
+    let mut rd = taos::assign::rd::Rd::new(5);
+    for inst in &insts {
+        rd.assign(&inst.view());
+    }
+    let fp = rd.scratch_footprint();
+    for _ in 0..2 {
+        for inst in &insts {
+            rd.assign(&inst.view());
+        }
+        assert_eq!(fp, rd.scratch_footprint(), "RD replica tables grew");
+    }
+}

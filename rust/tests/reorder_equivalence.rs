@@ -1,0 +1,150 @@
+//! Parallel-vs-serial equivalence of the OCWF(-ACC) reorder driver.
+//!
+//! The two-phase driver (`sched::ocwf::reorder_into`) fans candidate Φ
+//! evaluations across worker threads but replays the serial decision
+//! rules, so the schedule must be **bit-identical at any thread count**:
+//! same `ReorderOutcome` (order, assignments, wf_evals) per round, and
+//! therefore same JCT vector / makespan / total wf_evals per simulation —
+//! across every named workload scenario in the catalog.
+
+use taos::config::ExperimentConfig;
+use taos::job::Job;
+use taos::sched::ocwf::{reorder_into, Outstanding, ReorderOutcome, ReorderWorkspace};
+use taos::sched::SchedPolicy;
+use taos::sim::run_experiment;
+use taos::trace::scenarios::Scenario;
+use taos::util::rng::Rng;
+
+fn scenario_cfg(sc: Scenario, reorder_threads: usize) -> ExperimentConfig {
+    let mut cfg = taos::sweep::quick_base(77);
+    cfg.trace.jobs = 18;
+    cfg.trace.total_tasks = 1_000;
+    cfg.cluster.servers = 16;
+    cfg.cluster.avail_lo = 3;
+    cfg.cluster.avail_hi = 5;
+    sc.apply(&mut cfg);
+    cfg.sim.reorder_threads = reorder_threads;
+    cfg
+}
+
+#[test]
+fn reordered_schedules_bit_identical_across_thread_counts() {
+    for sc in Scenario::ALL {
+        for acc in [false, true] {
+            let reference = run_experiment(&scenario_cfg(sc, 1), SchedPolicy::Ocwf { acc })
+                .unwrap_or_else(|e| panic!("{}: {e}", sc.name()));
+            for threads in [2, 8] {
+                let out = run_experiment(&scenario_cfg(sc, threads), SchedPolicy::Ocwf { acc })
+                    .unwrap_or_else(|e| panic!("{}: {e}", sc.name()));
+                let tag = format!("{} acc={acc} threads={threads}", sc.name());
+                assert_eq!(reference.jcts, out.jcts, "JCTs diverged: {tag}");
+                assert_eq!(reference.makespan, out.makespan, "makespan diverged: {tag}");
+                assert_eq!(reference.wf_evals, out.wf_evals, "wf_evals diverged: {tag}");
+            }
+        }
+    }
+}
+
+#[test]
+fn acc_still_prunes_under_parallel_rounds() {
+    // The early-exit savings must survive the chunked speculative driver:
+    // the *counted* wf_evals are the serial ACC's, at every thread count.
+    for sc in Scenario::ALL {
+        let plain = run_experiment(&scenario_cfg(sc, 8), SchedPolicy::Ocwf { acc: false })
+            .unwrap_or_else(|e| panic!("{}: {e}", sc.name()));
+        let accd = run_experiment(&scenario_cfg(sc, 8), SchedPolicy::Ocwf { acc: true })
+            .unwrap_or_else(|e| panic!("{}: {e}", sc.name()));
+        assert_eq!(plain.jcts, accd.jcts, "{}: OCWF == OCWF-ACC", sc.name());
+        assert!(
+            accd.wf_evals <= plain.wf_evals,
+            "{}: ACC must not count more evals ({} vs {})",
+            sc.name(),
+            accd.wf_evals,
+            plain.wf_evals
+        );
+    }
+}
+
+fn random_jobs(rng: &mut Rng, m: usize, njobs: usize) -> Vec<Job> {
+    use taos::job::TaskGroup;
+    (0..njobs)
+        .map(|id| {
+            let k = 1 + rng.gen_range(4) as usize;
+            let groups: Vec<TaskGroup> = (0..k)
+                .map(|_| {
+                    let ns = 1 + rng.gen_range(m as u64) as usize;
+                    let mut sv: Vec<usize> = (0..m).collect();
+                    rng.shuffle(&mut sv);
+                    sv.truncate(ns);
+                    TaskGroup::new(rng.gen_range_incl(1, 40), sv)
+                })
+                .collect();
+            Job {
+                id,
+                arrival: id as u64,
+                groups,
+                mu: (0..m).map(|_| rng.gen_range_incl(1, 4)).collect(),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn reorder_outcome_byte_identical_at_1_2_8_threads() {
+    // Direct driver-level check including partially processed jobs: the
+    // full ReorderOutcome must match field for field.
+    let m = 8;
+    let mut rng = Rng::seed_from(0x0C3F);
+    for case in 0..15 {
+        let jobs = random_jobs(&mut rng, m, 2 + (case % 9));
+        let mut outstanding: Vec<Outstanding> = jobs
+            .iter()
+            .map(|j| Outstanding {
+                job: j,
+                remaining: j.groups.iter().map(|g| g.size).collect(),
+            })
+            .collect();
+        // Simulate partial progress on some jobs.
+        for o in outstanding.iter_mut().step_by(2) {
+            for r in o.remaining.iter_mut() {
+                *r -= *r / 2;
+            }
+        }
+        for acc in [false, true] {
+            let mut reference = ReorderOutcome::default();
+            reorder_into(
+                &outstanding,
+                m,
+                acc,
+                1,
+                &mut ReorderWorkspace::default(),
+                &mut reference,
+            );
+            for threads in [2, 8] {
+                let mut out = ReorderOutcome::default();
+                reorder_into(
+                    &outstanding,
+                    m,
+                    acc,
+                    threads,
+                    &mut ReorderWorkspace::default(),
+                    &mut out,
+                );
+                assert_eq!(
+                    reference, out,
+                    "case {case} acc={acc} threads={threads} diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn reorder_threads_zero_resolves_to_all_cores() {
+    // `0` must behave like "some parallel count": still bit-identical.
+    let sc = Scenario::Hotspot;
+    let serial = run_experiment(&scenario_cfg(sc, 1), SchedPolicy::Ocwf { acc: true }).unwrap();
+    let auto = run_experiment(&scenario_cfg(sc, 0), SchedPolicy::Ocwf { acc: true }).unwrap();
+    assert_eq!(serial.jcts, auto.jcts);
+    assert_eq!(serial.wf_evals, auto.wf_evals);
+}
