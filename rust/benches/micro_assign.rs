@@ -69,6 +69,21 @@ fn main() {
         });
     }
 
+    // Substrate: one empty batch through the persistent executor — the
+    // handoff latency that replaced a scoped-thread spawn per chunk.
+    {
+        use taos::runtime::executor::Executor;
+        let ex = Executor::global();
+        for stripes in [2usize, 8] {
+            bench.run(&format!("substrate/executor_handoff@{stripes}stripes"), || {
+                ex.run_batch(stripes, &|s| {
+                    black_box(s);
+                });
+                black_box(ex.epochs_dispatched())
+            });
+        }
+    }
+
     // Scheduler: one OCWF-ACC reorder round over 12 outstanding jobs.
     {
         let jobs: Vec<taos::job::Job> = (0..12)
@@ -110,6 +125,29 @@ fn main() {
             };
             bench.run(&label, || {
                 reorder_into(&outstanding, m, false, threads, &mut ws, &mut out);
+                black_box(out.order.len())
+            });
+        }
+        // Parallel ACC: adaptive speculation (chunk sized from the
+        // observed early-exit depth) vs the old fixed 2×threads depth.
+        for (label, chunk) in [
+            ("sched/ocwf_acc_reorder@12jobs_2thr_adaptive", 0usize),
+            ("sched/ocwf_acc_reorder@12jobs_2thr_fixed4", 4),
+        ] {
+            ws.set_spec_chunk(chunk);
+            bench.run(label, || {
+                reorder_into(&outstanding, m, true, 2, &mut ws, &mut out);
+                black_box(out.order.len())
+            });
+        }
+        ws.set_spec_chunk(0);
+
+        // The small-outstanding-set regime the persistent pool targets:
+        // per-round handoff cost dominates with only 4 candidates.
+        let small: Vec<Outstanding> = outstanding.iter().take(4).cloned().collect();
+        for threads in [1usize, 2] {
+            bench.run(&format!("sched/ocwf_acc_reorder@4jobs_{threads}thr"), || {
+                reorder_into(&small, m, true, threads, &mut ws, &mut out);
                 black_box(out.order.len())
             });
         }

@@ -1,0 +1,167 @@
+//! Exhaustive-search reference oracle for tiny assignment instances.
+//!
+//! [`brute_force_opt_phi`] computes the true optimum of program `P`
+//! (eq. 4) by scanning Φ upward from the lower bound Φ⁻ and running an
+//! exhaustive, memoized slot-partition search per candidate level —
+//! feasible only for tiny instances (a handful of servers, groups and
+//! tasks), which is exactly the regime where exhaustive ground truth is
+//! worth its cost.
+//!
+//! This is the oracle behind the differential test harness
+//! (`rust/tests/differential_assign.rs`): OBTA and NLIP must match it
+//! exactly on every enumerated small instance, WF must stay within its
+//! K_c factor of it, and every heuristic is lower-bounded by it. It was
+//! promoted out of the crate-private test helpers so integration tests
+//! (compiled as separate crates) can use it; it is **not** a production
+//! assigner — its cost grows exponentially with the instance.
+
+use std::collections::HashMap;
+
+use crate::job::{ServerId, Slots, TaskGroup};
+
+use super::{bounds, Instance};
+
+/// The optimal program-P completion time Φ* of the instance, by upward
+/// scan + exhaustive feasibility search. Panics if the scan runs away
+/// (10 000 levels past Φ⁻), which cannot happen on well-formed instances
+/// since Φ⁺ is always feasible.
+pub fn brute_force_opt_phi(inst: &Instance) -> Slots {
+    let lo = bounds::phi_lower(inst);
+    let mut phi = lo;
+    loop {
+        if brute_feasible(inst, phi) {
+            return phi;
+        }
+        phi += 1;
+        assert!(phi < lo + 10_000, "brute force runaway");
+    }
+}
+
+/// Can every group's tasks be placed so that each server finishes by
+/// `phi` under the per-group integer-slot accounting of program `P`?
+fn brute_feasible(inst: &Instance, phi: Slots) -> bool {
+    let union = inst.union_servers();
+    let mut cap: Vec<u64> = union
+        .iter()
+        .map(|&m| phi.saturating_sub(inst.busy[m]))
+        .collect();
+    let groups: Vec<&TaskGroup> = inst.groups.iter().filter(|g| g.size > 0).collect();
+    // Memo on (group index, residual caps): residual capacity fully
+    // determines feasibility of the remaining groups.
+    let mut memo: HashMap<(usize, Vec<u64>), bool> = HashMap::new();
+
+    fn rec(
+        gi: usize,
+        groups: &[&TaskGroup],
+        union: &[ServerId],
+        cap: &mut Vec<u64>,
+        mu: &[u64],
+        memo: &mut HashMap<(usize, Vec<u64>), bool>,
+    ) -> bool {
+        if gi == groups.len() {
+            return true;
+        }
+        let key = (gi, cap.clone());
+        if let Some(&v) = memo.get(&key) {
+            return v;
+        }
+        let g = groups[gi];
+        let result = alloc(0, g.size, g, gi, groups, union, cap, mu, memo);
+        memo.insert(key, result);
+        result
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn alloc(
+        si: usize,
+        remaining: u64,
+        g: &TaskGroup,
+        gi: usize,
+        groups: &[&TaskGroup],
+        union: &[ServerId],
+        cap: &mut Vec<u64>,
+        mu: &[u64],
+        memo: &mut HashMap<(usize, Vec<u64>), bool>,
+    ) -> bool {
+        if remaining == 0 {
+            return rec(gi + 1, groups, union, cap, mu, memo);
+        }
+        if si == g.servers.len() {
+            return false;
+        }
+        let m = g.servers[si];
+        let ui = union.iter().position(|&x| x == m).unwrap();
+        let max_slots = cap[ui].min(crate::util::ceil_div(remaining, mu[m]));
+        for s in (0..=max_slots).rev() {
+            cap[ui] -= s;
+            let served = (s * mu[m]).min(remaining);
+            if alloc(si + 1, remaining - served, g, gi, groups, union, cap, mu, memo) {
+                cap[ui] += s;
+                return true;
+            }
+            cap[ui] += s;
+        }
+        false
+    }
+    rec(0, &groups, &union, &mut cap, inst.mu, &mut memo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::TaskGroup;
+
+    #[test]
+    fn matches_hand_computed_optima() {
+        // 12 tasks on 3 idle μ=2 servers: 2 slots each → Φ* = 2.
+        let groups = vec![TaskGroup::new(12, vec![0, 1, 2])];
+        let mu = vec![2, 2, 2];
+        let busy = vec![0, 0, 0];
+        let inst = Instance {
+            groups: &groups,
+            mu: &mu,
+            busy: &busy,
+        };
+        assert_eq!(brute_force_opt_phi(&inst), 2);
+
+        // Pinned group forces Φ* through the busy server.
+        let groups = vec![TaskGroup::new(3, vec![0])];
+        let mu = vec![1];
+        let busy = vec![2];
+        let inst = Instance {
+            groups: &groups,
+            mu: &mu,
+            busy: &busy,
+        };
+        assert_eq!(brute_force_opt_phi(&inst), 5);
+    }
+
+    #[test]
+    fn per_group_slot_granularity_is_respected() {
+        // Two groups of 1 task on one μ=3 server: each group still costs
+        // a whole slot (program P charges ceil per group), so Φ* = 2 —
+        // the case a merged-queue objective would get wrong.
+        let groups = vec![TaskGroup::new(1, vec![0]), TaskGroup::new(1, vec![0])];
+        let mu = vec![3];
+        let busy = vec![0];
+        let inst = Instance {
+            groups: &groups,
+            mu: &mu,
+            busy: &busy,
+        };
+        assert_eq!(brute_force_opt_phi(&inst), 2);
+    }
+
+    #[test]
+    fn empty_groups_are_free() {
+        let groups = vec![TaskGroup::new(0, vec![0])];
+        let mu = vec![1];
+        let busy = vec![7];
+        let inst = Instance {
+            groups: &groups,
+            mu: &mu,
+            busy: &busy,
+        };
+        assert_eq!(brute_force_opt_phi(&inst), 0);
+    }
+}

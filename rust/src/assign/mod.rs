@@ -16,6 +16,7 @@
 //! - [`rd::Rd`] — the replica-deletion heuristic (§III-C).
 
 pub mod bounds;
+pub mod brute;
 pub mod feasible;
 pub mod ilp;
 pub mod nlip;
@@ -230,11 +231,14 @@ pub fn validate_assignment(inst: &Instance, a: &Assignment) -> Result<(), String
 
 #[cfg(test)]
 pub(crate) mod testutil {
-    //! Shared helpers for assigner tests: random instance generation and a
-    //! brute-force optimal Φ for tiny instances.
+    //! Shared helpers for assigner tests: random instance generation and
+    //! the brute-force optimal Φ (re-exported from [`super::brute`], the
+    //! public oracle behind the differential test harness).
 
     use super::*;
     use crate::util::rng::Rng;
+
+    pub use super::brute::brute_force_opt_phi;
 
     /// An owned instance for test generation.
     #[derive(Clone, Debug)]
@@ -279,88 +283,6 @@ pub(crate) mod testutil {
         OwnedInstance { groups, mu, busy }
     }
 
-    /// Brute-force the optimal program-P Φ by scanning Φ upward and doing
-    /// exhaustive (memoized) slot-partition search per server. Only
-    /// usable for tiny instances.
-    pub fn brute_force_opt_phi(inst: &Instance) -> Slots {
-        let lo = bounds::phi_lower(inst);
-        let mut phi = lo;
-        loop {
-            if brute_feasible(inst, phi) {
-                return phi;
-            }
-            phi += 1;
-            assert!(phi < lo + 10_000, "brute force runaway");
-        }
-    }
-
-    fn brute_feasible(inst: &Instance, phi: Slots) -> bool {
-        use std::collections::HashMap;
-        let union = inst.union_servers();
-        let mut cap: Vec<u64> = union
-            .iter()
-            .map(|&m| phi.saturating_sub(inst.busy[m]))
-            .collect();
-        let groups: Vec<&TaskGroup> = inst.groups.iter().filter(|g| g.size > 0).collect();
-        // Memo on (group index, residual caps): residual capacity fully
-        // determines feasibility of the remaining groups.
-        let mut memo: HashMap<(usize, Vec<u64>), bool> = HashMap::new();
-
-        fn rec(
-            gi: usize,
-            groups: &[&TaskGroup],
-            union: &[ServerId],
-            cap: &mut Vec<u64>,
-            mu: &[u64],
-            memo: &mut std::collections::HashMap<(usize, Vec<u64>), bool>,
-        ) -> bool {
-            if gi == groups.len() {
-                return true;
-            }
-            let key = (gi, cap.clone());
-            if let Some(&v) = memo.get(&key) {
-                return v;
-            }
-            let g = groups[gi];
-            let result = alloc(0, g.size, g, gi, groups, union, cap, mu, memo);
-            memo.insert(key, result);
-            result
-        }
-
-        #[allow(clippy::too_many_arguments)]
-        fn alloc(
-            si: usize,
-            remaining: u64,
-            g: &TaskGroup,
-            gi: usize,
-            groups: &[&TaskGroup],
-            union: &[ServerId],
-            cap: &mut Vec<u64>,
-            mu: &[u64],
-            memo: &mut std::collections::HashMap<(usize, Vec<u64>), bool>,
-        ) -> bool {
-            if remaining == 0 {
-                return rec(gi + 1, groups, union, cap, mu, memo);
-            }
-            if si == g.servers.len() {
-                return false;
-            }
-            let m = g.servers[si];
-            let ui = union.iter().position(|&x| x == m).unwrap();
-            let max_slots = cap[ui].min(crate::util::ceil_div(remaining, mu[m]));
-            for s in (0..=max_slots).rev() {
-                cap[ui] -= s;
-                let served = (s * mu[m]).min(remaining);
-                if alloc(si + 1, remaining - served, g, gi, groups, union, cap, mu, memo) {
-                    cap[ui] += s;
-                    return true;
-                }
-                cap[ui] += s;
-            }
-            false
-        }
-        rec(0, &groups, &union, &mut cap, inst.mu, &mut memo)
-    }
 }
 
 #[cfg(test)]

@@ -93,6 +93,11 @@ pub struct SimConfig {
     /// wall-clock knob only. Keep at 1 when a sweep already parallelizes
     /// across cells, or the two levels oversubscribe each other.
     pub reorder_threads: usize,
+    /// Fixed OCWF-ACC speculation depth for parallel reorder rounds
+    /// (`0` = adaptive, sized per round from the observed early-exit
+    /// depth). Like `reorder_threads`, a pure wall-clock knob: schedules
+    /// are bit-identical at any value.
+    pub acc_spec_chunk: usize,
 }
 
 impl Default for SimConfig {
@@ -101,6 +106,7 @@ impl Default for SimConfig {
             max_slots: 50_000_000,
             record_jct: true,
             reorder_threads: 1,
+            acc_spec_chunk: 0,
         }
     }
 }
@@ -199,6 +205,9 @@ impl ExperimentConfig {
                 "reorder_threads" => {
                     cfg.sim.reorder_threads = val.parse().map_err(|_| perr("bad usize"))?
                 }
+                "acc_spec_chunk" => {
+                    cfg.sim.acc_spec_chunk = val.parse().map_err(|_| perr("bad usize"))?
+                }
                 "seed" => cfg.seed = val.parse().map_err(|_| perr("bad u64"))?,
                 other => {
                     return Err(Error::TraceParse {
@@ -287,6 +296,14 @@ mod tests {
         assert_eq!(cfg.sim.reorder_threads, 4);
         assert_eq!(SimConfig::default().reorder_threads, 1);
         assert!(ExperimentConfig::from_str("reorder_threads = x").is_err());
+    }
+
+    #[test]
+    fn parses_acc_spec_chunk_key() {
+        let cfg = ExperimentConfig::from_str("acc_spec_chunk = 16").unwrap();
+        assert_eq!(cfg.sim.acc_spec_chunk, 16);
+        assert_eq!(SimConfig::default().acc_spec_chunk, 0, "adaptive by default");
+        assert!(ExperimentConfig::from_str("acc_spec_chunk = x").is_err());
     }
 
     #[test]

@@ -8,7 +8,7 @@ use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::assign::{AssignPolicy, Instance};
+use crate::assign::{AssignPolicy, Assigner, Instance};
 use crate::cluster::Cluster;
 use crate::job::groups::derive_groups;
 use crate::job::ServerId;

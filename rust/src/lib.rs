@@ -18,8 +18,12 @@
 //! - [`cluster`], [`trace`], [`job`] — the system model (§II).
 //! - [`flow`], [`util`], [`proptest`], [`benchlib`], [`cli`], [`config`] —
 //!   substrates built from scratch (offline environment, no external deps).
-//! - [`runtime`], [`coordinator`] — PJRT artifact execution and the live
-//!   leader/worker data plane.
+//! - [`runtime`] — the persistent worker-pool executor behind every
+//!   parallel fan-out, plus (feature `pjrt`) the PJRT artifact engine.
+//! - `coordinator` (feature `pjrt`) — the live leader/worker data plane
+//!   over the PJRT payload kernel. Both PJRT pieces need the `xla` crate,
+//!   which the dependency-free offline build does not vendor, so they are
+//!   compiled only when the `pjrt` feature is enabled.
 //!
 //! ## Quickstart
 //! ```no_run
@@ -35,6 +39,7 @@ pub mod benchlib;
 pub mod cli;
 pub mod cluster;
 pub mod config;
+#[cfg(feature = "pjrt")]
 pub mod coordinator;
 pub mod flow;
 pub mod job;

@@ -10,11 +10,11 @@
 //! - `compare`    run all six algorithms on one setting side by side.
 //! - `gen-trace`  emit a synthetic Alibaba-like trace as batch_task.csv.
 //! - `live`       run the live coordinator (leader/workers + PJRT
-//!                payload kernel) on a small workload; needs artifacts.
+//!                payload kernel) on a small workload; needs artifacts
+//!                and a binary built with `--features pjrt`.
 //! - `verify-kernel`  cross-check the AOT water-filling kernel against
-//!                the native rust WF on random instances; needs artifacts.
-
-use std::path::Path;
+//!                the native rust WF on random instances; needs artifacts
+//!                and a binary built with `--features pjrt`.
 
 use taos::assign::AssignPolicy;
 use taos::cli::{flag, flag_req, switch, Cli};
@@ -72,6 +72,10 @@ fn build_cli() -> Cli {
             flag_req(
                 "reorder-threads",
                 "worker threads for OCWF reorder rounds (0 = all cores) [default 1]",
+            ),
+            flag_req(
+                "acc-spec-chunk",
+                "fixed OCWF-ACC speculation depth (0 = adaptive) [default 0]",
             ),
         ]
     };
@@ -195,6 +199,9 @@ fn config_from(parsed: &taos::cli::Parsed) -> Result<ExperimentConfig, String> {
     if let Some(v) = parsed.get_parse::<usize>("reorder-threads")? {
         cfg.sim.reorder_threads = v;
     }
+    if let Some(v) = parsed.get_parse::<usize>("acc-spec-chunk")? {
+        cfg.sim.acc_spec_chunk = v;
+    }
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(cfg)
 }
@@ -298,6 +305,9 @@ fn cmd_repro(parsed: &taos::cli::Parsed) -> Result<(), String> {
     if let Some(v) = parsed.get_parse::<usize>("reorder-threads")? {
         base.sim.reorder_threads = v;
     }
+    if let Some(v) = parsed.get_parse::<usize>("acc-spec-chunk")? {
+        base.sim.acc_spec_chunk = v;
+    }
     let opts = taos::sweep::SweepOptions::default()
         .with_threads(parsed.get_parse::<usize>("threads")?.unwrap_or(1))
         .with_trials(parsed.get_parse::<usize>("trials")?.unwrap_or(1));
@@ -363,7 +373,17 @@ fn cmd_gen_trace(parsed: &taos::cli::Parsed) -> Result<(), String> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_live(_parsed: &taos::cli::Parsed) -> Result<(), String> {
+    Err("the `live` subcommand needs the PJRT runtime, which is gated off \
+         in the dependency-free build; rebuild with `--features pjrt` \
+         (requires the vendored `xla` crate)"
+        .into())
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_live(parsed: &taos::cli::Parsed) -> Result<(), String> {
+    use std::path::Path;
     use std::sync::Arc;
     use taos::cluster::Cluster;
     use taos::config::ClusterConfig;
@@ -404,13 +424,25 @@ fn cmd_live(parsed: &taos::cli::Parsed) -> Result<(), String> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_verify_kernel(_parsed: &taos::cli::Parsed) -> Result<(), String> {
+    Err("the `verify-kernel` subcommand needs the PJRT runtime, which is \
+         gated off in the dependency-free build; rebuild with `--features \
+         pjrt` (requires the vendored `xla` crate)"
+        .into())
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_verify_kernel(parsed: &taos::cli::Parsed) -> Result<(), String> {
     let artifacts = parsed.get_or("artifacts", "artifacts");
     let cases = parsed.get_parse::<usize>("cases")?.unwrap_or(64);
     let seed = parsed.get_parse::<u64>("seed")?.unwrap_or(7);
-    let (checked, max_b) =
-        taos::coordinator::verify::verify_wf_kernel(Path::new(artifacts), cases, seed)
-            .map_err(|e| e.to_string())?;
+    let (checked, max_b) = taos::coordinator::verify::verify_wf_kernel(
+        std::path::Path::new(artifacts),
+        cases,
+        seed,
+    )
+    .map_err(|e| e.to_string())?;
     println!("verified {checked} random instances (batches of {max_b}): AOT kernel == native WF");
     Ok(())
 }

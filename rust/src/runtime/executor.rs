@@ -1,0 +1,418 @@
+//! The persistent worker-pool executor.
+//!
+//! Both parallel fan-outs in the scheduler — the sweep engine's
+//! (policy × setting × trial) cells and the OCWF reorder driver's
+//! candidate Φ evaluations — used to spawn **scoped threads per chunk**
+//! (`std::thread::scope`). A thread spawn costs tens of microseconds,
+//! which dominates exactly the regime where OCWF-ACC should be cheapest:
+//! small outstanding sets evaluate a handful of candidates per round, so
+//! the per-round spawn overhead exceeded the work being fanned out.
+//!
+//! This module replaces the per-chunk spawns with a pool of **parked
+//! worker threads** created once and reused for every batch:
+//!
+//! - Submission pushes one epoch-tagged [`Batch`] descriptor into a
+//!   mutex-guarded queue and wakes up to `stripes − 1` parked workers
+//!   through a condvar.
+//! - A batch is divided into `stripes` logical units. Workers (and the
+//!   submitter itself, see below) claim stripes through an atomic ticket
+//!   counter, so each stripe runs **exactly once** on exactly one thread.
+//! - Completion is counted on an atomic and the submitter is released via
+//!   `thread::park`/`unpark` — no allocation, no channels.
+//!
+//! ## Why the submitter helps
+//!
+//! After enqueueing, the submitting thread claims and runs stripes of its
+//! own batch before blocking. This makes nested submission — a sweep cell
+//! running *on* a pool worker that itself fans a reorder round out —
+//! deadlock-free by construction: even if every pool worker is busy, the
+//! submitter alone drains its batch. It also means a batch never waits
+//! for a worker to wake before making progress.
+//!
+//! ## Determinism
+//!
+//! Which *thread* runs a stripe is scheduling-dependent; which *work* a
+//! stripe performs is a pure function of the stripe index. Both callers
+//! ([`crate::sweep::pool::parallel_map`] re-sorts by index,
+//! [`crate::sweep::pool::parallel_for_each`] stripes worker states
+//! statically) keep their outputs bit-identical at any thread count, as
+//! asserted by `sweep_determinism` and `reorder_equivalence`.
+//!
+//! ## Panics and shutdown
+//!
+//! A panic inside a stripe is caught, recorded in the batch, and
+//! re-thrown on the submitting thread after the batch completes — the
+//! same observable behavior as a scoped-thread panic, except the pool
+//! workers survive and keep serving later batches. Dropping an
+//! [`Executor`] parks no new work, wakes every worker, and joins them;
+//! the process-wide [`Executor::global`] pool lives for the process
+//! lifetime. Thread creation is counted in a process-wide counter
+//! ([`threads_spawned_total`]) so the allocation-stability suite can
+//! assert the pool spawns **zero threads after warmup**.
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::{JoinHandle, Thread};
+
+/// Process-wide count of pool worker threads ever spawned. Monotonic;
+/// frozen once every executor in use is warm — the property
+/// `rust/tests/alloc_stability.rs` asserts.
+static THREADS_SPAWNED: AtomicU64 = AtomicU64::new(0);
+
+/// Total pool worker threads spawned by all executors so far.
+pub fn threads_spawned_total() -> u64 {
+    THREADS_SPAWNED.load(Ordering::Relaxed)
+}
+
+/// One submitted batch: a type-erased task run once per stripe.
+///
+/// The descriptor lives on the **submitter's stack**; workers reach it
+/// through a raw pointer published via the queue mutex. Safety rests on
+/// one invariant: the submitter does not return from
+/// [`Executor::run_batch`] until every stripe has completed *and* the
+/// queue entry has been removed, so any pointer a worker can still reach
+/// refers to a live batch (see `run_claimed` for the claim-ordering that
+/// upholds this across stripe boundaries).
+struct Batch {
+    /// Type-erased `F: Fn(usize)` invoker.
+    call: unsafe fn(*const (), usize),
+    data: *const (),
+    stripes: usize,
+    /// Ticket counter: `fetch_add` hands out stripe indices exactly once.
+    next: AtomicUsize,
+    /// Stripes not yet completed; the submitter parks until it reaches 0.
+    remaining: AtomicUsize,
+    /// The submitting thread, unparked by the final completion.
+    waiter: Thread,
+    /// First panic payload observed in any stripe (re-thrown by the
+    /// submitter).
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+/// A queue entry. Sendable by the invariant documented on [`Batch`].
+#[derive(Clone, Copy)]
+struct BatchPtr(*const Batch);
+unsafe impl Send for BatchPtr {}
+
+struct Queue {
+    items: VecDeque<BatchPtr>,
+    shutdown: bool,
+}
+
+struct Inner {
+    queue: Mutex<Queue>,
+    work_cv: Condvar,
+    /// Epochs (batches) dispatched — telemetry for the handoff cost the
+    /// executor amortizes.
+    epochs: AtomicU64,
+}
+
+/// A persistent pool of parked worker threads executing striped batches.
+pub struct Executor {
+    inner: Arc<Inner>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Executor {
+    /// Spawn a pool with `threads` parked workers (at least one).
+    pub fn new(threads: usize) -> Executor {
+        let threads = threads.max(1);
+        let inner = Arc::new(Inner {
+            queue: Mutex::new(Queue {
+                items: VecDeque::new(),
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            epochs: AtomicU64::new(0),
+        });
+        let workers = (0..threads)
+            .map(|w| {
+                let inner = Arc::clone(&inner);
+                THREADS_SPAWNED.fetch_add(1, Ordering::Relaxed);
+                std::thread::Builder::new()
+                    .name(format!("taos-exec-{w}"))
+                    .spawn(move || worker_loop(&inner))
+                    .expect("spawn executor worker")
+            })
+            .collect();
+        Executor { inner, workers }
+    }
+
+    /// The process-wide pool, created on first use with one worker per
+    /// hardware thread. All library fan-outs go through this instance;
+    /// after its lazy construction the process never spawns another pool
+    /// thread.
+    pub fn global() -> &'static Executor {
+        static GLOBAL: OnceLock<Executor> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            Executor::new(
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1),
+            )
+        })
+    }
+
+    /// Number of pooled worker threads (fixed at construction).
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Batches dispatched so far (telemetry).
+    pub fn epochs_dispatched(&self) -> u64 {
+        self.inner.epochs.load(Ordering::Relaxed)
+    }
+
+    /// Run `task(stripe)` once for every `stripe in 0..stripes`, blocking
+    /// until all stripes completed. `stripes` may exceed the pool size —
+    /// stripes are logical work units, not threads. A single stripe runs
+    /// inline. Panics in any stripe are re-thrown here after the batch
+    /// drains.
+    pub fn run_batch<F>(&self, stripes: usize, task: &F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if stripes == 0 {
+            return;
+        }
+        if stripes == 1 {
+            task(0);
+            return;
+        }
+        unsafe fn thunk<F: Fn(usize)>(data: *const (), stripe: usize) {
+            (*(data as *const F))(stripe)
+        }
+        let batch = Batch {
+            call: thunk::<F>,
+            data: task as *const F as *const (),
+            stripes,
+            next: AtomicUsize::new(0),
+            remaining: AtomicUsize::new(stripes),
+            waiter: std::thread::current(),
+            panic: Mutex::new(None),
+        };
+        self.inner.epochs.fetch_add(1, Ordering::Relaxed);
+        let ptr = BatchPtr(&batch as *const Batch);
+        {
+            let mut q = self.inner.queue.lock().unwrap();
+            q.items.push_back(ptr);
+        }
+        // At most `stripes - 1` helpers are useful (the submitter covers
+        // the rest); waking the whole pool for a 2-stripe reorder round
+        // would thrash exactly the small-set regime this pool exists for.
+        for _ in 0..(stripes - 1).min(self.workers.len()) {
+            self.inner.work_cv.notify_one();
+        }
+        // Help: claim and run stripes of our own batch. Guarantees
+        // progress even when every worker is busy (nested submission).
+        let first = batch.next.fetch_add(1, Ordering::Relaxed);
+        if first < stripes {
+            run_claimed(&batch, first);
+        }
+        // Wait for straggler stripes claimed by workers.
+        while batch.remaining.load(Ordering::Acquire) != 0 {
+            std::thread::park();
+        }
+        // Remove our entry if no worker consumed it; after this point no
+        // thread can reach the batch and it may safely drop.
+        {
+            let mut q = self.inner.queue.lock().unwrap();
+            if let Some(pos) = q.items.iter().position(|p| p.0 == ptr.0) {
+                let _ = q.items.remove(pos);
+            }
+        }
+        let payload = batch.panic.lock().unwrap().take();
+        if let Some(p) = payload {
+            resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        {
+            let mut q = self.inner.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.inner.work_cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Run stripe `first` and keep claiming follow-up stripes until the
+/// ticket counter is exhausted.
+///
+/// Claim-ordering invariant: the *next* ticket is always claimed **before
+/// completing the current stripe**. While a claimed stripe is
+/// uncompleted, `remaining > 0`, so the submitter cannot return and the
+/// batch cannot drop — making the follow-up `fetch_add` safe. Once a
+/// completion might be the last (ticket exhausted), the batch is never
+/// touched again: `stripes` is copied to a local and the waiter handle is
+/// cloned out before the final `fetch_sub`.
+fn run_claimed(batch: &Batch, first: usize) {
+    let stripes = batch.stripes;
+    let mut s = first;
+    loop {
+        let result = catch_unwind(AssertUnwindSafe(|| unsafe { (batch.call)(batch.data, s) }));
+        if let Err(payload) = result {
+            let mut slot = batch.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+        let next = batch.next.fetch_add(1, Ordering::Relaxed);
+        let waiter = batch.waiter.clone();
+        if batch.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Final completion: `batch` may be dropped by the submitter
+            // the instant this fetch_sub lands. Only locals from here on.
+            waiter.unpark();
+            return;
+        }
+        if next >= stripes {
+            return;
+        }
+        s = next;
+    }
+}
+
+fn worker_loop(inner: &Inner) {
+    loop {
+        // Claim a stripe while holding the queue lock: an entry present
+        // in the queue is always live (the submitter removes its entry
+        // before returning), and a successful claim keeps the batch live
+        // past the unlock.
+        let (ptr, first) = {
+            let mut q = inner.queue.lock().unwrap();
+            'scan: loop {
+                if q.shutdown {
+                    return;
+                }
+                while let Some(&p) = q.items.front() {
+                    let b = unsafe { &*p.0 };
+                    let s = b.next.fetch_add(1, Ordering::Relaxed);
+                    if s < b.stripes {
+                        break 'scan (p, s);
+                    }
+                    // Fully claimed: no work left to hand out.
+                    let _ = q.items.pop_front();
+                }
+                q = inner.work_cv.wait(q).unwrap();
+            }
+        };
+        let batch = unsafe { &*ptr.0 };
+        run_claimed(batch, first);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+    use std::time::Duration;
+
+    #[test]
+    fn every_stripe_runs_exactly_once() {
+        let ex = Executor::new(3);
+        for stripes in [1, 2, 3, 7, 64] {
+            let counts: Vec<AtomicU32> = (0..stripes).map(|_| AtomicU32::new(0)).collect();
+            let task = |s: usize| {
+                counts[s].fetch_add(1, Ordering::Relaxed);
+            };
+            ex.run_batch(stripes, &task);
+            for (s, c) in counts.iter().enumerate() {
+                assert_eq!(c.load(Ordering::Relaxed), 1, "stripe {s} of {stripes}");
+            }
+        }
+    }
+
+    #[test]
+    fn oversubscribed_stripes_complete_on_small_pool() {
+        let ex = Executor::new(1);
+        let total = AtomicU32::new(0);
+        ex.run_batch(100, &|_s| {
+            total.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn nested_submission_does_not_deadlock() {
+        // A stripe submitting its own batch to the same (single-worker!)
+        // pool must complete: the submitter-helps rule drains it.
+        let ex = Executor::new(1);
+        let inner_runs = AtomicU32::new(0);
+        ex.run_batch(3, &|_s| {
+            ex.run_batch(4, &|_t| {
+                inner_runs.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(inner_runs.load(Ordering::Relaxed), 12);
+    }
+
+    #[test]
+    fn panic_propagates_and_pool_survives() {
+        let ex = Executor::new(2);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            ex.run_batch(8, &|s| {
+                if s == 5 {
+                    panic!("stripe boom");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "stripe panic must reach the submitter");
+        // The pool keeps working after a stripe panicked.
+        let ok = AtomicU32::new(0);
+        ex.run_batch(4, &|_s| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn shutdown_joins_promptly() {
+        // The CI matrix gates the suite with a timeout; this is the
+        // in-repo watchdog for the same hang class.
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            let ex = Executor::new(4);
+            ex.run_batch(16, &|_s| {});
+            drop(ex);
+            tx.send(()).unwrap();
+        });
+        rx.recv_timeout(Duration::from_secs(30))
+            .expect("executor shutdown hung");
+    }
+
+    #[test]
+    fn epoch_counter_advances_per_batch() {
+        let ex = Executor::new(2);
+        let before = ex.epochs_dispatched();
+        ex.run_batch(4, &|_s| {});
+        ex.run_batch(4, &|_s| {});
+        assert_eq!(ex.epochs_dispatched(), before + 2);
+        // Single-stripe batches run inline and are not dispatched.
+        ex.run_batch(1, &|_s| {});
+        assert_eq!(ex.epochs_dispatched(), before + 2);
+    }
+
+    #[test]
+    fn global_pool_is_one_instance() {
+        // The frozen-thread-count property is asserted in
+        // `rust/tests/alloc_stability.rs`, where no test-local pools run
+        // concurrently; here we check identity and reusability.
+        let a = Executor::global();
+        a.run_batch(4, &|_s| {});
+        for _ in 0..16 {
+            let b = Executor::global();
+            assert!(std::ptr::eq(a, b), "global pool must be a singleton");
+            b.run_batch(8, &|_s| {});
+        }
+        assert!(a.threads() >= 1);
+        assert!(threads_spawned_total() >= a.threads() as u64);
+    }
+}

@@ -1,7 +1,21 @@
-//! PJRT runtime: loads AOT-compiled HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them on the CPU PJRT client.
-//! Implemented in `engine.rs`; this module re-exports the public surface.
+//! In-process execution runtimes.
+//!
+//! - [`executor`] — the persistent worker-pool executor behind every
+//!   parallel fan-out in the library ([`crate::sweep::pool`] and, through
+//!   it, the OCWF reorder driver). Always built; std-only.
+//! - `engine` (feature `pjrt`) — the PJRT engine that loads AOT-compiled
+//!   HLO-text artifacts produced by `python/compile/aot.py` and executes
+//!   them on the CPU PJRT client. Gated behind the `pjrt` cargo feature
+//!   because it needs the `xla` crate, which the offline, dependency-free
+//!   build does not vendor; enable the feature only after adding that
+//!   dependency.
 
+pub mod executor;
+
+#[cfg(feature = "pjrt")]
 mod engine;
 
+#[cfg(feature = "pjrt")]
 pub use engine::{ArtifactIndex, Executable, PjrtRuntime};
+
+pub use executor::Executor;

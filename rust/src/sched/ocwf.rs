@@ -34,14 +34,27 @@
 //!
 //! - plain OCWF evaluates every unplaced candidate anyway, so the fan-out
 //!   wastes nothing;
-//! - OCWF-ACC evaluates *speculatively* in small chunks (2×threads).
-//!   Replay consumes a chunk under the serial rules — candidates the
-//!   serial path would have skipped are simply discarded (not counted in
-//!   `wf_evals`, their stale bounds untouched), and the strict-`>` early
-//!   exit abandons the rest of the chunk exactly where the serial scan
-//!   would break. Speculation can waste up to one chunk of evaluations
-//!   per round, so parallel ACC trades work for latency; it pays off when
-//!   rounds are wide (many outstanding jobs).
+//! - OCWF-ACC evaluates *speculatively* in small chunks. Replay consumes
+//!   a chunk under the serial rules — candidates the serial path would
+//!   have skipped are simply discarded (not counted in `wf_evals`, their
+//!   stale bounds untouched), and the strict-`>` early exit abandons the
+//!   rest of the chunk exactly where the serial scan would break.
+//!   Speculation can waste up to one chunk of evaluations per round.
+//!
+//! ## Adaptive speculation depth
+//!
+//! The ACC chunk size is **adaptive**: each round records how many
+//! candidates the serial rules actually consumed before the early exit
+//! (the *observed exit depth*), and the next round speculates exactly
+//! that many, clamped to `[2, 256]`. The predictor is derived only from
+//! prior-round outcomes of the same call, so it is deterministic; the
+//! only thread-dependent choice is the first round's seed value
+//! (`2×threads`, the historical fixed depth), and *no* chunk choice can
+//! affect the outcome — replay re-applies the serial rules regardless of
+//! how far speculation ran. A fixed depth (honored exactly, down to 1)
+//! can be forced for experiments via
+//! [`ReorderWorkspace::set_spec_chunk`] (config key `acc_spec_chunk`,
+//! CLI `--acc-spec-chunk`).
 //!
 //! All per-call state — materialized remaining-groups, stale bounds, the
 //! accumulated [`ClusterState`], candidate lists, per-worker WF arenas —
@@ -69,6 +82,76 @@ pub struct Outstanding<'a> {
 impl<'a> Outstanding<'a> {
     pub fn total_remaining(&self) -> TaskCount {
         self.remaining.iter().sum()
+    }
+}
+
+/// Pooled builder for the per-arrival outstanding set.
+///
+/// `run_reordered` used to collect a fresh `Vec<Outstanding>` — cloning
+/// every job's remaining-counts vector — on **every arrival**, the last
+/// per-arrival allocations outside the reorder hot path. The set is a row
+/// pool in the style of [`WfOutcome`]: rows `0..live` are the current
+/// set, [`OutstandingSet::clear`] only resets the live count, and
+/// [`OutstandingSet::push`] rebuilds row `live` in place (job reference
+/// overwritten, remaining buffer cleared and refilled). Row *i* always
+/// serves the *i*-th pushed job, so identical arrival cycles touch
+/// identical buffers and the footprint freezes after one warmup cycle —
+/// asserted by `rust/tests/alloc_stability.rs`.
+#[derive(Clone, Debug, Default)]
+pub struct OutstandingSet<'a> {
+    /// Physical row pool; rows `0..live` are the current set.
+    rows: Vec<Outstanding<'a>>,
+    live: usize,
+}
+
+impl<'a> OutstandingSet<'a> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reset the live count; every row (and its buffer) stays pooled.
+    pub fn clear(&mut self) {
+        self.live = 0;
+    }
+
+    /// Append one outstanding job, copying `remaining` into the next
+    /// pooled row.
+    pub fn push(&mut self, job: &'a Job, remaining: &[TaskCount]) {
+        if self.live < self.rows.len() {
+            let row = &mut self.rows[self.live];
+            row.job = job;
+            row.remaining.clear();
+            row.remaining.extend_from_slice(remaining);
+        } else {
+            self.rows.push(Outstanding {
+                job,
+                remaining: remaining.to_vec(),
+            });
+        }
+        self.live += 1;
+    }
+
+    pub fn as_slice(&self) -> &[Outstanding<'a>] {
+        &self.rows[..self.live]
+    }
+
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Reserved capacity across the pooled buffers (allocation-stability
+    /// tests).
+    pub fn footprint(&self) -> usize {
+        self.rows.capacity()
+            + self
+                .rows
+                .iter()
+                .map(|o| o.remaining.capacity())
+                .sum::<usize>()
     }
 }
 
@@ -175,9 +258,19 @@ pub struct ReorderWorkspace {
     lookup: Vec<(u32, u32)>,
     /// Busy times accumulated by the jobs placed so far this reordering.
     state: ClusterState,
+    /// Fixed ACC speculation depth override; `0` (default) = adaptive.
+    /// Configuration, not scratch: survives [`ReorderWorkspace::ensure`].
+    spec_chunk: usize,
 }
 
 impl ReorderWorkspace {
+    /// Force a fixed ACC speculation depth (`0` restores the adaptive
+    /// default). The choice never affects the reorder outcome — only how
+    /// much parallel speculation may be wasted per round.
+    pub fn set_spec_chunk(&mut self, chunk: usize) {
+        self.spec_chunk = chunk;
+    }
+
     fn ensure(&mut self, n: usize, num_servers: usize, threads: usize) {
         while self.slots.len() < threads.max(1) {
             self.slots.push(EvalSlot::default());
@@ -286,7 +379,15 @@ pub fn reorder_into(
         marks,
         lookup,
         state,
+        spec_chunk,
     } = ws;
+    let spec_chunk = *spec_chunk;
+    // Adaptive speculation never explores more than this many candidates
+    // ahead of the serial scan in one chunk.
+    const MAX_ADAPTIVE_CHUNK: usize = 256;
+    // Observed serial consumption depth of the previous round (0 = no
+    // observation yet this call).
+    let mut exit_depth: usize = 0;
 
     // OCWF-ACC: lazily maintained lower bounds. Busy times only grow as
     // jobs are placed, so a bound computed against an older busy vector
@@ -367,8 +468,28 @@ pub fn reorder_into(
         } else {
             // Two-phase path: speculative chunked evaluation + serial
             // replay. Plain OCWF evaluates everything, so the chunk is
-            // the whole candidate list; ACC speculates 2×threads ahead.
-            let chunk_cap = if acc { (threads * 2).max(2) } else { usize::MAX };
+            // the whole candidate list; ACC speculates ahead by the
+            // adaptive depth observed in the previous round (module
+            // docs), or by the fixed `spec_chunk` override.
+            let chunk_cap = if !acc {
+                usize::MAX
+            } else if spec_chunk > 0 {
+                // Honored exactly (a depth of 1 is the zero-waste,
+                // serialized-scan extreme).
+                spec_chunk
+            } else if exit_depth == 0 {
+                // No observation yet (first ACC round of this call):
+                // seed with the historical 2×threads depth. This is the
+                // only thread-dependent choice, and chunking can never
+                // change the outcome — only the amount of wasted
+                // speculation.
+                (threads * 2).max(2)
+            } else {
+                exit_depth.clamp(2, MAX_ADAPTIVE_CHUNK)
+            };
+            // Candidates the serial rules consumed this round (the
+            // early-exit depth the next round's chunk is sized from).
+            let mut examined = 0usize;
             let mut scan = 0;
             'scan: while scan < total {
                 let clen = chunk_cap.min(total - scan);
@@ -401,6 +522,7 @@ pub fn reorder_into(
                 // trace (no count, no bound update).
                 for j in 0..clen {
                     let i = cands[scan + j];
+                    examined = scan + j + 1;
                     if acc {
                         if let Some((best_phi, _, _, _)) = best {
                             if stale_bounds[i] > best_phi {
@@ -430,6 +552,7 @@ pub fn reorder_into(
                 }
                 scan += clen;
             }
+            exit_depth = examined.max(1);
         }
 
         let (_, bi, si, ti) = best.expect("reorder round must place one job");
@@ -626,5 +749,62 @@ mod tests {
         reorder_into(&[], 4, true, 8, &mut ws, &mut out);
         assert!(out.order.is_empty());
         assert_eq!(out.wf_evals, 0);
+    }
+
+    #[test]
+    fn speculation_depth_never_changes_outcome() {
+        // Adaptive (0) and every fixed override must reproduce the serial
+        // reference bit for bit — chunking only affects wasted work.
+        let m = 6;
+        let mut rng = Rng::seed_from(303);
+        for _ in 0..10 {
+            let jobs = random_jobs(&mut rng, m, 9);
+            let out = outstanding(&jobs);
+            let mut serial = ReorderOutcome::default();
+            reorder_into(
+                &out,
+                m,
+                true,
+                1,
+                &mut ReorderWorkspace::default(),
+                &mut serial,
+            );
+            for chunk in [0usize, 1, 2, 3, 5, 64] {
+                let mut ws = ReorderWorkspace::default();
+                ws.set_spec_chunk(chunk);
+                let mut par = ReorderOutcome::default();
+                reorder_into(&out, m, true, 4, &mut ws, &mut par);
+                assert_eq!(serial, par, "spec_chunk={chunk} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn outstanding_set_copies_and_recycles() {
+        let m = 3;
+        let jobs = vec![
+            mk_job(0, &[6, 3], &[&[0, 1], &[2]], m),
+            mk_job(1, &[4], &[&[1, 2]], m),
+        ];
+        let mut set = OutstandingSet::new();
+        set.push(&jobs[0], &[4, 1]);
+        set.push(&jobs[1], &[4]);
+        assert_eq!(set.len(), 2);
+        assert_eq!(set.as_slice()[0].remaining, vec![4, 1]);
+        assert_eq!(set.as_slice()[0].total_remaining(), 5);
+        // Rebuilding through the pool gives the same contents and, once
+        // warmed, a frozen footprint.
+        let fp = set.footprint();
+        for _ in 0..3 {
+            set.clear();
+            assert!(set.is_empty());
+            set.push(&jobs[0], &[4, 1]);
+            set.push(&jobs[1], &[4]);
+            assert_eq!(set.as_slice()[1].remaining, vec![4]);
+            assert_eq!(fp, set.footprint(), "pool churned");
+        }
+        // The pooled set feeds reorder like a hand-built slice does.
+        let r = reorder(set.as_slice(), m, true);
+        assert_eq!(r.order.len(), 2);
     }
 }

@@ -16,12 +16,12 @@
 
 pub mod stepping;
 
-use crate::assign::{validate_assignment, AssignPolicy};
+use crate::assign::{validate_assignment, AssignPolicy, Assigner};
 use crate::cluster::state::{ClusterState, JobProgress, QueueEntry, ServerQueues};
 use crate::config::{ExperimentConfig, SimConfig};
 use crate::job::{Job, ServerId, Slots, TaskCount};
 use crate::metrics::JctStats;
-use crate::sched::ocwf::{reorder_into, Outstanding, ReorderOutcome, ReorderWorkspace};
+use crate::sched::ocwf::{reorder_into, OutstandingSet, ReorderOutcome, ReorderWorkspace};
 use crate::sched::SchedPolicy;
 use crate::util::ceil_div;
 use crate::util::timer::OverheadMeter;
@@ -110,7 +110,11 @@ pub fn run_reordered(jobs: &[Job], num_servers: usize, acc: bool, cfg: &SimConfi
         "run_reordered requires job ids to equal their slice positions"
     );
     let mut ws = ReorderWorkspace::default();
+    ws.set_spec_chunk(cfg.acc_spec_chunk);
     let mut outcome = ReorderOutcome::default();
+    // Pooled outstanding set: the per-arrival remaining-count copies
+    // recycle their buffers instead of cloning fresh vectors.
+    let mut oset = OutstandingSet::new();
     let mut queues = ServerQueues::new(num_servers);
     let mut progress = JobProgress::new(jobs);
     let mut overhead = OverheadMeter::new();
@@ -134,16 +138,16 @@ pub fn run_reordered(jobs: &[Job], num_servers: usize, acc: bool, cfg: &SimConfi
         }
 
         // 2. Reorder all outstanding jobs (Alg. 3; busy times start at 0).
-        let outstanding: Vec<Outstanding> = (0..=newest)
-            .filter(|&i| progress.total_remaining[i] > 0)
-            .map(|i| Outstanding {
-                job: &jobs[i],
-                remaining: progress.remaining[i].clone(),
-            })
-            .collect();
+        oset.clear();
+        for i in 0..=newest {
+            if progress.total_remaining[i] > 0 {
+                oset.push(&jobs[i], &progress.remaining[i]);
+            }
+        }
+        let outstanding = oset.as_slice();
         overhead.measure(|| {
             reorder_into(
-                &outstanding,
+                outstanding,
                 num_servers,
                 acc,
                 cfg.reorder_threads,
@@ -216,8 +220,11 @@ pub fn run_policy(
     }
 }
 
-/// Convenience: build cluster + trace from a config and run one policy.
-pub fn run_experiment(cfg: &ExperimentConfig, policy: SchedPolicy) -> crate::Result<SimOutcome> {
+/// Build cluster + trace + placement from a config and materialize the
+/// job list — the deterministic front half of [`run_experiment`], exposed
+/// so tests can replay the *same* jobs through several engines (e.g. the
+/// analytic FIFO engine against the slot-stepping validator).
+pub fn materialize_jobs(cfg: &ExperimentConfig) -> crate::Result<Vec<Job>> {
     use crate::cluster::placement::Placement;
     use crate::cluster::Cluster;
     use crate::trace::Trace;
@@ -234,7 +241,12 @@ pub fn run_experiment(cfg: &ExperimentConfig, policy: SchedPolicy) -> crate::Res
         cfg.cluster.placement_mode,
         &mut rng,
     );
-    let jobs = trace.materialize(&cluster, &placement, cfg.trace.utilization, &mut rng)?;
+    trace.materialize(&cluster, &placement, cfg.trace.utilization, &mut rng)
+}
+
+/// Convenience: build cluster + trace from a config and run one policy.
+pub fn run_experiment(cfg: &ExperimentConfig, policy: SchedPolicy) -> crate::Result<SimOutcome> {
+    let jobs = materialize_jobs(cfg)?;
     Ok(run_policy(
         &jobs,
         cfg.cluster.servers,

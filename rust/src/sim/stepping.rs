@@ -9,7 +9,7 @@
 //! completion times on random traces; the analytic engine is what the
 //! benches run (it is O(assignments) instead of O(makespan · M)).
 
-use crate::assign::AssignPolicy;
+use crate::assign::{AssignPolicy, Assigner};
 use crate::cluster::state::ClusterState;
 use crate::config::SimConfig;
 use crate::job::{Job, Slots, TaskCount};

@@ -15,12 +15,15 @@
 //! ## Parallel execution
 //!
 //! Every sweep expands into a flat list of [`CellSpec`]s — one per
-//! (policy × setting × trial) — and runs them through the scoped-thread
-//! pool in [`pool`]. Each cell's randomness is derived solely from its own
-//! spec ([`trial_seed`]), and results are re-ordered by spec index, so a
-//! sweep's output is bit-identical at any thread count (asserted by
-//! `rust/tests/sweep_determinism.rs`). Wall-clock overhead metrics are the
-//! one exception: they time real execution and are never compared bitwise.
+//! (policy × setting × trial) — and runs them through [`pool`] on the
+//! persistent worker-pool executor
+//! ([`crate::runtime::executor::Executor`]): parked threads reused across
+//! every batch, no per-sweep thread spawns. Each cell's randomness is
+//! derived solely from its own spec ([`trial_seed`]), and results are
+//! re-ordered by spec index, so a sweep's output is bit-identical at any
+//! thread count (asserted by `rust/tests/sweep_determinism.rs`).
+//! Wall-clock overhead metrics are the one exception: they time real
+//! execution and are never compared bitwise.
 
 pub mod pool;
 

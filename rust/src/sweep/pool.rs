@@ -1,19 +1,26 @@
-//! A std-only scoped-thread worker pool for embarrassingly parallel
-//! index-addressed work.
+//! Index-addressed parallel fan-outs over the persistent worker pool.
 //!
 //! The sweep engine fans (policy × setting × trial) cells across cores
-//! with [`parallel_map`]: workers pull indices from a shared atomic
+//! with [`parallel_map`]: stripes pull indices from a shared atomic
 //! counter, compute `f(i)` and stash `(i, value)` pairs; results are
 //! re-sorted by index before returning, so the output is **bit-identical
 //! to the serial path at any thread count** as long as `f` itself is a
 //! pure function of `i` (every sweep cell derives its RNG stream from its
 //! own config seed, so it is).
 //!
-//! No rayon / crossbeam: `std::thread::scope` (Rust ≥ 1.63) is enough,
-//! and panics inside workers propagate to the caller on scope exit.
+//! Both entry points execute on the process-wide
+//! [`Executor`](crate::runtime::executor::Executor) — parked threads with
+//! a condvar/ticket handoff — instead of spawning scoped threads per
+//! call. That matters most for [`parallel_for_each`], the OCWF reorder
+//! driver's fan-out: a reorder round over a small outstanding set used to
+//! pay a scoped-spawn per speculative chunk, which dominated the work
+//! being fanned out. No rayon / crossbeam: the pool is std-only, and
+//! panics inside stripes propagate to the caller when the batch drains.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+use crate::runtime::executor::Executor;
 
 /// Number of hardware threads available, with a safe fallback of 1.
 pub fn available_threads() -> usize {
@@ -22,10 +29,31 @@ pub fn available_threads() -> usize {
         .unwrap_or(1)
 }
 
-/// Map `f` over `0..n` using up to `threads` worker threads and return
-/// the results in index order. `threads <= 1` (or `n <= 1`) degenerates
-/// to a plain serial loop — the reference path the determinism tests
-/// compare against.
+/// Worker-thread counts exercised by the cross-thread determinism suites
+/// (`sweep_determinism` and `reorder_equivalence` read this; the
+/// differential/metamorphic suites are thread-independent): the
+/// `TAOS_TEST_THREADS` env var as a comma list (e.g. `1,2,8`), or
+/// `[1, 2, 8]` when unset/unparsable. CI runs a matrix leg per count.
+pub fn test_thread_counts() -> Vec<usize> {
+    let parsed: Vec<usize> = std::env::var("TAOS_TEST_THREADS")
+        .map(|s| {
+            s.split(',')
+                .filter_map(|t| t.trim().parse().ok())
+                .filter(|&t| t > 0)
+                .collect()
+        })
+        .unwrap_or_default();
+    if parsed.is_empty() {
+        vec![1, 2, 8]
+    } else {
+        parsed
+    }
+}
+
+/// Map `f` over `0..n` using up to `threads` concurrent stripes and
+/// return the results in index order. `threads <= 1` (or `n <= 1`)
+/// degenerates to a plain serial loop — the reference path the
+/// determinism tests compare against.
 pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -38,23 +66,20 @@ where
 
     let next = AtomicUsize::new(0);
     let done: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::with_capacity(n));
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| {
-                // Collect locally, publish once: keeps the mutex out of
-                // the per-cell hot path.
-                let mut local: Vec<(usize, T)> = Vec::new();
-                loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    local.push((i, f(i)));
-                }
-                done.lock().unwrap().extend(local);
-            });
+    let task = |_stripe: usize| {
+        // Collect locally, publish once: keeps the mutex out of the
+        // per-cell hot path.
+        let mut local: Vec<(usize, T)> = Vec::new();
+        loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            local.push((i, f(i)));
         }
-    });
+        done.lock().unwrap().extend(local);
+    };
+    Executor::global().run_batch(threads, &task);
 
     let mut pairs = done.into_inner().unwrap();
     debug_assert_eq!(pairs.len(), n);
@@ -63,17 +88,18 @@ where
 }
 
 /// Run `f(state, i)` for every `i in 0..n`, fanning the indices across
-/// the worker states: worker `w` (of `W = min(states.len(), n)`) handles
+/// the worker states: stripe `w` (of `W = min(states.len(), n)`) handles
 /// exactly the indices `i ≡ w (mod W)`, in ascending order.
 ///
 /// The **static stride** (instead of an atomic work queue) is deliberate:
-/// which worker computes which index is a pure function of `(n, W)`, so
-/// each worker's scratch state evolves identically run-to-run — the
-/// property the OCWF reorder driver's allocation-stability test asserts.
-/// With one state (or `n ≤ 1`) this degenerates to a plain serial loop,
-/// the reference path of the determinism tests.
+/// which state handles which index is a pure function of `(n, W)`, so
+/// each state evolves identically run-to-run regardless of which pool
+/// thread executes its stripe — the property the OCWF reorder driver's
+/// allocation-stability test asserts. With one state (or `n ≤ 1`) this
+/// degenerates to a plain serial loop, the reference path of the
+/// determinism tests.
 ///
-/// Workers write results into their own `&mut S`; nothing is collected
+/// Stripes write results into their own `&mut S`; nothing is collected
 /// here, so the call itself performs no allocation.
 pub fn parallel_for_each<S, F>(n: usize, states: &mut [S], f: F)
 where
@@ -92,18 +118,26 @@ where
         }
         return;
     }
-    let f = &f;
-    std::thread::scope(|scope| {
-        for (w, s) in states.iter_mut().take(workers).enumerate() {
-            scope.spawn(move || {
-                let mut i = w;
-                while i < n {
-                    f(&mut *s, i);
-                    i += workers;
-                }
-            });
+
+    /// Shared base pointer into the state slice. Each stripe touches only
+    /// `states[w]` for its own `w`, and the executor runs every stripe
+    /// exactly once, so the `&mut` accesses are disjoint.
+    struct StatesPtr<S>(*mut S);
+    unsafe impl<S: Send> Send for StatesPtr<S> {}
+    unsafe impl<S: Send> Sync for StatesPtr<S> {}
+
+    let base = StatesPtr(states.as_mut_ptr());
+    let task = move |w: usize| {
+        // SAFETY: w < workers <= states.len(), and stripe w is the only
+        // stripe dereferencing offset w (run exactly once per batch).
+        let s: &mut S = unsafe { &mut *base.0.add(w) };
+        let mut i = w;
+        while i < n {
+            f(&mut *s, i);
+            i += workers;
         }
-    });
+    };
+    Executor::global().run_batch(workers, &task);
 }
 
 #[cfg(test)]
@@ -164,6 +198,17 @@ mod tests {
     }
 
     #[test]
+    fn test_thread_counts_defaults() {
+        // The env var is process-global, so only exercise the default and
+        // the parser helper here (CI sets the var per matrix leg).
+        if std::env::var("TAOS_TEST_THREADS").is_err() {
+            assert_eq!(test_thread_counts(), vec![1, 2, 8]);
+        } else {
+            assert!(test_thread_counts().iter().all(|&t| t > 0));
+        }
+    }
+
+    #[test]
     #[should_panic]
     fn worker_panic_propagates() {
         parallel_map(16, 4, |i| {
@@ -172,5 +217,22 @@ mod tests {
             }
             i
         });
+    }
+
+    #[test]
+    fn pool_survives_propagated_panic() {
+        // The persistent pool must keep serving after a panicking batch
+        // (scoped threads died with their scope; pooled workers may not).
+        let caught = std::panic::catch_unwind(|| {
+            parallel_map(16, 4, |i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+                i
+            })
+        });
+        assert!(caught.is_err());
+        let out = parallel_map(8, 4, |i| i + 1);
+        assert_eq!(out, (1..=8).collect::<Vec<_>>());
     }
 }

@@ -1,9 +1,10 @@
 //! Small self-contained utilities: deterministic PRNG, statistics, timers,
 //! JSON emission, and integer math helpers.
 //!
-//! The build environment is fully offline with only the `xla`, `anyhow` and
-//! `thiserror` crates vendored, so everything that would normally come from
-//! `rand`, `serde_json` or `statrs` is implemented here (and unit-tested).
+//! The build environment is fully offline with no crates vendored at all
+//! (even the PJRT stack's `xla` dependency is feature-gated out), so
+//! everything that would normally come from `rand`, `serde_json` or
+//! `statrs` is implemented here (and unit-tested).
 
 pub mod json;
 pub mod rng;

@@ -12,7 +12,9 @@
 use taos::assign::wf::{Wf, WfOutcome};
 use taos::assign::{Assigner, Instance};
 use taos::job::TaskGroup;
-use taos::sched::ocwf::{reorder_into, Outstanding, ReorderOutcome, ReorderWorkspace};
+use taos::sched::ocwf::{
+    reorder_into, Outstanding, OutstandingSet, ReorderOutcome, ReorderWorkspace,
+};
 use taos::util::rng::Rng;
 
 /// An owned random instance mixing shapes (group counts, server sets).
@@ -209,5 +211,82 @@ fn exact_assigner_workspaces_freeze_after_warmup() {
             rd.assign(&inst.view());
         }
         assert_eq!(fp, rd.scratch_footprint(), "RD replica tables grew");
+    }
+}
+
+#[test]
+fn executor_spawns_zero_threads_after_warmup() {
+    // Every parallel entry point in this crate runs on the process-wide
+    // persistent executor. After one warmup batch the worker count is
+    // frozen: no code path may spawn another thread, no matter how many
+    // batches (sweep cells, reorder chunks) are dispatched.
+    //
+    // This test binary creates no test-local pools, so the process-wide
+    // spawn counter can only move if the pool itself respawns — exactly
+    // the regression this guards against.
+    let m = 8;
+    let mut rng = Rng::seed_from(0xA1111);
+    let jobs = random_jobs(&mut rng, m, 10);
+    let outstanding = reorder_workload(&jobs);
+
+    // Warmup: exercise both fan-outs once.
+    let _ = taos::sweep::pool::parallel_map(32, 4, |i| i * i);
+    let mut ws = ReorderWorkspace::default();
+    let mut out = ReorderOutcome::default();
+    reorder_into(&outstanding, m, true, 4, &mut ws, &mut out);
+
+    let spawned = taos::runtime::executor::threads_spawned_total();
+    assert!(spawned >= 1, "warmup must have started the pool");
+    for pass in 0..20usize {
+        let v = taos::sweep::pool::parallel_map(64, 8, |i| i + pass);
+        assert_eq!(v.len(), 64);
+        reorder_into(&outstanding, m, true, 8, &mut ws, &mut out);
+        reorder_into(&outstanding, m, false, 2, &mut ws, &mut out);
+    }
+    assert_eq!(
+        spawned,
+        taos::runtime::executor::threads_spawned_total(),
+        "executor spawned threads after warmup"
+    );
+}
+
+#[test]
+fn outstanding_set_performs_no_per_arrival_allocations() {
+    // The pooled replacement for run_reordered's per-arrival
+    // `Outstanding.remaining` clones: rebuilding the set through the pool
+    // — including shrinking and regrowing the live row count, as the
+    // simulator does between arrivals — must stop growing capacity after
+    // the first full cycle.
+    let m = 9;
+    let mut rng = Rng::seed_from(0xA1112);
+    let jobs = random_jobs(&mut rng, m, 16);
+    let remaining: Vec<Vec<u64>> = jobs
+        .iter()
+        .map(|j| j.groups.iter().map(|g| g.size).collect())
+        .collect();
+
+    let mut set = OutstandingSet::new();
+    let arrivals = [16usize, 4, 11, 16, 2, 9, 16];
+    // Warmup cycle: buffers grow to the high-water mark.
+    for &live in &arrivals {
+        set.clear();
+        for i in 0..live {
+            set.push(&jobs[i], &remaining[i]);
+        }
+    }
+    let fp = set.footprint();
+    assert!(fp > 0, "warmup must have pooled buffers");
+    for pass in 0..4 {
+        for &live in &arrivals {
+            set.clear();
+            for i in 0..live {
+                set.push(&jobs[i], &remaining[i]);
+            }
+            assert_eq!(set.len(), live);
+            // Contents are faithful copies, not stale pool leftovers.
+            let last = &set.as_slice()[live - 1];
+            assert_eq!(last.remaining, remaining[live - 1]);
+        }
+        assert_eq!(fp, set.footprint(), "outstanding pool grew on pass {pass}");
     }
 }

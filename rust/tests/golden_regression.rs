@@ -11,6 +11,12 @@
 //! freshly blessed snapshot — any nondeterminism or cross-platform drift
 //! in the simulation pipeline fails the build. Regenerate intentionally
 //! with `TAOS_BLESS=1 cargo test -q --test golden_regression`.
+//!
+//! With `TAOS_GOLDEN_REQUIRE=1` a missing snapshot is an **error**
+//! instead of a bless: set on every CI run after the first so the suite
+//! *verifies* rather than silently re-blessing (e.g. when a cache wipe
+//! drops the first run's file). Once a reviewed snapshot from the CI
+//! artifact is committed, CI can set it unconditionally.
 
 use taos::config::ExperimentConfig;
 use taos::sched::SchedPolicy;
@@ -54,6 +60,15 @@ fn snapshot_path() -> std::path::PathBuf {
 fn golden_mean_jct_per_policy() {
     let observed = observed_snapshot();
     let path = snapshot_path();
+    if !path.exists() && std::env::var("TAOS_GOLDEN_REQUIRE").is_ok() {
+        panic!(
+            "golden snapshot {} missing but TAOS_GOLDEN_REQUIRE is set — \
+             the verifying run must not silently re-bless; run once \
+             without the variable (or commit the reviewed CI artifact) \
+             first",
+            path.display()
+        );
+    }
     let bless = std::env::var("TAOS_BLESS").is_ok() || !path.exists();
     if bless {
         std::fs::create_dir_all(path.parent().unwrap()).expect("mkdir golden/");

@@ -1,0 +1,186 @@
+//! Metamorphic tests: transformations of an instance with a provable
+//! relation between the original and transformed outputs.
+//!
+//! - **Server relabeling**: permuting server identities (and the μ/busy
+//!   vectors with them) cannot change any completion-time *value*: the
+//!   objective of program `P` is symmetric in server identity. OBTA's
+//!   optimum and WF's estimate are invariant, and WF's final busy vector
+//!   is exactly the permuted original. (Concrete *allocations* may
+//!   legally differ — remainder placement follows server order — and
+//!   RD's random tie-breaking consumes its RNG in a relabeling-dependent
+//!   order, so RD is checked only for validity.)
+//! - **Uniform rate scaling**: multiplying every group size and every μ
+//!   by the same factor `c` leaves all slot counts identical
+//!   (`ceil(cn/cμ) = ceil(n/μ)`): OBTA's optimum is unchanged and WF's
+//!   walk is reproduced step for step, so its allocation scales exactly
+//!   entry by entry.
+//! - **Engine agreement**: the analytic FIFO engine and the slot-stepping
+//!   ground-truth validator must produce identical JCTs/makespans on the
+//!   *compound* scenario presets (`bursty-hetero`, `hotspot-heavy-tail`),
+//!   which previously only the single-axis scenarios exercised.
+
+use taos::assign::wf::Wf;
+use taos::assign::{validate_assignment, AssignPolicy, Assigner, Instance};
+use taos::config::SimConfig;
+use taos::job::TaskGroup;
+use taos::sim::stepping::run_fifo_stepping;
+use taos::sim::{materialize_jobs, run_fifo};
+use taos::trace::scenarios::Scenario;
+use taos::util::rng::Rng;
+
+struct OwnedInst {
+    groups: Vec<TaskGroup>,
+    mu: Vec<u64>,
+    busy: Vec<u64>,
+}
+
+impl OwnedInst {
+    fn view(&self) -> Instance<'_> {
+        Instance {
+            groups: &self.groups,
+            mu: &self.mu,
+            busy: &self.busy,
+        }
+    }
+}
+
+fn random_instance(rng: &mut Rng, max_m: usize) -> OwnedInst {
+    let m = 2 + rng.gen_range((max_m - 1) as u64) as usize;
+    let k = 1 + rng.gen_range(4) as usize;
+    let groups = (0..k)
+        .map(|_| {
+            let ns = 1 + rng.gen_range(m as u64) as usize;
+            let mut sv: Vec<usize> = (0..m).collect();
+            rng.shuffle(&mut sv);
+            sv.truncate(ns);
+            TaskGroup::new(rng.gen_range_incl(1, 30), sv)
+        })
+        .collect();
+    OwnedInst {
+        groups,
+        mu: (0..m).map(|_| rng.gen_range_incl(1, 5)).collect(),
+        busy: (0..m).map(|_| rng.gen_range(9)).collect(),
+    }
+}
+
+/// Apply the server relabeling `perm` (old id → new id) to an instance.
+fn relabel(inst: &OwnedInst, perm: &[usize]) -> OwnedInst {
+    let m = inst.mu.len();
+    let mut mu = vec![0u64; m];
+    let mut busy = vec![0u64; m];
+    for s in 0..m {
+        mu[perm[s]] = inst.mu[s];
+        busy[perm[s]] = inst.busy[s];
+    }
+    let groups = inst
+        .groups
+        .iter()
+        .map(|g| {
+            TaskGroup::new(g.size, g.servers.iter().map(|&s| perm[s]).collect())
+        })
+        .collect();
+    OwnedInst { groups, mu, busy }
+}
+
+#[test]
+fn server_relabeling_preserves_completion_times() {
+    let mut rng = Rng::seed_from(0x3E7A);
+    for case in 0..60 {
+        let orig = random_instance(&mut rng, 6);
+        let m = orig.mu.len();
+        let mut perm: Vec<usize> = (0..m).collect();
+        rng.shuffle(&mut perm);
+        let renamed = relabel(&orig, &perm);
+
+        let obta_a = AssignPolicy::Obta.build(0).assign(&orig.view());
+        let obta_b = AssignPolicy::Obta.build(0).assign(&renamed.view());
+        assert_eq!(obta_a.phi, obta_b.phi, "case {case}: OBTA optimum moved");
+
+        let (wf_a, busy_a) = Wf::new().assign_with_busy(&orig.view());
+        let (wf_b, busy_b) = Wf::new().assign_with_busy(&renamed.view());
+        assert_eq!(wf_a.phi, wf_b.phi, "case {case}: WF estimate moved");
+        for s in 0..m {
+            assert_eq!(
+                busy_a[s],
+                busy_b[perm[s]],
+                "case {case}: WF final busy must be the permuted original"
+            );
+        }
+        validate_assignment(&renamed.view(), &wf_b)
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+
+        // RD: the relabeling changes its RNG consumption order, so only
+        // structural validity is invariant.
+        let rd = AssignPolicy::Rd.build(7).assign(&renamed.view());
+        validate_assignment(&renamed.view(), &rd)
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+    }
+}
+
+#[test]
+fn uniform_rate_scaling_preserves_schedules() {
+    let mut rng = Rng::seed_from(0x5CA1E);
+    for case in 0..60 {
+        let orig = random_instance(&mut rng, 6);
+        let c = [2u64, 3, 5][(case % 3) as usize];
+        let scaled = OwnedInst {
+            groups: orig
+                .groups
+                .iter()
+                .map(|g| TaskGroup::new(g.size * c, g.servers.clone()))
+                .collect(),
+            mu: orig.mu.iter().map(|&x| x * c).collect(),
+            busy: orig.busy.clone(),
+        };
+
+        let obta_a = AssignPolicy::Obta.build(0).assign(&orig.view());
+        let obta_b = AssignPolicy::Obta.build(0).assign(&scaled.view());
+        assert_eq!(
+            obta_a.phi, obta_b.phi,
+            "case {case} c={c}: OBTA optimum must be scale-invariant"
+        );
+
+        let wf_a = AssignPolicy::Wf.build(0).assign(&orig.view());
+        let wf_b = AssignPolicy::Wf.build(0).assign(&scaled.view());
+        assert_eq!(wf_a.phi, wf_b.phi, "case {case} c={c}: WF estimate moved");
+        assert_eq!(
+            wf_a.per_group.len(),
+            wf_b.per_group.len(),
+            "case {case}: arity"
+        );
+        for (ga, gb) in wf_a.per_group.iter().zip(&wf_b.per_group) {
+            let scaled_ga: Vec<(usize, u64)> = ga.iter().map(|&(s, n)| (s, n * c)).collect();
+            assert_eq!(
+                &scaled_ga, gb,
+                "case {case} c={c}: WF allocation must scale exactly"
+            );
+        }
+    }
+}
+
+#[test]
+fn fifo_engine_matches_stepping_validator_on_compound_scenarios() {
+    for name in ["bursty-hetero", "hotspot-heavy-tail"] {
+        let scenario = Scenario::parse(name).expect("compound scenario exists");
+        let mut cfg = taos::sweep::quick_base(0xC0DE);
+        cfg.trace.jobs = 12;
+        cfg.trace.total_tasks = 500;
+        cfg.cluster.servers = 12;
+        cfg.cluster.avail_lo = 2;
+        cfg.cluster.avail_hi = 4;
+        scenario.apply(&mut cfg);
+        let jobs = materialize_jobs(&cfg).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let sim_cfg = SimConfig::default();
+        for policy in [AssignPolicy::Wf, AssignPolicy::Rd, AssignPolicy::Obta] {
+            let fast = run_fifo(&jobs, cfg.cluster.servers, policy, &sim_cfg, 11);
+            let slow = run_fifo_stepping(&jobs, cfg.cluster.servers, policy, &sim_cfg, 11);
+            assert_eq!(
+                fast.jcts,
+                slow.jcts,
+                "{name}/{}: analytic and stepping engines disagree",
+                policy.name()
+            );
+            assert_eq!(fast.makespan, slow.makespan, "{name}/{}", policy.name());
+        }
+    }
+}

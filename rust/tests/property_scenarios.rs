@@ -11,7 +11,9 @@
 //!   ≥ 1 task per group, chronological arrivals, and materializations
 //!   that respect the cluster's ranges.
 
-use taos::assign::{program_phi, validate_assignment, AssignPolicy, Instance};
+// `Assigner` must be in scope for the `.assign` calls on the boxed trait
+// objects `AssignPolicy::build` returns.
+use taos::assign::{program_phi, validate_assignment, AssignPolicy, Assigner, Instance};
 use taos::cluster::placement::{Placement, PlacementMode};
 use taos::cluster::Cluster;
 use taos::config::{ClusterConfig, TraceConfig};

@@ -29,11 +29,14 @@ fn scenario_cfg(sc: Scenario, reorder_threads: usize) -> ExperimentConfig {
 
 #[test]
 fn reordered_schedules_bit_identical_across_thread_counts() {
+    // Thread counts come from TAOS_TEST_THREADS (default 1,2,8) so the CI
+    // matrix can pin one count per leg.
+    let counts = taos::sweep::pool::test_thread_counts();
     for sc in Scenario::ALL {
         for acc in [false, true] {
             let reference = run_experiment(&scenario_cfg(sc, 1), SchedPolicy::Ocwf { acc })
                 .unwrap_or_else(|e| panic!("{}: {e}", sc.name()));
-            for threads in [2, 8] {
+            for &threads in &counts {
                 let out = run_experiment(&scenario_cfg(sc, threads), SchedPolicy::Ocwf { acc })
                     .unwrap_or_else(|e| panic!("{}: {e}", sc.name()));
                 let tag = format!("{} acc={acc} threads={threads}", sc.name());
@@ -120,7 +123,7 @@ fn reorder_outcome_byte_identical_at_1_2_8_threads() {
                 &mut ReorderWorkspace::default(),
                 &mut reference,
             );
-            for threads in [2, 8] {
+            for threads in taos::sweep::pool::test_thread_counts() {
                 let mut out = ReorderOutcome::default();
                 reorder_into(
                     &outstanding,

@@ -45,11 +45,13 @@ fn specs() -> Vec<CellSpec> {
 }
 
 #[test]
-fn jct_vectors_bit_identical_serial_vs_2_and_8_threads() {
+fn jct_vectors_bit_identical_serial_vs_parallel_thread_counts() {
+    // Thread counts come from TAOS_TEST_THREADS (default 1,2,8) so the CI
+    // matrix can pin one count per leg.
     let specs = specs();
     let serial = sweep::run_specs(&specs, 1);
     assert_eq!(serial.len(), specs.len());
-    for threads in [2, 8] {
+    for threads in pool::test_thread_counts() {
         let par = sweep::run_specs(&specs, threads);
         assert_eq!(par.len(), serial.len());
         for (i, (a, b)) in serial.iter().zip(&par).enumerate() {
@@ -81,7 +83,7 @@ fn figure_metrics_bitwise_stable_across_thread_counts() {
     let base = tiny_base();
     let alphas = [0.0, 2.0];
     let reference = sweep::fig_alpha_util_opts(&base, 0.5, &alphas, &SweepOptions::default());
-    for threads in [2, 8] {
+    for threads in pool::test_thread_counts() {
         let fig = sweep::fig_alpha_util_opts(
             &base,
             0.5,
