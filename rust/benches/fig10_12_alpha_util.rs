@@ -24,7 +24,8 @@ fn main() {
 
     for (fig, util) in [("fig10", 0.25), ("fig11", 0.50), ("fig12", 0.75)] {
         let t0 = std::time::Instant::now();
-        let figure = sweep::fig_alpha_util_opts(&base, util, &alphas, &opts);
+        let figure =
+            sweep::fig_alpha_util_opts(&base, util, &alphas, &opts).expect("sweep failed");
         println!(
             "\n================ {} (paper Fig {}) — {:.0}% utilization ({:.1}s) ================",
             figure.name,

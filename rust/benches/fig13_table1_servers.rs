@@ -19,7 +19,7 @@ fn main() {
     let opts = sweep::SweepOptions::from_env();
     let ps = [4usize, 6, 8, 10, 12];
     let t0 = std::time::Instant::now();
-    let figure = sweep::fig_servers_opts(&base, &ps, &opts);
+    let figure = sweep::fig_servers_opts(&base, &ps, &opts).expect("sweep failed");
     println!(
         "================ Fig 13 / Table I — #available servers ({:.1}s) ================",
         t0.elapsed().as_secs_f64()

@@ -19,7 +19,7 @@ fn main() {
     let opts = sweep::SweepOptions::from_env();
     let mids = [2u64, 3, 4, 5, 6];
     let t0 = std::time::Instant::now();
-    let figure = sweep::fig_capacity_opts(&base, &mids, &opts);
+    let figure = sweep::fig_capacity_opts(&base, &mids, &opts).expect("sweep failed");
     println!(
         "================ Fig 14 — computing capacity ({:.1}s) ================",
         t0.elapsed().as_secs_f64()

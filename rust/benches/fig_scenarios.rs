@@ -21,7 +21,7 @@ fn main() {
     let opts = sweep::SweepOptions::from_env();
 
     let t0 = std::time::Instant::now();
-    let figure = sweep::fig_scenarios(&base, &opts);
+    let figure = sweep::fig_scenarios(&base, &opts).expect("sweep failed");
     println!(
         "================ scenario catalog ({:.1}s, {} threads) ================",
         t0.elapsed().as_secs_f64(),

@@ -71,6 +71,7 @@ fn main() {
 
     // Substrate: one empty batch through the persistent executor — the
     // handoff latency that replaced a scoped-thread spawn per chunk.
+    // (Legacy label kept so CI bench history lines up across commits.)
     {
         use taos::runtime::executor::Executor;
         let ex = Executor::global();
@@ -80,6 +81,21 @@ fn main() {
                     black_box(s);
                 });
                 black_box(ex.epochs_dispatched())
+            });
+        }
+        // The doorbell handoff probe: same shape, explicitly tracking the
+        // per-worker doorbell path (idle-stack pop + one targeted unpark
+        // per admitted helper, zero on a busy pool) that replaced the
+        // condvar notify loop — the CI bench run records the before
+        // (executor_handoff rows from the pre-doorbell artifact) / after
+        // (these rows) story. The budget counters are folded into the
+        // result so the admission bookkeeping is part of what's timed.
+        for stripes in [2usize, 8] {
+            bench.run(&format!("substrate/doorbell_handoff@{stripes}stripes"), || {
+                ex.run_batch(stripes, &|s| {
+                    black_box(s);
+                });
+                black_box(ex.helpers_woken_total() + ex.wakeups_trimmed_total())
             });
         }
     }

@@ -143,28 +143,60 @@ impl JobProgress {
 /// Per-server FIFO queues of [`QueueEntry`]s with analytic draining —
 /// the reordered engine's execution substrate. Queues are rebuilt from
 /// scratch on every arrival (OCWF reassigns every remaining task), so
-/// [`ServerQueues::clear`] keeps the outer allocations alive.
+/// retiring an entry — whether by [`ServerQueues::clear`] before a
+/// rebuild or by [`ServerQueues::drain`] between arrivals — recycles its
+/// `parts` buffer into a spare pool that [`ServerQueues::take_parts`]
+/// hands back out. After one warmup cycle the pool covers the workload's
+/// high-water mark and the rebuild path stops allocating (asserted by
+/// `rust/tests/alloc_stability.rs`).
 #[derive(Clone, Debug, Default)]
 pub struct ServerQueues {
     queues: Vec<Vec<QueueEntry>>,
+    /// Recycled `QueueEntry::parts` buffers (cleared, capacity kept).
+    spare: Vec<Vec<(usize, TaskCount)>>,
 }
 
 impl ServerQueues {
     pub fn new(num_servers: usize) -> Self {
         ServerQueues {
             queues: vec![Vec::new(); num_servers],
+            spare: Vec::new(),
         }
     }
 
-    /// Drop every entry, keeping the per-server queue allocations.
+    /// Drop every entry, keeping the per-server queue allocations and
+    /// recycling each entry's parts buffer into the spare pool.
     pub fn clear(&mut self) {
-        for q in self.queues.iter_mut() {
-            q.clear();
+        let ServerQueues { queues, spare } = self;
+        for q in queues.iter_mut() {
+            for mut e in q.drain(..) {
+                e.parts.clear();
+                spare.push(e.parts);
+            }
         }
     }
 
     pub fn push(&mut self, server: ServerId, entry: QueueEntry) {
         self.queues[server].push(entry);
+    }
+
+    /// Take a cleared parts buffer from the spare pool (empty-but-warm
+    /// capacity when available, a fresh vector otherwise).
+    pub fn take_parts(&mut self) -> Vec<(usize, TaskCount)> {
+        self.spare.pop().unwrap_or_default()
+    }
+
+    /// Reserved capacity across queues, live entries and the spare pool
+    /// (allocation-stability tests).
+    pub fn footprint(&self) -> usize {
+        self.queues.capacity()
+            + self
+                .queues
+                .iter()
+                .map(|q| q.capacity() + q.iter().map(|e| e.parts.capacity()).sum::<usize>())
+                .sum::<usize>()
+            + self.spare.capacity()
+            + self.spare.iter().map(|v| v.capacity()).sum::<usize>()
     }
 
     /// Advance every server's queue analytically from slot `from` to slot
@@ -173,7 +205,8 @@ impl ServerQueues {
     /// slot is never shared between jobs, eq. 2). Updates `progress`
     /// (remaining counts, last-finish, completion) as entries retire.
     pub fn drain(&mut self, jobs: &[Job], progress: &mut JobProgress, from: Slots, to: Slots) {
-        for (m, q) in self.queues.iter_mut().enumerate() {
+        let ServerQueues { queues, spare } = self;
+        for (m, q) in queues.iter_mut().enumerate() {
             let mut t = from;
             let mut consumed = 0usize;
             for entry in q.iter_mut() {
@@ -216,8 +249,99 @@ impl ServerQueues {
                     break;
                 }
             }
-            q.drain(..consumed);
+            for mut e in q.drain(..consumed) {
+                e.parts.clear();
+                spare.push(e.parts);
+            }
         }
+    }
+}
+
+/// Pooled grouping workspace for the reordered engine's per-arrival queue
+/// rebuild.
+///
+/// After every reorder, `run_reordered` turns each job's per-group
+/// allocation into one [`QueueEntry`] per touched server. It used to do
+/// that through a fresh `BTreeMap<ServerId, Vec<(usize, TaskCount)>>`
+/// per job per arrival — the last per-arrival allocations of the
+/// reordered engine. This workspace replaces the map with a per-server
+/// **row pool** (`rows[m]` accumulates one job's `(group, tasks)` parts
+/// for server `m`) plus a **touched-server list**, and pulls the entry
+/// buffers it pushes into the queues from the [`ServerQueues`] spare
+/// pool, so the steady-state rebuild touches the allocator zero times
+/// (asserted by `rust/tests/alloc_stability.rs`).
+///
+/// Per-server queue contents are identical to the `BTreeMap` path: a job
+/// contributes at most one entry per server, its parts appear in group
+/// order, and the relative order of pushes to *different* servers never
+/// affects any single server's FIFO.
+#[derive(Clone, Debug, Default)]
+pub struct QueueRebuild {
+    /// `rows[m]`: the parts accumulated for server `m` by the job
+    /// currently being grouped (cleared between jobs, capacity kept).
+    rows: Vec<Vec<(usize, TaskCount)>>,
+    /// Servers with a non-empty row, in first-touch order.
+    touched: Vec<ServerId>,
+    /// High-water parts-list length. Every buffer taken from the spare
+    /// pool is reserved to this mark: recycled buffers re-pair with
+    /// *different* entries on every arrival, so without the uniform
+    /// reserve a small buffer meeting a large entry several arrivals
+    /// after warmup would still grow — with it, every circulating buffer
+    /// saturates within one recycle generation and the pooled footprint
+    /// truly freezes.
+    max_parts: usize,
+}
+
+impl QueueRebuild {
+    pub fn new(num_servers: usize) -> Self {
+        QueueRebuild {
+            rows: vec![Vec::new(); num_servers],
+            touched: Vec::new(),
+            max_parts: 0,
+        }
+    }
+
+    /// Group one job's per-group allocation by server and append the
+    /// resulting entries to `queues`, recycling pooled buffers on both
+    /// sides. `per_group[k]` lists `(server, tasks)` as produced by the
+    /// assigners ([`crate::assign::Assignment::per_group`]).
+    pub fn push_grouped(
+        &mut self,
+        queues: &mut ServerQueues,
+        job: usize,
+        per_group: &[Vec<(ServerId, TaskCount)>],
+    ) {
+        let QueueRebuild {
+            rows,
+            touched,
+            max_parts,
+        } = self;
+        debug_assert!(touched.is_empty());
+        for (k, alloc) in per_group.iter().enumerate() {
+            for &(m, n) in alloc {
+                if rows[m].is_empty() {
+                    touched.push(m);
+                }
+                rows[m].push((k, n));
+            }
+        }
+        for &m in touched.iter() {
+            *max_parts = (*max_parts).max(rows[m].len());
+            let mut parts = queues.take_parts();
+            parts.reserve(*max_parts);
+            parts.extend_from_slice(&rows[m]);
+            queues.push(m, QueueEntry { job, parts });
+            rows[m].clear();
+        }
+        touched.clear();
+    }
+
+    /// Reserved capacity across the pooled buffers (allocation-stability
+    /// tests).
+    pub fn footprint(&self) -> usize {
+        self.rows.capacity()
+            + self.rows.iter().map(|r| r.capacity()).sum::<usize>()
+            + self.touched.capacity()
     }
 }
 
@@ -293,6 +417,93 @@ mod tests {
         assert_eq!(progress.total_remaining[0], 0);
         assert_eq!(progress.completion[0], Some(3));
         assert!(progress.all_complete());
+    }
+
+    #[test]
+    fn queue_rebuild_matches_btreemap_grouping() {
+        // The pooled rebuild must produce exactly the entries the old
+        // per-arrival BTreeMap grouping produced: one entry per touched
+        // server, parts in group order.
+        let per_group: Vec<Vec<(ServerId, TaskCount)>> = vec![
+            vec![(2, 5), (0, 1)],
+            vec![(0, 3)],
+            vec![(1, 7), (2, 2)],
+        ];
+        let mut queues = ServerQueues::new(4);
+        let mut rebuild = QueueRebuild::new(4);
+        rebuild.push_grouped(&mut queues, 9, &per_group);
+        // Reference grouping via the old map-based path.
+        let mut expect: std::collections::BTreeMap<ServerId, Vec<(usize, TaskCount)>> =
+            Default::default();
+        for (k, alloc) in per_group.iter().enumerate() {
+            for &(m, n) in alloc {
+                expect.entry(m).or_default().push((k, n));
+            }
+        }
+        for (m, parts) in expect {
+            let q = &queues.queues[m];
+            assert_eq!(q.len(), 1, "server {m}");
+            assert_eq!(q[0].job, 9);
+            assert_eq!(q[0].parts, parts, "server {m}");
+        }
+        assert!(queues.queues[3].is_empty(), "untouched server stays empty");
+    }
+
+    #[test]
+    fn queue_rebuild_pools_freeze_after_warmup() {
+        // Cycling the same rebuild workload (including the drain/clear
+        // retirement paths that refill the spare pool) must stop growing
+        // capacity after the first full cycles.
+        let jobs = vec![
+            job(0, 0, &[6, 4], &[&[0, 1], &[2]], vec![2, 2, 2]),
+            job(1, 0, &[5], &[&[1, 2]], vec![2, 2, 2]),
+        ];
+        let allocs: Vec<Vec<Vec<(ServerId, TaskCount)>>> = vec![
+            // job 0: server 0 collects parts from both groups (multi-part
+            // entry), servers 1 and 2 one part each.
+            vec![vec![(0, 4), (1, 2)], vec![(0, 2), (2, 2)]],
+            vec![vec![(1, 3), (2, 2)]],
+        ];
+        let mut queues = ServerQueues::new(3);
+        let mut rebuild = QueueRebuild::new(3);
+        let cycle = |queues: &mut ServerQueues, rebuild: &mut QueueRebuild| {
+            let mut progress = JobProgress::new(&jobs);
+            for (j, a) in allocs.iter().enumerate() {
+                rebuild.push_grouped(queues, j, a);
+            }
+            // Retire some entries analytically, recycle the rest.
+            queues.drain(&jobs, &mut progress, 0, 2);
+            queues.clear();
+        };
+        // Two warmup cycles: the first grows fresh buffers, the second
+        // lets the spare pool settle size-to-take pairings.
+        cycle(&mut queues, &mut rebuild);
+        cycle(&mut queues, &mut rebuild);
+        let fp = queues.footprint() + rebuild.footprint();
+        assert!(fp > 0, "warmup must have pooled buffers");
+        for pass in 0..4 {
+            cycle(&mut queues, &mut rebuild);
+            assert_eq!(
+                fp,
+                queues.footprint() + rebuild.footprint(),
+                "queue-rebuild pool grew on pass {pass}"
+            );
+        }
+    }
+
+    #[test]
+    fn drained_entries_recycle_into_spare_pool() {
+        let jobs = vec![job(0, 0, &[4], &[&[0]], vec![2])];
+        let mut progress = JobProgress::new(&jobs);
+        let mut queues = ServerQueues::new(1);
+        let mut parts = queues.take_parts();
+        assert!(parts.is_empty(), "fresh pool hands out empty buffers");
+        parts.extend_from_slice(&[(0usize, 4u64)]);
+        queues.push(0, QueueEntry { job: 0, parts });
+        // Full retirement through drain recycles the buffer.
+        queues.drain(&jobs, &mut progress, 0, 2);
+        let recycled = queues.take_parts();
+        assert!(recycled.is_empty() && recycled.capacity() >= 1);
     }
 
     #[test]

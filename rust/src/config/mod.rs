@@ -90,8 +90,12 @@ pub struct SimConfig {
     pub record_jct: bool,
     /// Worker threads for the OCWF(-ACC) reorder rounds (0 = all cores,
     /// 1 = serial). Schedules are bit-identical at any value; this is a
-    /// wall-clock knob only. Keep at 1 when a sweep already parallelizes
-    /// across cells, or the two levels oversubscribe each other.
+    /// wall-clock knob only. Composes freely with a sweep's `--threads`:
+    /// both levels run on the process-wide executor, whose admission
+    /// budget lends a nested reorder fan-out **idle workers only** — a
+    /// saturated pool admits zero helpers and the submitting cell drains
+    /// its own round — so `threads × reorder_threads` can never
+    /// oversubscribe the machine.
     pub reorder_threads: usize,
     /// Fixed OCWF-ACC speculation depth for parallel reorder rounds
     /// (`0` = adaptive, sized per round from the observed early-exit
@@ -156,12 +160,13 @@ impl ExperimentConfig {
         Ok(())
     }
 
-    /// Parse a config file: `key = value` lines, `#` comments, section
-    /// headers `[cluster] [trace] [sim]` optional (keys are unambiguous).
+    /// Parse a config file: `key = value` lines, `#` comments (outside
+    /// double-quoted values), section headers `[cluster] [trace] [sim]`
+    /// optional (keys are unambiguous).
     pub fn from_str(text: &str) -> Result<ExperimentConfig> {
         let mut cfg = ExperimentConfig::default();
         for (lineno, raw) in text.lines().enumerate() {
-            let line = raw.split('#').next().unwrap_or("").trim();
+            let line = strip_comment(raw).trim();
             if line.is_empty() || (line.starts_with('[') && line.ends_with(']')) {
                 continue;
             }
@@ -227,6 +232,23 @@ impl ExperimentConfig {
     }
 }
 
+/// Strip a trailing `#` comment, honoring double quotes: a `#` inside a
+/// quoted value (`csv_path = "runs#3/batch_task.csv"`) is data, not a
+/// comment. (The old `split('#')` ran before unquoting and silently
+/// truncated such values.) After an unbalanced opening quote the rest of
+/// the line counts as quoted, so no comment is stripped from it.
+fn strip_comment(line: &str) -> &str {
+    let mut in_quotes = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_quotes = !in_quotes,
+            '#' if !in_quotes => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -268,6 +290,26 @@ mod tests {
     #[test]
     fn rejects_unknown_key() {
         assert!(ExperimentConfig::from_str("bogus = 1").is_err());
+    }
+
+    #[test]
+    fn hash_inside_quoted_value_is_not_a_comment() {
+        // Regression: the parser used to split on `#` before unquoting,
+        // silently truncating `"runs#3/batch_task.csv"` to `runs`.
+        let cfg = ExperimentConfig::from_str(r#"csv_path = "runs#3/batch_task.csv""#).unwrap();
+        assert_eq!(cfg.trace.csv_path.as_deref(), Some("runs#3/batch_task.csv"));
+
+        // A real comment after the closing quote is still stripped.
+        let cfg =
+            ExperimentConfig::from_str(r##"csv_path = "a#b.csv"  # trace with a hash"##).unwrap();
+        assert_eq!(cfg.trace.csv_path.as_deref(), Some("a#b.csv"));
+
+        // Unquoted values and full-line comments keep the old behavior.
+        let cfg = ExperimentConfig::from_str(
+            "# leading comment\nservers = 50 # trailing comment\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.servers, 50);
     }
 
     #[test]

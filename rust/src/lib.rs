@@ -73,6 +73,11 @@ pub enum Error {
     Config(String),
     TraceParse { line: usize, msg: String },
     Runtime(String),
+    /// A simulation exceeded its configured horizon (or another run-time
+    /// limit); the message identifies the offending run's configuration
+    /// so a sweep can report *which* cell was too hot instead of
+    /// aborting the process.
+    Sim(String),
     Io(std::io::Error),
 }
 
@@ -85,6 +90,7 @@ impl std::fmt::Display for Error {
                 write!(f, "trace parse error at line {line}: {msg}")
             }
             Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::Sim(msg) => write!(f, "simulation error: {msg}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }

@@ -71,7 +71,8 @@ fn build_cli() -> Cli {
             ),
             flag_req(
                 "reorder-threads",
-                "worker threads for OCWF reorder rounds (0 = all cores) [default 1]",
+                "worker threads for OCWF reorder rounds (0 = all cores; composes \
+                 with a sweep's --threads via the shared pool budget) [default 1]",
             ),
             flag_req(
                 "acc-spec-chunk",
@@ -300,8 +301,11 @@ fn cmd_repro(parsed: &taos::cli::Parsed) -> Result<(), String> {
         sc.apply(&mut base);
     }
     // Within-cell parallelism (OCWF reorder rounds); the schedule is
-    // bit-identical at any value, so this composes with --threads — but
-    // prefer one level or the other to avoid oversubscription.
+    // bit-identical at any value and composes freely with --threads:
+    // both levels share the process-wide executor, whose admission
+    // budget lends nested reorder fan-outs idle workers only, so
+    // `--threads N --reorder-threads K` can never oversubscribe the
+    // pool.
     if let Some(v) = parsed.get_parse::<usize>("reorder-threads")? {
         base.sim.reorder_threads = v;
     }
@@ -327,7 +331,8 @@ fn cmd_repro(parsed: &taos::cli::Parsed) -> Result<(), String> {
             sweep::fig_scenarios(&base, &opts)
         }
         other => return Err(format!("unknown figure `{other}`")),
-    };
+    }
+    .map_err(|e| e.to_string())?;
     println!("{}", fig.render());
     if let Some(out) = parsed.get("out") {
         if !out.is_empty() {

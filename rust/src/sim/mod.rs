@@ -12,14 +12,23 @@
 //! - [`run_reordered`]: OCWF(-ACC) rebuilds all queues on every arrival,
 //!   so the engine drains queues between arrivals (also analytically, by
 //!   walking entries), tracks per-group remaining tasks, and invokes the
-//!   reordering driver of [`crate::sched::ocwf`].
+//!   reordering driver of [`crate::sched::ocwf`]. It is a thin driver
+//!   over [`ReorderedRun`], the arrival-stepping engine whose pooled
+//!   state makes the whole per-arrival path — outstanding-set build,
+//!   reorder, queue rebuild — **allocation-free after warmup**
+//!   (`rust/tests/alloc_stability.rs` asserts the capacity freeze).
+//!
+//! A run that exceeds its `max_slots` horizon returns
+//! [`crate::Error::Sim`] identifying the offending configuration instead
+//! of aborting the process, so one too-hot sweep cell no longer kills the
+//! entire sweep (`sweep::run_specs` adds the cell coordinates).
 
 pub mod stepping;
 
 use crate::assign::{validate_assignment, AssignPolicy, Assigner};
-use crate::cluster::state::{ClusterState, JobProgress, QueueEntry, ServerQueues};
+use crate::cluster::state::{ClusterState, JobProgress, QueueRebuild, ServerQueues};
 use crate::config::{ExperimentConfig, SimConfig};
-use crate::job::{Job, ServerId, Slots, TaskCount};
+use crate::job::{Job, Slots};
 use crate::metrics::JctStats;
 use crate::sched::ocwf::{reorder_into, OutstandingSet, ReorderOutcome, ReorderWorkspace};
 use crate::sched::SchedPolicy;
@@ -53,14 +62,16 @@ impl SimOutcome {
 }
 
 /// FIFO simulation (paper §III): assign each arriving job once with the
-/// given algorithm; queues drain in arrival order.
+/// given algorithm; queues drain in arrival order. Returns
+/// [`crate::Error::Sim`] when a completion would exceed
+/// `cfg.max_slots`.
 pub fn run_fifo(
     jobs: &[Job],
     num_servers: usize,
     policy: AssignPolicy,
     cfg: &SimConfig,
     seed: u64,
-) -> SimOutcome {
+) -> crate::Result<SimOutcome> {
     let mut assigner = policy.build(seed);
     // Absolute slot at which each server's queue empties.
     let mut free: Vec<Slots> = vec![0; num_servers];
@@ -83,57 +94,126 @@ pub fn run_fifo(
             free[m] = fin;
             completion = completion.max(fin);
         }
-        assert!(
-            completion <= cfg.max_slots,
-            "simulation exceeded max_slots; check utilization config"
-        );
+        if completion > cfg.max_slots {
+            return Err(crate::Error::Sim(format!(
+                "fifo/{} run exceeded max_slots = {}: job {} (arrival {}) \
+                 would complete at slot {} ({} jobs, {} servers); \
+                 utilization config too hot",
+                policy.name(),
+                cfg.max_slots,
+                job.id,
+                job.arrival,
+                completion,
+                jobs.len(),
+                num_servers
+            )));
+        }
         jcts.push(completion - job.arrival);
         makespan = makespan.max(completion);
     }
 
-    SimOutcome {
+    Ok(SimOutcome {
         jcts,
         overhead,
         makespan,
         wf_evals: 0,
         oracle_stats: assigner.oracle_stats(),
-    }
+    })
 }
 
-/// OCWF / OCWF-ACC simulation (paper §IV): on every arrival, drain queues
-/// up to the arrival slot, then rebuild the order and all assignments.
-/// The reordering rounds run on `cfg.reorder_threads` workers (1 = the
-/// serial reference; the schedule is bit-identical at any thread count).
-pub fn run_reordered(jobs: &[Job], num_servers: usize, acc: bool, cfg: &SimConfig) -> SimOutcome {
-    debug_assert!(
-        jobs.iter().enumerate().all(|(i, j)| j.id == i),
-        "run_reordered requires job ids to equal their slice positions"
-    );
-    let mut ws = ReorderWorkspace::default();
-    ws.set_spec_chunk(cfg.acc_spec_chunk);
-    let mut outcome = ReorderOutcome::default();
-    // Pooled outstanding set: the per-arrival remaining-count copies
-    // recycle their buffers instead of cloning fresh vectors.
-    let mut oset = OutstandingSet::new();
-    let mut queues = ServerQueues::new(num_servers);
-    let mut progress = JobProgress::new(jobs);
-    let mut overhead = OverheadMeter::new();
-    let mut wf_evals = 0u64;
-    let mut now: Slots = 0;
+/// The arrival-stepping OCWF(-ACC) engine (paper §IV): every call to
+/// [`ReorderedRun::step`] drains queues up to the next arrival slot, then
+/// rebuilds the order and all assignments for that arrival batch.
+///
+/// All per-arrival state is pooled inside the struct — the reorder
+/// workspace/outcome, the [`OutstandingSet`], the [`ServerQueues`] with
+/// their recycled entry buffers, and the [`QueueRebuild`] grouping rows —
+/// so after a warmup cycle a step performs **zero heap allocations**
+/// ([`ReorderedRun::pool_footprint`] exposes the reserved capacity;
+/// `rust/tests/alloc_stability.rs` asserts it freezes). This is the
+/// production arrival path the paper's computational-overhead results
+/// (§V) are about: serving a reorder on every arrival must stay O(small).
+pub struct ReorderedRun<'a> {
+    jobs: &'a [Job],
+    num_servers: usize,
+    acc: bool,
+    cfg: &'a SimConfig,
+    ws: ReorderWorkspace,
+    outcome: ReorderOutcome,
+    /// Pooled outstanding set: the per-arrival remaining-count copies
+    /// recycle their buffers instead of cloning fresh vectors.
+    oset: OutstandingSet<'a>,
+    queues: ServerQueues,
+    rebuild: QueueRebuild,
+    progress: JobProgress,
+    overhead: OverheadMeter,
+    wf_evals: u64,
+    now: Slots,
+    arrival_idx: usize,
+}
 
-    let mut arrival_idx = 0;
-    while arrival_idx < jobs.len() {
-        let job = &jobs[arrival_idx];
-        debug_assert!(job.mu.len() == num_servers);
+impl<'a> ReorderedRun<'a> {
+    pub fn new(jobs: &'a [Job], num_servers: usize, acc: bool, cfg: &'a SimConfig) -> Self {
+        debug_assert!(
+            jobs.iter().enumerate().all(|(i, j)| j.id == i),
+            "ReorderedRun requires job ids to equal their slice positions"
+        );
+        let mut ws = ReorderWorkspace::default();
+        ws.set_spec_chunk(cfg.acc_spec_chunk);
+        ReorderedRun {
+            jobs,
+            num_servers,
+            acc,
+            cfg,
+            ws,
+            outcome: ReorderOutcome::default(),
+            oset: OutstandingSet::new(),
+            queues: ServerQueues::new(num_servers),
+            rebuild: QueueRebuild::new(num_servers),
+            progress: JobProgress::new(jobs),
+            overhead: OverheadMeter::new(),
+            wf_evals: 0,
+            now: 0,
+            arrival_idx: 0,
+        }
+    }
+
+    /// Process the next arrival batch (all jobs arriving at the same
+    /// slot): drain queues to the arrival, reorder every outstanding job
+    /// (Alg. 3), rebuild the per-server queues in the new order. Returns
+    /// `false` once every arrival has been admitted.
+    pub fn step(&mut self) -> bool {
+        if self.arrival_idx >= self.jobs.len() {
+            return false;
+        }
+        let ReorderedRun {
+            jobs,
+            num_servers,
+            acc,
+            cfg,
+            ws,
+            outcome,
+            oset,
+            queues,
+            rebuild,
+            progress,
+            overhead,
+            wf_evals,
+            now,
+            arrival_idx,
+        } = self;
+        let jobs: &'a [Job] = *jobs;
+        let job = &jobs[*arrival_idx];
+        debug_assert!(job.mu.len() == *num_servers);
         // 1. Drain to the arrival slot (analytically, entry by entry).
-        queues.drain(jobs, &mut progress, now, job.arrival);
-        now = job.arrival;
+        queues.drain(jobs, progress, *now, job.arrival);
+        *now = job.arrival;
 
         // Collect every arrival at this exact slot before reordering
         // (reordering once per distinct arrival time is equivalent and
         // cheaper than once per job).
-        let mut newest = arrival_idx;
-        while newest + 1 < jobs.len() && jobs[newest + 1].arrival == now {
+        let mut newest = *arrival_idx;
+        while newest + 1 < jobs.len() && jobs[newest + 1].arrival == *now {
             newest += 1;
         }
 
@@ -145,65 +225,110 @@ pub fn run_reordered(jobs: &[Job], num_servers: usize, acc: bool, cfg: &SimConfi
             }
         }
         let outstanding = oset.as_slice();
+        // Explicit reborrows: the closure must borrow the pooled
+        // workspace/outcome, not consume the destructured references.
         overhead.measure(|| {
             reorder_into(
                 outstanding,
-                num_servers,
-                acc,
+                *num_servers,
+                *acc,
                 cfg.reorder_threads,
-                &mut ws,
-                &mut outcome,
+                &mut *ws,
+                &mut *outcome,
             )
         });
-        wf_evals += outcome.wf_evals;
+        *wf_evals += outcome.wf_evals;
 
-        // 3. Rebuild queues in the new order.
+        // 3. Rebuild queues in the new order, grouping each job's
+        // assignment by server through the pooled rebuild rows.
         queues.clear();
         for (pos, &oi) in outcome.order.iter().enumerate() {
             let job_idx = outstanding[oi].job.id;
             let a = &outcome.assignments[pos];
             debug_assert_eq!(a.total_assigned(), progress.total_remaining[job_idx]);
-            // Group the assignment by server.
-            let mut per_server: std::collections::BTreeMap<ServerId, Vec<(usize, TaskCount)>> =
-                Default::default();
-            for (k, alloc) in a.per_group.iter().enumerate() {
-                for &(m, n) in alloc {
-                    per_server.entry(m).or_default().push((k, n));
-                }
-            }
-            for (m, parts) in per_server {
-                queues.push(m, QueueEntry { job: job_idx, parts });
-            }
+            rebuild.push_grouped(queues, job_idx, &a.per_group);
         }
 
-        arrival_idx = newest + 1;
+        *arrival_idx = newest + 1;
+        *arrival_idx < jobs.len()
     }
 
-    // 4. Drain everything that remains.
-    queues.drain(jobs, &mut progress, now, cfg.max_slots);
-    assert!(
-        progress.all_complete(),
-        "jobs unfinished at max_slots horizon; check utilization config"
-    );
+    /// Admit any remaining arrivals, drain the tail of every queue and
+    /// produce the outcome. Returns [`crate::Error::Sim`] when jobs are
+    /// still unfinished at the `max_slots` horizon.
+    pub fn finish(mut self) -> crate::Result<SimOutcome> {
+        while self.step() {}
+        // 4. Drain everything that remains.
+        self.queues
+            .drain(self.jobs, &mut self.progress, self.now, self.cfg.max_slots);
+        if !self.progress.all_complete() {
+            let unfinished = self
+                .progress
+                .completion
+                .iter()
+                .filter(|c| c.is_none())
+                .count();
+            return Err(crate::Error::Sim(format!(
+                "ocwf{} run exceeded max_slots = {}: {} of {} jobs unfinished \
+                 at the horizon ({} servers, reorder_threads = {}); \
+                 utilization config too hot",
+                if self.acc { "-acc" } else { "" },
+                self.cfg.max_slots,
+                unfinished,
+                self.jobs.len(),
+                self.num_servers,
+                self.cfg.reorder_threads
+            )));
+        }
 
-    let jcts: Vec<Slots> = jobs
-        .iter()
-        .zip(&progress.completion)
-        .map(|(j, c)| c.unwrap() - j.arrival)
-        .collect();
-    let makespan = progress
-        .completion
-        .iter()
-        .map(|c| c.unwrap())
-        .max()
-        .unwrap_or(0);
-    SimOutcome {
-        jcts,
-        overhead,
-        makespan,
-        wf_evals,
-        oracle_stats: None,
+        let jcts: Vec<Slots> = self
+            .jobs
+            .iter()
+            .zip(&self.progress.completion)
+            .map(|(j, c)| c.unwrap() - j.arrival)
+            .collect();
+        let makespan = self
+            .progress
+            .completion
+            .iter()
+            .map(|c| c.unwrap())
+            .max()
+            .unwrap_or(0);
+        Ok(SimOutcome {
+            jcts,
+            overhead: self.overhead,
+            makespan,
+            wf_evals: self.wf_evals,
+            oracle_stats: None,
+        })
     }
+
+    /// Reserved capacity across every pooled buffer of the arrival path
+    /// (allocation-stability tests): reorder workspace + outcome,
+    /// outstanding set, server queues (entries + spare pool) and the
+    /// queue-rebuild rows.
+    pub fn pool_footprint(&self) -> usize {
+        self.ws.footprint()
+            + self.outcome.footprint()
+            + self.oset.footprint()
+            + self.queues.footprint()
+            + self.rebuild.footprint()
+    }
+}
+
+/// OCWF / OCWF-ACC simulation (paper §IV): on every arrival, drain queues
+/// up to the arrival slot, then rebuild the order and all assignments.
+/// The reordering rounds run on `cfg.reorder_threads` workers (1 = the
+/// serial reference; the schedule is bit-identical at any thread count,
+/// and the thread budget composes with a sweep's worker threads through
+/// the executor's admission budget). Thin driver over [`ReorderedRun`].
+pub fn run_reordered(
+    jobs: &[Job],
+    num_servers: usize,
+    acc: bool,
+    cfg: &SimConfig,
+) -> crate::Result<SimOutcome> {
+    ReorderedRun::new(jobs, num_servers, acc, cfg).finish()
 }
 
 /// Dispatch on a [`SchedPolicy`].
@@ -213,7 +338,7 @@ pub fn run_policy(
     policy: SchedPolicy,
     cfg: &SimConfig,
     seed: u64,
-) -> SimOutcome {
+) -> crate::Result<SimOutcome> {
     match policy {
         SchedPolicy::Fifo(p) => run_fifo(jobs, num_servers, p, cfg, seed),
         SchedPolicy::Ocwf { acc } => run_reordered(jobs, num_servers, acc, cfg),
@@ -247,13 +372,13 @@ pub fn materialize_jobs(cfg: &ExperimentConfig) -> crate::Result<Vec<Job>> {
 /// Convenience: build cluster + trace from a config and run one policy.
 pub fn run_experiment(cfg: &ExperimentConfig, policy: SchedPolicy) -> crate::Result<SimOutcome> {
     let jobs = materialize_jobs(cfg)?;
-    Ok(run_policy(
+    run_policy(
         &jobs,
         cfg.cluster.servers,
         policy,
         &cfg.sim,
         cfg.seed ^ 0xA55A,
-    ))
+    )
 }
 
 #[cfg(test)]
@@ -277,7 +402,7 @@ mod tests {
     #[test]
     fn fifo_single_job_single_server() {
         let jobs = vec![job(0, 0, &[10], &[&[0]], vec![3])];
-        let out = run_fifo(&jobs, 1, AssignPolicy::Wf, &SimConfig::default(), 0);
+        let out = run_fifo(&jobs, 1, AssignPolicy::Wf, &SimConfig::default(), 0).unwrap();
         assert_eq!(out.jcts, vec![4]); // ceil(10/3)
         assert_eq!(out.makespan, 4);
     }
@@ -289,7 +414,7 @@ mod tests {
             job(0, 0, &[4], &[&[0]], vec![1]),
             job(1, 1, &[4], &[&[0]], vec![1]),
         ];
-        let out = run_fifo(&jobs, 1, AssignPolicy::Wf, &SimConfig::default(), 0);
+        let out = run_fifo(&jobs, 1, AssignPolicy::Wf, &SimConfig::default(), 0).unwrap();
         // Job 0: 0→4 (JCT 4). Job 1 arrives at 1, waits 3, runs 4 → JCT 7.
         assert_eq!(out.jcts, vec![4, 7]);
     }
@@ -300,7 +425,7 @@ mod tests {
             job(0, 0, &[2], &[&[0]], vec![1]),
             job(1, 10, &[2], &[&[0]], vec![1]),
         ];
-        let out = run_fifo(&jobs, 1, AssignPolicy::Wf, &SimConfig::default(), 0);
+        let out = run_fifo(&jobs, 1, AssignPolicy::Wf, &SimConfig::default(), 0).unwrap();
         assert_eq!(out.jcts, vec![2, 2]);
         assert_eq!(out.makespan, 12);
     }
@@ -312,8 +437,44 @@ mod tests {
             job(1, 2, &[5], &[&[0]], vec![2]),
         ];
         for p in AssignPolicy::ALL {
-            let out = run_fifo(&jobs, 1, p, &SimConfig::default(), 0);
+            let out = run_fifo(&jobs, 1, p, &SimConfig::default(), 0).unwrap();
             assert_eq!(out.jcts, vec![4, 2 + 3 + 2 - 2 /* wait + run */], "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn fifo_hot_config_returns_sim_error() {
+        // A horizon of 1 slot cannot fit a 10-task job: the run must
+        // surface an Error::Sim naming the config, not abort the process.
+        let jobs = vec![job(0, 0, &[10], &[&[0]], vec![1])];
+        let cfg = SimConfig {
+            max_slots: 1,
+            ..SimConfig::default()
+        };
+        let err = run_fifo(&jobs, 1, AssignPolicy::Wf, &cfg, 0).unwrap_err();
+        match err {
+            crate::Error::Sim(msg) => {
+                assert!(msg.contains("max_slots = 1"), "{msg}");
+                assert!(msg.contains("wf"), "{msg}");
+            }
+            other => panic!("expected Error::Sim, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn reordered_hot_config_returns_sim_error() {
+        let jobs = vec![job(0, 0, &[10], &[&[0]], vec![1])];
+        let cfg = SimConfig {
+            max_slots: 1,
+            ..SimConfig::default()
+        };
+        let err = run_reordered(&jobs, 1, true, &cfg).unwrap_err();
+        match err {
+            crate::Error::Sim(msg) => {
+                assert!(msg.contains("ocwf-acc"), "{msg}");
+                assert!(msg.contains("max_slots = 1"), "{msg}");
+            }
+            other => panic!("expected Error::Sim, got {other:?}"),
         }
     }
 
@@ -326,8 +487,8 @@ mod tests {
             job(0, 0, &[100], &[&[0]], vec![1]),
             job(1, 1, &[2], &[&[0]], vec![1]),
         ];
-        let fifo = run_fifo(&jobs, 1, AssignPolicy::Wf, &SimConfig::default(), 0);
-        let re = run_reordered(&jobs, 1, false, &SimConfig::default());
+        let fifo = run_fifo(&jobs, 1, AssignPolicy::Wf, &SimConfig::default(), 0).unwrap();
+        let re = run_reordered(&jobs, 1, false, &SimConfig::default()).unwrap();
         // FIFO: job 1 completes at 102 → JCT 101.
         assert_eq!(fifo.jcts, vec![100, 101]);
         // OCWF: at t=1 job 1 (2 tasks) goes first: completes at 3 (JCT 2);
@@ -366,8 +527,8 @@ mod tests {
                     }
                 })
                 .collect();
-            let plain = run_reordered(&jobs, m, false, &SimConfig::default());
-            let accd = run_reordered(&jobs, m, true, &SimConfig::default());
+            let plain = run_reordered(&jobs, m, false, &SimConfig::default()).unwrap();
+            let accd = run_reordered(&jobs, m, true, &SimConfig::default()).unwrap();
             assert_eq!(plain.jcts, accd.jcts, "OCWF and OCWF-ACC must coincide");
             assert!(accd.wf_evals <= plain.wf_evals);
         }
@@ -376,9 +537,35 @@ mod tests {
     #[test]
     fn reordered_single_job_matches_fifo_wf() {
         let jobs = vec![job(0, 0, &[12], &[&[0, 1, 2]], vec![2, 2, 2])];
-        let fifo = run_fifo(&jobs, 3, AssignPolicy::Wf, &SimConfig::default(), 0);
-        let re = run_reordered(&jobs, 3, true, &SimConfig::default());
+        let fifo = run_fifo(&jobs, 3, AssignPolicy::Wf, &SimConfig::default(), 0).unwrap();
+        let re = run_reordered(&jobs, 3, true, &SimConfig::default()).unwrap();
         assert_eq!(fifo.jcts, re.jcts);
+    }
+
+    #[test]
+    fn stepping_api_matches_one_shot_driver() {
+        // Driving ReorderedRun arrival by arrival must equal the one-shot
+        // run_reordered wrapper exactly.
+        let jobs = vec![
+            job(0, 0, &[9, 4], &[&[0, 1], &[1, 2]], vec![2, 1, 2]),
+            job(1, 2, &[6], &[&[0, 2]], vec![2, 1, 2]),
+            job(2, 2, &[3], &[&[1]], vec![2, 1, 2]),
+            job(3, 9, &[5], &[&[0, 1, 2]], vec![2, 1, 2]),
+        ];
+        let cfg = SimConfig::default();
+        let reference = run_reordered(&jobs, 3, true, &cfg).unwrap();
+        let mut run = ReorderedRun::new(&jobs, 3, true, &cfg);
+        let mut steps = 0;
+        while run.step() {
+            steps += 1;
+        }
+        // 3 distinct arrival slots (0, 2, 9): step returns true while more
+        // arrivals remain, so the loop body runs per batch.
+        assert_eq!(steps, 2);
+        let out = run.finish().unwrap();
+        assert_eq!(reference.jcts, out.jcts);
+        assert_eq!(reference.makespan, out.makespan);
+        assert_eq!(reference.wf_evals, out.wf_evals);
     }
 
     #[test]
@@ -401,7 +588,7 @@ mod tests {
             })
             .collect();
         for policy in SchedPolicy::ALL {
-            let out = run_policy(&jobs, m, policy, &SimConfig::default(), 1);
+            let out = run_policy(&jobs, m, policy, &SimConfig::default(), 1).unwrap();
             assert_eq!(out.jcts.len(), jobs.len(), "{}", policy.name());
             assert!(out.jcts.iter().all(|&j| j >= 1), "{}", policy.name());
         }

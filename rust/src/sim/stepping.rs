@@ -199,7 +199,7 @@ mod tests {
                 [AssignPolicy::Wf, AssignPolicy::Rd, AssignPolicy::Obta]
                     .into_iter()
                     .all(|p| {
-                        let fast = run_fifo(jobs, m, p, &SimConfig::default(), 3);
+                        let fast = run_fifo(jobs, m, p, &SimConfig::default(), 3).unwrap();
                         let slow =
                             run_fifo_stepping(jobs, m, p, &SimConfig::default(), 3);
                         fast.jcts == slow.jcts && fast.makespan == slow.makespan

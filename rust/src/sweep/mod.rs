@@ -315,11 +315,31 @@ pub fn trial_seed(base: u64, trial: u64) -> u64 {
 /// Run every spec — in parallel when `threads > 1` — and return the
 /// outcomes in spec order. The output is bit-identical at any thread
 /// count because each cell's simulation is a pure function of its spec.
-pub fn run_specs(specs: &[CellSpec], threads: usize) -> Vec<SimOutcome> {
-    pool::parallel_map(specs.len(), threads, |i| {
+///
+/// A cell that fails (e.g. its utilization config exceeds the simulation
+/// horizon, [`crate::Error::Sim`]) no longer aborts the process: the
+/// first failing cell — in spec order, so the report is deterministic —
+/// is surfaced with its full coordinates (policy, setting, trial, seed).
+pub fn run_specs(specs: &[CellSpec], threads: usize) -> crate::Result<Vec<SimOutcome>> {
+    let results = pool::parallel_map(specs.len(), threads, |i| {
         let s = &specs[i];
-        run_experiment(&s.cfg, s.policy).expect("sweep cell failed")
-    })
+        run_experiment(&s.cfg, s.policy)
+    });
+    results
+        .into_iter()
+        .zip(specs)
+        .map(|(r, s)| {
+            r.map_err(|e| {
+                crate::Error::Sim(format!(
+                    "sweep cell failed: policy {} at setting {} (trial {}, seed {}): {e}",
+                    s.policy.name(),
+                    s.setting,
+                    s.trial,
+                    s.cfg.seed
+                ))
+            })
+        })
+        .collect()
 }
 
 /// Expand (settings × policies × trials) into a flat spec list. `mutate`
@@ -397,19 +417,19 @@ fn run_figure(
     settings: &[f64],
     opts: &SweepOptions,
     mutate: &dyn Fn(&mut ExperimentConfig, f64),
-) -> Figure {
+) -> crate::Result<Figure> {
     let specs = specs_for(base, settings, opts.trials, mutate);
-    let outcomes = run_specs(&specs, opts.effective_threads());
-    Figure {
+    let outcomes = run_specs(&specs, opts.effective_threads())?;
+    Ok(Figure {
         name,
         x_label,
         cells: cells_from(&specs, &outcomes, opts.trials),
-    }
+    })
 }
 
 /// Figs 10–12: sweep Zipf α at fixed utilization, all six algorithms
 /// (serial single-trial path; see [`fig_alpha_util_opts`]).
-pub fn fig_alpha_util(base: &ExperimentConfig, util: f64, alphas: &[f64]) -> Figure {
+pub fn fig_alpha_util(base: &ExperimentConfig, util: f64, alphas: &[f64]) -> crate::Result<Figure> {
     fig_alpha_util_opts(base, util, alphas, &SweepOptions::default())
 }
 
@@ -419,7 +439,7 @@ pub fn fig_alpha_util_opts(
     util: f64,
     alphas: &[f64],
     opts: &SweepOptions,
-) -> Figure {
+) -> crate::Result<Figure> {
     run_figure(
         format!("fig-alpha-util-{:.0}%", util * 100.0),
         "alpha",
@@ -436,12 +456,16 @@ pub fn fig_alpha_util_opts(
 /// Fig 13 + Table I: sweep the number of available servers p at α = 2,
 /// 75% utilization (the paper fixes p per sweep point: avail_lo =
 /// avail_hi = p).
-pub fn fig_servers(base: &ExperimentConfig, ps: &[usize]) -> Figure {
+pub fn fig_servers(base: &ExperimentConfig, ps: &[usize]) -> crate::Result<Figure> {
     fig_servers_opts(base, ps, &SweepOptions::default())
 }
 
 /// Fig 13 + Table I with explicit execution options.
-pub fn fig_servers_opts(base: &ExperimentConfig, ps: &[usize], opts: &SweepOptions) -> Figure {
+pub fn fig_servers_opts(
+    base: &ExperimentConfig,
+    ps: &[usize],
+    opts: &SweepOptions,
+) -> crate::Result<Figure> {
     let settings: Vec<f64> = ps.iter().map(|&p| p as f64).collect();
     run_figure(
         "fig13-table1-available-servers".into(),
@@ -460,7 +484,7 @@ pub fn fig_servers_opts(base: &ExperimentConfig, ps: &[usize], opts: &SweepOptio
 
 /// Fig 14: sweep computing capacity (μ ranges centred on the x value) at
 /// α = 2, 75% utilization.
-pub fn fig_capacity(base: &ExperimentConfig, mu_mids: &[u64]) -> Figure {
+pub fn fig_capacity(base: &ExperimentConfig, mu_mids: &[u64]) -> crate::Result<Figure> {
     fig_capacity_opts(base, mu_mids, &SweepOptions::default())
 }
 
@@ -469,7 +493,7 @@ pub fn fig_capacity_opts(
     base: &ExperimentConfig,
     mu_mids: &[u64],
     opts: &SweepOptions,
-) -> Figure {
+) -> crate::Result<Figure> {
     let settings: Vec<f64> = mu_mids.iter().map(|&m| m as f64).collect();
     run_figure(
         "fig14-computing-capacity".into(),
@@ -491,7 +515,7 @@ pub fn fig_capacity_opts(
 /// [`crate::trace::scenarios::Scenario`] × all six algorithms. The x-axis
 /// is the scenario index into `Scenario::ALL` (the CLI prints the
 /// index → name legend next to the table).
-pub fn fig_scenarios(base: &ExperimentConfig, opts: &SweepOptions) -> Figure {
+pub fn fig_scenarios(base: &ExperimentConfig, opts: &SweepOptions) -> crate::Result<Figure> {
     use crate::trace::scenarios::Scenario;
     let settings: Vec<f64> = (0..Scenario::ALL.len()).map(|i| i as f64).collect();
     run_figure(
@@ -533,7 +557,7 @@ mod tests {
     #[test]
     fn quick_alpha_sweep_has_all_cells() {
         let base = quick_base(7);
-        let fig = fig_alpha_util(&base, 0.5, &[0.0, 2.0]);
+        let fig = fig_alpha_util(&base, 0.5, &[0.0, 2.0]).unwrap();
         assert_eq!(fig.cells.len(), 2 * 6);
         assert_eq!(fig.settings(), vec![0.0, 2.0]);
         for c in &fig.cells {
@@ -550,7 +574,7 @@ mod tests {
         // The paper's central qualitative claim (Figs 10-12): at α = 2 the
         // reordered algorithms achieve far lower mean JCT than FIFO WF.
         let base = quick_base(11);
-        let fig = fig_alpha_util(&base, 0.75, &[2.0]);
+        let fig = fig_alpha_util(&base, 0.75, &[2.0]).unwrap();
         let wf = fig.cell("wf", 2.0).unwrap().mean_jct;
         let ocwf = fig.cell("ocwf", 2.0).unwrap().mean_jct;
         assert!(
@@ -562,10 +586,42 @@ mod tests {
     #[test]
     fn figure_json_parses() {
         let base = quick_base(5);
-        let fig = fig_servers(&base, &[4]);
+        let fig = fig_servers(&base, &[4]).unwrap();
         let j = fig.to_json().to_string();
         let parsed = crate::util::json::Json::parse(&j).unwrap();
         assert!(parsed.get("cells").unwrap().as_arr().unwrap().len() == 6);
+    }
+
+    #[test]
+    fn hot_cell_surfaces_its_coordinates_instead_of_aborting() {
+        // One cell with an impossible horizon: run_specs must return an
+        // Error::Sim naming the cell (policy, setting, trial, seed), not
+        // kill the process — and the report must be deterministic (first
+        // failing cell in spec order) at any thread count.
+        let mut cfg = quick_base(21);
+        cfg.sim.max_slots = 1;
+        let specs = vec![
+            CellSpec {
+                cfg: cfg.clone(),
+                policy: SchedPolicy::Fifo(crate::assign::AssignPolicy::Wf),
+                setting: 0.5,
+                trial: 3,
+            },
+            CellSpec {
+                cfg,
+                policy: SchedPolicy::Ocwf { acc: true },
+                setting: 0.5,
+                trial: 0,
+            },
+        ];
+        for threads in [1, 4] {
+            let err = run_specs(&specs, threads).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains("sweep cell failed"), "{msg}");
+            assert!(msg.contains("policy wf"), "first failing cell: {msg}");
+            assert!(msg.contains("trial 3"), "{msg}");
+            assert!(msg.contains("seed 21"), "{msg}");
+        }
     }
 
     #[test]
@@ -603,7 +659,8 @@ mod tests {
             0.5,
             &[1.0],
             &SweepOptions::default().with_trials(2).with_threads(2),
-        );
+        )
+        .unwrap();
         assert_eq!(fig.cells.len(), 6);
         for c in &fig.cells {
             assert!(c.mean_jct.is_finite() && c.mean_jct > 0.0);
@@ -616,7 +673,7 @@ mod tests {
     fn scenario_sweep_covers_catalog() {
         use crate::trace::scenarios::Scenario;
         let base = quick_base(13);
-        let fig = fig_scenarios(&base, &SweepOptions::default().with_threads(0));
+        let fig = fig_scenarios(&base, &SweepOptions::default().with_threads(0)).unwrap();
         assert_eq!(fig.cells.len(), Scenario::ALL.len() * 6);
         for c in &fig.cells {
             assert!(c.mean_jct.is_finite() && c.mean_jct > 0.0, "{}", c.policy);

@@ -33,21 +33,44 @@ pub fn available_threads() -> usize {
 /// (`sweep_determinism` and `reorder_equivalence` read this; the
 /// differential/metamorphic suites are thread-independent): the
 /// `TAOS_TEST_THREADS` env var as a comma list (e.g. `1,2,8`), or
-/// `[1, 2, 8]` when unset/unparsable. CI runs a matrix leg per count.
+/// `[1, 2, 8]` when unset. CI runs a matrix leg per count.
+///
+/// A set-but-unparsable value **panics** instead of falling back: the
+/// old silent `[1, 2, 8]` fallback let a typo'd CI matrix leg pass while
+/// testing the wrong thread counts.
 pub fn test_thread_counts() -> Vec<usize> {
-    let parsed: Vec<usize> = std::env::var("TAOS_TEST_THREADS")
-        .map(|s| {
-            s.split(',')
-                .filter_map(|t| t.trim().parse().ok())
-                .filter(|&t| t > 0)
-                .collect()
-        })
-        .unwrap_or_default();
-    if parsed.is_empty() {
-        vec![1, 2, 8]
-    } else {
-        parsed
+    counts_from(std::env::var("TAOS_TEST_THREADS").ok().as_deref())
+}
+
+/// The arms behind [`test_thread_counts`], split out so both are
+/// unit-testable without racing on the process-global environment.
+fn counts_from(env: Option<&str>) -> Vec<usize> {
+    match env {
+        None => vec![1, 2, 8],
+        Some(s) => match parse_thread_counts(s) {
+            Ok(counts) => counts,
+            Err(bad) => panic!(
+                "TAOS_TEST_THREADS=`{s}`: bad thread count `{bad}` \
+                 (expected a comma list of positive integers, e.g. `1,2,8`)"
+            ),
+        },
     }
+}
+
+/// Parse a comma list of positive thread counts; `Err` carries the first
+/// offending token. Empty input errors too (`split` yields one empty
+/// token): a set-but-empty variable is a misconfigured matrix leg, not a
+/// request for defaults.
+fn parse_thread_counts(s: &str) -> Result<Vec<usize>, String> {
+    let mut counts = Vec::new();
+    for tok in s.split(',') {
+        let tok = tok.trim();
+        match tok.parse::<usize>() {
+            Ok(n) if n > 0 => counts.push(n),
+            _ => return Err(tok.to_string()),
+        }
+    }
+    Ok(counts)
 }
 
 /// Map `f` over `0..n` using up to `threads` concurrent stripes and
@@ -199,13 +222,39 @@ mod tests {
 
     #[test]
     fn test_thread_counts_defaults() {
-        // The env var is process-global, so only exercise the default and
-        // the parser helper here (CI sets the var per matrix leg).
+        // The env var is process-global, so exercise the arms through
+        // `counts_from` instead of mutating the environment (CI sets the
+        // var per matrix leg).
         if std::env::var("TAOS_TEST_THREADS").is_err() {
             assert_eq!(test_thread_counts(), vec![1, 2, 8]);
         } else {
             assert!(test_thread_counts().iter().all(|&t| t > 0));
         }
+        assert_eq!(counts_from(None), vec![1, 2, 8], "unset → defaults");
+    }
+
+    #[test]
+    fn thread_counts_parse_valid_lists() {
+        assert_eq!(counts_from(Some("1,2,8")), vec![1, 2, 8]);
+        assert_eq!(counts_from(Some(" 4 , 16 ")), vec![4, 16]);
+        assert_eq!(counts_from(Some("2")), vec![2]);
+    }
+
+    #[test]
+    fn thread_counts_reject_bad_tokens_loudly() {
+        // A typo'd matrix leg must fail the run, not silently test the
+        // default counts. The panic names the offending token.
+        for bad in ["1,x,8", "0", "", "1,,2", "eight"] {
+            let caught = std::panic::catch_unwind(|| counts_from(Some(bad)));
+            assert!(caught.is_err(), "`{bad}` must panic");
+        }
+        assert_eq!(
+            parse_thread_counts("1,x,8").unwrap_err(),
+            "x",
+            "error carries the offending token"
+        );
+        assert_eq!(parse_thread_counts("0").unwrap_err(), "0");
+        assert_eq!(parse_thread_counts("").unwrap_err(), "");
     }
 
     #[test]

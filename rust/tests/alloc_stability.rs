@@ -215,6 +215,72 @@ fn exact_assigner_workspaces_freeze_after_warmup() {
 }
 
 #[test]
+fn reordered_arrival_path_footprint_freezes_after_warmup() {
+    // The whole per-arrival path of the reordered engine — outstanding
+    // set, reorder workspace/outcome, server queues (entries + recycled
+    // parts buffers) and the QueueRebuild grouping rows — must stop
+    // allocating once warm. The trace repeats an identical wave of jobs
+    // with long gaps (queues fully drain between waves), so every wave
+    // after warmup touches exactly the pooled buffers of the previous
+    // one: any footprint movement is a per-arrival allocation.
+    use taos::config::SimConfig;
+    use taos::sim::ReorderedRun;
+
+    let m = 8;
+    let waves = 7usize;
+    let per_wave = 5usize;
+    let mut jobs: Vec<taos::job::Job> = Vec::new();
+    for w in 0..waves {
+        for j in 0..per_wave {
+            // Identical shape in every wave (sizes/servers/mu depend on
+            // j only), so the high-water mark is reached in wave one.
+            let k = 1 + j % 3;
+            let groups: Vec<TaskGroup> = (0..k)
+                .map(|g| {
+                    let servers: Vec<usize> = (0..m).filter(|s| (s + g + j) % 2 == 0).collect();
+                    TaskGroup::new(4 + 3 * j as u64 + g as u64, servers)
+                })
+                .collect();
+            jobs.push(taos::job::Job {
+                id: w * per_wave + j,
+                arrival: (w as u64) * 10_000,
+                groups,
+                mu: (0..m).map(|s| 1 + ((s + j) % 3) as u64).collect(),
+            });
+        }
+    }
+
+    for (acc, threads) in [(true, 1), (false, 1), (true, 2)] {
+        let cfg = SimConfig {
+            reorder_threads: threads,
+            ..SimConfig::default()
+        };
+        let mut run = ReorderedRun::new(&jobs, m, acc, &cfg);
+        // Warmup: two waves (the first grows fresh buffers, the second
+        // settles the recycled-buffer pairings in the spare pools).
+        assert!(run.step());
+        assert!(run.step());
+        let fp = run.pool_footprint();
+        assert!(fp > 0, "warmup must have pooled buffers");
+        let mut wave = 2;
+        loop {
+            let more = run.step();
+            assert_eq!(
+                fp,
+                run.pool_footprint(),
+                "arrival path allocated on wave {wave} (acc={acc}, threads={threads})"
+            );
+            if !more {
+                break;
+            }
+            wave += 1;
+        }
+        let out = run.finish().unwrap();
+        assert_eq!(out.jcts.len(), jobs.len());
+    }
+}
+
+#[test]
 fn executor_spawns_zero_threads_after_warmup() {
     // Every parallel entry point in this crate runs on the process-wide
     // persistent executor. After one warmup batch the worker count is

@@ -1,0 +1,179 @@
+//! Multi-submitter stress for the persistent worker-pool executor.
+//!
+//! Every other suite submits batches from one thread. Production sweeps
+//! do not: cells run *on* pool workers and submit nested reorder batches
+//! while the main thread submits the next sweep batch. This suite drives
+//! that shape directly — several OS threads submitting batches of
+//! varying stripe counts (some nested) against a deliberately small pool
+//! — and asserts the two properties the admission budget must preserve:
+//! **exact per-stripe execution counts** (each stripe of each batch runs
+//! exactly once, no matter which thread claims it) and **no deadlock**
+//! (the submitter-helps rule drains every batch even when the budget
+//! admits zero helpers). A 60 s watchdog turns a hang into a failure
+//! instead of a CI timeout.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::time::Duration;
+
+use taos::runtime::executor::Executor;
+
+/// Run `f` on a fresh thread and fail loudly if it does not finish in
+/// time — the deadlock check for every stress shape below.
+fn with_watchdog<F: FnOnce() + Send + 'static>(name: &str, f: F) {
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        f();
+        let _ = tx.send(());
+    });
+    rx.recv_timeout(Duration::from_secs(60))
+        .unwrap_or_else(|_| panic!("{name}: executor stress deadlocked"));
+}
+
+#[test]
+fn concurrent_submitters_count_every_stripe_exactly_once() {
+    with_watchdog("flat", || {
+        let ex = Executor::new(2);
+        let submitters = 6usize;
+        let rounds = 40usize;
+        std::thread::scope(|scope| {
+            for t in 0..submitters {
+                let ex = &ex;
+                scope.spawn(move || {
+                    for round in 0..rounds {
+                        // Varying stripe counts, 2..=8, different per
+                        // (submitter, round) so batches of different
+                        // shapes constantly overlap in the queue.
+                        let stripes = 2 + (t + round) % 7;
+                        let counts: Vec<AtomicU32> =
+                            (0..stripes).map(|_| AtomicU32::new(0)).collect();
+                        ex.run_batch(stripes, &|s| {
+                            counts[s].fetch_add(1, Ordering::Relaxed);
+                        });
+                        for (s, c) in counts.iter().enumerate() {
+                            assert_eq!(
+                                c.load(Ordering::Relaxed),
+                                1,
+                                "submitter {t} round {round}: stripe {s} of {stripes}"
+                            );
+                        }
+                    }
+                });
+            }
+        });
+        // Quiescent pool: every claimed stripe was retired.
+        assert_eq!(ex.stripes_in_flight(), 0);
+    });
+}
+
+#[test]
+fn concurrent_nested_submissions_complete_with_exact_counts() {
+    with_watchdog("nested", || {
+        // 4 submitters × outer batches of 3 stripes, every outer stripe
+        // submitting an inner batch — against a pool smaller than the
+        // submitter count, so the budget repeatedly admits zero helpers
+        // and submitter-helps must carry whole batches.
+        let ex = Executor::new(2);
+        let submitters = 4usize;
+        let rounds = 25usize;
+        let total_inner = AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            for t in 0..submitters {
+                let ex = &ex;
+                let total_inner = &total_inner;
+                scope.spawn(move || {
+                    for round in 0..rounds {
+                        let inner_stripes = 2 + (t + round) % 4;
+                        let inner_runs = AtomicU32::new(0);
+                        ex.run_batch(3, &|_outer| {
+                            ex.run_batch(inner_stripes, &|_inner| {
+                                inner_runs.fetch_add(1, Ordering::Relaxed);
+                                total_inner.fetch_add(1, Ordering::Relaxed);
+                            });
+                        });
+                        assert_eq!(
+                            inner_runs.load(Ordering::Relaxed) as usize,
+                            3 * inner_stripes,
+                            "submitter {t} round {round}"
+                        );
+                    }
+                });
+            }
+        });
+        // Cross-check the global tally: Σ over (t, round) of 3 × inner.
+        let expect: u64 = (0..submitters)
+            .flat_map(|t| (0..rounds).map(move |r| 3 * (2 + (t + r) % 4) as u64))
+            .sum();
+        assert_eq!(total_inner.load(Ordering::Relaxed), expect);
+        assert_eq!(ex.stripes_in_flight(), 0);
+    });
+}
+
+#[test]
+fn budget_telemetry_stays_consistent_under_contention() {
+    with_watchdog("telemetry", || {
+        let ex = Executor::new(3);
+        let batches_per_thread = 30u64;
+        std::thread::scope(|scope| {
+            for _ in 0..5 {
+                let ex = &ex;
+                scope.spawn(move || {
+                    for _ in 0..batches_per_thread {
+                        ex.run_batch(8, &|_s| {
+                            std::hint::spin_loop();
+                        });
+                    }
+                });
+            }
+        });
+        // Every batch wanted min(8 − 1, pool) = 3 helpers; each was
+        // either admitted from the idle stack or trimmed by the budget —
+        // under contention most are trimmed, but the split must be exact.
+        let wanted = 5 * batches_per_thread * 3;
+        assert_eq!(
+            ex.helpers_woken_total() + ex.wakeups_trimmed_total(),
+            wanted,
+            "admitted + trimmed must equal wanted helpers"
+        );
+        assert_eq!(ex.epochs_dispatched(), 5 * batches_per_thread);
+        assert_eq!(ex.stripes_in_flight(), 0);
+        assert!(ex.idle_workers() <= ex.threads());
+    });
+}
+
+#[test]
+fn mixed_flat_and_nested_submitters_against_one_worker() {
+    with_watchdog("mixed-1worker", || {
+        // The meanest shape: a single-worker pool, three submitters, a
+        // mix of wide flat batches and nested ones. Progress can only
+        // come from submitter-helps plus the lone worker; any lost
+        // wakeup or budget accounting error deadlocks here.
+        let ex = Executor::new(1);
+        let done = AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            for t in 0..3usize {
+                let ex = &ex;
+                let done = &done;
+                scope.spawn(move || {
+                    for round in 0..30usize {
+                        if (t + round) % 2 == 0 {
+                            let ran = AtomicU32::new(0);
+                            ex.run_batch(16, &|_s| {
+                                ran.fetch_add(1, Ordering::Relaxed);
+                            });
+                            assert_eq!(ran.load(Ordering::Relaxed), 16);
+                        } else {
+                            ex.run_batch(2, &|_s| {
+                                ex.run_batch(3, &|_t| {
+                                    done.fetch_add(1, Ordering::Relaxed);
+                                });
+                            });
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(ex.stripes_in_flight(), 0);
+        assert!(done.load(Ordering::Relaxed) > 0);
+    });
+}

@@ -152,7 +152,8 @@ fn csv_trace_roundtrip_through_simulation() {
     let jobs = parsed
         .materialize(&cluster, &placement, 0.5, &mut rng)
         .unwrap();
-    let out = run_policy(&jobs, 20, SchedPolicy::Fifo(AssignPolicy::Rd), &Default::default(), 3);
+    let out =
+        run_policy(&jobs, 20, SchedPolicy::Fifo(AssignPolicy::Rd), &Default::default(), 3).unwrap();
     assert_eq!(out.jcts.len(), 12);
 }
 

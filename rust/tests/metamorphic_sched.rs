@@ -172,7 +172,7 @@ fn fifo_engine_matches_stepping_validator_on_compound_scenarios() {
         let jobs = materialize_jobs(&cfg).unwrap_or_else(|e| panic!("{name}: {e}"));
         let sim_cfg = SimConfig::default();
         for policy in [AssignPolicy::Wf, AssignPolicy::Rd, AssignPolicy::Obta] {
-            let fast = run_fifo(&jobs, cfg.cluster.servers, policy, &sim_cfg, 11);
+            let fast = run_fifo(&jobs, cfg.cluster.servers, policy, &sim_cfg, 11).unwrap();
             let slow = run_fifo_stepping(&jobs, cfg.cluster.servers, policy, &sim_cfg, 11);
             assert_eq!(
                 fast.jcts,

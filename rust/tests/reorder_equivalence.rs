@@ -143,6 +143,47 @@ fn reorder_outcome_byte_identical_at_1_2_8_threads() {
 }
 
 #[test]
+fn composed_sweep_and_reorder_fanout_matches_direct_serial_run() {
+    // Combined sweep × reorder case: the same scenario config executed
+    // (a) directly, serial everywhere, and (b) as cells of a 4-thread
+    // sweep whose cells each fan reorder rounds across 4 threads — the
+    // shape the executor's admission budget exists for. Schedules and
+    // wf_evals must be byte-identical; only wall-clock may differ.
+    use taos::sweep::{run_specs, CellSpec};
+    let scenarios = [Scenario::Bursty, Scenario::HotspotHeavyTail];
+    let mut specs = Vec::new();
+    for (si, sc) in scenarios.into_iter().enumerate() {
+        for acc in [false, true] {
+            specs.push(CellSpec {
+                cfg: scenario_cfg(sc, 4),
+                policy: SchedPolicy::Ocwf { acc },
+                setting: si as f64,
+                trial: 0,
+            });
+        }
+    }
+    let composed = run_specs(&specs, 4).unwrap();
+    for (spec, out) in specs.iter().zip(&composed) {
+        let direct = run_experiment(
+            &scenario_cfg_serial(spec),
+            spec.policy,
+        )
+        .unwrap();
+        assert_eq!(direct.jcts, out.jcts, "{}@{}", spec.policy.name(), spec.setting);
+        assert_eq!(direct.wf_evals, out.wf_evals, "{}@{}", spec.policy.name(), spec.setting);
+        assert_eq!(direct.makespan, out.makespan, "{}@{}", spec.policy.name(), spec.setting);
+    }
+}
+
+/// The serial twin of a composed spec: same experiment, reorder_threads
+/// forced back to 1.
+fn scenario_cfg_serial(spec: &taos::sweep::CellSpec) -> ExperimentConfig {
+    let mut cfg = spec.cfg.clone();
+    cfg.sim.reorder_threads = 1;
+    cfg
+}
+
+#[test]
 fn reorder_threads_zero_resolves_to_all_cores() {
     // `0` must behave like "some parallel count": still bit-identical.
     let sc = Scenario::Hotspot;

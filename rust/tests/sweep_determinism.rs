@@ -49,10 +49,10 @@ fn jct_vectors_bit_identical_serial_vs_parallel_thread_counts() {
     // Thread counts come from TAOS_TEST_THREADS (default 1,2,8) so the CI
     // matrix can pin one count per leg.
     let specs = specs();
-    let serial = sweep::run_specs(&specs, 1);
+    let serial = sweep::run_specs(&specs, 1).unwrap();
     assert_eq!(serial.len(), specs.len());
     for threads in pool::test_thread_counts() {
-        let par = sweep::run_specs(&specs, threads);
+        let par = sweep::run_specs(&specs, threads).unwrap();
         assert_eq!(par.len(), serial.len());
         for (i, (a, b)) in serial.iter().zip(&par).enumerate() {
             assert_eq!(
@@ -67,12 +67,52 @@ fn jct_vectors_bit_identical_serial_vs_parallel_thread_counts() {
 }
 
 #[test]
+fn combined_sweep_and_reorder_parallelism_bit_identical() {
+    // The admission-budget tentpole: cells that themselves fan reorder
+    // rounds out (`reorder_threads > 1`) running under a parallel sweep
+    // must produce byte-identical JCTs and wf_evals to the fully serial
+    // reference — nested fan-outs only borrow idle workers, and neither
+    // the borrowing nor the trimming may touch the schedule.
+    let reordered_specs = |reorder_threads: usize| -> Vec<CellSpec> {
+        let mut out = Vec::new();
+        for (si, scenario) in [Scenario::Alibaba, Scenario::Hotspot].into_iter().enumerate() {
+            let mut cfg = tiny_base();
+            scenario.apply(&mut cfg);
+            cfg.sim.reorder_threads = reorder_threads;
+            for acc in [false, true] {
+                out.push(CellSpec {
+                    cfg: cfg.clone(),
+                    policy: SchedPolicy::Ocwf { acc },
+                    setting: si as f64,
+                    trial: 0,
+                });
+            }
+        }
+        out
+    };
+    let serial = sweep::run_specs(&reordered_specs(1), 1).unwrap();
+    for sweep_threads in pool::test_thread_counts() {
+        for reorder_threads in [2usize, 4] {
+            let par = sweep::run_specs(&reordered_specs(reorder_threads), sweep_threads).unwrap();
+            for (i, (a, b)) in serial.iter().zip(&par).enumerate() {
+                let tag = format!(
+                    "cell {i}, sweep_threads={sweep_threads}, reorder_threads={reorder_threads}"
+                );
+                assert_eq!(a.jcts, b.jcts, "JCTs diverged: {tag}");
+                assert_eq!(a.makespan, b.makespan, "makespan diverged: {tag}");
+                assert_eq!(a.wf_evals, b.wf_evals, "wf_evals diverged: {tag}");
+            }
+        }
+    }
+}
+
+#[test]
 fn repeated_parallel_runs_identical() {
     // Parallelism must also be internally deterministic: two 8-thread
     // runs of the same specs agree with each other.
     let specs = specs();
-    let a = sweep::run_specs(&specs, 8);
-    let b = sweep::run_specs(&specs, 8);
+    let a = sweep::run_specs(&specs, 8).unwrap();
+    let b = sweep::run_specs(&specs, 8).unwrap();
     for (x, y) in a.iter().zip(&b) {
         assert_eq!(x.jcts, y.jcts);
     }
@@ -82,14 +122,16 @@ fn repeated_parallel_runs_identical() {
 fn figure_metrics_bitwise_stable_across_thread_counts() {
     let base = tiny_base();
     let alphas = [0.0, 2.0];
-    let reference = sweep::fig_alpha_util_opts(&base, 0.5, &alphas, &SweepOptions::default());
+    let reference =
+        sweep::fig_alpha_util_opts(&base, 0.5, &alphas, &SweepOptions::default()).unwrap();
     for threads in pool::test_thread_counts() {
         let fig = sweep::fig_alpha_util_opts(
             &base,
             0.5,
             &alphas,
             &SweepOptions::default().with_threads(threads),
-        );
+        )
+        .unwrap();
         assert_eq!(fig.cells.len(), reference.cells.len());
         for (a, b) in reference.cells.iter().zip(&fig.cells) {
             assert_eq!(a.policy, b.policy);
@@ -119,8 +161,8 @@ fn trials_partition_the_seed_space() {
     let base = tiny_base();
     let opts2 = SweepOptions::default().with_trials(3).with_threads(2);
     let opts8 = SweepOptions::default().with_trials(3).with_threads(8);
-    let a = sweep::fig_alpha_util_opts(&base, 0.5, &[1.0], &opts2);
-    let b = sweep::fig_alpha_util_opts(&base, 0.5, &[1.0], &opts8);
+    let a = sweep::fig_alpha_util_opts(&base, 0.5, &[1.0], &opts2).unwrap();
+    let b = sweep::fig_alpha_util_opts(&base, 0.5, &[1.0], &opts8).unwrap();
     for (x, y) in a.cells.iter().zip(&b.cells) {
         assert_eq!(x.mean_jct.to_bits(), y.mean_jct.to_bits(), "{}", x.policy);
     }
