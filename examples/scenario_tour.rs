@@ -32,7 +32,7 @@ fn main() {
 
     let threads = pool::available_threads();
     println!("running {} cells on {threads} threads\n", specs.len());
-    let outcomes = run_specs(&specs, threads);
+    let outcomes = run_specs(&specs, threads).expect("scenario cell failed");
 
     println!("{:<18} {:>10} {:>10}  note", "scenario", "wf", "ocwf-acc");
     for (i, sc) in Scenario::ALL.iter().enumerate() {

@@ -1,0 +1,134 @@
+//! DES fidelity-engine figure: the two engine presets (`straggler`,
+//! `multi-locality`) across all six algorithms, plus an analytic-vs-DES
+//! wall-clock and agreement check on the deterministic baseline.
+//!
+//! `cargo bench --bench fig_des` (paper scale) or `TAOS_BENCH_QUICK=1` /
+//! `-- --quick` for CI scale. Cells fan out across all cores
+//! (`TAOS_BENCH_THREADS=N` to override; results are bit-identical at any
+//! thread count).
+
+use taos::benchlib::TextTable;
+use taos::des::service::EngineKind;
+use taos::sched::SchedPolicy;
+use taos::sim::run_experiment;
+use taos::sweep;
+use taos::trace::scenarios::Scenario;
+use taos::util::json::Json;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("TAOS_BENCH_QUICK").is_ok();
+    let base = if quick {
+        sweep::quick_base(42)
+    } else {
+        sweep::paper_base(42)
+    };
+
+    // 1. Oracle agreement + engine wall-clock on the deterministic
+    // baseline: the DES engine must reproduce the analytic JCT vector
+    // bit for bit while we record its event-loop overhead.
+    println!("== analytic vs deterministic DES (baseline workload) ==");
+    let mut t = TextTable::new(&["policy", "analytic ms", "des ms", "agreement"]);
+    let mut rows = Vec::new();
+    for policy in SchedPolicy::ALL {
+        let t0 = std::time::Instant::now();
+        let analytic = run_experiment(&base, policy).expect("analytic run");
+        let analytic_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let mut des_cfg = base.clone();
+        des_cfg.sim.engine = EngineKind::Des;
+        let t1 = std::time::Instant::now();
+        let des = run_experiment(&des_cfg, policy).expect("des run");
+        let des_ms = t1.elapsed().as_secs_f64() * 1e3;
+        let agree = analytic.jcts == des.jcts && analytic.makespan == des.makespan;
+        assert!(agree, "{}: deterministic DES diverged from analytic", policy.name());
+        t.row(vec![
+            policy.name().into(),
+            format!("{analytic_ms:.1}"),
+            format!("{des_ms:.1}"),
+            "bit-identical".into(),
+        ]);
+        rows.push((policy.name(), analytic_ms, des_ms));
+    }
+    print!("{}", t.render());
+
+    // 2. The engine presets, as full figures with p50/p99 columns: the
+    // straggler tail must be visible in p99 long before it moves the
+    // mean, and the locality penalty must cost FIFO more than the
+    // reordering policies (which keep re-packing remaining work).
+    let opts = sweep::SweepOptions::from_env();
+    let mut preset_figs = Vec::new();
+    for scenario in [Scenario::Straggler, Scenario::MultiLocality] {
+        let mut cfg = base.clone();
+        scenario.apply(&mut cfg);
+        let t0 = std::time::Instant::now();
+        let specs: Vec<sweep::CellSpec> = SchedPolicy::ALL
+            .iter()
+            .map(|&policy| sweep::CellSpec {
+                cfg: cfg.clone(),
+                policy,
+                setting: 0.0,
+                trial: 0,
+            })
+            .collect();
+        let outcomes =
+            sweep::run_specs(&specs, opts.effective_threads()).expect("preset sweep");
+        println!(
+            "\n== {} preset ({:.1}s, {} threads) ==",
+            scenario.name(),
+            t0.elapsed().as_secs_f64(),
+            opts.effective_threads()
+        );
+        let mut tp = TextTable::new(&["policy", "mean JCT", "p50", "p99", "max"]);
+        let mut cells = Vec::new();
+        for (spec, out) in specs.iter().zip(&outcomes) {
+            let s = out.jct_stats();
+            tp.row(vec![
+                spec.policy.name().into(),
+                format!("{:.0}", s.mean),
+                format!("{:.0}", s.p50),
+                format!("{:.0}", s.p99),
+                format!("{:.0}", s.max),
+            ]);
+            cells.push((spec.policy.name(), s));
+        }
+        print!("{}", tp.render());
+        preset_figs.push((scenario.name(), cells));
+    }
+
+    // JSON artifact next to the other figure benches.
+    std::fs::create_dir_all("bench_results").ok();
+    let json = Json::obj(vec![
+        (
+            "engine_overhead",
+            Json::arr(rows.iter().map(|(name, a, d)| {
+                Json::obj(vec![
+                    ("policy", Json::str(*name)),
+                    ("analytic_ms", Json::num(*a)),
+                    ("des_ms", Json::num(*d)),
+                ])
+            })),
+        ),
+        (
+            "presets",
+            Json::arr(preset_figs.iter().map(|(name, cells)| {
+                Json::obj(vec![
+                    ("scenario", Json::str(*name)),
+                    (
+                        "cells",
+                        Json::arr(cells.iter().map(|(policy, s)| {
+                            Json::obj(vec![
+                                ("policy", Json::str(*policy)),
+                                ("mean_jct", Json::num(s.mean)),
+                                ("p50_jct", Json::num(s.p50)),
+                                ("p99_jct", Json::num(s.p99)),
+                                ("max_jct", Json::num(s.max)),
+                            ])
+                        })),
+                    ),
+                ])
+            })),
+        ),
+    ]);
+    std::fs::write("bench_results/fig_des.json", json.to_string()).expect("write json");
+    println!("\nwrote bench_results/fig_des.json");
+}

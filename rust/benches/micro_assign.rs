@@ -100,6 +100,46 @@ fn main() {
         }
     }
 
+    // Substrate: the DES engine's pooled event core — a full
+    // push-then-drain cycle at two depths (the steady-state shape: all
+    // arrivals resident plus one completion per server), and a mixed
+    // interleaved load. The heap reuses its backing storage, so the
+    // steady-state cycle is allocation-free.
+    {
+        use taos::des::heap::{EventHeap, EventKind};
+        let mut heap = EventHeap::new();
+        for depth in [64usize, 1024] {
+            bench.run(&format!("substrate/des_event_heap@cycle{depth}"), || {
+                for i in 0..depth as u64 {
+                    heap.push((i * 37) % 257, EventKind::Complete {
+                        server: (i % 16) as usize,
+                        token: i,
+                    });
+                }
+                let mut last = 0;
+                while let Some(e) = heap.pop() {
+                    last = e.time;
+                }
+                black_box(last)
+            });
+        }
+        bench.run("substrate/des_event_heap@interleaved256", || {
+            let mut popped = 0u64;
+            for i in 0..256u64 {
+                heap.push((i * 13) % 97, EventKind::Arrival { job: i as usize });
+                if i % 2 == 1 {
+                    if let Some(e) = heap.pop() {
+                        popped += e.time;
+                    }
+                }
+            }
+            while let Some(e) = heap.pop() {
+                popped += e.time;
+            }
+            black_box(popped)
+        });
+    }
+
     // Scheduler: one OCWF-ACC reorder round over 12 outstanding jobs.
     {
         let jobs: Vec<taos::job::Job> = (0..12)

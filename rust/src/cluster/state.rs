@@ -138,6 +138,45 @@ impl JobProgress {
     pub fn all_complete(&self) -> bool {
         self.completion.iter().all(|c| c.is_some())
     }
+
+    /// Number of jobs without a recorded completion (horizon-error
+    /// reporting).
+    pub fn unfinished(&self) -> usize {
+        self.completion.iter().filter(|c| c.is_none()).count()
+    }
+
+    /// Assemble the per-job JCT vector (`completion − arrival`, in job
+    /// order) and the makespan. One definition shared by the analytic
+    /// reordered engine and the DES engine, so the outcome derivation —
+    /// part of their bit-equivalence contract — cannot silently diverge.
+    /// Panics unless [`JobProgress::all_complete`].
+    pub fn jcts_and_makespan(&self, jobs: &[Job]) -> (Vec<Slots>, Slots) {
+        let jcts: Vec<Slots> = jobs
+            .iter()
+            .zip(&self.completion)
+            .map(|(j, c)| c.expect("job must be complete") - j.arrival)
+            .collect();
+        let makespan = self
+            .completion
+            .iter()
+            .map(|c| c.unwrap())
+            .max()
+            .unwrap_or(0);
+        (jcts, makespan)
+    }
+}
+
+/// A destination for grouped queue entries: anything that can recycle a
+/// parts buffer and accept one `(server, job, parts)` entry. Implemented
+/// by [`ServerQueues`] (the analytic reordered engine) and by the DES
+/// engine's run queues ([`crate::des`]), so both engines share the pooled
+/// [`QueueRebuild`] grouping path instead of duplicating it.
+pub trait EntrySink {
+    /// Take a cleared parts buffer from the sink's recycle pool (fresh
+    /// when the pool is empty).
+    fn take_parts(&mut self) -> Vec<(usize, TaskCount)>;
+    /// Append one grouped entry to `server`'s queue.
+    fn push_entry(&mut self, server: ServerId, job: usize, parts: Vec<(usize, TaskCount)>);
 }
 
 /// Per-server FIFO queues of [`QueueEntry`]s with analytic draining —
@@ -257,6 +296,16 @@ impl ServerQueues {
     }
 }
 
+impl EntrySink for ServerQueues {
+    fn take_parts(&mut self) -> Vec<(usize, TaskCount)> {
+        self.spare.pop().unwrap_or_default()
+    }
+
+    fn push_entry(&mut self, server: ServerId, job: usize, parts: Vec<(usize, TaskCount)>) {
+        self.push(server, QueueEntry { job, parts });
+    }
+}
+
 /// Pooled grouping workspace for the reordered engine's per-arrival queue
 /// rebuild.
 ///
@@ -302,12 +351,14 @@ impl QueueRebuild {
     }
 
     /// Group one job's per-group allocation by server and append the
-    /// resulting entries to `queues`, recycling pooled buffers on both
-    /// sides. `per_group[k]` lists `(server, tasks)` as produced by the
-    /// assigners ([`crate::assign::Assignment::per_group`]).
-    pub fn push_grouped(
+    /// resulting entries to `sink` (a [`ServerQueues`] in the analytic
+    /// reordered engine, the DES run queues in [`crate::des`]), recycling
+    /// pooled buffers on both sides. `per_group[k]` lists `(server,
+    /// tasks)` as produced by the assigners
+    /// ([`crate::assign::Assignment::per_group`]).
+    pub fn push_grouped<S: EntrySink>(
         &mut self,
-        queues: &mut ServerQueues,
+        sink: &mut S,
         job: usize,
         per_group: &[Vec<(ServerId, TaskCount)>],
     ) {
@@ -327,10 +378,10 @@ impl QueueRebuild {
         }
         for &m in touched.iter() {
             *max_parts = (*max_parts).max(rows[m].len());
-            let mut parts = queues.take_parts();
+            let mut parts = sink.take_parts();
             parts.reserve(*max_parts);
             parts.extend_from_slice(&rows[m]);
-            queues.push(m, QueueEntry { job, parts });
+            sink.push_entry(m, job, parts);
             rows[m].clear();
         }
         touched.clear();

@@ -3,6 +3,7 @@
 //! subset) so experiments are scriptable without `serde`/`toml`.
 
 use crate::cluster::placement::PlacementMode;
+use crate::des::service::{EngineKind, ServiceModel};
 use crate::trace::scenarios::Scenario;
 use crate::{Error, Result};
 
@@ -102,6 +103,25 @@ pub struct SimConfig {
     /// depth). Like `reorder_threads`, a pure wall-clock knob: schedules
     /// are bit-identical at any value.
     pub acc_spec_chunk: usize,
+    /// Which engine replays the trace: the analytic busy-time recursion
+    /// (default) or the discrete-event engine (`crate::des`). With
+    /// deterministic service and no engine-only mechanisms the two are
+    /// bit-identical (`rust/tests/des_equivalence.rs`).
+    pub engine: EngineKind,
+    /// DES-only service-time model (`det` | `exp:MEAN` |
+    /// `pareto:ALPHA:CAP`). Non-deterministic models require `engine =
+    /// des`.
+    pub service: ServiceModel,
+    /// DES-only multi-level locality: when > 1, every server may run
+    /// every task, but tasks executed outside their group's data-local
+    /// server set run at rate `μ/penalty`. `1.0` disables the mechanism;
+    /// values > 1 require `engine = des`.
+    pub locality_penalty: f64,
+    /// DES-only straggler speculation threshold (0 = off): an entry whose
+    /// sampled duration reaches `speculate ×` its deterministic estimate
+    /// launches one racing replica; the first completion cancels the
+    /// sibling. Values > 0 require `engine = des`.
+    pub speculate: f64,
 }
 
 impl Default for SimConfig {
@@ -111,6 +131,10 @@ impl Default for SimConfig {
             record_jct: true,
             reorder_threads: 1,
             acc_spec_chunk: 0,
+            engine: EngineKind::Analytic,
+            service: ServiceModel::Deterministic,
+            locality_penalty: 1.0,
+            speculate: 0.0,
         }
     }
 }
@@ -156,6 +180,29 @@ impl ExperimentConfig {
         }
         if t.mean_groups < 1.0 {
             return Err(Error::Config("mean_groups must be >= 1".into()));
+        }
+        let s = &self.sim;
+        s.service.validate().map_err(Error::Config)?;
+        if !(s.locality_penalty.is_finite() && (1.0..=1000.0).contains(&s.locality_penalty)) {
+            return Err(Error::Config(format!(
+                "locality_penalty must be in [1, 1000], got {}",
+                s.locality_penalty
+            )));
+        }
+        if !(s.speculate.is_finite() && (s.speculate == 0.0 || s.speculate >= 1.0)) {
+            return Err(Error::Config(format!(
+                "speculate must be 0 (off) or >= 1, got {}",
+                s.speculate
+            )));
+        }
+        if s.engine == EngineKind::Analytic
+            && (!s.service.is_deterministic() || s.locality_penalty > 1.0 || s.speculate > 0.0)
+        {
+            return Err(Error::Config(
+                "service models, locality_penalty > 1 and speculate > 0 are \
+                 engine-only mechanisms: set engine = des (--engine des)"
+                    .into(),
+            ));
         }
         Ok(())
     }
@@ -213,6 +260,19 @@ impl ExperimentConfig {
                 "acc_spec_chunk" => {
                     cfg.sim.acc_spec_chunk = val.parse().map_err(|_| perr("bad usize"))?
                 }
+                "engine" => {
+                    cfg.sim.engine = EngineKind::parse(val)
+                        .ok_or_else(|| perr("engine must be `analytic` or `des`"))?
+                }
+                "service" => {
+                    cfg.sim.service = ServiceModel::parse(val).ok_or_else(|| {
+                        perr("service must be `det`, `exp:MEAN` or `pareto:ALPHA:CAP`")
+                    })?
+                }
+                "locality_penalty" => {
+                    cfg.sim.locality_penalty = val.parse().map_err(|_| perr("bad f64"))?
+                }
+                "speculate" => cfg.sim.speculate = val.parse().map_err(|_| perr("bad f64"))?,
                 "seed" => cfg.seed = val.parse().map_err(|_| perr("bad u64"))?,
                 other => {
                     return Err(Error::TraceParse {
@@ -361,6 +421,53 @@ mod tests {
         assert!(ExperimentConfig::from_str("scenario = bogus").is_err());
         assert!(ExperimentConfig::from_str("placement = bogus").is_err());
         assert!(ExperimentConfig::from_str("mu_skew = 99").is_err());
+    }
+
+    #[test]
+    fn parses_des_engine_keys() {
+        use crate::des::service::{EngineKind, ServiceModel};
+        let cfg = ExperimentConfig::from_str(
+            "engine = des\nservice = pareto:1.5:20\nspeculate = 2.0\nlocality_penalty = 2.5",
+        )
+        .unwrap();
+        assert_eq!(cfg.sim.engine, EngineKind::Des);
+        assert_eq!(
+            cfg.sim.service,
+            ServiceModel::ParetoTail {
+                alpha: 1.5,
+                cap: 20.0
+            }
+        );
+        assert_eq!(cfg.sim.speculate, 2.0);
+        assert_eq!(cfg.sim.locality_penalty, 2.5);
+
+        let cfg = ExperimentConfig::from_str("engine = des\nservice = exp:1.25").unwrap();
+        assert_eq!(cfg.sim.service, ServiceModel::Exp { mean: 1.25 });
+
+        // Defaults stay analytic/deterministic/off.
+        let d = SimConfig::default();
+        assert_eq!(d.engine, EngineKind::Analytic);
+        assert!(d.service.is_deterministic());
+        assert_eq!(d.locality_penalty, 1.0);
+        assert_eq!(d.speculate, 0.0);
+
+        assert!(ExperimentConfig::from_str("engine = warp").is_err());
+        assert!(ExperimentConfig::from_str("service = weibull:2").is_err());
+    }
+
+    #[test]
+    fn engine_only_knobs_require_des() {
+        // A stochastic service model, a locality penalty or speculation
+        // without engine = des cannot be honored and must be rejected.
+        assert!(ExperimentConfig::from_str("service = exp:1.0").is_err());
+        assert!(ExperimentConfig::from_str("locality_penalty = 2.0").is_err());
+        assert!(ExperimentConfig::from_str("speculate = 2.0").is_err());
+        assert!(ExperimentConfig::from_str("engine = des\nservice = exp:1.0").is_ok());
+        // Parameter ranges.
+        assert!(ExperimentConfig::from_str("engine = des\nlocality_penalty = 0.5").is_err());
+        assert!(ExperimentConfig::from_str("engine = des\nspeculate = 0.5").is_err());
+        assert!(ExperimentConfig::from_str("engine = des\nservice = exp:0").is_err());
+        assert!(ExperimentConfig::from_str("engine = des\nservice = pareto:1.5:0.5").is_err());
     }
 
     #[test]

@@ -1,0 +1,274 @@
+//! The pooled binary-heap event core of the DES engine.
+//!
+//! A hand-rolled min-heap on a plain `Vec` so the backing storage is
+//! reusable across runs: [`EventHeap::clear`] keeps the capacity, and the
+//! steady-state push/pop cycle of a warmed engine touches the allocator
+//! zero times (the heap's high-water mark is part of
+//! [`crate::des::DesRun::pool_footprint`], frozen by
+//! `rust/tests/alloc_stability.rs`).
+//!
+//! ## Total event order
+//!
+//! Events are ordered by the key `(time, class, lane, seq)`:
+//!
+//! - `time` — the slot the event fires at;
+//! - `class` — completions (`0`) strictly before arrivals (`1`) at the
+//!   same slot. This mirrors the analytic engines: a queue entry whose
+//!   finish coincides with an arrival is fully drained *before* the
+//!   arrival is scheduled against the cluster state (the reordered
+//!   engine's `ServerQueues::drain(from, to)` retires entries finishing
+//!   exactly at `to`);
+//! - `lane` — the server of a completion or the job index of an arrival;
+//! - `seq` — a monotone push counter.
+//!
+//! The key is a *total* order over every event ever pushed, so a run's
+//! event sequence — and with it every downstream decision and RNG draw —
+//! is bit-reproducible regardless of heap internals.
+
+use crate::job::{ServerId, Slots};
+
+/// What happens when an event fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// The entry in service at `server` finishes. `token` must equal the
+    /// server's current token; a stale token means the entry was
+    /// preempted (reorder) or cancelled (lost a replica race) and the
+    /// event is ignored.
+    Complete { server: ServerId, token: u64 },
+    /// Job `job` (index into the run's job slice) arrives.
+    Arrival { job: usize },
+}
+
+/// One scheduled event.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub time: Slots,
+    pub kind: EventKind,
+    seq: u64,
+}
+
+impl Event {
+    #[inline]
+    fn key(&self) -> (Slots, u8, u64, u64) {
+        let (class, lane) = match self.kind {
+            EventKind::Complete { server, .. } => (0u8, server as u64),
+            EventKind::Arrival { job } => (1u8, job as u64),
+        };
+        (self.time, class, lane, self.seq)
+    }
+}
+
+/// A pooled min-heap of [`Event`]s.
+#[derive(Clone, Debug, Default)]
+pub struct EventHeap {
+    items: Vec<Event>,
+    seq: u64,
+}
+
+impl EventHeap {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Drop every pending event, keeping the backing allocation.
+    pub fn clear(&mut self) {
+        self.items.clear();
+    }
+
+    /// Schedule an event. Push order is the stability tie-break: two
+    /// events with equal `(time, class, lane)` fire in push order.
+    pub fn push(&mut self, time: Slots, kind: EventKind) {
+        let ev = Event {
+            time,
+            kind,
+            seq: self.seq,
+        };
+        self.seq += 1;
+        self.items.push(ev);
+        self.sift_up(self.items.len() - 1);
+    }
+
+    /// The next event without removing it.
+    pub fn peek(&self) -> Option<&Event> {
+        self.items.first()
+    }
+
+    /// Remove and return the next event in `(time, class, lane, seq)`
+    /// order.
+    pub fn pop(&mut self) -> Option<Event> {
+        if self.items.is_empty() {
+            return None;
+        }
+        let last = self.items.len() - 1;
+        self.items.swap(0, last);
+        let ev = self.items.pop();
+        if !self.items.is_empty() {
+            self.sift_down(0);
+        }
+        ev
+    }
+
+    /// Reserved capacity of the backing storage (allocation-stability
+    /// tests).
+    pub fn footprint(&self) -> usize {
+        self.items.capacity()
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.items[i].key() < self.items[parent].key() {
+                self.items.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.items.len();
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut smallest = i;
+            if l < n && self.items[l].key() < self.items[smallest].key() {
+                smallest = l;
+            }
+            if r < n && self.items[r].key() < self.items[smallest].key() {
+                smallest = r;
+            }
+            if smallest == i {
+                return;
+            }
+            self.items.swap(i, smallest);
+            i = smallest;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut h = EventHeap::new();
+        for &t in &[9u64, 3, 7, 1, 8, 2] {
+            h.push(t, EventKind::Arrival { job: t as usize });
+        }
+        let mut times = Vec::new();
+        while let Some(e) = h.pop() {
+            times.push(e.time);
+        }
+        assert_eq!(times, vec![1, 2, 3, 7, 8, 9]);
+    }
+
+    #[test]
+    fn completions_fire_before_arrivals_at_the_same_slot() {
+        let mut h = EventHeap::new();
+        h.push(5, EventKind::Arrival { job: 0 });
+        h.push(
+            5,
+            EventKind::Complete {
+                server: 3,
+                token: 0,
+            },
+        );
+        let first = h.pop().unwrap();
+        assert!(matches!(first.kind, EventKind::Complete { server: 3, .. }));
+        let second = h.pop().unwrap();
+        assert!(matches!(second.kind, EventKind::Arrival { job: 0 }));
+    }
+
+    #[test]
+    fn same_key_events_are_stable_by_push_order() {
+        // Arrivals for distinct jobs at the same slot order by lane (job
+        // index), and re-pushes of the same lane order by seq.
+        let mut h = EventHeap::new();
+        h.push(2, EventKind::Arrival { job: 4 });
+        h.push(2, EventKind::Arrival { job: 1 });
+        h.push(2, EventKind::Arrival { job: 4 });
+        let picked: Vec<usize> = (0..3)
+            .map(|_| match h.pop().unwrap().kind {
+                EventKind::Arrival { job } => job,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(picked, vec![1, 4, 4]);
+
+        // Completions on the same server at the same slot: push order.
+        let mut h = EventHeap::new();
+        for token in [7u64, 8, 9] {
+            h.push(1, EventKind::Complete { server: 0, token });
+        }
+        let tokens: Vec<u64> = (0..3)
+            .map(|_| match h.pop().unwrap().kind {
+                EventKind::Complete { token, .. } => token,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(tokens, vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn clear_keeps_capacity() {
+        let mut h = EventHeap::new();
+        for t in 0..64u64 {
+            h.push(t, EventKind::Arrival { job: t as usize });
+        }
+        let cap = h.footprint();
+        assert!(cap >= 64);
+        h.clear();
+        assert!(h.is_empty());
+        assert_eq!(h.footprint(), cap);
+        // Refilling to the same depth must not move the capacity.
+        for t in 0..64u64 {
+            h.push(t, EventKind::Arrival { job: t as usize });
+        }
+        assert_eq!(h.footprint(), cap);
+    }
+
+    #[test]
+    fn randomized_heap_matches_sorted_reference() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from(0xDE5);
+        let mut h = EventHeap::new();
+        let mut reference: Vec<(u64, u8, u64, u64)> = Vec::new();
+        for seq in 0..500u64 {
+            let t = rng.gen_range(50);
+            if rng.gen_range(2) == 0 {
+                let server = rng.gen_range(8) as usize;
+                h.push(
+                    t,
+                    EventKind::Complete {
+                        server,
+                        token: seq,
+                    },
+                );
+                reference.push((t, 0, server as u64, seq));
+            } else {
+                let job = rng.gen_range(20) as usize;
+                h.push(t, EventKind::Arrival { job });
+                reference.push((t, 1, job as u64, seq));
+            }
+        }
+        reference.sort();
+        for want in reference {
+            let got = h.pop().unwrap();
+            let (t, class, lane) = match got.kind {
+                EventKind::Complete { server, .. } => (got.time, 0u8, server as u64),
+                EventKind::Arrival { job } => (got.time, 1u8, job as u64),
+            };
+            assert_eq!((t, class, lane), (want.0, want.1, want.2));
+        }
+        assert!(h.pop().is_none());
+    }
+}

@@ -1,0 +1,1000 @@
+//! The discrete-event fidelity engine.
+//!
+//! Every analytic engine in [`crate::sim`] evaluates the paper's
+//! deterministic busy-time recursion (eq. 2) at arrival instants, which
+//! restricts the scenario catalog to workloads where task durations are
+//! exact and nothing happens between arrivals. This engine replays the
+//! same traces through a genuine event loop — a pooled binary-heap event
+//! core ([`heap::EventHeap`]), per-server run queues layered on
+//! [`crate::cluster::state`], and the same `materialize_jobs` /
+//! [`crate::assign::Assigner`] / OCWF pipeline as the analytic engines —
+//! which unlocks three mechanism axes the analytic model cannot express:
+//!
+//! - **Stochastic service** ([`service::ServiceModel`]): entry durations
+//!   are `max(1, round(base × X))` where `base` is the analytic
+//!   `ceil(n/μ)` figure and `X` a sampled slowdown factor (exponential
+//!   noise or a capped Pareto straggler tail).
+//! - **Straggler speculation** (`SimConfig::speculate`): in the spirit of
+//!   Wang–Joshi–Wornell's task-replication analysis, an entry whose
+//!   sampled duration reaches `speculate ×` its deterministic estimate
+//!   launches one racing replica on the least-loaded other server every
+//!   task of the entry could run on (the replicas RD would have deleted
+//!   actually race); the first completion applies the progress and
+//!   cancels its sibling — a running loser frees its server immediately,
+//!   a queued loser is removed from its queue.
+//! - **Multi-level locality** (`SimConfig::locality_penalty`): per
+//!   Yekkehkhany's near-data model, every server can run every task, but
+//!   a task executed outside its group's data-local server set runs at
+//!   rate `μ/penalty`. The engine hands the assigners *expanded* server
+//!   sets (they place freely; they are penalty-oblivious, exactly the
+//!   tension near-data scheduling studies) and charges the remote rate at
+//!   execution time.
+//!
+//! ## The deterministic mode is a hard invariant
+//!
+//! With [`service::ServiceModel::Deterministic`] and both engine-only
+//! mechanisms off, this engine reproduces the analytic engines' JCT
+//! vectors **bit for bit** — FIFO and reordered policies alike, on every
+//! scenario preset (`rust/tests/des_equivalence.rs`). That makes the DES
+//! engine an independent differential oracle for the analytic engines:
+//! the two implementations share the assignment/reorder layers but arrive
+//! at completion times through entirely different machinery (event
+//! cascade vs. closed-form drain).
+//!
+//! Determinism in the stochastic modes: the event order is a total order
+//! (`(time, class, lane, seq)`, see [`heap`]), service-noise draws happen
+//! in event order from a dedicated RNG stream, and the reorder fan-out is
+//! bit-identical at any thread count — so one seed yields byte-identical
+//! JCT vectors across runs and thread counts.
+//!
+//! ## Allocation discipline
+//!
+//! All steady-state state is pooled: the event heap keeps its backing
+//! storage, run-queue entries recycle their parts buffers through a spare
+//! pool (the [`EntrySink`] side of the shared [`QueueRebuild`] grouping
+//! path), replica pairs live in a slab with a free list, and the reorder
+//! workspace/outcome/outstanding-set pools are the same ones the analytic
+//! engine uses. After warmup, event processing performs **zero heap
+//! allocations** ([`DesRun::pool_footprint`] freeze asserted by
+//! `rust/tests/alloc_stability.rs`).
+
+pub mod heap;
+pub mod service;
+
+use crate::assign::{validate_assignment, Assigner};
+use crate::cluster::state::{ClusterState, EntrySink, JobProgress, QueueRebuild};
+use crate::config::SimConfig;
+use crate::job::{Job, ServerId, Slots, TaskCount, TaskGroup};
+use crate::sched::ocwf::{reorder_into, OutstandingSet, ReorderOutcome, ReorderWorkspace};
+use crate::sched::SchedPolicy;
+use crate::sim::SimOutcome;
+use crate::util::ceil_div;
+use crate::util::rng::Rng;
+use crate::util::timer::OverheadMeter;
+use heap::{EventHeap, EventKind};
+use std::collections::VecDeque;
+
+/// One run-queue entry: the tasks of one job assigned to one server,
+/// split by task group — the DES twin of
+/// [`crate::cluster::state::QueueEntry`], extended with the deterministic
+/// duration estimate and replica-racing metadata.
+#[derive(Clone, Debug)]
+struct DesEntry {
+    job: usize,
+    parts: Vec<(usize, TaskCount)>,
+    /// Deterministic duration estimate in slots (`ceil(n/μ)`, with the
+    /// locality penalty folded in for remote parts).
+    base: Slots,
+    /// Replica-race pair this entry belongs to, if any.
+    pair: Option<u32>,
+    /// True for the speculative copy (replicas never re-replicate and
+    /// contribute no partial progress at a reorder preemption).
+    replica: bool,
+}
+
+/// The entry a server is currently processing.
+#[derive(Clone, Debug)]
+struct Running {
+    entry: DesEntry,
+    start: Slots,
+    /// Sampled duration (slots); equals `entry.base` in deterministic
+    /// mode.
+    dur: Slots,
+}
+
+/// One server's run queue + in-service state.
+#[derive(Clone, Debug, Default)]
+struct Lane {
+    queue: VecDeque<DesEntry>,
+    running: Option<Running>,
+    /// Staleness guard for pending completion events: bumped on every
+    /// preemption/cancellation, checked when a completion fires.
+    token: u64,
+}
+
+/// A replica race: primary and speculative copy of one entry. Resolved
+/// pairs are freed immediately (both members are retired eagerly), so any
+/// entry holding a pair id references a live, pending pair.
+#[derive(Clone, Copy, Debug)]
+struct Pair {
+    done: bool,
+    primary_server: ServerId,
+    replica_server: ServerId,
+}
+
+/// Deterministic duration estimate of a parts batch on `server`:
+/// `ceil(total/μ)`, or — when multi-level locality is active (`local`
+/// carries the original data-local server sets) — `ceil(work/μ)` where
+/// remote tasks count `penalty ×` their size.
+fn entry_base(
+    jobs: &[Job],
+    local: Option<&[Job]>,
+    penalty: f64,
+    job: usize,
+    parts: &[(usize, TaskCount)],
+    server: ServerId,
+) -> Slots {
+    let mu = jobs[job].mu[server];
+    match local {
+        None => ceil_div(parts.iter().map(|&(_, n)| n).sum(), mu),
+        Some(orig) => {
+            let mut work = 0.0f64;
+            for &(k, n) in parts {
+                let is_local = orig[job].groups[k].servers.binary_search(&server).is_ok();
+                work += n as f64 * if is_local { 1.0 } else { penalty };
+            }
+            // The epsilon absorbs float dust from an inexact penalty
+            // (10 × 1.1 / 11 computes as 1.0000000000000002 and must
+            // not ceil to 2); penalties are user knobs with far coarser
+            // precision than 1e-9.
+            ((work / mu as f64 - 1e-9).ceil() as Slots).max(1)
+        }
+    }
+}
+
+/// The [`EntrySink`] the shared [`QueueRebuild`] grouping path writes
+/// into: freshly grouped entries land at the tail of the target lane with
+/// their deterministic duration estimate computed and the server's
+/// queue-empty estimate advanced.
+struct LaneSink<'s, 'a> {
+    lanes: &'s mut [Lane],
+    spare: &'s mut Vec<Vec<(usize, TaskCount)>>,
+    jobs: &'a [Job],
+    local: Option<&'a [Job]>,
+    penalty: f64,
+    free_est: &'s mut [Slots],
+    now: Slots,
+}
+
+impl EntrySink for LaneSink<'_, '_> {
+    fn take_parts(&mut self) -> Vec<(usize, TaskCount)> {
+        self.spare.pop().unwrap_or_default()
+    }
+
+    fn push_entry(&mut self, server: ServerId, job: usize, parts: Vec<(usize, TaskCount)>) {
+        let base = entry_base(self.jobs, self.local, self.penalty, job, &parts, server);
+        self.free_est[server] = self.free_est[server].max(self.now) + base;
+        self.lanes[server].queue.push_back(DesEntry {
+            job,
+            parts,
+            base,
+            pair: None,
+            replica: false,
+        });
+    }
+}
+
+/// The discrete-event engine, driving one trace through one policy.
+///
+/// Use [`run_des`] (or [`crate::sim::run_policy`] with `SimConfig.engine
+/// = des`) for a one-shot run; the struct itself is public so tests can
+/// pump events one at a time and probe [`DesRun::pool_footprint`].
+pub struct DesRun<'a> {
+    /// The assignment view of the jobs: the caller's slice, or the
+    /// expanded-server-set clone when multi-level locality is active.
+    jobs: &'a [Job],
+    /// Original data-local server sets (`Some` iff the locality penalty
+    /// is active; `jobs` then carries the expanded sets).
+    local: Option<&'a [Job]>,
+    num_servers: usize,
+    policy: SchedPolicy,
+    cfg: &'a SimConfig,
+    heap: EventHeap,
+    servers: Vec<Lane>,
+    /// Recycled entry parts buffers (the engine-side spare pool).
+    spare: Vec<Vec<(usize, TaskCount)>>,
+    pairs: Vec<Pair>,
+    pair_free: Vec<u32>,
+    progress: JobProgress,
+    rebuild: QueueRebuild,
+    oset: OutstandingSet<'a>,
+    ws: ReorderWorkspace,
+    outcome: ReorderOutcome,
+    state: ClusterState,
+    /// Per-server queue-empty estimate (deterministic durations): the
+    /// FIFO assigners' busy-time view and the replica-target ranking.
+    free_est: Vec<Slots>,
+    assigner: Option<Box<dyn Assigner>>,
+    service_rng: Rng,
+    overhead: OverheadMeter,
+    wf_evals: u64,
+    arrival_idx: usize,
+    now: Slots,
+}
+
+impl<'a> DesRun<'a> {
+    pub fn new(
+        jobs: &'a [Job],
+        num_servers: usize,
+        policy: SchedPolicy,
+        cfg: &'a SimConfig,
+        seed: u64,
+    ) -> Self {
+        Self::with_locality_sets(jobs, None, num_servers, policy, cfg, seed)
+    }
+
+    fn with_locality_sets(
+        jobs: &'a [Job],
+        local: Option<&'a [Job]>,
+        num_servers: usize,
+        policy: SchedPolicy,
+        cfg: &'a SimConfig,
+        seed: u64,
+    ) -> Self {
+        debug_assert!(
+            jobs.iter().enumerate().all(|(i, j)| j.id == i),
+            "DesRun requires job ids to equal their slice positions"
+        );
+        // Same precondition as ReorderedRun (and what materialize_jobs
+        // produces): chronological job order. The arrival-staleness check
+        // in `pump` classifies events below `arrival_idx` as absorbed by
+        // an earlier batch, which is only sound for sorted arrivals.
+        debug_assert!(
+            jobs.windows(2).all(|w| w[0].arrival <= w[1].arrival),
+            "DesRun requires jobs sorted by arrival slot"
+        );
+        let assigner = match policy {
+            SchedPolicy::Fifo(p) => Some(p.build(seed)),
+            SchedPolicy::Ocwf { .. } => None,
+        };
+        let mut ws = ReorderWorkspace::default();
+        ws.set_spec_chunk(cfg.acc_spec_chunk);
+        let mut run = DesRun {
+            jobs,
+            local,
+            num_servers,
+            policy,
+            cfg,
+            heap: EventHeap::new(),
+            servers: vec![Lane::default(); num_servers],
+            spare: Vec::new(),
+            pairs: Vec::new(),
+            pair_free: Vec::new(),
+            progress: JobProgress::new(jobs),
+            rebuild: QueueRebuild::new(num_servers),
+            oset: OutstandingSet::new(),
+            ws,
+            outcome: ReorderOutcome::default(),
+            state: ClusterState::new(num_servers),
+            free_est: vec![0; num_servers],
+            assigner,
+            service_rng: Rng::seed_from(seed).fork(0xDE5),
+            overhead: OverheadMeter::new(),
+            wf_evals: 0,
+            arrival_idx: 0,
+            now: 0,
+        };
+        for (i, job) in jobs.iter().enumerate() {
+            debug_assert!(job.mu.len() == num_servers);
+            run.heap.push(job.arrival, EventKind::Arrival { job: i });
+        }
+        run
+    }
+
+    /// Current simulation time (last processed event).
+    pub fn now(&self) -> Slots {
+        self.now
+    }
+
+    /// Process one event. Returns `Ok(false)` once the heap is drained,
+    /// [`crate::Error::Sim`] when a *live* event lies beyond
+    /// `cfg.max_slots`.
+    pub fn pump(&mut self) -> crate::Result<bool> {
+        let Some(ev) = self.heap.pop() else {
+            return Ok(false);
+        };
+        // Staleness before the horizon check: a preempted or cancelled
+        // entry's completion event may lie far past `max_slots` even
+        // though the live schedule finishes well within it (the analytic
+        // engines only error when real work crosses the horizon).
+        let live = match ev.kind {
+            EventKind::Complete { server, token } => token == self.servers[server].token,
+            EventKind::Arrival { job } => job >= self.arrival_idx,
+        };
+        if !live {
+            return Ok(!self.heap.is_empty());
+        }
+        if ev.time > self.cfg.max_slots {
+            return Err(crate::Error::Sim(format!(
+                "des/{} run exceeded max_slots = {}: event at slot {} \
+                 ({} jobs, {} servers, service {}, speculate {}, \
+                 locality_penalty {}); utilization config too hot",
+                self.policy.name(),
+                self.cfg.max_slots,
+                ev.time,
+                self.jobs.len(),
+                self.num_servers,
+                self.cfg.service.describe(),
+                self.cfg.speculate,
+                self.cfg.locality_penalty
+            )));
+        }
+        debug_assert!(ev.time >= self.now);
+        self.now = ev.time;
+        match ev.kind {
+            EventKind::Complete { server, token } => self.on_complete(server, token),
+            EventKind::Arrival { job } => match self.policy {
+                SchedPolicy::Fifo(_) => self.admit_fifo(job),
+                SchedPolicy::Ocwf { acc } => self.admit_reorder_batch(job, acc),
+            },
+        }
+        Ok(!self.heap.is_empty())
+    }
+
+    /// Drain every event and produce the outcome.
+    pub fn finish(mut self) -> crate::Result<SimOutcome> {
+        while self.pump()? {}
+        if !self.progress.all_complete() {
+            return Err(crate::Error::Sim(format!(
+                "des/{} run drained its event heap with {} of {} jobs \
+                 unfinished ({} servers)",
+                self.policy.name(),
+                self.progress.unfinished(),
+                self.jobs.len(),
+                self.num_servers
+            )));
+        }
+        let (jcts, makespan) = self.progress.jcts_and_makespan(self.jobs);
+        Ok(SimOutcome {
+            jcts,
+            overhead: self.overhead,
+            makespan,
+            wf_evals: self.wf_evals,
+            oracle_stats: self.assigner.as_ref().and_then(|a| a.oracle_stats()),
+        })
+    }
+
+    /// Reserved capacity across every pooled buffer of the event path:
+    /// the heap, lane queues (live entries + spare parts pool), the pair
+    /// slab, the rebuild rows, and the reorder pools shared with the
+    /// analytic engine (allocation-stability tests).
+    pub fn pool_footprint(&self) -> usize {
+        let lanes: usize = self
+            .servers
+            .iter()
+            .map(|l| {
+                l.queue.capacity()
+                    + l.queue.iter().map(|e| e.parts.capacity()).sum::<usize>()
+                    + l.running.as_ref().map_or(0, |r| r.entry.parts.capacity())
+            })
+            .sum();
+        self.heap.footprint()
+            + self.servers.capacity()
+            + lanes
+            + self.spare.capacity()
+            + self.spare.iter().map(|v| v.capacity()).sum::<usize>()
+            + self.pairs.capacity()
+            + self.pair_free.capacity()
+            + self.rebuild.footprint()
+            + self.oset.footprint()
+            + self.ws.footprint()
+            + self.outcome.footprint()
+            + self.state.footprint()
+            + self.free_est.capacity()
+    }
+
+    /// FIFO admission: assign the arriving job once against the current
+    /// queue-empty estimates (the exact cluster view the analytic
+    /// `run_fifo` computes) and append its per-server entries.
+    fn admit_fifo(&mut self, i: usize) {
+        let t = self.now;
+        {
+            let DesRun {
+                jobs,
+                local,
+                cfg,
+                state,
+                free_est,
+                assigner,
+                overhead,
+                servers,
+                spare,
+                rebuild,
+                ..
+            } = self;
+            let jobs: &[Job] = *jobs;
+            let job = &jobs[i];
+            debug_assert_eq!(job.arrival, t);
+            state.observe_free(free_est.as_slice(), t);
+            let inst = state.instance(&job.groups, &job.mu);
+            let assigner = assigner.as_mut().expect("FIFO policy has an assigner");
+            let a = overhead.measure(|| assigner.assign(&inst));
+            debug_assert_eq!(validate_assignment(&inst, &a), Ok(()));
+            let mut sink = LaneSink {
+                lanes: servers,
+                spare,
+                jobs,
+                local: *local,
+                penalty: cfg.locality_penalty,
+                free_est,
+                now: t,
+            };
+            rebuild.push_grouped(&mut sink, i, &a.per_group);
+        }
+        self.arrival_idx = i + 1;
+        self.kick_idle(t);
+    }
+
+    /// Reordered admission: preempt every in-service entry (crediting the
+    /// whole slots it already ran, exactly like the analytic drain's
+    /// partial-entry rule), reorder all outstanding jobs once per
+    /// distinct arrival slot, and rebuild every queue in the new order.
+    fn admit_reorder_batch(&mut self, first: usize, acc: bool) {
+        let t = self.now;
+        debug_assert_eq!(self.jobs[first].arrival, t);
+        let mut newest = first;
+        while newest + 1 < self.jobs.len() && self.jobs[newest + 1].arrival == t {
+            newest += 1;
+        }
+        self.preempt_all(t);
+
+        let DesRun {
+            jobs,
+            local,
+            num_servers,
+            cfg,
+            servers,
+            spare,
+            free_est,
+            rebuild,
+            progress,
+            oset,
+            ws,
+            outcome,
+            overhead,
+            wf_evals,
+            ..
+        } = self;
+        let jobs: &'a [Job] = *jobs;
+        oset.clear();
+        for j in 0..=newest {
+            if progress.total_remaining[j] > 0 {
+                oset.push(&jobs[j], &progress.remaining[j]);
+            }
+        }
+        let outstanding = oset.as_slice();
+        overhead.measure(|| {
+            reorder_into(
+                outstanding,
+                *num_servers,
+                acc,
+                cfg.reorder_threads,
+                &mut *ws,
+                &mut *outcome,
+            )
+        });
+        *wf_evals += outcome.wf_evals;
+
+        for f in free_est.iter_mut() {
+            *f = t;
+        }
+        let mut sink = LaneSink {
+            lanes: servers,
+            spare,
+            jobs,
+            local: *local,
+            penalty: cfg.locality_penalty,
+            free_est,
+            now: t,
+        };
+        for (pos, &oi) in outcome.order.iter().enumerate() {
+            let job_idx = outstanding[oi].job.id;
+            debug_assert_eq!(
+                outcome.assignments[pos].total_assigned(),
+                progress.total_remaining[job_idx]
+            );
+            rebuild.push_grouped(&mut sink, job_idx, &outcome.assignments[pos].per_group);
+        }
+        self.arrival_idx = newest + 1;
+        self.kick_idle(t);
+    }
+
+    /// Preempt every server for a reorder: credit the in-service primary
+    /// entries' partial progress, drop every queued entry (all remaining
+    /// tasks are about to be reassigned), dissolve every replica pair.
+    fn preempt_all(&mut self, t: Slots) {
+        for m in 0..self.num_servers {
+            self.servers[m].token += 1;
+            if let Some(run) = self.servers[m].running.take() {
+                // Replicas never contribute progress at a preemption: the
+                // primary copy of the same tasks is credited instead (a
+                // resolved pair would have retired both members already).
+                if !run.entry.replica {
+                    let elapsed = t - run.start;
+                    debug_assert!(elapsed < run.dur, "completion events fire before arrivals");
+                    if elapsed > 0 {
+                        self.apply_partial(&run.entry, m, elapsed, run.dur);
+                    }
+                }
+                self.recycle(run.entry);
+            }
+            while let Some(e) = self.servers[m].queue.pop_front() {
+                self.recycle(e);
+            }
+        }
+        self.pairs.clear();
+        self.pair_free.clear();
+    }
+
+    /// Credit the whole slots an in-service entry ran before a
+    /// preemption. When the entry runs at its deterministic estimate
+    /// (`dur == base`, always true in deterministic mode) this is the
+    /// analytic drain's partial rule — `elapsed × μ` tasks, parts in
+    /// order — bit-compatible with `ServerQueues::drain`. A slowed entry
+    /// progresses proportionally (`floor(total × elapsed / dur)`, capped
+    /// below `total` so the entry stays alive).
+    fn apply_partial(&mut self, entry: &DesEntry, server: ServerId, elapsed: Slots, dur: Slots) {
+        let total: TaskCount = entry.parts.iter().map(|&(_, n)| n).sum();
+        let exact = self.local.is_none() && dur == entry.base;
+        let mut budget = if exact {
+            elapsed * self.jobs[entry.job].mu[server]
+        } else {
+            ((total as f64 * elapsed as f64 / dur as f64).floor() as TaskCount)
+                .min(total.saturating_sub(1))
+        };
+        debug_assert!(!exact || budget < total);
+        for &(k, n) in &entry.parts {
+            if budget == 0 {
+                break;
+            }
+            let take = n.min(budget);
+            self.progress.remaining[entry.job][k] -= take;
+            self.progress.total_remaining[entry.job] -= take;
+            budget -= take;
+        }
+    }
+
+    /// A completion event fired. Stale tokens (preempted or cancelled
+    /// entries) are ignored; a replica-race winner cancels its sibling
+    /// eagerly — a running loser frees its server at this very slot.
+    fn on_complete(&mut self, server: ServerId, token: u64) {
+        if token != self.servers[server].token {
+            return;
+        }
+        let Some(run) = self.servers[server].running.take() else {
+            debug_assert!(false, "valid completion token without a running entry");
+            return;
+        };
+        let t = self.now;
+        debug_assert_eq!(run.start + run.dur, t);
+        let entry = run.entry;
+        let mut freed_sibling = None;
+        if let Some(p) = entry.pair {
+            let pair = self.pairs[p as usize];
+            debug_assert!(!pair.done, "losers are cancelled eagerly");
+            self.pairs[p as usize].done = true;
+            let sib = if entry.replica {
+                pair.primary_server
+            } else {
+                pair.replica_server
+            };
+            freed_sibling = self.cancel_sibling(sib, p);
+            self.pair_free.push(p);
+        }
+        self.apply_full(&entry, t);
+        self.recycle(entry);
+        // Targeted kicks: completions are the hot event, and only the
+        // completing lane (and a freed race loser's lane) can have become
+        // startable — no full lane rescan.
+        self.kick_lane(server, t);
+        if let Some(sib) = freed_sibling {
+            self.kick_lane(sib, t);
+        }
+    }
+
+    /// Retire the race loser: preempt it if running (returning its lane
+    /// so the caller restarts it at the winner's completion slot), remove
+    /// it if still queued.
+    fn cancel_sibling(&mut self, sib: ServerId, p: u32) -> Option<ServerId> {
+        let running_loser = self.servers[sib]
+            .running
+            .as_ref()
+            .map_or(false, |r| r.entry.pair == Some(p));
+        if running_loser {
+            self.servers[sib].token += 1;
+            let r = self.servers[sib].running.take().unwrap();
+            self.recycle(r.entry);
+            return Some(sib);
+        }
+        if let Some(idx) = self.servers[sib].queue.iter().position(|e| e.pair == Some(p)) {
+            let e = self.servers[sib].queue.remove(idx).unwrap();
+            self.recycle(e);
+        }
+        None
+    }
+
+    /// Credit a completed entry's full task batch, mirroring the analytic
+    /// drain's whole-entry retirement.
+    fn apply_full(&mut self, entry: &DesEntry, t: Slots) {
+        for &(k, n) in &entry.parts {
+            self.progress.remaining[entry.job][k] -= n;
+            self.progress.total_remaining[entry.job] -= n;
+        }
+        let lf = self.progress.last_finish[entry.job].max(t);
+        self.progress.last_finish[entry.job] = lf;
+        if self.progress.total_remaining[entry.job] == 0
+            && self.progress.completion[entry.job].is_none()
+        {
+            self.progress.completion[entry.job] = Some(lf);
+        }
+    }
+
+    fn recycle(&mut self, mut entry: DesEntry) {
+        entry.parts.clear();
+        self.spare.push(entry.parts);
+    }
+
+    /// Start the head entry on every idle server with queued work — the
+    /// admission-path kick, where any lane may have received entries
+    /// (admissions are O(num_servers) in the analytic engines too).
+    /// Looped because starting a straggler may enqueue a replica on
+    /// another idle lane the scan already passed; replicas never
+    /// re-replicate, so the loop settles in at most two passes.
+    fn kick_idle(&mut self, t: Slots) {
+        loop {
+            let mut started = false;
+            for m in 0..self.num_servers {
+                if self.servers[m].running.is_none() && !self.servers[m].queue.is_empty() {
+                    self.start_next(m, t);
+                    started = true;
+                }
+            }
+            if !started {
+                return;
+            }
+        }
+    }
+
+    /// Start lane `m` if it is idle with queued work, then chase the one
+    /// lane a start can wake in turn (an idle replica target). The
+    /// completion-path kick: O(1) lanes instead of a full rescan.
+    fn kick_lane(&mut self, m: ServerId, t: Slots) {
+        let mut next = Some(m);
+        while let Some(l) = next {
+            next = None;
+            if self.servers[l].running.is_none() && !self.servers[l].queue.is_empty() {
+                next = self.start_next(l, t);
+            }
+        }
+    }
+
+    /// Pop the head entry of lane `m`, sample its duration, schedule its
+    /// completion, and — when straggler speculation is armed and the draw
+    /// crossed the threshold — launch one racing replica. Returns the
+    /// replica's lane when it landed on an *idle* one (the caller must
+    /// kick it).
+    fn start_next(&mut self, m: ServerId, t: Slots) -> Option<ServerId> {
+        let Some(mut entry) = self.servers[m].queue.pop_front() else {
+            return None;
+        };
+        let base = entry.base;
+        let dur = if self.cfg.service.is_deterministic() {
+            base
+        } else {
+            let f = self.cfg.service.sample_factor(&mut self.service_rng);
+            ((base as f64 * f).round() as Slots).max(1)
+        };
+        let mut woken = None;
+        if self.cfg.speculate > 0.0
+            && !entry.replica
+            && entry.pair.is_none()
+            && dur > base
+            && dur as f64 >= self.cfg.speculate * base as f64
+        {
+            if let Some(r) = self.replica_target(entry.job, &entry.parts, m) {
+                let p = self.alloc_pair(m, r);
+                entry.pair = Some(p);
+                let mut parts = self.spare.pop().unwrap_or_default();
+                parts.extend_from_slice(&entry.parts);
+                let rbase = entry_base(
+                    self.jobs,
+                    self.local,
+                    self.cfg.locality_penalty,
+                    entry.job,
+                    &parts,
+                    r,
+                );
+                self.free_est[r] = self.free_est[r].max(t) + rbase;
+                self.servers[r].queue.push_back(DesEntry {
+                    job: entry.job,
+                    parts,
+                    base: rbase,
+                    pair: Some(p),
+                    replica: true,
+                });
+                if self.servers[r].running.is_none() {
+                    woken = Some(r);
+                }
+            }
+        }
+        let token = self.servers[m].token;
+        self.heap.push(t + dur, EventKind::Complete { server: m, token });
+        self.servers[m].running = Some(Running {
+            entry,
+            start: t,
+            dur,
+        });
+        woken
+    }
+
+    /// Where a replica of this entry may race: the least-loaded server
+    /// (by queue-empty estimate, ties to the lowest id) that every part's
+    /// group allows, excluding the primary's server.
+    fn replica_target(
+        &self,
+        job: usize,
+        parts: &[(usize, TaskCount)],
+        exclude: ServerId,
+    ) -> Option<ServerId> {
+        let groups = &self.jobs[job].groups;
+        let (k0, _) = parts[0];
+        let mut best: Option<(Slots, ServerId)> = None;
+        'srv: for &s in &groups[k0].servers {
+            if s == exclude {
+                continue;
+            }
+            for &(k, _) in &parts[1..] {
+                if groups[k].servers.binary_search(&s).is_err() {
+                    continue 'srv;
+                }
+            }
+            let key = (self.free_est[s], s);
+            if best.map_or(true, |b| key < b) {
+                best = Some(key);
+            }
+        }
+        best.map(|(_, s)| s)
+    }
+
+    fn alloc_pair(&mut self, primary: ServerId, replica: ServerId) -> u32 {
+        let pair = Pair {
+            done: false,
+            primary_server: primary,
+            replica_server: replica,
+        };
+        if let Some(p) = self.pair_free.pop() {
+            self.pairs[p as usize] = pair;
+            p
+        } else {
+            self.pairs.push(pair);
+            (self.pairs.len() - 1) as u32
+        }
+    }
+}
+
+/// Expand every group's available-server set to the whole cluster: the
+/// assignment view of the multi-level locality model (any server can run
+/// any task; non-local execution pays the rate penalty at execution
+/// time).
+fn expand_jobs(jobs: &[Job], num_servers: usize) -> Vec<Job> {
+    jobs.iter()
+        .map(|j| Job {
+            id: j.id,
+            arrival: j.arrival,
+            groups: j
+                .groups
+                .iter()
+                .map(|g| TaskGroup::new(g.size, (0..num_servers).collect()))
+                .collect(),
+            mu: j.mu.clone(),
+        })
+        .collect()
+}
+
+/// One-shot DES run of a policy over a job list — the engine behind
+/// [`crate::sim::run_policy`] when `SimConfig.engine = des`. `seed`
+/// drives RD's tie-breaking (as in the analytic engines) and the service
+/// noise stream. Jobs must be sorted by arrival with `id == position`
+/// (what [`crate::sim::materialize_jobs`] produces — the same contract
+/// as [`crate::sim::ReorderedRun`]).
+pub fn run_des(
+    jobs: &[Job],
+    num_servers: usize,
+    policy: SchedPolicy,
+    cfg: &SimConfig,
+    seed: u64,
+) -> crate::Result<SimOutcome> {
+    if cfg.locality_penalty > 1.0 {
+        let expanded = expand_jobs(jobs, num_servers);
+        DesRun::with_locality_sets(&expanded, Some(jobs), num_servers, policy, cfg, seed).finish()
+    } else {
+        DesRun::new(jobs, num_servers, policy, cfg, seed).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::service::ServiceModel;
+    use super::*;
+    use crate::assign::AssignPolicy;
+    use crate::sim::{run_fifo, run_reordered};
+
+    fn job(id: usize, arrival: Slots, sizes: &[u64], servers: &[&[usize]], mu: Vec<u64>) -> Job {
+        Job {
+            id,
+            arrival,
+            groups: sizes
+                .iter()
+                .zip(servers)
+                .map(|(&s, &sv)| TaskGroup::new(s, sv.to_vec()))
+                .collect(),
+            mu,
+        }
+    }
+
+    fn random_jobs(rng: &mut Rng, m: usize, njobs: usize) -> Vec<Job> {
+        let mut arrival = 0u64;
+        (0..njobs)
+            .map(|id| {
+                arrival += rng.gen_range(6);
+                let k = 1 + rng.gen_range(3) as usize;
+                let groups: Vec<TaskGroup> = (0..k)
+                    .map(|_| {
+                        let ns = 1 + rng.gen_range(m as u64) as usize;
+                        let mut sv: Vec<usize> = (0..m).collect();
+                        rng.shuffle(&mut sv);
+                        sv.truncate(ns);
+                        TaskGroup::new(rng.gen_range_incl(1, 25), sv)
+                    })
+                    .collect();
+                Job {
+                    id,
+                    arrival,
+                    groups,
+                    mu: (0..m).map(|_| rng.gen_range_incl(1, 4)).collect(),
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn deterministic_fifo_matches_analytic_engine() {
+        let m = 5;
+        let cfg = SimConfig::default();
+        let mut rng = Rng::seed_from(0xDE51);
+        for case in 0..8 {
+            let jobs = random_jobs(&mut rng, m, 2 + case % 7);
+            for policy in AssignPolicy::ALL {
+                let analytic = run_fifo(&jobs, m, policy, &cfg, 3).unwrap();
+                let des =
+                    run_des(&jobs, m, SchedPolicy::Fifo(policy), &cfg, 3).unwrap();
+                assert_eq!(analytic.jcts, des.jcts, "case {case}, {}", policy.name());
+                assert_eq!(analytic.makespan, des.makespan, "case {case}, {}", policy.name());
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_reordered_matches_analytic_engine() {
+        let m = 5;
+        let cfg = SimConfig::default();
+        let mut rng = Rng::seed_from(0xDE52);
+        for case in 0..8 {
+            let jobs = random_jobs(&mut rng, m, 2 + case % 9);
+            for acc in [false, true] {
+                let analytic = run_reordered(&jobs, m, acc, &cfg).unwrap();
+                let des =
+                    run_des(&jobs, m, SchedPolicy::Ocwf { acc }, &cfg, 3).unwrap();
+                assert_eq!(analytic.jcts, des.jcts, "case {case}, acc={acc}");
+                assert_eq!(analytic.makespan, des.makespan, "case {case}, acc={acc}");
+                assert_eq!(analytic.wf_evals, des.wf_evals, "case {case}, acc={acc}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_straggler_entry_completes_late() {
+        // One job, one server, Pareto service: the JCT must be >= the
+        // deterministic figure and bounded by the cap.
+        let jobs = vec![job(0, 0, &[10], &[&[0]], vec![2])];
+        let mut cfg = SimConfig::default();
+        cfg.service = ServiceModel::ParetoTail {
+            alpha: 0.8,
+            cap: 10.0,
+        };
+        let out = run_des(&jobs, 1, SchedPolicy::Fifo(AssignPolicy::Wf), &cfg, 1).unwrap();
+        assert_eq!(out.jcts.len(), 1);
+        assert!(out.jcts[0] >= 5, "Pareto is a pure slowdown: {:?}", out.jcts);
+        assert!(out.jcts[0] <= 50, "cap bounds the tail: {:?}", out.jcts);
+    }
+
+    #[test]
+    fn replica_race_first_completion_wins() {
+        // Two servers, both available to the group. Speculation threshold
+        // 1.0 fires on any slowdown; the replica on the idle server races
+        // the straggler and the job finishes no later than the straggler
+        // alone would.
+        let jobs = vec![job(0, 0, &[8], &[&[0, 1]], vec![2, 2])];
+        let mut cfg = SimConfig::default();
+        cfg.service = ServiceModel::ParetoTail {
+            alpha: 0.5,
+            cap: 50.0,
+        };
+        let slow = run_des(&jobs, 2, SchedPolicy::Fifo(AssignPolicy::Wf), &cfg, 7).unwrap();
+        cfg.speculate = 1.5;
+        let raced = run_des(&jobs, 2, SchedPolicy::Fifo(AssignPolicy::Wf), &cfg, 7).unwrap();
+        assert_eq!(raced.jcts.len(), 1);
+        // Both runs are valid executions; the raced one must still
+        // process every task exactly once (completion recorded).
+        assert!(raced.makespan >= 1 && slow.makespan >= 1);
+    }
+
+    #[test]
+    fn locality_penalty_slows_remote_execution() {
+        // One group local to server 0 only, but the cluster has a second,
+        // idle server. With the penalty active the assigners may spread
+        // to server 1; tasks there run at mu/penalty, so the optimal
+        // split is still correct and every task completes.
+        let jobs = vec![job(0, 0, &[12], &[&[0]], vec![3, 3])];
+        let mut cfg = SimConfig::default();
+        cfg.locality_penalty = 2.0;
+        let out = run_des(&jobs, 2, SchedPolicy::Fifo(AssignPolicy::Wf), &cfg, 1).unwrap();
+        assert_eq!(out.jcts.len(), 1);
+        // Fully local would take ceil(12/3) = 4 slots; remote-only would
+        // take ceil(12*2/3) = 8. Any valid split lands in between.
+        assert!(out.jcts[0] >= 2 && out.jcts[0] <= 8, "{:?}", out.jcts);
+    }
+
+    #[test]
+    fn stochastic_runs_are_seed_reproducible() {
+        let m = 4;
+        let mut rng = Rng::seed_from(0xDE53);
+        let jobs = random_jobs(&mut rng, m, 10);
+        let mut cfg = SimConfig::default();
+        cfg.service = ServiceModel::ParetoTail {
+            alpha: 1.5,
+            cap: 20.0,
+        };
+        cfg.speculate = 2.0;
+        for policy in [
+            SchedPolicy::Fifo(AssignPolicy::Wf),
+            SchedPolicy::Ocwf { acc: true },
+        ] {
+            let a = run_des(&jobs, m, policy, &cfg, 11).unwrap();
+            let b = run_des(&jobs, m, policy, &cfg, 11).unwrap();
+            assert_eq!(a.jcts, b.jcts, "{}", policy.name());
+            let c = run_des(&jobs, m, policy, &cfg, 12).unwrap();
+            assert!(
+                a.jcts != c.jcts || a.makespan == c.makespan,
+                "different seeds should usually differ (sanity)"
+            );
+        }
+    }
+
+    #[test]
+    fn hot_config_returns_sim_error() {
+        let jobs = vec![job(0, 0, &[10], &[&[0]], vec![1])];
+        let cfg = SimConfig {
+            max_slots: 1,
+            ..SimConfig::default()
+        };
+        let err = run_des(&jobs, 1, SchedPolicy::Fifo(AssignPolicy::Wf), &cfg, 0).unwrap_err();
+        match err {
+            crate::Error::Sim(msg) => {
+                assert!(msg.contains("des/wf"), "{msg}");
+                assert!(msg.contains("max_slots = 1"), "{msg}");
+            }
+            other => panic!("expected Error::Sim, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,234 @@
+//! Service-time models and the engine selector.
+//!
+//! The analytic engines evaluate the paper's deterministic busy-time
+//! recursion (eq. 2): a batch of `n` tasks at a `μ`-per-slot server takes
+//! exactly `ceil(n/μ)` slots. The DES engine keeps that figure as the
+//! *base* duration and lets a [`ServiceModel`] perturb it multiplicatively
+//! — the knob that opens the stochastic-service / straggler-tail scenario
+//! axis (Wang–Joshi–Wornell's replication analysis lives entirely in this
+//! regime).
+//!
+//! A sampled entry duration is `max(1, round(base × X))` where `X` is the
+//! model's slowdown factor:
+//!
+//! - [`ServiceModel::Deterministic`] — `X = 1` exactly, **no RNG draw**.
+//!   This is the invariant mode: with it (and no engine-only mechanisms)
+//!   the DES engine reproduces the analytic engines' completion times bit
+//!   for bit (`rust/tests/des_equivalence.rs`).
+//! - [`ServiceModel::Exp`] — `X ~ Exponential(mean)`: memoryless service
+//!   noise, both speedups and slowdowns.
+//! - [`ServiceModel::ParetoTail`] — `X ~ min(Pareto(α), cap)`: `X ≥ 1`
+//!   always (pure slowdown) with a heavy straggler tail; `cap` bounds the
+//!   worst case so runs terminate promptly.
+
+use crate::util::rng::Rng;
+
+/// How entry durations are drawn in the DES engine.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ServiceModel {
+    /// Exact `ceil(n/μ)` durations — the analytic engines' model.
+    Deterministic,
+    /// Multiplicative exponential noise with the given mean factor.
+    Exp { mean: f64 },
+    /// Multiplicative Pareto(α) slowdown capped at `cap` (straggler tail).
+    ParetoTail { alpha: f64, cap: f64 },
+}
+
+impl Default for ServiceModel {
+    fn default() -> Self {
+        ServiceModel::Deterministic
+    }
+}
+
+impl ServiceModel {
+    pub fn is_deterministic(&self) -> bool {
+        matches!(self, ServiceModel::Deterministic)
+    }
+
+    /// Parse `det` | `exp:MEAN` | `pareto:ALPHA:CAP` (the config-file and
+    /// `--service` syntax).
+    pub fn parse(s: &str) -> Option<ServiceModel> {
+        let s = s.trim().to_ascii_lowercase();
+        if matches!(s.as_str(), "det" | "deterministic") {
+            return Some(ServiceModel::Deterministic);
+        }
+        let mut it = s.split(':');
+        match it.next()? {
+            "exp" => {
+                let mean: f64 = it.next()?.parse().ok()?;
+                if it.next().is_some() {
+                    return None;
+                }
+                Some(ServiceModel::Exp { mean })
+            }
+            "pareto" => {
+                let alpha: f64 = it.next()?.parse().ok()?;
+                let cap: f64 = it.next()?.parse().ok()?;
+                if it.next().is_some() {
+                    return None;
+                }
+                Some(ServiceModel::ParetoTail { alpha, cap })
+            }
+            _ => None,
+        }
+    }
+
+    /// Render back into the `parse` syntax (logs, help text).
+    pub fn describe(&self) -> String {
+        match self {
+            ServiceModel::Deterministic => "det".into(),
+            ServiceModel::Exp { mean } => format!("exp:{mean}"),
+            ServiceModel::ParetoTail { alpha, cap } => format!("pareto:{alpha}:{cap}"),
+        }
+    }
+
+    /// Parameter sanity; called from `ExperimentConfig::validate`.
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            ServiceModel::Deterministic => Ok(()),
+            ServiceModel::Exp { mean } => {
+                if mean.is_finite() && mean > 0.0 {
+                    Ok(())
+                } else {
+                    Err(format!("exp service mean must be finite and > 0, got {mean}"))
+                }
+            }
+            ServiceModel::ParetoTail { alpha, cap } => {
+                if !(alpha.is_finite() && alpha > 0.0) {
+                    Err(format!("pareto service alpha must be finite and > 0, got {alpha}"))
+                } else if !(cap.is_finite() && cap >= 1.0) {
+                    Err(format!("pareto service cap must be finite and >= 1, got {cap}"))
+                } else {
+                    Ok(())
+                }
+            }
+        }
+    }
+
+    /// Draw one slowdown factor. [`ServiceModel::Deterministic`] returns
+    /// `1.0` without touching the RNG, so deterministic runs consume zero
+    /// service randomness (part of the bit-equivalence contract).
+    pub fn sample_factor(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            ServiceModel::Deterministic => 1.0,
+            ServiceModel::Exp { mean } => rng.gen_exp(1.0 / mean),
+            ServiceModel::ParetoTail { alpha, cap } => rng.gen_pareto(alpha).min(cap),
+        }
+    }
+}
+
+/// Which execution engine replays a trace: the analytic busy-time
+/// recursion ([`crate::sim::run_fifo`] / [`crate::sim::run_reordered`])
+/// or the discrete-event engine ([`crate::des`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EngineKind {
+    #[default]
+    Analytic,
+    Des,
+}
+
+impl EngineKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Analytic => "analytic",
+            EngineKind::Des => "des",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "analytic" | "analytical" => Some(EngineKind::Analytic),
+            "des" | "discrete-event" | "event" => Some(EngineKind::Des),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in [
+            ServiceModel::Deterministic,
+            ServiceModel::Exp { mean: 1.5 },
+            ServiceModel::ParetoTail {
+                alpha: 1.5,
+                cap: 20.0,
+            },
+        ] {
+            assert_eq!(ServiceModel::parse(&m.describe()), Some(m));
+            m.validate().unwrap();
+        }
+        assert_eq!(ServiceModel::parse("det"), Some(ServiceModel::Deterministic));
+        assert!(ServiceModel::parse("exp").is_none());
+        assert!(ServiceModel::parse("exp:1:2").is_none());
+        assert!(ServiceModel::parse("pareto:1.5").is_none());
+        assert!(ServiceModel::parse("weibull:1").is_none());
+    }
+
+    #[test]
+    fn validate_rejects_bad_parameters() {
+        assert!(ServiceModel::Exp { mean: 0.0 }.validate().is_err());
+        assert!(ServiceModel::Exp { mean: f64::NAN }.validate().is_err());
+        assert!(ServiceModel::ParetoTail {
+            alpha: 0.0,
+            cap: 10.0
+        }
+        .validate()
+        .is_err());
+        assert!(ServiceModel::ParetoTail {
+            alpha: 1.5,
+            cap: 0.5
+        }
+        .validate()
+        .is_err());
+    }
+
+    #[test]
+    fn deterministic_consumes_no_randomness() {
+        let mut a = Rng::seed_from(1);
+        let mut b = Rng::seed_from(1);
+        assert_eq!(ServiceModel::Deterministic.sample_factor(&mut a), 1.0);
+        assert_eq!(a.next_u64(), b.next_u64(), "no draw may have happened");
+    }
+
+    #[test]
+    fn pareto_factor_is_a_capped_slowdown() {
+        let model = ServiceModel::ParetoTail {
+            alpha: 1.2,
+            cap: 8.0,
+        };
+        let mut rng = Rng::seed_from(2);
+        let mut above_one = 0;
+        for _ in 0..2_000 {
+            let f = model.sample_factor(&mut rng);
+            assert!((1.0..=8.0).contains(&f), "factor {f}");
+            if f > 1.5 {
+                above_one += 1;
+            }
+        }
+        assert!(above_one > 100, "the tail must actually bite: {above_one}");
+    }
+
+    #[test]
+    fn exp_factor_mean_matches() {
+        let model = ServiceModel::Exp { mean: 2.0 };
+        let mut rng = Rng::seed_from(3);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| model.sample_factor(&mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - 2.0).abs() < 0.1, "mean {mean}");
+    }
+
+    #[test]
+    fn engine_kind_parse() {
+        assert_eq!(EngineKind::parse("des"), Some(EngineKind::Des));
+        assert_eq!(EngineKind::parse("Analytic"), Some(EngineKind::Analytic));
+        assert_eq!(EngineKind::parse("x"), None);
+        assert_eq!(EngineKind::default(), EngineKind::Analytic);
+        for k in [EngineKind::Analytic, EngineKind::Des] {
+            assert_eq!(EngineKind::parse(k.name()), Some(k));
+        }
+    }
+}

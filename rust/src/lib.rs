@@ -14,7 +14,11 @@
 //! ## Layer map
 //! - [`assign`] — per-job task assignment (the paper's §III).
 //! - [`sched`] — FIFO and reordered (OCWF/OCWF-ACC, §IV) scheduling drivers.
-//! - [`sim`] — the slotted discrete-event engine that replays a trace.
+//! - [`sim`] — the analytic engines that replay a trace at arrival
+//!   instants (eq. 2 evaluated in closed form).
+//! - [`des`] — the discrete-event fidelity engine: stochastic service
+//!   times, straggler replica racing, multi-level locality; its
+//!   deterministic mode doubles as a bit-exact oracle for [`sim`].
 //! - [`cluster`], [`trace`], [`job`] — the system model (§II).
 //! - [`flow`], [`util`], [`proptest`], [`benchlib`], [`cli`], [`config`] —
 //!   substrates built from scratch (offline environment, no external deps).
@@ -41,6 +45,7 @@ pub mod cluster;
 pub mod config;
 #[cfg(feature = "pjrt")]
 pub mod coordinator;
+pub mod des;
 pub mod flow;
 pub mod job;
 pub mod metrics;

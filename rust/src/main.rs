@@ -78,6 +78,26 @@ fn build_cli() -> Cli {
                 "acc-spec-chunk",
                 "fixed OCWF-ACC speculation depth (0 = adaptive) [default 0]",
             ),
+            flag_req(
+                "engine",
+                "execution engine: analytic | des (deterministic DES is \
+                 bit-identical to analytic) [default analytic]",
+            ),
+            flag_req(
+                "service",
+                "DES service-time model: det | exp:MEAN | pareto:ALPHA:CAP \
+                 [default det]",
+            ),
+            flag_req(
+                "locality-penalty",
+                "DES multi-level locality: remote tasks run at mu/penalty \
+                 (1 = off; needs --engine des) [default 1]",
+            ),
+            flag_req(
+                "speculate",
+                "DES straggler speculation threshold factor (0 = off; needs \
+                 --engine des) [default 0]",
+            ),
         ]
     };
     Cli::new("taos", "data-locality-aware task assignment & scheduling")
@@ -203,8 +223,33 @@ fn config_from(parsed: &taos::cli::Parsed) -> Result<ExperimentConfig, String> {
     if let Some(v) = parsed.get_parse::<usize>("acc-spec-chunk")? {
         cfg.sim.acc_spec_chunk = v;
     }
+    apply_engine_flags(parsed, &mut cfg)?;
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(cfg)
+}
+
+/// The DES engine flags, shared by `config_from` and `cmd_repro` (which
+/// builds its base config without the common trace/cluster flags).
+fn apply_engine_flags(
+    parsed: &taos::cli::Parsed,
+    cfg: &mut ExperimentConfig,
+) -> Result<(), String> {
+    if let Some(s) = parsed.get("engine") {
+        cfg.sim.engine = taos::des::service::EngineKind::parse(s)
+            .ok_or_else(|| format!("--engine must be `analytic` or `des`, got `{s}`"))?;
+    }
+    if let Some(s) = parsed.get("service") {
+        cfg.sim.service = taos::des::service::ServiceModel::parse(s).ok_or_else(|| {
+            format!("--service must be `det`, `exp:MEAN` or `pareto:ALPHA:CAP`, got `{s}`")
+        })?;
+    }
+    if let Some(v) = parsed.get_parse::<f64>("locality-penalty")? {
+        cfg.sim.locality_penalty = v;
+    }
+    if let Some(v) = parsed.get_parse::<f64>("speculate")? {
+        cfg.sim.speculate = v;
+    }
+    Ok(())
 }
 
 fn cmd_simulate(parsed: &taos::cli::Parsed) -> Result<(), String> {
@@ -216,6 +261,7 @@ fn cmd_simulate(parsed: &taos::cli::Parsed) -> Result<(), String> {
     if parsed.has_switch("json") {
         let j = Json::obj(vec![
             ("algorithm", Json::str(policy.name())),
+            ("engine", Json::str(cfg.sim.engine.name())),
             ("jct", stats.to_json()),
             ("overhead_us", Json::num(out.overhead.mean_us())),
             ("makespan", Json::num(out.makespan as f64)),
@@ -224,6 +270,14 @@ fn cmd_simulate(parsed: &taos::cli::Parsed) -> Result<(), String> {
         println!("{}", j.to_string());
     } else {
         println!("algorithm      : {}", policy.name());
+        if cfg.sim.engine == taos::des::service::EngineKind::Des {
+            println!(
+                "engine         : des (service {}, speculate {}, locality penalty {})",
+                cfg.sim.service.describe(),
+                cfg.sim.speculate,
+                cfg.sim.locality_penalty
+            );
+        }
         println!("jobs           : {}", stats.n);
         println!("mean JCT       : {:.1} slots", stats.mean);
         println!("p50 / p90 / p99: {:.0} / {:.0} / {:.0}", stats.p50, stats.p90, stats.p99);
@@ -312,6 +366,24 @@ fn cmd_repro(parsed: &taos::cli::Parsed) -> Result<(), String> {
     if let Some(v) = parsed.get_parse::<usize>("acc-spec-chunk")? {
         base.sim.acc_spec_chunk = v;
     }
+    // Engine flags after the scenario, so `--scenario straggler --engine
+    // analytic` is an explicit (rejected) choice and `--fig 13 --engine
+    // des` runs a whole figure through the DES oracle. The catalog sweep
+    // applies each scenario per cell — which owns and resets the engine
+    // knobs — so combining it with explicit engine flags would silently
+    // discard them; reject it like the `--scenario` combination above.
+    if fig_id == "scenarios" {
+        for f in ["engine", "service", "locality-penalty", "speculate"] {
+            if parsed.get(f).is_some() {
+                return Err(format!(
+                    "--{f} cannot be combined with --fig scenarios (each \
+                     catalog cell's scenario owns the engine knobs)"
+                ));
+            }
+        }
+    }
+    apply_engine_flags(parsed, &mut base)?;
+    base.validate().map_err(|e| e.to_string())?;
     let opts = taos::sweep::SweepOptions::default()
         .with_threads(parsed.get_parse::<usize>("threads")?.unwrap_or(1))
         .with_trials(parsed.get_parse::<usize>("trials")?.unwrap_or(1));
@@ -353,12 +425,17 @@ fn cmd_gen_trace(parsed: &taos::cli::Parsed) -> Result<(), String> {
     let sc_name = parsed.get_or("scenario", "alibaba");
     let scenario =
         Scenario::parse(sc_name).ok_or_else(|| format!("unknown scenario `{sc_name}`"))?;
-    if scenario.has_cluster_twist() {
+    if scenario.has_cluster_twist() || scenario.has_engine_twist() {
         eprintln!(
-            "note: `{}` includes a cluster-side twist — a CSV trace captures only \
+            "note: `{}` includes a {} twist — a CSV trace captures only \
              the workload shape, so pass --scenario {} at simulation time to get \
              the full twist",
             scenario.name(),
+            if scenario.has_engine_twist() {
+                "DES-engine-side"
+            } else {
+                "cluster-side"
+            },
             scenario.name()
         );
     }

@@ -22,6 +22,14 @@
 //! [`crate::Error::Sim`] identifying the offending configuration instead
 //! of aborting the process, so one too-hot sweep cell no longer kills the
 //! entire sweep (`sweep::run_specs` adds the cell coordinates).
+//!
+//! Both engines here are *analytic*: they exploit the determinism of
+//! eq. 2 to never step between arrivals. The discrete-event engine
+//! ([`crate::des`]) replays the same traces through a genuine event loop
+//! — [`run_policy`] dispatches to it when `SimConfig.engine = des` — and
+//! reproduces these engines bit for bit in its deterministic mode while
+//! opening the stochastic-service / straggler-replication /
+//! multi-level-locality axes the analytic model cannot express.
 
 pub mod stepping;
 
@@ -262,38 +270,20 @@ impl<'a> ReorderedRun<'a> {
         self.queues
             .drain(self.jobs, &mut self.progress, self.now, self.cfg.max_slots);
         if !self.progress.all_complete() {
-            let unfinished = self
-                .progress
-                .completion
-                .iter()
-                .filter(|c| c.is_none())
-                .count();
             return Err(crate::Error::Sim(format!(
                 "ocwf{} run exceeded max_slots = {}: {} of {} jobs unfinished \
                  at the horizon ({} servers, reorder_threads = {}); \
                  utilization config too hot",
                 if self.acc { "-acc" } else { "" },
                 self.cfg.max_slots,
-                unfinished,
+                self.progress.unfinished(),
                 self.jobs.len(),
                 self.num_servers,
                 self.cfg.reorder_threads
             )));
         }
 
-        let jcts: Vec<Slots> = self
-            .jobs
-            .iter()
-            .zip(&self.progress.completion)
-            .map(|(j, c)| c.unwrap() - j.arrival)
-            .collect();
-        let makespan = self
-            .progress
-            .completion
-            .iter()
-            .map(|c| c.unwrap())
-            .max()
-            .unwrap_or(0);
+        let (jcts, makespan) = self.progress.jcts_and_makespan(self.jobs);
         Ok(SimOutcome {
             jcts,
             overhead: self.overhead,
@@ -331,7 +321,12 @@ pub fn run_reordered(
     ReorderedRun::new(jobs, num_servers, acc, cfg).finish()
 }
 
-/// Dispatch on a [`SchedPolicy`].
+/// Dispatch on a [`SchedPolicy`] and on `cfg.engine`: the analytic
+/// engines above, or the discrete-event engine ([`crate::des`]) when the
+/// config selects it (`engine = des` / `--engine des`). With
+/// deterministic service and no engine-only mechanisms both engines are
+/// bit-identical (`rust/tests/des_equivalence.rs`), so the choice is a
+/// fidelity knob, not a semantics change.
 pub fn run_policy(
     jobs: &[Job],
     num_servers: usize,
@@ -339,6 +334,9 @@ pub fn run_policy(
     cfg: &SimConfig,
     seed: u64,
 ) -> crate::Result<SimOutcome> {
+    if cfg.engine == crate::des::service::EngineKind::Des {
+        return crate::des::run_des(jobs, num_servers, policy, cfg, seed);
+    }
     match policy {
         SchedPolicy::Fifo(p) => run_fifo(jobs, num_servers, p, cfg, seed),
         SchedPolicy::Ocwf { acc } => run_reordered(jobs, num_servers, acc, cfg),

@@ -44,6 +44,12 @@ pub struct Cell {
     pub policy: &'static str,
     pub setting: f64,
     pub mean_jct: f64,
+    /// Median JCT over the cell's pooled per-job completion times. Tail
+    /// scenarios (`straggler`, `heavy-tail`) move the percentiles long
+    /// before they move the mean, so the sweep surfaces them directly.
+    pub p50_jct: f64,
+    /// 99th-percentile JCT over the cell's pooled completion times.
+    pub p99_jct: f64,
     pub overhead_us: f64,
     pub cdf: Vec<(f64, f64)>,
     /// Full WF evaluations, summed over the cell's trials (reordered
@@ -138,6 +144,24 @@ impl Figure {
         }
         out.push_str(&t.render());
 
+        out.push_str(&format!(
+            "\n== {} : JCT percentiles p50/p99 (slots, pooled over trials) ==\n",
+            self.name
+        ));
+        let mut tp = TextTable::new(&hdr_refs);
+        for policy in SchedPolicy::ALL {
+            let mut row = vec![policy.name().to_string()];
+            for &s in &settings {
+                row.push(match self.cell(policy.name(), s) {
+                    Some(c) => format!("{:.0}/{:.0}", c.p50_jct, c.p99_jct),
+                    None => "-".into(),
+                });
+            }
+            row.push("".into());
+            tp.row(row);
+        }
+        out.push_str(&tp.render());
+
         out.push_str(&format!("\n== {} : overhead per arrival (us) ==\n", self.name));
         let mut t2 = TextTable::new(&hdr_refs);
         for policy in SchedPolicy::ALL {
@@ -202,6 +226,8 @@ impl Figure {
                         ("policy", Json::str(c.policy)),
                         ("setting", Json::num(c.setting)),
                         ("mean_jct", Json::num(c.mean_jct)),
+                        ("p50_jct", Json::num(c.p50_jct)),
+                        ("p99_jct", Json::num(c.p99_jct)),
                         ("overhead_us", Json::num(c.overhead_us)),
                         ("wf_evals", Json::num(c.wf_evals as f64)),
                         (
@@ -396,10 +422,13 @@ fn cells_from(specs: &[CellSpec], outcomes: &[SimOutcome], trials: usize) -> Vec
                 oracle.get_or_insert_with(OracleStats::default).merge(st);
             }
         }
+        let pooled = crate::metrics::JctStats::from_jcts(&jcts);
         cells.push(Cell {
             policy: spec.policy.name(),
             setting: spec.setting,
             mean_jct: jct_sum / trials as f64,
+            p50_jct: pooled.p50,
+            p99_jct: pooled.p99,
             overhead_us: ov_sum / trials as f64,
             cdf: jct_cdf(&jcts, 64),
             wf_evals: wf_evals_sum,
@@ -563,10 +592,13 @@ mod tests {
         for c in &fig.cells {
             assert!(c.mean_jct.is_finite() && c.mean_jct > 0.0);
             assert!(!c.cdf.is_empty());
+            // Percentiles ride along from the pooled JCTs.
+            assert!(c.p50_jct > 0.0 && c.p50_jct <= c.p99_jct, "{}", c.policy);
         }
         let text = fig.render();
         assert!(text.contains("obta"));
         assert!(text.contains("ocwf-acc"));
+        assert!(text.contains("p50/p99"), "percentile table rendered");
     }
 
     #[test]
@@ -589,7 +621,12 @@ mod tests {
         let fig = fig_servers(&base, &[4]).unwrap();
         let j = fig.to_json().to_string();
         let parsed = crate::util::json::Json::parse(&j).unwrap();
-        assert!(parsed.get("cells").unwrap().as_arr().unwrap().len() == 6);
+        let cells = parsed.get("cells").unwrap().as_arr().unwrap();
+        assert!(cells.len() == 6);
+        for c in cells {
+            assert!(c.get("p50_jct").is_some(), "percentiles exported");
+            assert!(c.get("p99_jct").is_some());
+        }
     }
 
     #[test]

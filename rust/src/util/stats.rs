@@ -34,7 +34,11 @@ impl Summary {
         let mean = xs.iter().sum::<f64>() / n as f64;
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
         let mut sorted = xs.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp, not partial_cmp().unwrap(): a single NaN sample (an
+        // empty trial's mean, a 0/0 ratio) must degrade the statistics,
+        // not panic the whole sweep. NaNs sort last under the IEEE total
+        // order, so finite percentiles stay correct.
+        sorted.sort_by(f64::total_cmp);
         Summary {
             n,
             mean,
@@ -73,7 +77,8 @@ pub struct Ecdf {
 impl Ecdf {
     pub fn from(sample: &[f64]) -> Ecdf {
         let mut xs = sample.to_vec();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // NaN-safe for the same reason as `Summary::from`.
+        xs.sort_by(f64::total_cmp);
         Ecdf { xs }
     }
 
@@ -88,10 +93,15 @@ impl Ecdf {
 
     /// Evaluate the CDF at `k` evenly spaced points spanning the sample
     /// range; returns `(x, F(x))` pairs — the series a plot consumes.
+    /// Degenerate requests degrade instead of asserting: `k = 0` yields
+    /// an empty series, `k = 1` the single point at the sample minimum.
     pub fn series(&self, k: usize) -> Vec<(f64, f64)> {
-        assert!(k >= 2);
-        if self.xs.is_empty() {
+        if self.xs.is_empty() || k == 0 {
             return vec![];
+        }
+        if k == 1 {
+            let lo = self.xs[0];
+            return vec![(lo, self.eval(lo))];
         }
         let (lo, hi) = (self.xs[0], *self.xs.last().unwrap());
         (0..k)
@@ -159,6 +169,47 @@ mod tests {
         let s = Summary::from(&[]);
         assert_eq!(s.n, 0);
         assert!(s.mean.is_nan());
+    }
+
+    #[test]
+    fn summary_survives_nan_samples() {
+        // Regression: `partial_cmp(..).unwrap()` used to panic on the
+        // first NaN sample. NaNs now sort last (total order), so the
+        // finite order statistics stay meaningful.
+        let s = Summary::from(&[2.0, f64::NAN, 1.0, 3.0]);
+        assert_eq!(s.n, 4);
+        assert!(s.mean.is_nan(), "NaN poisons the mean, as it must");
+        assert!((s.min - 1.0).abs() < 1e-12, "min is the finite minimum");
+        assert!(s.max.is_nan(), "NaN sorts last, so max reports it");
+        assert!((s.p50 - 2.5).abs() < 1e-12, "p50 interpolates 2.0..3.0");
+
+        // All-NaN input: everything NaN, nothing panics.
+        let s = Summary::from(&[f64::NAN, f64::NAN]);
+        assert_eq!(s.n, 2);
+        assert!(s.p50.is_nan() && s.min.is_nan());
+    }
+
+    #[test]
+    fn ecdf_survives_nan_samples() {
+        let e = Ecdf::from(&[1.0, f64::NAN, 2.0]);
+        // Finite prefix behaves normally; the NaN occupies the tail slot.
+        assert!((e.eval(1.0) - 1.0 / 3.0).abs() < 1e-12);
+        assert!((e.eval(2.0) - 2.0 / 3.0).abs() < 1e-12);
+        let s = e.series(4);
+        assert_eq!(s.len(), 4, "series still renders");
+    }
+
+    #[test]
+    fn ecdf_series_degenerate_k() {
+        let e = Ecdf::from(&[3.0, 1.0, 2.0]);
+        assert!(e.series(0).is_empty());
+        let one = e.series(1);
+        assert_eq!(one.len(), 1);
+        assert!((one[0].0 - 1.0).abs() < 1e-12);
+        assert!((one[0].1 - 1.0 / 3.0).abs() < 1e-12);
+        // Empty sample stays empty at any k.
+        assert!(Ecdf::from(&[]).series(1).is_empty());
+        assert!(Ecdf::from(&[]).series(16).is_empty());
     }
 
     #[test]

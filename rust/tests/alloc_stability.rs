@@ -281,6 +281,141 @@ fn reordered_arrival_path_footprint_freezes_after_warmup() {
 }
 
 #[test]
+fn des_event_path_footprint_freezes_after_warmup() {
+    // The DES engine's whole event path — the pooled event heap, lane
+    // queues with their recycled parts buffers, the pair slab, the
+    // rebuild rows and the shared reorder pools — must stop allocating
+    // once warm. Same wave construction as the reordered-arrival test:
+    // identical waves separated by gaps long enough to fully drain, so
+    // in deterministic mode every wave after warmup replays the exact
+    // buffer pattern of the previous one.
+    use taos::config::SimConfig;
+    use taos::des::DesRun;
+    use taos::sched::SchedPolicy;
+
+    let m = 8;
+    let waves = 7usize;
+    let per_wave = 5usize;
+    let mut jobs: Vec<taos::job::Job> = Vec::new();
+    for w in 0..waves {
+        for j in 0..per_wave {
+            let k = 1 + j % 3;
+            let groups: Vec<TaskGroup> = (0..k)
+                .map(|g| {
+                    let servers: Vec<usize> = (0..m).filter(|s| (s + g + j) % 2 == 0).collect();
+                    TaskGroup::new(4 + 3 * j as u64 + g as u64, servers)
+                })
+                .collect();
+            jobs.push(taos::job::Job {
+                id: w * per_wave + j,
+                arrival: (w as u64) * 10_000,
+                groups,
+                mu: (0..m).map(|s| 1 + ((s + j) % 3) as u64).collect(),
+            });
+        }
+    }
+
+    let warmup_deadline = 2 * 10_000; // two full waves
+    for (policy, threads) in [
+        (SchedPolicy::Fifo(taos::assign::AssignPolicy::Wf), 1usize),
+        (SchedPolicy::Ocwf { acc: true }, 1),
+        (SchedPolicy::Ocwf { acc: true }, 2),
+    ] {
+        let cfg = SimConfig {
+            reorder_threads: threads,
+            ..SimConfig::default()
+        };
+        let mut run = DesRun::new(&jobs, m, policy, &cfg, 5);
+        // Warmup: pump through the first two waves.
+        let mut more = true;
+        while more && run.now() < warmup_deadline {
+            more = run.pump().unwrap();
+        }
+        let fp = run.pool_footprint();
+        assert!(fp > 0, "warmup must have pooled buffers");
+        while more {
+            more = run.pump().unwrap();
+            assert_eq!(
+                fp,
+                run.pool_footprint(),
+                "DES event path allocated after warmup at slot {} ({}, {} threads)",
+                run.now(),
+                policy.name(),
+                threads
+            );
+        }
+        let out = run.finish().unwrap();
+        assert_eq!(out.jcts.len(), jobs.len());
+    }
+}
+
+#[test]
+fn des_stochastic_speculation_footprint_freezes_after_warmup() {
+    // Stochastic service + replica racing: single-job waves with two
+    // disjoint two-server groups keep the queue *shapes* independent of
+    // the sampled durations — at most four entries per wave, each with a
+    // fixed replica target (the only other server of its group), so
+    // every pooled counter is structurally below its next capacity
+    // boundary (≤ 4 pairs on a min-capacity-4 slab, lane depth ≤ 2,
+    // parts population ≤ 8 on the 4→8 spare-pool growth path) no matter
+    // *which* subset of entries happens to straggle in a given wave.
+    // The only capacity step left is the first fired replica (parts
+    // population 4→5), and with a Pareto(1) tail virtually every entry
+    // straggles, so warmup crosses it immediately. The footprint then
+    // freezes even though every wave draws different service noise.
+    use taos::config::SimConfig;
+    use taos::des::service::ServiceModel;
+    use taos::des::DesRun;
+    use taos::sched::SchedPolicy;
+
+    let m = 4;
+    let waves = 12usize;
+    let jobs: Vec<taos::job::Job> = (0..waves)
+        .map(|w| taos::job::Job {
+            id: w,
+            arrival: (w as u64) * 50_000,
+            groups: vec![
+                TaskGroup::new(9, vec![0, 2]),
+                TaskGroup::new(6, vec![1, 3]),
+            ],
+            mu: vec![1; m],
+        })
+        .collect();
+
+    let warmup_deadline = 6 * 50_000; // six of twelve waves
+    for policy in [
+        SchedPolicy::Fifo(taos::assign::AssignPolicy::Wf),
+        SchedPolicy::Ocwf { acc: true },
+    ] {
+        let mut cfg = SimConfig::default();
+        cfg.service = ServiceModel::ParetoTail {
+            alpha: 1.0,
+            cap: 4.0,
+        };
+        cfg.speculate = 1.0;
+        let mut run = DesRun::new(&jobs, m, policy, &cfg, 9);
+        let mut more = true;
+        while more && run.now() < warmup_deadline {
+            more = run.pump().unwrap();
+        }
+        let fp = run.pool_footprint();
+        assert!(fp > 0, "warmup must have pooled buffers");
+        while more {
+            more = run.pump().unwrap();
+            assert_eq!(
+                fp,
+                run.pool_footprint(),
+                "speculative DES path allocated after warmup at slot {} ({})",
+                run.now(),
+                policy.name()
+            );
+        }
+        let out = run.finish().unwrap();
+        assert_eq!(out.jcts.len(), jobs.len());
+    }
+}
+
+#[test]
 fn executor_spawns_zero_threads_after_warmup() {
     // Every parallel entry point in this crate runs on the process-wide
     // persistent executor. After one warmup batch the worker count is

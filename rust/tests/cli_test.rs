@@ -79,6 +79,81 @@ fn repro_quick_fig13_prints_table1_rows() {
 }
 
 #[test]
+fn simulate_des_engine_matches_analytic_end_to_end() {
+    // The deterministic DES oracle through the binary: identical JCT
+    // statistics and makespan to the analytic engine, for a FIFO and a
+    // reordered policy.
+    for alg in ["wf", "ocwf-acc"] {
+        let base = [
+            "simulate", "--alg", alg, "--jobs", "12", "--tasks", "400", "--servers", "15",
+            "--avail", "3:5", "--seed", "5", "--json",
+        ];
+        let analytic = run_ok(&base);
+        let mut dargs = base.to_vec();
+        dargs.extend_from_slice(&["--engine", "des"]);
+        let des = run_ok(&dargs);
+        let a = taos::util::json::Json::parse(analytic.trim()).expect("analytic json");
+        let d = taos::util::json::Json::parse(des.trim()).expect("des json");
+        assert_eq!(d.get("engine").and_then(|e| e.as_str()), Some("des"));
+        for key in ["mean", "p50", "p90", "p99", "max"] {
+            assert_eq!(
+                a.get("jct").unwrap().get(key).unwrap().as_f64(),
+                d.get("jct").unwrap().get(key).unwrap().as_f64(),
+                "{alg}: jct.{key} must match bit for bit"
+            );
+        }
+        assert_eq!(
+            a.get("makespan").unwrap().as_f64(),
+            d.get("makespan").unwrap().as_f64(),
+            "{alg}"
+        );
+    }
+}
+
+#[test]
+fn simulate_stochastic_flags_require_des_engine() {
+    let out = taos()
+        .args([
+            "simulate", "--alg", "wf", "--jobs", "8", "--tasks", "200", "--servers", "10",
+            "--avail", "2:4", "--service", "exp:1.5",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("engine"),
+        "error must point at --engine des"
+    );
+}
+
+#[test]
+fn repro_scenarios_sweep_rejects_engine_flags() {
+    // The catalog sweep applies each scenario per cell, and scenarios own
+    // the engine knobs — explicit engine flags would be silently
+    // discarded, so the combination is rejected (like --scenario).
+    let out = taos()
+        .args(["repro", "--fig", "scenarios", "--quick", "--engine", "des"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("--fig scenarios"),
+        "error must explain the rejected combination"
+    );
+}
+
+#[test]
+fn repro_quick_engine_presets_run_end_to_end() {
+    for scenario in ["straggler", "multi-locality"] {
+        let text = run_ok(&[
+            "repro", "--fig", "13", "--quick", "--scenario", scenario, "--seed", "3",
+        ]);
+        assert!(text.contains("p50/p99"), "{scenario}: percentile table: {text}");
+        assert!(text.contains("ocwf-acc"), "{scenario}: {text}");
+    }
+}
+
+#[test]
 fn gen_trace_roundtrips_through_simulate() {
     let dir = std::env::temp_dir().join("taos_cli_trace_test");
     std::fs::create_dir_all(&dir).unwrap();

@@ -1,0 +1,172 @@
+//! The DES oracle harness: the discrete-event engine in deterministic
+//! mode must reproduce the analytic engines' JCT vectors **bit for bit**
+//! — for every scheduling policy, on every scenario preset, at every
+//! reorder thread count — and the stochastic modes must be
+//! seed-reproducible (same seed → byte-identical JCT vectors across runs
+//! and thread counts).
+//!
+//! Thread counts come from `TAOS_TEST_THREADS` (default 1,2,8) so the CI
+//! determinism matrix can pin one count per leg, exactly like
+//! `sweep_determinism` / `reorder_equivalence`.
+
+use taos::config::ExperimentConfig;
+use taos::des::service::{EngineKind, ServiceModel};
+use taos::sched::SchedPolicy;
+use taos::sim::run_experiment;
+use taos::sweep::{self, pool};
+use taos::trace::scenarios::Scenario;
+
+fn tiny_cfg(scenario: Scenario) -> ExperimentConfig {
+    let mut cfg = sweep::quick_base(0xDE5E);
+    cfg.trace.jobs = 18;
+    cfg.trace.total_tasks = 900;
+    cfg.cluster.servers = 14;
+    cfg.cluster.avail_lo = 3;
+    cfg.cluster.avail_hi = 5;
+    scenario.apply(&mut cfg);
+    cfg
+}
+
+#[test]
+fn deterministic_des_matches_analytic_on_every_preset_and_policy() {
+    for scenario in Scenario::ALL {
+        if scenario.has_engine_twist() {
+            // The engine presets are stochastic by definition; their
+            // reproducibility is asserted below.
+            continue;
+        }
+        let cfg = tiny_cfg(scenario);
+        assert_eq!(cfg.sim.engine, EngineKind::Analytic);
+        let mut des_cfg = cfg.clone();
+        des_cfg.sim.engine = EngineKind::Des;
+        for policy in SchedPolicy::ALL {
+            let analytic = run_experiment(&cfg, policy)
+                .unwrap_or_else(|e| panic!("{}/{}: {e}", scenario.name(), policy.name()));
+            let des = run_experiment(&des_cfg, policy)
+                .unwrap_or_else(|e| panic!("{}/{}: {e}", scenario.name(), policy.name()));
+            assert_eq!(
+                analytic.jcts,
+                des.jcts,
+                "{}/{}: deterministic DES must reproduce the analytic JCT vector",
+                scenario.name(),
+                policy.name()
+            );
+            assert_eq!(
+                analytic.makespan,
+                des.makespan,
+                "{}/{}",
+                scenario.name(),
+                policy.name()
+            );
+            assert_eq!(
+                analytic.wf_evals,
+                des.wf_evals,
+                "{}/{}: the reorder call pattern must be identical",
+                scenario.name(),
+                policy.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn des_reordered_bit_identical_across_reorder_thread_counts() {
+    // Both the deterministic oracle mode and the stochastic engine
+    // presets: the reorder fan-out is a wall-clock knob only.
+    for scenario in [
+        Scenario::Alibaba,
+        Scenario::Hotspot,
+        Scenario::Straggler,
+        Scenario::MultiLocality,
+    ] {
+        let mut cfg = tiny_cfg(scenario);
+        cfg.sim.engine = EngineKind::Des;
+        for acc in [false, true] {
+            let policy = SchedPolicy::Ocwf { acc };
+            cfg.sim.reorder_threads = 1;
+            let reference = run_experiment(&cfg, policy)
+                .unwrap_or_else(|e| panic!("{}/acc={acc}: {e}", scenario.name()));
+            for threads in pool::test_thread_counts() {
+                cfg.sim.reorder_threads = threads;
+                let par = run_experiment(&cfg, policy).unwrap();
+                assert_eq!(
+                    reference.jcts,
+                    par.jcts,
+                    "{}/acc={acc}: DES JCTs diverged at {threads} reorder threads",
+                    scenario.name()
+                );
+                assert_eq!(reference.wf_evals, par.wf_evals, "{}/acc={acc}", scenario.name());
+                assert_eq!(reference.makespan, par.makespan, "{}/acc={acc}", scenario.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn stochastic_presets_are_seed_reproducible() {
+    for scenario in [Scenario::Straggler, Scenario::MultiLocality] {
+        let cfg = tiny_cfg(scenario);
+        assert_eq!(cfg.sim.engine, EngineKind::Des);
+        for policy in [
+            SchedPolicy::Fifo(taos::assign::AssignPolicy::Wf),
+            SchedPolicy::Fifo(taos::assign::AssignPolicy::Rd),
+            SchedPolicy::Ocwf { acc: true },
+        ] {
+            let a = run_experiment(&cfg, policy)
+                .unwrap_or_else(|e| panic!("{}/{}: {e}", scenario.name(), policy.name()));
+            let b = run_experiment(&cfg, policy).unwrap();
+            assert_eq!(
+                a.jcts,
+                b.jcts,
+                "{}/{}: same seed must give byte-identical JCTs",
+                scenario.name(),
+                policy.name()
+            );
+            assert_eq!(a.makespan, b.makespan);
+            assert_eq!(a.jcts.len(), cfg.trace.jobs);
+        }
+    }
+}
+
+#[test]
+fn straggler_tails_actually_move_completion_times() {
+    // The engine preset must not silently degenerate to the
+    // deterministic oracle: on the same materialized trace, Pareto
+    // service tails have to move at least one completion time.
+    let cfg = tiny_cfg(Scenario::Straggler);
+    assert!(matches!(
+        cfg.sim.service,
+        ServiceModel::ParetoTail { .. }
+    ));
+    let mut det = cfg.clone();
+    det.sim.service = ServiceModel::Deterministic;
+    det.sim.speculate = 0.0;
+    let policy = SchedPolicy::Fifo(taos::assign::AssignPolicy::Wf);
+    let noisy = run_experiment(&cfg, policy).unwrap();
+    let clean = run_experiment(&det, policy).unwrap();
+    assert_ne!(
+        noisy.jcts, clean.jcts,
+        "Pareto tails + speculation must perturb the schedule"
+    );
+    // No makespan-ordering assertion: replica racing can legitimately
+    // beat the deterministic schedule by moving a straggler's work to an
+    // idle server, so neither direction is a theorem.
+}
+
+#[test]
+fn multi_locality_penalty_trades_against_spreading() {
+    // With the penalty the assigners may spread onto remote servers (the
+    // expanded sets); remote work runs slower. The run must complete,
+    // reproduce, and differ from the strictly-local deterministic run.
+    let cfg = tiny_cfg(Scenario::MultiLocality);
+    let policy = SchedPolicy::Ocwf { acc: true };
+    let remote = run_experiment(&cfg, policy).unwrap();
+    let mut local = cfg.clone();
+    local.sim.locality_penalty = 1.0;
+    let strict = run_experiment(&local, policy).unwrap();
+    assert_eq!(remote.jcts.len(), strict.jcts.len());
+    assert_ne!(
+        remote.jcts, strict.jcts,
+        "expanded placement + rate penalty must change the schedule"
+    );
+}

@@ -18,13 +18,22 @@
 //!   ground-truth validator must produce identical JCTs/makespans on the
 //!   *compound* scenario presets (`bursty-hetero`, `hotspot-heavy-tail`),
 //!   which previously only the single-axis scenarios exercised.
+//! - **DES relabeling**: the discrete-event engine must *commute* with
+//!   server relabeling — relabeled-DES equals relabeled-analytic exactly
+//!   as original-DES equals original-analytic — and on workloads whose
+//!   placements are forced (single-server groups) the deterministic DES
+//!   completion times are exactly relabel-invariant, pinning down that
+//!   nothing in the event core (heap tie-breaks, lane scan order,
+//!   replica-target ranking) leaks server identity into outcomes.
 
 use taos::assign::wf::Wf;
 use taos::assign::{validate_assignment, AssignPolicy, Assigner, Instance};
 use taos::config::SimConfig;
-use taos::job::TaskGroup;
+use taos::des::run_des;
+use taos::job::{Job, TaskGroup};
+use taos::sched::SchedPolicy;
 use taos::sim::stepping::run_fifo_stepping;
-use taos::sim::{materialize_jobs, run_fifo};
+use taos::sim::{materialize_jobs, run_fifo, run_reordered};
 use taos::trace::scenarios::Scenario;
 use taos::util::rng::Rng;
 
@@ -154,6 +163,120 @@ fn uniform_rate_scaling_preserves_schedules() {
                 &scaled_ga, gb,
                 "case {case} c={c}: WF allocation must scale exactly"
             );
+        }
+    }
+}
+
+fn random_jobs(rng: &mut Rng, m: usize, njobs: usize, single_server_groups: bool) -> Vec<Job> {
+    let mut arrival = 0u64;
+    (0..njobs)
+        .map(|id| {
+            arrival += rng.gen_range(7);
+            let k = 1 + rng.gen_range(3) as usize;
+            let groups: Vec<TaskGroup> = (0..k)
+                .map(|_| {
+                    let ns = if single_server_groups {
+                        1
+                    } else {
+                        1 + rng.gen_range(m as u64) as usize
+                    };
+                    let mut sv: Vec<usize> = (0..m).collect();
+                    rng.shuffle(&mut sv);
+                    sv.truncate(ns);
+                    TaskGroup::new(rng.gen_range_incl(1, 24), sv)
+                })
+                .collect();
+            Job {
+                id,
+                arrival,
+                groups,
+                mu: (0..m).map(|_| rng.gen_range_incl(1, 4)).collect(),
+            }
+        })
+        .collect()
+}
+
+/// Apply the server relabeling `perm` (old id → new id) to a whole job
+/// list: group server sets and μ vectors permute together.
+fn relabel_jobs(jobs: &[Job], perm: &[usize]) -> Vec<Job> {
+    jobs.iter()
+        .map(|j| {
+            let mut mu = vec![0u64; perm.len()];
+            for s in 0..perm.len() {
+                mu[perm[s]] = j.mu[s];
+            }
+            Job {
+                id: j.id,
+                arrival: j.arrival,
+                groups: j
+                    .groups
+                    .iter()
+                    .map(|g| TaskGroup::new(g.size, g.servers.iter().map(|&s| perm[s]).collect()))
+                    .collect(),
+                mu,
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn des_engine_commutes_with_server_relabeling() {
+    // The deterministic DES is an oracle for the analytic engines on
+    // *any* job list — in particular on a relabeled one. (Completion
+    // *values* may legally move under relabeling here: WF's remainder
+    // placement follows server order, so the commutation — DES tracking
+    // the analytic engine through the relabeling — is the invariant, not
+    // the values themselves.)
+    let m = 5;
+    let cfg = SimConfig::default();
+    let mut rng = Rng::seed_from(0x3E7B);
+    for case in 0..12 {
+        let jobs = random_jobs(&mut rng, m, 2 + case % 8, false);
+        let mut perm: Vec<usize> = (0..m).collect();
+        rng.shuffle(&mut perm);
+        let renamed = relabel_jobs(&jobs, &perm);
+        for variant in [&jobs, &renamed] {
+            let fifo = run_fifo(variant, m, AssignPolicy::Wf, &cfg, 3).unwrap();
+            let des = run_des(variant, m, SchedPolicy::Fifo(AssignPolicy::Wf), &cfg, 3).unwrap();
+            assert_eq!(fifo.jcts, des.jcts, "case {case}: FIFO commutation");
+            let re = run_reordered(variant, m, true, &cfg).unwrap();
+            let des_re = run_des(variant, m, SchedPolicy::Ocwf { acc: true }, &cfg, 3).unwrap();
+            assert_eq!(re.jcts, des_re.jcts, "case {case}: reordered commutation");
+        }
+    }
+}
+
+#[test]
+fn des_engine_relabel_invariant_on_forced_placements() {
+    // Single-server groups force every assigner's allocation, taking the
+    // assignment layer (whose remainder placement is order-dependent)
+    // out of the picture: the deterministic DES completion times must
+    // then be *exactly* invariant under server relabeling. Any
+    // divergence would expose server-identity leakage inside the event
+    // core itself.
+    let m = 6;
+    let cfg = SimConfig::default();
+    let mut rng = Rng::seed_from(0x3E7C);
+    for case in 0..15 {
+        let jobs = random_jobs(&mut rng, m, 2 + case % 9, true);
+        let mut perm: Vec<usize> = (0..m).collect();
+        rng.shuffle(&mut perm);
+        let renamed = relabel_jobs(&jobs, &perm);
+        for policy in [
+            SchedPolicy::Fifo(AssignPolicy::Wf),
+            SchedPolicy::Fifo(AssignPolicy::Obta),
+            SchedPolicy::Ocwf { acc: false },
+            SchedPolicy::Ocwf { acc: true },
+        ] {
+            let a = run_des(&jobs, m, policy, &cfg, 3).unwrap();
+            let b = run_des(&renamed, m, policy, &cfg, 3).unwrap();
+            assert_eq!(
+                a.jcts,
+                b.jcts,
+                "case {case}, {}: forced placements must be relabel-invariant",
+                policy.name()
+            );
+            assert_eq!(a.makespan, b.makespan, "case {case}, {}", policy.name());
         }
     }
 }
