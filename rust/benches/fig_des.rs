@@ -1,6 +1,7 @@
-//! DES fidelity-engine figure: the two engine presets (`straggler`,
-//! `multi-locality`) across all six algorithms, plus an analytic-vs-DES
-//! wall-clock and agreement check on the deterministic baseline.
+//! DES fidelity-engine figure: the engine presets (`straggler`,
+//! `multi-locality`, `multi-rack`, `multi-zone`) across all six
+//! algorithms, plus an analytic-vs-DES wall-clock and agreement check on
+//! the deterministic baseline.
 //!
 //! `cargo bench --bench fig_des` (paper scale) or `TAOS_BENCH_QUICK=1` /
 //! `-- --quick` for CI scale. Cells fan out across all cores
@@ -57,7 +58,12 @@ fn main() {
     // reordering policies (which keep re-packing remaining work).
     let opts = sweep::SweepOptions::from_env();
     let mut preset_figs = Vec::new();
-    for scenario in [Scenario::Straggler, Scenario::MultiLocality] {
+    for scenario in [
+        Scenario::Straggler,
+        Scenario::MultiLocality,
+        Scenario::MultiRack,
+        Scenario::MultiZone,
+    ] {
         let mut cfg = base.clone();
         scenario.apply(&mut cfg);
         let t0 = std::time::Instant::now();
@@ -78,16 +84,27 @@ fn main() {
             t0.elapsed().as_secs_f64(),
             opts.effective_threads()
         );
-        let mut tp = TextTable::new(&["policy", "mean JCT", "p50", "p99", "max"]);
+        let mut tp = TextTable::new(&["policy", "mean JCT", "p50", "p99", "max", "tier hits"]);
         let mut cells = Vec::new();
         for (spec, out) in specs.iter().zip(&outcomes) {
             let s = out.jct_stats();
+            let total: u64 = out.tier_tasks.iter().sum();
+            let tiers = if total == 0 {
+                "-".to_string()
+            } else {
+                out.tier_tasks
+                    .iter()
+                    .map(|&n| format!("{:.0}%", n as f64 * 100.0 / total as f64))
+                    .collect::<Vec<_>>()
+                    .join("/")
+            };
             tp.row(vec![
                 spec.policy.name().into(),
                 format!("{:.0}", s.mean),
                 format!("{:.0}", s.p50),
                 format!("{:.0}", s.p99),
                 format!("{:.0}", s.max),
+                tiers,
             ]);
             cells.push((spec.policy.name(), s));
         }

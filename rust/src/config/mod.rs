@@ -4,6 +4,7 @@
 
 use crate::cluster::placement::PlacementMode;
 use crate::des::service::{EngineKind, ServiceModel};
+use crate::topology::TopologyKind;
 use crate::trace::scenarios::Scenario;
 use crate::{Error, Result};
 
@@ -114,9 +115,15 @@ pub struct SimConfig {
     pub service: ServiceModel,
     /// DES-only multi-level locality: when > 1, every server may run
     /// every task, but tasks executed outside their group's data-local
-    /// server set run at rate `μ/penalty`. `1.0` disables the mechanism;
-    /// values > 1 require `engine = des`.
+    /// server set run at `μ / tier_penalty`, where the tier comes from
+    /// [`crate::topology`] and the top tier charges the full penalty.
+    /// `1.0` disables the mechanism; values > 1 require `engine = des`.
     pub locality_penalty: f64,
+    /// Network-cost hierarchy grading the locality penalty (`flat` |
+    /// `multi-rack` | `multi-zone` | `fat-tree`). `flat` (default) is
+    /// the scalar two-level model; non-flat topologies require
+    /// `engine = des` (they only affect the locality mechanism).
+    pub topology: TopologyKind,
     /// DES-only straggler speculation threshold (0 = off): an entry whose
     /// sampled duration reaches `speculate ×` its deterministic estimate
     /// launches one racing replica; the first completion cancels the
@@ -134,6 +141,7 @@ impl Default for SimConfig {
             engine: EngineKind::Analytic,
             service: ServiceModel::Deterministic,
             locality_penalty: 1.0,
+            topology: TopologyKind::Flat,
             speculate: 0.0,
         }
     }
@@ -196,11 +204,15 @@ impl ExperimentConfig {
             )));
         }
         if s.engine == EngineKind::Analytic
-            && (!s.service.is_deterministic() || s.locality_penalty > 1.0 || s.speculate > 0.0)
+            && (!s.service.is_deterministic()
+                || s.locality_penalty > 1.0
+                || s.topology != TopologyKind::Flat
+                || s.speculate > 0.0)
         {
             return Err(Error::Config(
-                "service models, locality_penalty > 1 and speculate > 0 are \
-                 engine-only mechanisms: set engine = des (--engine des)"
+                "service models, locality_penalty > 1, non-flat topology and \
+                 speculate > 0 are engine-only mechanisms: set engine = des \
+                 (--engine des)"
                     .into(),
             ));
         }
@@ -271,6 +283,11 @@ impl ExperimentConfig {
                 }
                 "locality_penalty" => {
                     cfg.sim.locality_penalty = val.parse().map_err(|_| perr("bad f64"))?
+                }
+                "topology" => {
+                    cfg.sim.topology = TopologyKind::parse(val).ok_or_else(|| {
+                        perr("topology must be `flat`, `multi-rack`, `multi-zone` or `fat-tree`")
+                    })?
                 }
                 "speculate" => cfg.sim.speculate = val.parse().map_err(|_| perr("bad f64"))?,
                 "seed" => cfg.seed = val.parse().map_err(|_| perr("bad u64"))?,
@@ -456,11 +473,26 @@ mod tests {
     }
 
     #[test]
+    fn parses_topology_key() {
+        let cfg = ExperimentConfig::from_str("engine = des\ntopology = multi-rack").unwrap();
+        assert_eq!(cfg.sim.topology, TopologyKind::MultiRack);
+        let cfg = ExperimentConfig::from_str("engine = des\ntopology = fat_tree").unwrap();
+        assert_eq!(cfg.sim.topology, TopologyKind::FatTree);
+        // `flat` is the default and is valid under the analytic engine.
+        assert_eq!(SimConfig::default().topology, TopologyKind::Flat);
+        assert!(ExperimentConfig::from_str("topology = flat").is_ok());
+        assert!(ExperimentConfig::from_str("topology = torus").is_err());
+    }
+
+    #[test]
     fn engine_only_knobs_require_des() {
-        // A stochastic service model, a locality penalty or speculation
-        // without engine = des cannot be honored and must be rejected.
+        // A stochastic service model, a locality penalty, a non-flat
+        // topology or speculation without engine = des cannot be honored
+        // and must be rejected.
         assert!(ExperimentConfig::from_str("service = exp:1.0").is_err());
         assert!(ExperimentConfig::from_str("locality_penalty = 2.0").is_err());
+        assert!(ExperimentConfig::from_str("topology = multi-zone").is_err());
+        assert!(ExperimentConfig::from_str("engine = des\ntopology = multi-zone").is_ok());
         assert!(ExperimentConfig::from_str("speculate = 2.0").is_err());
         assert!(ExperimentConfig::from_str("engine = des\nservice = exp:1.0").is_ok());
         // Parameter ranges.

@@ -22,13 +22,17 @@
 //!   actually race); the first completion applies the progress and
 //!   cancels its sibling — a running loser frees its server immediately,
 //!   a queued loser is removed from its queue.
-//! - **Multi-level locality** (`SimConfig::locality_penalty`): per
+//! - **Hierarchical multi-level locality** (`SimConfig::locality_penalty`
+//!   graded by `SimConfig::topology`, see [`crate::topology`]): per
 //!   Yekkehkhany's near-data model, every server can run every task, but
 //!   a task executed outside its group's data-local server set runs at
-//!   rate `μ/penalty`. The engine hands the assigners *expanded* server
-//!   sets (they place freely; they are penalty-oblivious, exactly the
-//!   tension near-data scheduling studies) and charges the remote rate at
-//!   execution time.
+//!   `μ / tier_penalty`, where the tier (same rack → same zone → beyond)
+//!   comes from the configured rack/zone hierarchy and the top tier
+//!   charges the full penalty. The engine hands the assigners *expanded*
+//!   server sets (they place freely; they are penalty-oblivious, exactly
+//!   the tension near-data scheduling studies), charges the tier rate at
+//!   execution time, and counts the tasks completed per tier
+//!   (`SimOutcome::tier_tasks`, the locality hit-rate telemetry).
 //!
 //! ## The deterministic mode is a hard invariant
 //!
@@ -68,6 +72,7 @@ use crate::job::{Job, ServerId, Slots, TaskCount, TaskGroup};
 use crate::sched::ocwf::{reorder_into, OutstandingSet, ReorderOutcome, ReorderWorkspace};
 use crate::sched::SchedPolicy;
 use crate::sim::SimOutcome;
+use crate::topology::{Locality, Topology};
 use crate::util::ceil_div;
 use crate::util::rng::Rng;
 use crate::util::timer::OverheadMeter;
@@ -123,33 +128,42 @@ struct Pair {
 }
 
 /// Deterministic duration estimate of a parts batch on `server`:
-/// `ceil(total/μ)`, or — when multi-level locality is active (`local`
-/// carries the original data-local server sets) — `ceil(work/μ)` where
-/// remote tasks count `penalty ×` their size.
+/// `ceil(total/μ)`, or — when multi-level locality is active
+/// (`locality` carries the per-(job, group, server) tier table) —
+/// `ceil(work/μ)` where each task counts `tier_penalty ×` its size.
+///
+/// A batch whose every part runs at exactly the local rate takes the
+/// same integer `ceil_div` path as the no-locality estimate, so a
+/// penalty of 1.0 (or an all-local placement) is bit-identical to the
+/// no-locality engine at **any** task count — the f64 path rounds
+/// `2^53 + 1` tasks down, the integer path does not.
 fn entry_base(
     jobs: &[Job],
-    local: Option<&[Job]>,
-    penalty: f64,
+    locality: Option<&Locality>,
     job: usize,
     parts: &[(usize, TaskCount)],
     server: ServerId,
 ) -> Slots {
     let mu = jobs[job].mu[server];
-    match local {
-        None => ceil_div(parts.iter().map(|&(_, n)| n).sum(), mu),
-        Some(orig) => {
-            let mut work = 0.0f64;
-            for &(k, n) in parts {
-                let is_local = orig[job].groups[k].servers.binary_search(&server).is_ok();
-                work += n as f64 * if is_local { 1.0 } else { penalty };
-            }
-            // The epsilon absorbs float dust from an inexact penalty
-            // (10 × 1.1 / 11 computes as 1.0000000000000002 and must
-            // not ceil to 2); penalties are user knobs with far coarser
-            // precision than 1e-9.
-            ((work / mu as f64 - 1e-9).ceil() as Slots).max(1)
-        }
+    let total: TaskCount = parts.iter().map(|&(_, n)| n).sum();
+    let Some(loc) = locality else {
+        return ceil_div(total, mu);
+    };
+    let mut work = 0.0f64;
+    let mut weighted = false;
+    for &(k, n) in parts {
+        let w = loc.rate_weight(job, k, server);
+        weighted |= w != 1.0;
+        work += n as f64 * w;
     }
+    if !weighted {
+        return ceil_div(total, mu);
+    }
+    // The epsilon absorbs float dust from an inexact penalty
+    // (10 × 1.1 / 11 computes as 1.0000000000000002 and must
+    // not ceil to 2); penalties are user knobs with far coarser
+    // precision than 1e-9.
+    ((work / mu as f64 - 1e-9).ceil() as Slots).max(1)
 }
 
 /// The [`EntrySink`] the shared [`QueueRebuild`] grouping path writes
@@ -160,8 +174,7 @@ struct LaneSink<'s, 'a> {
     lanes: &'s mut [Lane],
     spare: &'s mut Vec<Vec<(usize, TaskCount)>>,
     jobs: &'a [Job],
-    local: Option<&'a [Job]>,
-    penalty: f64,
+    locality: Option<&'a Locality>,
     free_est: &'s mut [Slots],
     now: Slots,
 }
@@ -172,7 +185,7 @@ impl EntrySink for LaneSink<'_, '_> {
     }
 
     fn push_entry(&mut self, server: ServerId, job: usize, parts: Vec<(usize, TaskCount)>) {
-        let base = entry_base(self.jobs, self.local, self.penalty, job, &parts, server);
+        let base = entry_base(self.jobs, self.locality, job, &parts, server);
         self.free_est[server] = self.free_est[server].max(self.now) + base;
         self.lanes[server].queue.push_back(DesEntry {
             job,
@@ -193,9 +206,11 @@ pub struct DesRun<'a> {
     /// The assignment view of the jobs: the caller's slice, or the
     /// expanded-server-set clone when multi-level locality is active.
     jobs: &'a [Job],
-    /// Original data-local server sets (`Some` iff the locality penalty
-    /// is active; `jobs` then carries the expanded sets).
-    local: Option<&'a [Job]>,
+    /// Precomputed per-(job, group, server) locality tiers (`Some` iff
+    /// the locality penalty is active; `jobs` then carries the expanded
+    /// sets while the tier table was built from the original data-local
+    /// sets).
+    locality: Option<&'a Locality>,
     num_servers: usize,
     policy: SchedPolicy,
     cfg: &'a SimConfig,
@@ -218,6 +233,9 @@ pub struct DesRun<'a> {
     service_rng: Rng,
     overhead: OverheadMeter,
     wf_evals: u64,
+    /// Tasks completed per locality tier (empty without locality): the
+    /// hit-rate telemetry surfaced through `SimOutcome::tier_tasks`.
+    tier_tasks: Vec<u64>,
     arrival_idx: usize,
     now: Slots,
 }
@@ -230,12 +248,12 @@ impl<'a> DesRun<'a> {
         cfg: &'a SimConfig,
         seed: u64,
     ) -> Self {
-        Self::with_locality_sets(jobs, None, num_servers, policy, cfg, seed)
+        Self::with_locality(jobs, None, num_servers, policy, cfg, seed)
     }
 
-    fn with_locality_sets(
+    fn with_locality(
         jobs: &'a [Job],
-        local: Option<&'a [Job]>,
+        locality: Option<&'a Locality>,
         num_servers: usize,
         policy: SchedPolicy,
         cfg: &'a SimConfig,
@@ -261,7 +279,7 @@ impl<'a> DesRun<'a> {
         ws.set_spec_chunk(cfg.acc_spec_chunk);
         let mut run = DesRun {
             jobs,
-            local,
+            locality,
             num_servers,
             policy,
             cfg,
@@ -281,6 +299,7 @@ impl<'a> DesRun<'a> {
             service_rng: Rng::seed_from(seed).fork(0xDE5),
             overhead: OverheadMeter::new(),
             wf_evals: 0,
+            tier_tasks: vec![0; locality.map_or(0, |l| l.num_tiers())],
             arrival_idx: 0,
             now: 0,
         };
@@ -318,7 +337,7 @@ impl<'a> DesRun<'a> {
             return Err(crate::Error::Sim(format!(
                 "des/{} run exceeded max_slots = {}: event at slot {} \
                  ({} jobs, {} servers, service {}, speculate {}, \
-                 locality_penalty {}); utilization config too hot",
+                 locality_penalty {}, topology {}); utilization config too hot",
                 self.policy.name(),
                 self.cfg.max_slots,
                 ev.time,
@@ -326,7 +345,8 @@ impl<'a> DesRun<'a> {
                 self.num_servers,
                 self.cfg.service.describe(),
                 self.cfg.speculate,
-                self.cfg.locality_penalty
+                self.cfg.locality_penalty,
+                self.cfg.topology.name()
             )));
         }
         debug_assert!(ev.time >= self.now);
@@ -361,6 +381,7 @@ impl<'a> DesRun<'a> {
             makespan,
             wf_evals: self.wf_evals,
             oracle_stats: self.assigner.as_ref().and_then(|a| a.oracle_stats()),
+            tier_tasks: self.tier_tasks,
         })
     }
 
@@ -401,8 +422,7 @@ impl<'a> DesRun<'a> {
         {
             let DesRun {
                 jobs,
-                local,
-                cfg,
+                locality,
                 state,
                 free_est,
                 assigner,
@@ -424,8 +444,7 @@ impl<'a> DesRun<'a> {
                 lanes: servers,
                 spare,
                 jobs,
-                local: *local,
-                penalty: cfg.locality_penalty,
+                locality: *locality,
                 free_est,
                 now: t,
             };
@@ -450,7 +469,7 @@ impl<'a> DesRun<'a> {
 
         let DesRun {
             jobs,
-            local,
+            locality,
             num_servers,
             cfg,
             servers,
@@ -492,8 +511,7 @@ impl<'a> DesRun<'a> {
             lanes: servers,
             spare,
             jobs,
-            local: *local,
-            penalty: cfg.locality_penalty,
+            locality: *locality,
             free_est,
             now: t,
         };
@@ -545,7 +563,13 @@ impl<'a> DesRun<'a> {
     /// below `total` so the entry stays alive).
     fn apply_partial(&mut self, entry: &DesEntry, server: ServerId, elapsed: Slots, dur: Slots) {
         let total: TaskCount = entry.parts.iter().map(|&(_, n)| n).sum();
-        let exact = self.local.is_none() && dur == entry.base;
+        // The analytic drain's exact rule applies when the entry ran at
+        // its deterministic estimate AND every part ran at the local
+        // rate (a tier-weighted batch drains fewer than μ tasks/slot).
+        let exact = dur == entry.base
+            && self
+                .locality
+                .map_or(true, |l| l.unit_rate(entry.job, &entry.parts, server));
         let mut budget = if exact {
             elapsed * self.jobs[entry.job].mu[server]
         } else {
@@ -560,6 +584,12 @@ impl<'a> DesRun<'a> {
             let take = n.min(budget);
             self.progress.remaining[entry.job][k] -= take;
             self.progress.total_remaining[entry.job] -= take;
+            if let Some(loc) = self.locality {
+                // Preempted progress is completed work: count it toward
+                // the tier it actually ran on, so every task is credited
+                // exactly once across partial + full applications.
+                self.tier_tasks[loc.tier(entry.job, k, server)] += take;
+            }
             budget -= take;
         }
     }
@@ -591,7 +621,7 @@ impl<'a> DesRun<'a> {
             freed_sibling = self.cancel_sibling(sib, p);
             self.pair_free.push(p);
         }
-        self.apply_full(&entry, t);
+        self.apply_full(&entry, server, t);
         self.recycle(entry);
         // Targeted kicks: completions are the hot event, and only the
         // completing lane (and a freed race loser's lane) can have become
@@ -624,11 +654,15 @@ impl<'a> DesRun<'a> {
     }
 
     /// Credit a completed entry's full task batch, mirroring the analytic
-    /// drain's whole-entry retirement.
-    fn apply_full(&mut self, entry: &DesEntry, t: Slots) {
+    /// drain's whole-entry retirement. `server` is where the batch ran —
+    /// the tier the locality telemetry attributes its tasks to.
+    fn apply_full(&mut self, entry: &DesEntry, server: ServerId, t: Slots) {
         for &(k, n) in &entry.parts {
             self.progress.remaining[entry.job][k] -= n;
             self.progress.total_remaining[entry.job] -= n;
+            if let Some(loc) = self.locality {
+                self.tier_tasks[loc.tier(entry.job, k, server)] += n;
+            }
         }
         let lf = self.progress.last_finish[entry.job].max(t);
         self.progress.last_finish[entry.job] = lf;
@@ -706,14 +740,7 @@ impl<'a> DesRun<'a> {
                 entry.pair = Some(p);
                 let mut parts = self.spare.pop().unwrap_or_default();
                 parts.extend_from_slice(&entry.parts);
-                let rbase = entry_base(
-                    self.jobs,
-                    self.local,
-                    self.cfg.locality_penalty,
-                    entry.job,
-                    &parts,
-                    r,
-                );
+                let rbase = entry_base(self.jobs, self.locality, entry.job, &parts, r);
                 self.free_est[r] = self.free_est[r].max(t) + rbase;
                 self.servers[r].queue.push_back(DesEntry {
                     job: entry.job,
@@ -782,11 +809,15 @@ impl<'a> DesRun<'a> {
     }
 }
 
-/// Expand every group's available-server set to the whole cluster: the
-/// assignment view of the multi-level locality model (any server can run
-/// any task; non-local execution pays the rate penalty at execution
-/// time).
-fn expand_jobs(jobs: &[Job], num_servers: usize) -> Vec<Job> {
+/// Expand every group's available-server set to its topology-eligible
+/// set at the top tier — the assignment view of the multi-level locality
+/// model. The top tier of every preset covers the whole cluster (any
+/// server can run any task; non-local execution pays the tier's rate
+/// penalty at execution time), but the expansion goes through
+/// [`Topology::eligible_within`] so the assigners' view and the charged
+/// tiers come from the same table.
+fn expand_jobs(jobs: &[Job], topo: &Topology) -> Vec<Job> {
+    let top = topo.top_tier();
     jobs.iter()
         .map(|j| Job {
             id: j.id,
@@ -794,7 +825,7 @@ fn expand_jobs(jobs: &[Job], num_servers: usize) -> Vec<Job> {
             groups: j
                 .groups
                 .iter()
-                .map(|g| TaskGroup::new(g.size, (0..num_servers).collect()))
+                .map(|g| TaskGroup::new(g.size, topo.eligible_within(&g.servers, top)))
                 .collect(),
             mu: j.mu.clone(),
         })
@@ -815,8 +846,10 @@ pub fn run_des(
     seed: u64,
 ) -> crate::Result<SimOutcome> {
     if cfg.locality_penalty > 1.0 {
-        let expanded = expand_jobs(jobs, num_servers);
-        DesRun::with_locality_sets(&expanded, Some(jobs), num_servers, policy, cfg, seed).finish()
+        let topo = Topology::build(cfg.topology, num_servers);
+        let locality = Locality::new(jobs, &topo, cfg.locality_penalty);
+        let expanded = expand_jobs(jobs, &topo);
+        DesRun::with_locality(&expanded, Some(&locality), num_servers, policy, cfg, seed).finish()
     } else {
         DesRun::new(jobs, num_servers, policy, cfg, seed).finish()
     }
@@ -937,6 +970,105 @@ mod tests {
         // Both runs are valid executions; the raced one must still
         // process every task exactly once (completion recorded).
         assert!(raced.makespan >= 1 && slow.makespan >= 1);
+    }
+
+    #[test]
+    fn unit_penalty_locality_path_matches_no_locality_bitwise() {
+        // Satellite regression for the old two-branch entry_base: with
+        // every tier at penalty 1.0 the locality path must take the same
+        // integer duration path as the no-locality engine — bit-identical
+        // outcomes on the *unexpanded* jobs, for every topology preset
+        // and both FIFO and reordered policies, across scenario presets.
+        use crate::config::ExperimentConfig;
+        use crate::sim::materialize_jobs;
+        use crate::topology::TopologyKind;
+        use crate::trace::scenarios::Scenario;
+
+        let mut cfg = ExperimentConfig::default();
+        cfg.seed = 0x10CA;
+        cfg.cluster.servers = 12;
+        cfg.cluster.avail_lo = 3;
+        cfg.cluster.avail_hi = 5;
+        cfg.trace.jobs = 12;
+        cfg.trace.total_tasks = 500;
+        for scenario in Scenario::ALL {
+            if scenario.has_engine_twist() {
+                continue;
+            }
+            scenario.apply(&mut cfg);
+            let jobs = materialize_jobs(&cfg).unwrap();
+            let sim = SimConfig::default();
+            for kind in TopologyKind::ALL {
+                let topo = Topology::build(kind, cfg.cluster.servers);
+                let loc = Locality::new(&jobs, &topo, 1.0);
+                for policy in [
+                    SchedPolicy::Fifo(AssignPolicy::Wf),
+                    SchedPolicy::Fifo(AssignPolicy::Obta),
+                    SchedPolicy::Ocwf { acc: true },
+                ] {
+                    let m = cfg.cluster.servers;
+                    let plain = DesRun::new(&jobs, m, policy, &sim, 3).finish().unwrap();
+                    let unit = DesRun::with_locality(&jobs, Some(&loc), m, policy, &sim, 3)
+                        .finish()
+                        .unwrap();
+                    assert_eq!(
+                        plain.jcts,
+                        unit.jcts,
+                        "{}/{}/{}: unit-penalty locality must be bit-identical",
+                        scenario.name(),
+                        kind.name(),
+                        policy.name()
+                    );
+                    assert_eq!(plain.makespan, unit.makespan);
+                    assert_eq!(plain.wf_evals, unit.wf_evals);
+                    // Telemetry active but everything runs data-local or
+                    // same-assignment: the per-tier counts must cover
+                    // every task exactly once.
+                    let total: u64 = jobs.iter().map(|j| j.total_tasks()).sum();
+                    assert_eq!(unit.tier_tasks.iter().sum::<u64>(), total);
+                    assert_eq!(unit.tier_tasks.len(), kind.num_tiers());
+                    assert!(plain.tier_tasks.is_empty(), "no locality, no telemetry");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn entry_base_is_integer_exact_at_unit_penalty() {
+        // The f64 path loses integer precision above 2^53: a batch of
+        // 2^53 + 1 unit-μ tasks must take 2^53 + 1 slots, not 2^53.
+        let n: u64 = (1 << 53) + 1;
+        let jobs = vec![job(0, 0, &[n], &[&[0]], vec![1, 1])];
+        let topo = Topology::build(crate::topology::TopologyKind::Flat, 2);
+        let loc = Locality::new(&jobs, &topo, 1.0);
+        let parts = [(0usize, n)];
+        let plain = entry_base(&jobs, None, 0, &parts, 0);
+        assert_eq!(plain, n);
+        assert_eq!(entry_base(&jobs, Some(&loc), 0, &parts, 0), plain);
+        // With a real penalty the weighted f64 path still applies (and
+        // only to remote batches): server 1 is remote at penalty 2.
+        let loc2 = Locality::new(&jobs, &topo, 2.0);
+        assert_eq!(entry_base(&jobs, Some(&loc2), 0, &[(0, 10)], 0), 10);
+        assert_eq!(entry_base(&jobs, Some(&loc2), 0, &[(0, 10)], 1), 20);
+    }
+
+    #[test]
+    fn multi_rack_tiers_are_charged_and_counted() {
+        // 8 servers = 2 racks; data local to server 0 only. Remote
+        // same-rack servers run cheaper than cross-rack ones, and the
+        // telemetry attributes every task to exactly one tier.
+        use crate::topology::TopologyKind;
+        let jobs = vec![job(0, 0, &[24], &[&[0]], vec![2; 8])];
+        let mut cfg = SimConfig::default();
+        cfg.locality_penalty = 3.0;
+        cfg.topology = TopologyKind::MultiRack;
+        let out = run_des(&jobs, 8, SchedPolicy::Fifo(AssignPolicy::Wf), &cfg, 1).unwrap();
+        assert_eq!(out.jcts.len(), 1);
+        assert_eq!(out.tier_tasks.len(), 3);
+        assert_eq!(out.tier_tasks.iter().sum::<u64>(), 24);
+        // Fully local would take ceil(24/2) = 12 slots; the expanded
+        // placement must not be slower than that.
+        assert!(out.jcts[0] <= 12, "{:?}", out.jcts);
     }
 
     #[test]

@@ -17,8 +17,10 @@
 //! - [`sim`] — the analytic engines that replay a trace at arrival
 //!   instants (eq. 2 evaluated in closed form).
 //! - [`des`] — the discrete-event fidelity engine: stochastic service
-//!   times, straggler replica racing, multi-level locality; its
-//!   deterministic mode doubles as a bit-exact oracle for [`sim`].
+//!   times, straggler replica racing, hierarchical multi-level locality;
+//!   its deterministic mode doubles as a bit-exact oracle for [`sim`].
+//! - [`topology`] — the rack/zone/region network-cost hierarchy behind
+//!   the locality model (tiered penalties, eligible sets, telemetry).
 //! - [`cluster`], [`trace`], [`job`] — the system model (§II).
 //! - [`flow`], [`util`], [`proptest`], [`benchlib`], [`cli`], [`config`] —
 //!   substrates built from scratch (offline environment, no external deps).
@@ -54,6 +56,7 @@ pub mod runtime;
 pub mod sched;
 pub mod sim;
 pub mod sweep;
+pub mod topology;
 pub mod trace;
 pub mod util;
 

@@ -4,7 +4,8 @@
 //! - `simulate`   run one scheduling policy over a (synthetic or CSV)
 //!                trace and print JCT statistics + overhead.
 //! - `repro`      regenerate a paper table/figure (10, 11, 12, 13, 14,
-//!                `table1`, or the `scenarios` catalog sweep); fans the
+//!                `table1`, the `scenarios` catalog sweep, or the
+//!                `topology` locality-penalty sweep); fans the
 //!                (policy × setting × trial) cells across `--threads`
 //!                worker threads with bit-identical results.
 //! - `compare`    run all six algorithms on one setting side by side.
@@ -67,7 +68,8 @@ fn build_cli() -> Cli {
             flag_req(
                 "scenario",
                 "named workload: alibaba | bursty | heavy-tail | hetero-cap | hotspot | \
-                 bursty-hetero | hotspot-heavy-tail",
+                 bursty-hetero | hotspot-heavy-tail | straggler | multi-locality | \
+                 multi-rack | multi-zone",
             ),
             flag_req(
                 "reorder-threads",
@@ -94,6 +96,12 @@ fn build_cli() -> Cli {
                  (1 = off; needs --engine des) [default 1]",
             ),
             flag_req(
+                "topology",
+                "network topology for locality tiers: flat | multi-rack | \
+                 multi-zone | fat-tree (non-flat needs --engine des) \
+                 [default flat]",
+            ),
+            flag_req(
                 "speculate",
                 "DES straggler speculation threshold factor (0 = off; needs \
                  --engine des) [default 0]",
@@ -118,7 +126,11 @@ fn build_cli() -> Cli {
         })
         .subcommand("repro", "regenerate a paper table/figure", {
             let mut f = common();
-            f.push(flag("fig", "10 | 11 | 12 | 13 | 14 | table1 | scenarios", "12"));
+            f.push(flag(
+                "fig",
+                "10 | 11 | 12 | 13 | 14 | table1 | scenarios | topology",
+                "12",
+            ));
             f.push(switch("quick", "scaled-down workload for fast runs"));
             f.push(flag("out", "also write JSON to this path", ""));
             f.push(flag("threads", "sweep worker threads (0 = all cores)", "1"));
@@ -246,6 +258,14 @@ fn apply_engine_flags(
     if let Some(v) = parsed.get_parse::<f64>("locality-penalty")? {
         cfg.sim.locality_penalty = v;
     }
+    if let Some(s) = parsed.get("topology") {
+        cfg.sim.topology = taos::topology::TopologyKind::parse(s).ok_or_else(|| {
+            format!(
+                "--topology must be `flat`, `multi-rack`, `multi-zone` or \
+                 `fat-tree`, got `{s}`"
+            )
+        })?;
+    }
     if let Some(v) = parsed.get_parse::<f64>("speculate")? {
         cfg.sim.speculate = v;
     }
@@ -259,23 +279,31 @@ fn cmd_simulate(parsed: &taos::cli::Parsed) -> Result<(), String> {
     let out = run_experiment(&cfg, policy).map_err(|e| e.to_string())?;
     let stats = out.jct_stats();
     if parsed.has_switch("json") {
-        let j = Json::obj(vec![
+        let mut fields = vec![
             ("algorithm", Json::str(policy.name())),
             ("engine", Json::str(cfg.sim.engine.name())),
+            ("topology", Json::str(cfg.sim.topology.name())),
             ("jct", stats.to_json()),
             ("overhead_us", Json::num(out.overhead.mean_us())),
             ("makespan", Json::num(out.makespan as f64)),
             ("wf_evals", Json::num(out.wf_evals as f64)),
-        ]);
-        println!("{}", j.to_string());
+        ];
+        if !out.tier_tasks.is_empty() {
+            fields.push((
+                "tier_tasks",
+                Json::arr(out.tier_tasks.iter().map(|&n| Json::num(n as f64))),
+            ));
+        }
+        println!("{}", Json::obj(fields).to_string());
     } else {
         println!("algorithm      : {}", policy.name());
         if cfg.sim.engine == taos::des::service::EngineKind::Des {
             println!(
-                "engine         : des (service {}, speculate {}, locality penalty {})",
+                "engine         : des (service {}, speculate {}, locality penalty {}, topology {})",
                 cfg.sim.service.describe(),
                 cfg.sim.speculate,
-                cfg.sim.locality_penalty
+                cfg.sim.locality_penalty,
+                cfg.sim.topology.name()
             );
         }
         println!("jobs           : {}", stats.n);
@@ -293,6 +321,18 @@ fn cmd_simulate(parsed: &taos::cli::Parsed) -> Result<(), String> {
                 } else {
                     cfg.sim.reorder_threads.to_string()
                 }
+            );
+        }
+        if !out.tier_tasks.is_empty() {
+            let total: u64 = out.tier_tasks.iter().sum();
+            let rates: Vec<String> = out
+                .tier_tasks
+                .iter()
+                .map(|&n| format!("{:.0}%", n as f64 * 100.0 / total.max(1) as f64))
+                .collect();
+            println!(
+                "locality tiers : {} (tier0=data-local .. top)",
+                rates.join(" / ")
             );
         }
         if let Some(s) = out.oracle_stats {
@@ -373,7 +413,7 @@ fn cmd_repro(parsed: &taos::cli::Parsed) -> Result<(), String> {
     // knobs — so combining it with explicit engine flags would silently
     // discard them; reject it like the `--scenario` combination above.
     if fig_id == "scenarios" {
-        for f in ["engine", "service", "locality-penalty", "speculate"] {
+        for f in ["engine", "service", "locality-penalty", "speculate", "topology"] {
             if parsed.get(f).is_some() {
                 return Err(format!(
                     "--{f} cannot be combined with --fig scenarios (each \
@@ -381,6 +421,13 @@ fn cmd_repro(parsed: &taos::cli::Parsed) -> Result<(), String> {
                 ));
             }
         }
+    }
+    // The topology figure's x-axis IS the locality penalty, so an explicit
+    // penalty flag would be silently overwritten per cell — reject it.
+    if fig_id == "topology" && parsed.get("locality-penalty").is_some() {
+        return Err("--locality-penalty cannot be combined with --fig topology \
+                    (the sweep's x-axis owns the penalty)"
+            .into());
     }
     apply_engine_flags(parsed, &mut base)?;
     base.validate().map_err(|e| e.to_string())?;
@@ -394,6 +441,7 @@ fn cmd_repro(parsed: &taos::cli::Parsed) -> Result<(), String> {
         "12" => sweep::fig_alpha_util_opts(&base, 0.75, &alphas, &opts),
         "13" | "table1" => sweep::fig_servers_opts(&base, &[4, 6, 8, 10, 12], &opts),
         "14" => sweep::fig_capacity_opts(&base, &[2, 3, 4, 5, 6], &opts),
+        "topology" => sweep::fig_topology_opts(&base, &[1.0, 2.0, 4.0, 8.0, 16.0], &opts),
         "scenarios" => {
             println!("scenario legend:");
             for (i, sc) in Scenario::ALL.iter().enumerate() {

@@ -57,6 +57,12 @@ pub struct SimOutcome {
     pub wf_evals: u64,
     /// Feasibility-oracle tier counters (exact assigners only).
     pub oracle_stats: Option<crate::assign::feasible::OracleStats>,
+    /// Tasks completed per locality tier (DES runs with an active
+    /// locality penalty only; empty otherwise). Index 0 is data-local,
+    /// rising with network distance per [`crate::topology`]; the counts
+    /// sum to the trace's total task count — the locality hit-rate
+    /// telemetry.
+    pub tier_tasks: Vec<u64>,
 }
 
 impl SimOutcome {
@@ -126,6 +132,7 @@ pub fn run_fifo(
         makespan,
         wf_evals: 0,
         oracle_stats: assigner.oracle_stats(),
+        tier_tasks: Vec::new(),
     })
 }
 
@@ -290,6 +297,7 @@ impl<'a> ReorderedRun<'a> {
             makespan,
             wf_evals: self.wf_evals,
             oracle_stats: None,
+            tier_tasks: Vec::new(),
         })
     }
 

@@ -116,6 +116,7 @@ pub fn run_fifo_stepping(
         makespan,
         wf_evals: 0,
         oracle_stats: None,
+        tier_tasks: Vec::new(),
     }
 }
 

@@ -11,6 +11,7 @@
 //! | Fig 13 + Table I | [`fig_servers`] |
 //! | Fig 14 | [`fig_capacity`] |
 //! | Scenario catalog | [`fig_scenarios`] |
+//! | Topology-locality penalty sweep | [`fig_topology`] |
 //!
 //! ## Parallel execution
 //!
@@ -59,6 +60,10 @@ pub struct Cell {
     /// Feasibility-oracle tier counters, summed over the cell's trials
     /// (exact assigners only).
     pub oracle: Option<OracleStats>,
+    /// Locality-tier hit counts summed over the cell's trials (DES engine
+    /// with locality only; index 0 = data-local). Empty for analytic
+    /// cells, so historical figure JSON stays byte-identical.
+    pub tier_tasks: Vec<u64>,
 }
 
 impl Cell {
@@ -79,6 +84,20 @@ impl Cell {
             ),
             None => "-".into(),
         }
+    }
+
+    /// Tier hit rates as percentages of the cell's total task count, or
+    /// `-` when the cell ran without locality telemetry.
+    pub fn tier_summary(&self) -> String {
+        let total: u64 = self.tier_tasks.iter().sum();
+        if total == 0 {
+            return "-".into();
+        }
+        self.tier_tasks
+            .iter()
+            .map(|&n| format!("{:.0}%", n as f64 * 100.0 / total as f64))
+            .collect::<Vec<_>>()
+            .join("/")
     }
 }
 
@@ -212,6 +231,29 @@ impl Figure {
             t3.row(row);
         }
         out.push_str(&t3.render());
+
+        // Locality-tier hit rates: only rendered when at least one cell
+        // ran the DES engine with a locality model, so the analytic
+        // figures keep their historical four-table layout.
+        if self.cells.iter().any(|c| !c.tier_tasks.is_empty()) {
+            out.push_str(&format!(
+                "\n== {} : locality tier hit rates (tier0=data-local/../top) ==\n",
+                self.name
+            ));
+            let mut t4 = TextTable::new(&hdr_refs);
+            for policy in SchedPolicy::ALL {
+                let mut row = vec![policy.name().to_string()];
+                for &s in &settings {
+                    row.push(match self.cell(policy.name(), s) {
+                        Some(c) => c.tier_summary(),
+                        None => "-".into(),
+                    });
+                }
+                row.push("".into());
+                t4.row(row);
+            }
+            out.push_str(&t4.render());
+        }
         out
     }
 
@@ -237,6 +279,12 @@ impl Figure {
                             })),
                         ),
                     ];
+                    if !c.tier_tasks.is_empty() {
+                        fields.push((
+                            "tier_tasks",
+                            Json::arr(c.tier_tasks.iter().map(|&n| Json::num(n as f64))),
+                        ));
+                    }
                     if let Some(o) = &c.oracle {
                         fields.push((
                             "oracle",
@@ -413,6 +461,7 @@ fn cells_from(specs: &[CellSpec], outcomes: &[SimOutcome], trials: usize) -> Vec
         let mut ov_sum = 0.0;
         let mut wf_evals_sum = 0u64;
         let mut oracle: Option<OracleStats> = None;
+        let mut tier_tasks: Vec<u64> = Vec::new();
         for o in group {
             jct_sum += o.mean_jct();
             ov_sum += o.overhead.mean_us();
@@ -420,6 +469,12 @@ fn cells_from(specs: &[CellSpec], outcomes: &[SimOutcome], trials: usize) -> Vec
             wf_evals_sum += o.wf_evals;
             if let Some(st) = &o.oracle_stats {
                 oracle.get_or_insert_with(OracleStats::default).merge(st);
+            }
+            if tier_tasks.len() < o.tier_tasks.len() {
+                tier_tasks.resize(o.tier_tasks.len(), 0);
+            }
+            for (acc, &n) in tier_tasks.iter_mut().zip(&o.tier_tasks) {
+                *acc += n;
             }
         }
         let pooled = crate::metrics::JctStats::from_jcts(&jcts);
@@ -433,6 +488,7 @@ fn cells_from(specs: &[CellSpec], outcomes: &[SimOutcome], trials: usize) -> Vec
             cdf: jct_cdf(&jcts, 64),
             wf_evals: wf_evals_sum,
             oracle,
+            tier_tasks,
         });
         i += trials;
     }
@@ -555,6 +611,41 @@ pub fn fig_scenarios(base: &ExperimentConfig, opts: &SweepOptions) -> crate::Res
         opts,
         &|cfg, idx| {
             Scenario::ALL[idx as usize].apply(cfg);
+        },
+    )
+}
+
+/// Topology-locality sweep: mean JCT and per-tier hit rates as the
+/// top-tier locality penalty grows, under a hierarchical topology (serial
+/// single-trial path; see [`fig_topology_opts`]).
+pub fn fig_topology(base: &ExperimentConfig, penalties: &[f64]) -> crate::Result<Figure> {
+    fig_topology_opts(base, penalties, &SweepOptions::default())
+}
+
+/// Topology-locality sweep with explicit execution options. Forces the
+/// DES engine (locality is engine-only) and, when the base config still
+/// has the flat topology, a multi-rack hierarchy so the sweep actually
+/// exercises intermediate tiers. Penalty 1 reproduces the locality-free
+/// baseline; growing penalties show where the OBTA/WF/RD ranking flips.
+pub fn fig_topology_opts(
+    base: &ExperimentConfig,
+    penalties: &[f64],
+    opts: &SweepOptions,
+) -> crate::Result<Figure> {
+    use crate::des::service::EngineKind;
+    use crate::topology::TopologyKind;
+    run_figure(
+        "fig-topology-locality".into(),
+        "penalty",
+        base,
+        penalties,
+        opts,
+        &|cfg, p| {
+            cfg.sim.engine = EngineKind::Des;
+            if cfg.sim.topology == TopologyKind::Flat {
+                cfg.sim.topology = TopologyKind::MultiRack;
+            }
+            cfg.sim.locality_penalty = p;
         },
     )
 }
@@ -704,6 +795,37 @@ mod tests {
             // Pooled CDF covers 2 × 40 jobs.
             assert!(!c.cdf.is_empty());
         }
+    }
+
+    #[test]
+    fn topology_sweep_reports_tier_hit_rates() {
+        let base = quick_base(17);
+        let fig = fig_topology_opts(
+            &base,
+            &[1.0, 4.0],
+            &SweepOptions::default().with_threads(0),
+        )
+        .unwrap();
+        assert_eq!(fig.cells.len(), 2 * 6);
+        for c in &fig.cells {
+            assert!(c.mean_jct.is_finite() && c.mean_jct > 0.0, "{}", c.policy);
+            if c.setting == 1.0 {
+                // Penalty 1 takes the locality-free DES path: no telemetry.
+                assert!(c.tier_tasks.is_empty(), "{}", c.policy);
+            } else {
+                // Multi-rack = 3 tiers, every task credited exactly once.
+                assert_eq!(c.tier_tasks.len(), 3, "{}", c.policy);
+                assert!(c.tier_tasks.iter().sum::<u64>() > 0, "{}", c.policy);
+            }
+        }
+        let text = fig.render();
+        assert!(text.contains("locality tier hit rates"), "{text}");
+        let parsed =
+            crate::util::json::Json::parse(&fig.to_json().to_string()).unwrap();
+        let cells = parsed.get("cells").unwrap().as_arr().unwrap();
+        assert!(cells
+            .iter()
+            .any(|c| c.get("tier_tasks").is_some()));
     }
 
     #[test]

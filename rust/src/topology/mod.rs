@@ -1,0 +1,469 @@
+//! Hierarchical network-cost topology for the multi-level locality model.
+//!
+//! PR 5's locality was a single scalar: a task either runs on a
+//! data-local server at rate `μ` or anywhere else at `μ/penalty`. Real
+//! near-data scheduling (Yekkehkhany's multi-level-locality model,
+//! arXiv 1702.07802; the affinity model of arXiv 1705.03125) lives in a
+//! rack/zone/region hierarchy where remoteness is graded. This module
+//! supplies that grading:
+//!
+//! - [`TopologyKind`]: cluster-shape presets (`flat`, `multi-rack`,
+//!   `multi-zone`, `fat-tree`), selectable via `--topology` / the
+//!   `topology` config key.
+//! - [`Topology`]: the concrete server→server distance function for one
+//!   cluster size — every pair of servers maps to a **tier** (0 = the
+//!   server itself, rising with network distance), derived from a
+//!   deterministic contiguous rack/zone assignment.
+//! - [`Locality`]: the precomputed per-(job, group, server) tier table
+//!   the DES engine charges execution rates from (`μ / tier_penalty`),
+//!   plus the per-tier task telemetry helpers.
+//!
+//! Tier semantics: for a task *group* (which owns a data-local server
+//! set), a server's tier is 0 when it is in the set, otherwise the
+//! minimum pair tier from any set member — i.e. "same rack as a replica"
+//! beats "same zone as a replica" beats "cross-zone". The top tier of
+//! every preset always charges the full configured penalty, and tier 0
+//! always charges exactly 1.0, so `flat` reproduces PR 5's two-level
+//! model bit for bit and a penalty of `1.0` makes every tier unit-rate
+//! (the no-locality fast path).
+
+use crate::job::{Job, ServerId, TaskCount};
+
+/// Servers per rack (contiguous assignment: rack of `s` is `s / 4`).
+pub const RACK_SIZE: usize = 4;
+/// Racks per zone (`multi-zone`): a zone spans 8 contiguous servers.
+pub const RACKS_PER_ZONE: usize = 2;
+/// Edge switches per pod (`fat-tree`): a pod spans 16 contiguous
+/// servers (4 edges × 4 servers).
+pub const EDGES_PER_POD: usize = 4;
+
+/// Cluster-shape preset. Parsed from `--topology` / the `topology`
+/// config key; `flat` (the default) is PR 5's two-level model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopologyKind {
+    /// Two tiers: data-local (rate `μ`) vs anywhere else (`μ/penalty`).
+    Flat,
+    /// Three tiers: local / same rack / cross-rack.
+    MultiRack,
+    /// Four tiers: local / same rack / same zone / cross-zone.
+    MultiZone,
+    /// Four tiers: local / same edge switch / same pod / core.
+    FatTree,
+}
+
+impl TopologyKind {
+    pub const ALL: [TopologyKind; 4] = [
+        TopologyKind::Flat,
+        TopologyKind::MultiRack,
+        TopologyKind::MultiZone,
+        TopologyKind::FatTree,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TopologyKind::Flat => "flat",
+            TopologyKind::MultiRack => "multi-rack",
+            TopologyKind::MultiZone => "multi-zone",
+            TopologyKind::FatTree => "fat-tree",
+        }
+    }
+
+    pub fn describe(self) -> &'static str {
+        match self {
+            TopologyKind::Flat => "two tiers: data-local vs remote (the scalar penalty model)",
+            TopologyKind::MultiRack => "three tiers: local / same rack (4 servers) / cross-rack",
+            TopologyKind::MultiZone => {
+                "four tiers: local / same rack (4) / same zone (8) / cross-zone"
+            }
+            TopologyKind::FatTree => {
+                "four tiers: local / same edge (4) / same pod (16) / core"
+            }
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TopologyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "flat" => Some(TopologyKind::Flat),
+            "multi-rack" | "multi_rack" | "multirack" | "rack" => Some(TopologyKind::MultiRack),
+            "multi-zone" | "multi_zone" | "multizone" | "zone" => Some(TopologyKind::MultiZone),
+            "fat-tree" | "fat_tree" | "fattree" => Some(TopologyKind::FatTree),
+            _ => None,
+        }
+    }
+
+    /// Number of distinct tiers (including tier 0, the local tier).
+    pub fn num_tiers(self) -> usize {
+        match self {
+            TopologyKind::Flat => 2,
+            TopologyKind::MultiRack => 3,
+            TopologyKind::MultiZone | TopologyKind::FatTree => 4,
+        }
+    }
+}
+
+impl Default for TopologyKind {
+    fn default() -> Self {
+        TopologyKind::Flat
+    }
+}
+
+/// The concrete hierarchy for one cluster size: a deterministic
+/// contiguous rack/zone assignment plus the pair→tier distance function
+/// derived from it. Clusters whose size is not a multiple of the
+/// rack/zone width simply get a short final rack/zone — the tier
+/// function only compares labels.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub kind: TopologyKind,
+    pub num_servers: usize,
+    /// Per-server rack label (edge switch for `fat-tree`).
+    rack: Vec<u32>,
+    /// Per-server zone label (pod for `fat-tree`); unused by
+    /// `flat`/`multi-rack` but kept uniform for the tier function.
+    zone: Vec<u32>,
+}
+
+impl Topology {
+    pub fn build(kind: TopologyKind, num_servers: usize) -> Topology {
+        let zone_width = match kind {
+            TopologyKind::FatTree => RACK_SIZE * EDGES_PER_POD,
+            _ => RACK_SIZE * RACKS_PER_ZONE,
+        };
+        Topology {
+            kind,
+            num_servers,
+            rack: (0..num_servers).map(|s| (s / RACK_SIZE) as u32).collect(),
+            zone: (0..num_servers).map(|s| (s / zone_width) as u32).collect(),
+        }
+    }
+
+    pub fn num_tiers(&self) -> usize {
+        self.kind.num_tiers()
+    }
+
+    /// The most remote tier (`num_tiers − 1`): always reachable by every
+    /// server pair, so it is the expansion bound for the assigners' view.
+    pub fn top_tier(&self) -> usize {
+        self.num_tiers() - 1
+    }
+
+    pub fn rack_of(&self, s: ServerId) -> u32 {
+        self.rack[s]
+    }
+
+    /// Network tier between two servers: 0 for the server itself, rising
+    /// with distance. Every preset's top tier is its cross-everything
+    /// tier, so `pair_tier <= top_tier()` always holds.
+    pub fn pair_tier(&self, a: ServerId, b: ServerId) -> usize {
+        if a == b {
+            return 0;
+        }
+        match self.kind {
+            TopologyKind::Flat => 1,
+            TopologyKind::MultiRack => {
+                if self.rack[a] == self.rack[b] {
+                    1
+                } else {
+                    2
+                }
+            }
+            TopologyKind::MultiZone | TopologyKind::FatTree => {
+                if self.rack[a] == self.rack[b] {
+                    1
+                } else if self.zone[a] == self.zone[b] {
+                    2
+                } else {
+                    3
+                }
+            }
+        }
+    }
+
+    /// Tier of `server` relative to a task group's data-local server set
+    /// (sorted, as [`crate::job::TaskGroup`] guarantees): 0 when the
+    /// server holds the data, otherwise the minimum pair tier to any
+    /// replica — the cheapest copy is what a transfer would read.
+    pub fn group_tier(&self, local_sorted: &[ServerId], server: ServerId) -> usize {
+        if local_sorted.binary_search(&server).is_ok() {
+            return 0;
+        }
+        local_sorted
+            .iter()
+            .map(|&l| self.pair_tier(l, server))
+            .min()
+            .unwrap_or(self.top_tier())
+    }
+
+    /// Per-tier execution-rate penalties for a configured top-tier
+    /// penalty `p`: tier 0 is exactly `1.0`, the top tier exactly `p`,
+    /// intermediate tiers interpolate (cheap within-rack hops, expensive
+    /// cross-zone ones). At `p = 1.0` every tier is exactly `1.0`.
+    pub fn penalties(&self, p: f64) -> Vec<f64> {
+        let d = p - 1.0;
+        match self.kind {
+            TopologyKind::Flat => vec![1.0, p],
+            TopologyKind::MultiRack => vec![1.0, 1.0 + d * 0.4, p],
+            TopologyKind::MultiZone => vec![1.0, 1.0 + d / 3.0, 1.0 + d * 2.0 / 3.0, p],
+            TopologyKind::FatTree => vec![1.0, 1.0 + d * 0.15, 1.0 + d * 0.6, p],
+        }
+    }
+
+    /// The servers a group may run on when placement is opened up to
+    /// `tier`: every server whose [`Self::group_tier`] is at most `tier`.
+    /// At `top_tier()` this is the whole cluster (the DES expansion
+    /// view); lower tiers give the graded eligible sets (data-local →
+    /// same-rack → same-zone → anywhere).
+    pub fn eligible_within(&self, local_sorted: &[ServerId], tier: usize) -> Vec<ServerId> {
+        (0..self.num_servers)
+            .filter(|&s| self.group_tier(local_sorted, s) <= tier)
+            .collect()
+    }
+}
+
+/// Precomputed per-(job, group, server) tier table plus the per-tier
+/// penalties: the execution-rate view the DES engine charges from, and
+/// the definition of the tier hit-rate telemetry. Built once per run
+/// from the **original** (unexpanded) jobs so tier lookups during the
+/// event cascade are a flat array index.
+#[derive(Clone, Debug)]
+pub struct Locality {
+    /// Per-job starting row (`offsets[job] + k` is group `k`'s row).
+    offsets: Vec<usize>,
+    /// Flattened `rows × num_servers` tier table.
+    tiers: Vec<u8>,
+    penalties: Vec<f64>,
+    num_servers: usize,
+}
+
+impl Locality {
+    pub fn new(jobs: &[Job], topo: &Topology, penalty: f64) -> Locality {
+        let m = topo.num_servers;
+        let mut offsets = Vec::with_capacity(jobs.len());
+        let mut rows = 0usize;
+        for j in jobs {
+            offsets.push(rows);
+            rows += j.groups.len();
+        }
+        let mut tiers = Vec::with_capacity(rows * m);
+        for j in jobs {
+            for g in &j.groups {
+                for s in 0..m {
+                    tiers.push(topo.group_tier(&g.servers, s) as u8);
+                }
+            }
+        }
+        Locality {
+            offsets,
+            tiers,
+            penalties: topo.penalties(penalty),
+            num_servers: m,
+        }
+    }
+
+    pub fn num_tiers(&self) -> usize {
+        self.penalties.len()
+    }
+
+    /// Tier of `server` for group `k` of `job`.
+    pub fn tier(&self, job: usize, k: usize, server: ServerId) -> usize {
+        self.tiers[(self.offsets[job] + k) * self.num_servers + server] as usize
+    }
+
+    pub fn penalty_of(&self, tier: usize) -> f64 {
+        self.penalties[tier]
+    }
+
+    /// Execution-rate weight of one task of group `k` on `server`.
+    pub fn rate_weight(&self, job: usize, k: usize, server: ServerId) -> f64 {
+        self.penalties[self.tier(job, k, server)]
+    }
+
+    /// True when every part of a batch runs at exactly the local rate on
+    /// `server` — the condition under which the duration estimate must be
+    /// bit-identical to the no-locality integer path.
+    pub fn unit_rate(&self, job: usize, parts: &[(usize, TaskCount)], server: ServerId) -> bool {
+        parts
+            .iter()
+            .all(|&(k, _)| self.rate_weight(job, k, server) == 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::TaskGroup;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn parse_roundtrip_and_aliases() {
+        for kind in TopologyKind::ALL {
+            assert_eq!(TopologyKind::parse(kind.name()), Some(kind));
+            assert!(!kind.describe().is_empty());
+        }
+        assert_eq!(TopologyKind::parse("rack"), Some(TopologyKind::MultiRack));
+        assert_eq!(TopologyKind::parse("multi_zone"), Some(TopologyKind::MultiZone));
+        assert_eq!(TopologyKind::parse("fattree"), Some(TopologyKind::FatTree));
+        assert_eq!(TopologyKind::parse("torus"), None);
+        assert_eq!(TopologyKind::default(), TopologyKind::Flat);
+    }
+
+    #[test]
+    fn pair_tiers_follow_the_hierarchy() {
+        let t = Topology::build(TopologyKind::MultiZone, 16);
+        assert_eq!(t.pair_tier(0, 0), 0);
+        assert_eq!(t.pair_tier(0, 3), 1, "same rack");
+        assert_eq!(t.pair_tier(0, 4), 2, "same zone, different rack");
+        assert_eq!(t.pair_tier(0, 8), 3, "cross-zone");
+        // Symmetry.
+        for a in 0..16 {
+            for b in 0..16 {
+                assert_eq!(t.pair_tier(a, b), t.pair_tier(b, a));
+            }
+        }
+
+        let flat = Topology::build(TopologyKind::Flat, 16);
+        assert_eq!(flat.pair_tier(0, 15), 1);
+        assert_eq!(flat.num_tiers(), 2);
+
+        let ft = Topology::build(TopologyKind::FatTree, 32);
+        assert_eq!(ft.pair_tier(0, 3), 1, "same edge");
+        assert_eq!(ft.pair_tier(0, 12), 2, "same pod");
+        assert_eq!(ft.pair_tier(0, 16), 3, "core");
+    }
+
+    #[test]
+    fn group_tier_takes_the_cheapest_replica() {
+        let t = Topology::build(TopologyKind::MultiRack, 12);
+        // Replicas on servers 0 (rack 0) and 8 (rack 2).
+        let local = vec![0usize, 8];
+        assert_eq!(t.group_tier(&local, 0), 0);
+        assert_eq!(t.group_tier(&local, 8), 0);
+        assert_eq!(t.group_tier(&local, 1), 1, "same rack as replica 0");
+        assert_eq!(t.group_tier(&local, 9), 1, "same rack as replica 8");
+        assert_eq!(t.group_tier(&local, 5), 2, "rack 1 holds no replica");
+    }
+
+    #[test]
+    fn penalties_are_anchored_and_monotone() {
+        for kind in TopologyKind::ALL {
+            let t = Topology::build(kind, 16);
+            for p in [1.0, 2.0, 8.0] {
+                let pen = t.penalties(p);
+                assert_eq!(pen.len(), kind.num_tiers());
+                assert_eq!(pen[0], 1.0, "{}: tier 0 is exactly local", kind.name());
+                assert_eq!(
+                    *pen.last().unwrap(),
+                    p,
+                    "{}: top tier charges the full penalty",
+                    kind.name()
+                );
+                for w in pen.windows(2) {
+                    assert!(w[0] <= w[1], "{}: penalties must be monotone", kind.name());
+                }
+                if p == 1.0 {
+                    assert!(pen.iter().all(|&x| x == 1.0), "unit penalty ⇒ unit tiers");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eligible_sets_grow_with_the_tier() {
+        let t = Topology::build(TopologyKind::MultiZone, 16);
+        let local = vec![1usize];
+        assert_eq!(t.eligible_within(&local, 0), vec![1]);
+        assert_eq!(t.eligible_within(&local, 1), vec![0, 1, 2, 3], "the rack");
+        assert_eq!(
+            t.eligible_within(&local, 2),
+            (0..8).collect::<Vec<_>>(),
+            "the zone"
+        );
+        assert_eq!(
+            t.eligible_within(&local, t.top_tier()),
+            (0..16).collect::<Vec<_>>(),
+            "top tier is the whole cluster"
+        );
+    }
+
+    #[test]
+    fn relabeling_within_a_rack_commutes_with_the_tier_table() {
+        // The metamorphic core of the tier telemetry: permuting servers
+        // *within a rack* is a topology automorphism, so the tier of
+        // π(server) relative to π(local set) equals the original tier —
+        // tier histograms of any fixed schedule are invariant under π.
+        let m = 16;
+        let mut rng = Rng::seed_from(0x70B0);
+        for kind in [
+            TopologyKind::MultiRack,
+            TopologyKind::MultiZone,
+            TopologyKind::FatTree,
+        ] {
+            let t = Topology::build(kind, m);
+            // π: swap two servers inside rack 0 and two inside rack 2.
+            let mut perm: Vec<usize> = (0..m).collect();
+            perm.swap(1, 3);
+            perm.swap(8, 10);
+            for _ in 0..40 {
+                let ns = 1 + rng.gen_range(m as u64) as usize;
+                let mut sv: Vec<usize> = (0..m).collect();
+                rng.shuffle(&mut sv);
+                sv.truncate(ns);
+                let local = TaskGroup::new(1, sv).servers;
+                let relabeled =
+                    TaskGroup::new(1, local.iter().map(|&s| perm[s]).collect()).servers;
+                for s in 0..m {
+                    assert_eq!(
+                        t.group_tier(&local, s),
+                        t.group_tier(&relabeled, perm[s]),
+                        "{}: tier must commute with a within-rack relabel",
+                        kind.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn locality_table_matches_direct_lookup() {
+        let m = 12;
+        let topo = Topology::build(TopologyKind::MultiRack, m);
+        let jobs = vec![
+            Job {
+                id: 0,
+                arrival: 0,
+                groups: vec![
+                    TaskGroup::new(5, vec![0, 1]),
+                    TaskGroup::new(3, vec![9]),
+                ],
+                mu: vec![1; m],
+            },
+            Job {
+                id: 1,
+                arrival: 2,
+                groups: vec![TaskGroup::new(4, vec![4, 5, 6, 7])],
+                mu: vec![1; m],
+            },
+        ];
+        let loc = Locality::new(&jobs, &topo, 3.0);
+        assert_eq!(loc.num_tiers(), 3);
+        for (j, job) in jobs.iter().enumerate() {
+            for (k, g) in job.groups.iter().enumerate() {
+                for s in 0..m {
+                    assert_eq!(loc.tier(j, k, s), topo.group_tier(&g.servers, s));
+                }
+            }
+        }
+        // Rate weights anchor to the tier penalties.
+        assert_eq!(loc.rate_weight(0, 0, 0), 1.0);
+        assert_eq!(loc.rate_weight(0, 0, 2), 1.0 + 2.0 * 0.4, "same rack");
+        assert_eq!(loc.rate_weight(0, 0, 11), 3.0, "cross-rack");
+        // unit_rate: all-local parts batch vs one remote part.
+        assert!(loc.unit_rate(0, &[(0, 5)], 0));
+        assert!(!loc.unit_rate(0, &[(0, 5), (1, 3)], 0));
+        // At penalty 1.0 every server is unit-rate everywhere.
+        let unit = Locality::new(&jobs, &topo, 1.0);
+        for s in 0..m {
+            assert!(unit.unit_rate(0, &[(0, 5), (1, 3)], s));
+        }
+    }
+}

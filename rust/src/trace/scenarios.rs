@@ -20,7 +20,9 @@
 //! | `bursty-hetero` | compound: bursty arrivals × Zipf server speeds |
 //! | `hotspot-heavy-tail` | compound: Pareto sizes × hot-spot placement |
 //! | `straggler` | DES engine: Pareto service tails + racing replicas |
-//! | `multi-locality` | DES engine: remote execution at `μ/penalty` |
+//! | `multi-locality` | DES engine: flat two-tier locality, remote at `μ/penalty` |
+//! | `multi-rack` | DES engine: rack hierarchy, tiered locality penalties |
+//! | `multi-zone` | DES engine: rack+zone hierarchy, tiered locality penalties |
 //!
 //! The two compound presets close the one-axis-per-scenario gap: stress
 //! regimes that only emerge when axes interact (bursts landing on a
@@ -36,9 +38,9 @@
 //! [`ClusterConfig`](crate::config::ClusterConfig) /
 //! [`SimConfig`](crate::config::SimConfig) knobs (`mu_skew`,
 //! `placement_mode`, `zipf_alpha = 1.5` for `hotspot`; `engine`,
-//! `service`, `speculate`, `locality_penalty` for the engine presets) —
-//! precedence is by ordering, so callers apply the scenario first and
-//! explicit user knobs after.
+//! `service`, `speculate`, `locality_penalty`, `topology` for the engine
+//! presets) — precedence is by ordering, so callers apply the scenario
+//! first and explicit user knobs after.
 
 use crate::cluster::placement::PlacementMode;
 use crate::config::{ExperimentConfig, TraceConfig};
@@ -80,14 +82,22 @@ pub enum Scenario {
     /// race, first completion cancels the sibling (Wang–Joshi–Wornell's
     /// replication regime).
     Straggler,
-    /// Engine preset (DES only): two-level data locality — every server
-    /// can run every task, but remote execution pays a rate penalty
-    /// (Yekkehkhany's near-data scheduling regime).
+    /// Engine preset (DES only): two-level data locality on the `flat`
+    /// topology — every server can run every task, but remote execution
+    /// pays a rate penalty (Yekkehkhany's near-data scheduling regime).
     MultiLocality,
+    /// Engine preset (DES only): hierarchical locality on the
+    /// `multi-rack` topology — remote execution pays a *tiered* penalty
+    /// (cheap within the data's rack, full across racks).
+    MultiRack,
+    /// Engine preset (DES only): hierarchical locality on the
+    /// `multi-zone` topology — three remote tiers (rack, zone, beyond)
+    /// with graded penalties.
+    MultiZone,
 }
 
 impl Scenario {
-    pub const ALL: [Scenario; 9] = [
+    pub const ALL: [Scenario; 11] = [
         Scenario::Alibaba,
         Scenario::Bursty,
         Scenario::HeavyTail,
@@ -97,6 +107,8 @@ impl Scenario {
         Scenario::HotspotHeavyTail,
         Scenario::Straggler,
         Scenario::MultiLocality,
+        Scenario::MultiRack,
+        Scenario::MultiZone,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -110,6 +122,8 @@ impl Scenario {
             Scenario::HotspotHeavyTail => "hotspot-heavy-tail",
             Scenario::Straggler => "straggler",
             Scenario::MultiLocality => "multi-locality",
+            Scenario::MultiRack => "multi-rack",
+            Scenario::MultiZone => "multi-zone",
         }
     }
 
@@ -124,7 +138,9 @@ impl Scenario {
             Scenario::BurstyHetero => "compound: arrival bursts x Zipf-skewed speeds",
             Scenario::HotspotHeavyTail => "compound: Pareto sizes x hot-spot placement",
             Scenario::Straggler => "DES: Pareto service tails + racing replica speculation",
-            Scenario::MultiLocality => "DES: remote execution allowed at mu/penalty rate",
+            Scenario::MultiLocality => "DES: flat locality, remote execution at mu/penalty",
+            Scenario::MultiRack => "DES: rack topology, tiered locality penalties",
+            Scenario::MultiZone => "DES: rack+zone topology, three graded remote tiers",
         }
     }
 
@@ -143,6 +159,8 @@ impl Scenario {
             "multi-locality" | "multi_locality" | "multilocality" | "locality" => {
                 Some(Scenario::MultiLocality)
             }
+            "multi-rack" | "multi_rack" | "multirack" => Some(Scenario::MultiRack),
+            "multi-zone" | "multi_zone" | "multizone" => Some(Scenario::MultiZone),
             _ => None,
         }
     }
@@ -170,7 +188,13 @@ impl Scenario {
     /// model / speculation / locality penalty): the synthetic trace
     /// equals the baseline, so a CSV export captures none of it.
     pub fn has_engine_twist(&self) -> bool {
-        matches!(self, Scenario::Straggler | Scenario::MultiLocality)
+        matches!(
+            self,
+            Scenario::Straggler
+                | Scenario::MultiLocality
+                | Scenario::MultiRack
+                | Scenario::MultiZone
+        )
     }
 
     /// Select this scenario on a config: sets `trace.scenario` and fully
@@ -185,6 +209,7 @@ impl Scenario {
     /// the config-file parser do).
     pub fn apply(&self, cfg: &mut ExperimentConfig) {
         use crate::des::service::{EngineKind, ServiceModel};
+        use crate::topology::TopologyKind;
         cfg.trace.scenario = *self;
         cfg.cluster.mu_skew = 0.0;
         cfg.cluster.placement_mode = PlacementMode::Ring;
@@ -193,6 +218,7 @@ impl Scenario {
         cfg.sim.engine = EngineKind::Analytic;
         cfg.sim.service = ServiceModel::Deterministic;
         cfg.sim.locality_penalty = 1.0;
+        cfg.sim.topology = TopologyKind::Flat;
         cfg.sim.speculate = 0.0;
         match self {
             Scenario::HeteroCap | Scenario::BurstyHetero => {
@@ -214,6 +240,16 @@ impl Scenario {
                 cfg.sim.engine = EngineKind::Des;
                 cfg.sim.locality_penalty = 2.0;
             }
+            Scenario::MultiRack => {
+                cfg.sim.engine = EngineKind::Des;
+                cfg.sim.locality_penalty = 2.0;
+                cfg.sim.topology = TopologyKind::MultiRack;
+            }
+            Scenario::MultiZone => {
+                cfg.sim.engine = EngineKind::Des;
+                cfg.sim.locality_penalty = 3.0;
+                cfg.sim.topology = TopologyKind::MultiZone;
+            }
             // Trace-shape scenarios (and the baseline) need no cluster
             // twist beyond the reset above. zipf_alpha is deliberately
             // left alone for them: it is a first-class experiment axis,
@@ -224,17 +260,19 @@ impl Scenario {
 
     /// Generate the scenario's synthetic trace. Cluster-side scenarios
     /// (`hetero-cap`, `hotspot`) and the engine presets (`straggler`,
-    /// `multi-locality`) share the baseline trace shape — their twists
-    /// live in [`Scenario::apply`]'s cluster/engine knobs. The match is
-    /// deliberately exhaustive so a future variant cannot compile
-    /// without declaring its trace shape.
+    /// `multi-locality`, `multi-rack`, `multi-zone`) share the baseline
+    /// trace shape — their twists live in [`Scenario::apply`]'s
+    /// cluster/engine knobs. The match is deliberately exhaustive so a
+    /// future variant cannot compile without declaring its trace shape.
     pub fn synth(&self, cfg: &TraceConfig, rng: &mut Rng) -> Trace {
         match self {
             Scenario::Alibaba
             | Scenario::HeteroCap
             | Scenario::Hotspot
             | Scenario::Straggler
-            | Scenario::MultiLocality => Trace::synth_alibaba(cfg, rng),
+            | Scenario::MultiLocality
+            | Scenario::MultiRack
+            | Scenario::MultiZone => Trace::synth_alibaba(cfg, rng),
             Scenario::Bursty | Scenario::BurstyHetero => synth_bursty(cfg, rng),
             Scenario::HeavyTail | Scenario::HotspotHeavyTail => synth_heavy_tail(cfg, rng),
         }
@@ -440,6 +478,7 @@ mod tests {
     #[test]
     fn engine_presets_set_and_reset_des_knobs() {
         use crate::des::service::{EngineKind, ServiceModel};
+        use crate::topology::TopologyKind;
         let mut c = ExperimentConfig::default();
         Scenario::Straggler.apply(&mut c);
         assert_eq!(c.sim.engine, EngineKind::Des);
@@ -459,8 +498,44 @@ mod tests {
         assert_eq!(c.sim.engine, EngineKind::Des);
         assert!(c.sim.locality_penalty > 1.0);
         assert!(c.sim.service.is_deterministic());
+        assert_eq!(
+            c.sim.topology,
+            TopologyKind::Flat,
+            "multi-locality is the flat two-tier topology alias"
+        );
         c.validate().unwrap();
         assert!(Scenario::MultiLocality.has_engine_twist());
+
+        // The hierarchical presets select their topology, and
+        // re-selecting the baseline resets it with the other engine
+        // knobs.
+        let mut c = ExperimentConfig::default();
+        Scenario::MultiRack.apply(&mut c);
+        assert_eq!(c.sim.engine, EngineKind::Des);
+        assert_eq!(c.sim.topology, TopologyKind::MultiRack);
+        assert!(c.sim.locality_penalty > 1.0);
+        c.validate().unwrap();
+        assert!(Scenario::MultiRack.has_engine_twist());
+        Scenario::Alibaba.apply(&mut c);
+        assert_eq!(c, ExperimentConfig::default());
+
+        let mut c = ExperimentConfig::default();
+        Scenario::MultiZone.apply(&mut c);
+        assert_eq!(c.sim.topology, TopologyKind::MultiZone);
+        c.validate().unwrap();
+
+        // A topology key after the scenario still wins (ordering rule).
+        let parsed = ExperimentConfig::from_str(
+            "scenario = multi-rack\ntopology = multi-zone",
+        )
+        .unwrap();
+        assert_eq!(parsed.sim.topology, TopologyKind::MultiZone);
+        // ...and a scenario key after the knob resets it.
+        let parsed = ExperimentConfig::from_str(
+            "engine = des\ntopology = multi-zone\nscenario = multi-rack",
+        )
+        .unwrap();
+        assert_eq!(parsed.sim.topology, TopologyKind::MultiRack);
         // Explicit knobs after the scenario still win (ordering rule) —
         // asserted through the real config-file path.
         let parsed = ExperimentConfig::from_str(

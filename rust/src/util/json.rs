@@ -331,6 +331,21 @@ mod tests {
     }
 
     #[test]
+    fn infinities_become_null() {
+        // JSON has no Inf either — both signs serialize as null, and the
+        // result stays parseable (a bare `inf` token would not be).
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string(), "null");
+        let j = Json::obj(vec![
+            ("hi", Json::num(f64::INFINITY)),
+            ("lo", Json::num(f64::NEG_INFINITY)),
+        ]);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("hi"), Some(&Json::Null));
+        assert_eq!(parsed.get("lo"), Some(&Json::Null));
+    }
+
+    #[test]
     fn roundtrip() {
         let j = Json::obj(vec![
             ("a", Json::arr(vec![Json::num(1.0), Json::num(2.5), Json::Null])),

@@ -144,13 +144,118 @@ fn repro_scenarios_sweep_rejects_engine_flags() {
 
 #[test]
 fn repro_quick_engine_presets_run_end_to_end() {
-    for scenario in ["straggler", "multi-locality"] {
+    for scenario in ["straggler", "multi-locality", "multi-rack", "multi-zone"] {
         let text = run_ok(&[
             "repro", "--fig", "13", "--quick", "--scenario", scenario, "--seed", "3",
         ]);
         assert!(text.contains("p50/p99"), "{scenario}: percentile table: {text}");
         assert!(text.contains("ocwf-acc"), "{scenario}: {text}");
     }
+}
+
+#[test]
+fn repro_topology_fig_reports_tier_hit_rates() {
+    let text = run_ok(&["repro", "--fig", "topology", "--quick", "--seed", "3"]);
+    assert!(text.contains("fig-topology-locality"), "{text}");
+    assert!(text.contains("locality tier hit rates"), "{text}");
+    assert!(text.contains("penalty=16"), "{text}");
+}
+
+#[test]
+fn repro_topology_fig_rejects_penalty_flag() {
+    let out = taos()
+        .args(["repro", "--fig", "topology", "--quick", "--locality-penalty", "4"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("--fig topology"),
+        "error must explain the rejected combination"
+    );
+}
+
+#[test]
+fn simulate_topology_locality_emits_tier_telemetry() {
+    let json = run_ok(&[
+        "simulate", "--alg", "wf", "--jobs", "12", "--tasks", "400", "--servers", "16",
+        "--avail", "3:5", "--seed", "5", "--engine", "des", "--locality-penalty", "2",
+        "--topology", "multi-rack", "--json",
+    ]);
+    let parsed = taos::util::json::Json::parse(json.trim()).expect("valid json");
+    assert_eq!(
+        parsed.get("topology").and_then(|t| t.as_str()),
+        Some("multi-rack")
+    );
+    let tiers = parsed
+        .get("tier_tasks")
+        .and_then(|t| t.as_arr())
+        .expect("tier telemetry exported");
+    assert_eq!(tiers.len(), 3, "multi-rack = local/rack/remote");
+    let total: f64 = tiers.iter().filter_map(|t| t.as_f64()).sum();
+    assert_eq!(total, 400.0, "every task lands in exactly one tier");
+}
+
+#[test]
+fn explicit_engine_flags_override_scenario_presets() {
+    // Every engine knob: the preset sets it, the explicit flag must win.
+    // `straggler` turns on pareto service + speculation; forcing them
+    // back off (plus det service) must reproduce the deterministic path,
+    // whose mean JCT matches the same workload run without the preset's
+    // engine twist at all.
+    let base = [
+        "simulate", "--alg", "wf", "--jobs", "12", "--tasks", "400", "--servers", "15",
+        "--avail", "3:5", "--seed", "5", "--json",
+    ];
+    let mut overridden = base.to_vec();
+    overridden.extend_from_slice(&[
+        "--scenario", "straggler", "--service", "det", "--speculate", "0",
+    ]);
+    let o = taos::util::json::Json::parse(run_ok(&overridden).trim()).unwrap();
+
+    // The same trace shape with the engine twist stripped: straggler's
+    // workload is the alibaba shape, so compare against an explicit des
+    // run of the plain workload.
+    let mut plain = base.to_vec();
+    plain.extend_from_slice(&["--engine", "des"]);
+    let p = taos::util::json::Json::parse(run_ok(&plain).trim()).unwrap();
+    assert_eq!(
+        o.get("jct").unwrap().get("mean").unwrap().as_f64(),
+        p.get("jct").unwrap().get("mean").unwrap().as_f64(),
+        "--service/--speculate must override the straggler preset"
+    );
+
+    // --topology flat + --locality-penalty 1 neutralize the multi-rack
+    // preset the same way.
+    let mut flat = base.to_vec();
+    flat.extend_from_slice(&[
+        "--scenario", "multi-rack", "--topology", "flat", "--locality-penalty", "1",
+    ]);
+    let f = taos::util::json::Json::parse(run_ok(&flat).trim()).unwrap();
+    assert_eq!(
+        f.get("topology").and_then(|t| t.as_str()),
+        Some("flat"),
+        "--topology must override the multi-rack preset"
+    );
+    assert_eq!(
+        f.get("jct").unwrap().get("mean").unwrap().as_f64(),
+        p.get("jct").unwrap().get("mean").unwrap().as_f64(),
+        "--topology/--locality-penalty must override the multi-rack preset"
+    );
+
+    // --engine analytic against a DES-only preset is an explicit
+    // (rejected) choice — proof the flag, not the preset, decides.
+    let out = taos()
+        .args([
+            "simulate", "--alg", "wf", "--jobs", "12", "--tasks", "400", "--servers", "15",
+            "--avail", "3:5", "--scenario", "multi-zone", "--engine", "analytic",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("engine"),
+        "the overriding flag must surface the engine-only validation error"
+    );
 }
 
 #[test]

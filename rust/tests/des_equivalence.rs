@@ -78,6 +78,8 @@ fn des_reordered_bit_identical_across_reorder_thread_counts() {
         Scenario::Hotspot,
         Scenario::Straggler,
         Scenario::MultiLocality,
+        Scenario::MultiRack,
+        Scenario::MultiZone,
     ] {
         let mut cfg = tiny_cfg(scenario);
         cfg.sim.engine = EngineKind::Des;
@@ -104,7 +106,12 @@ fn des_reordered_bit_identical_across_reorder_thread_counts() {
 
 #[test]
 fn stochastic_presets_are_seed_reproducible() {
-    for scenario in [Scenario::Straggler, Scenario::MultiLocality] {
+    for scenario in [
+        Scenario::Straggler,
+        Scenario::MultiLocality,
+        Scenario::MultiRack,
+        Scenario::MultiZone,
+    ] {
         let cfg = tiny_cfg(scenario);
         assert_eq!(cfg.sim.engine, EngineKind::Des);
         for policy in [
@@ -151,6 +158,41 @@ fn straggler_tails_actually_move_completion_times() {
     // No makespan-ordering assertion: replica racing can legitimately
     // beat the deterministic schedule by moving a straggler's work to an
     // idle server, so neither direction is a theorem.
+}
+
+#[test]
+fn hierarchical_presets_report_tier_hit_rates() {
+    // The topology presets must surface the locality telemetry: one
+    // counter per tier, every task credited exactly once, and the flat
+    // two-tier alias keeps its two-bucket shape.
+    for (scenario, tiers) in [
+        (Scenario::MultiLocality, 2),
+        (Scenario::MultiRack, 3),
+        (Scenario::MultiZone, 4),
+    ] {
+        let cfg = tiny_cfg(scenario);
+        for policy in [
+            SchedPolicy::Fifo(taos::assign::AssignPolicy::Wf),
+            SchedPolicy::Ocwf { acc: false },
+        ] {
+            let out = run_experiment(&cfg, policy)
+                .unwrap_or_else(|e| panic!("{}/{}: {e}", scenario.name(), policy.name()));
+            assert_eq!(
+                out.tier_tasks.len(),
+                tiers,
+                "{}/{}: one counter per topology tier",
+                scenario.name(),
+                policy.name()
+            );
+            assert_eq!(
+                out.tier_tasks.iter().sum::<u64>(),
+                900,
+                "{}/{}: every task credited to exactly one tier",
+                scenario.name(),
+                policy.name()
+            );
+        }
+    }
 }
 
 #[test]

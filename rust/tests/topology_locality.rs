@@ -1,0 +1,241 @@
+//! Integration tests for the hierarchical network-cost locality model:
+//! the flat/unit-penalty differential against the analytic engine, the
+//! tier hit-rate telemetry accounting, within-rack relabeling, and the
+//! penalty monotonicity of a pinned job.
+//!
+//! The *strong* metamorphic invariant — the tier table commutes with any
+//! within-rack server relabeling — is asserted at the topology layer
+//! (`topology::tests`), where it is provable. End to end the assigners'
+//! remainder placement follows server order, so only structural
+//! invariants survive the trip through the scheduler; those are pinned
+//! here.
+
+use taos::assign::AssignPolicy;
+use taos::config::{ExperimentConfig, SimConfig};
+use taos::des::run_des;
+use taos::des::service::EngineKind;
+use taos::job::{Job, TaskGroup};
+use taos::sched::SchedPolicy;
+use taos::sim::{materialize_jobs, run_experiment};
+use taos::topology::TopologyKind;
+use taos::trace::scenarios::Scenario;
+use taos::util::rng::Rng;
+
+fn tiny_cfg(scenario: Scenario) -> ExperimentConfig {
+    let mut cfg = taos::sweep::quick_base(0x7090);
+    cfg.trace.jobs = 16;
+    cfg.trace.total_tasks = 800;
+    cfg.cluster.servers = 16;
+    cfg.cluster.avail_lo = 3;
+    cfg.cluster.avail_hi = 5;
+    scenario.apply(&mut cfg);
+    cfg
+}
+
+#[test]
+fn unit_penalty_des_is_flat_identical_for_every_topology() {
+    // At penalty 1 every tier's rate weight is exactly 1.0 by
+    // construction, so the hierarchy is inert: switching the topology
+    // must not move a single completion time relative to the analytic
+    // engine, on any workload preset.
+    for scenario in Scenario::ALL {
+        if scenario.has_engine_twist() {
+            continue;
+        }
+        let cfg = tiny_cfg(scenario);
+        for kind in TopologyKind::ALL {
+            let mut des_cfg = cfg.clone();
+            des_cfg.sim.engine = EngineKind::Des;
+            des_cfg.sim.topology = kind;
+            for policy in [
+                SchedPolicy::Fifo(AssignPolicy::Wf),
+                SchedPolicy::Ocwf { acc: true },
+            ] {
+                let analytic = run_experiment(&cfg, policy)
+                    .unwrap_or_else(|e| panic!("{}/{}: {e}", scenario.name(), policy.name()));
+                let des = run_experiment(&des_cfg, policy)
+                    .unwrap_or_else(|e| panic!("{}/{}: {e}", scenario.name(), policy.name()));
+                assert_eq!(
+                    analytic.jcts,
+                    des.jcts,
+                    "{}/{}/{}: unit-penalty DES must stay bit-identical",
+                    scenario.name(),
+                    kind.name(),
+                    policy.name()
+                );
+                assert_eq!(analytic.makespan, des.makespan);
+                assert_eq!(analytic.wf_evals, des.wf_evals);
+                assert!(
+                    des.tier_tasks.is_empty(),
+                    "penalty 1 takes the locality-free path: no telemetry"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tier_telemetry_counts_every_task_exactly_once() {
+    let cfg = tiny_cfg(Scenario::Alibaba);
+    let jobs = materialize_jobs(&cfg).unwrap();
+    let total: u64 = jobs.iter().map(|j| j.total_tasks()).sum();
+    for kind in TopologyKind::ALL {
+        let mut sim = SimConfig::default();
+        sim.locality_penalty = 3.0;
+        sim.topology = kind;
+        for policy in [
+            SchedPolicy::Fifo(AssignPolicy::Wf),
+            SchedPolicy::Ocwf { acc: false },
+        ] {
+            let out = run_des(&jobs, cfg.cluster.servers, policy, &sim, 7).unwrap();
+            assert_eq!(
+                out.tier_tasks.len(),
+                kind.num_tiers(),
+                "{}/{}: one counter per tier",
+                kind.name(),
+                policy.name()
+            );
+            assert_eq!(
+                out.tier_tasks.iter().sum::<u64>(),
+                total,
+                "{}/{}: every task lands in exactly one tier",
+                kind.name(),
+                policy.name()
+            );
+        }
+    }
+}
+
+fn random_jobs(rng: &mut Rng, m: usize, njobs: usize) -> Vec<Job> {
+    let mut arrival = 0u64;
+    (0..njobs)
+        .map(|id| {
+            arrival += rng.gen_range(7);
+            let k = 1 + rng.gen_range(3) as usize;
+            let groups: Vec<TaskGroup> = (0..k)
+                .map(|_| {
+                    let ns = 1 + rng.gen_range(4) as usize;
+                    let mut sv: Vec<usize> = (0..m).collect();
+                    rng.shuffle(&mut sv);
+                    sv.truncate(ns);
+                    TaskGroup::new(rng.gen_range_incl(1, 24), sv)
+                })
+                .collect();
+            Job {
+                id,
+                arrival,
+                groups,
+                mu: (0..m).map(|_| rng.gen_range_incl(1, 4)).collect(),
+            }
+        })
+        .collect()
+}
+
+/// Apply the server relabeling `perm` (old id → new id) to a job list.
+fn relabel_jobs(jobs: &[Job], perm: &[usize]) -> Vec<Job> {
+    jobs.iter()
+        .map(|j| {
+            let mut mu = vec![0u64; perm.len()];
+            for s in 0..perm.len() {
+                mu[perm[s]] = j.mu[s];
+            }
+            Job {
+                id: j.id,
+                arrival: j.arrival,
+                groups: j
+                    .groups
+                    .iter()
+                    .map(|g| TaskGroup::new(g.size, g.servers.iter().map(|&s| perm[s]).collect()))
+                    .collect(),
+                mu,
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn within_rack_relabeling_keeps_telemetry_shape() {
+    // Swap (1,3) inside rack 0 and (8,10) inside rack 2: the tier table
+    // commutes with this permutation (topology-layer theorem), and end to
+    // end the run must keep the same tier arity with every task still
+    // credited exactly once — at any policy and topology.
+    let m = 16;
+    let mut perm: Vec<usize> = (0..m).collect();
+    perm.swap(1, 3);
+    perm.swap(8, 10);
+    let mut rng = Rng::seed_from(0x7ACC);
+    for case in 0..6 {
+        let jobs = random_jobs(&mut rng, m, 3 + case);
+        let total: u64 = jobs.iter().map(|j| j.total_tasks()).sum();
+        let renamed = relabel_jobs(&jobs, &perm);
+        for kind in [
+            TopologyKind::MultiRack,
+            TopologyKind::MultiZone,
+            TopologyKind::FatTree,
+        ] {
+            let mut sim = SimConfig::default();
+            sim.locality_penalty = 2.0;
+            sim.topology = kind;
+            for policy in [
+                SchedPolicy::Fifo(AssignPolicy::Wf),
+                SchedPolicy::Ocwf { acc: true },
+            ] {
+                let a = run_des(&jobs, m, policy, &sim, 3).unwrap();
+                let b = run_des(&renamed, m, policy, &sim, 3).unwrap();
+                assert_eq!(
+                    a.tier_tasks.len(),
+                    b.tier_tasks.len(),
+                    "case {case} {}/{}",
+                    kind.name(),
+                    policy.name()
+                );
+                assert_eq!(
+                    a.tier_tasks.iter().sum::<u64>(),
+                    total,
+                    "case {case} {}/{}",
+                    kind.name(),
+                    policy.name()
+                );
+                assert_eq!(
+                    b.tier_tasks.iter().sum::<u64>(),
+                    total,
+                    "case {case} {}/{}: relabeled run must credit every task too",
+                    kind.name(),
+                    policy.name()
+                );
+                assert_eq!(a.jcts.len(), b.jcts.len());
+            }
+        }
+    }
+}
+
+#[test]
+fn growing_penalty_never_speeds_a_pinned_job() {
+    // One job local to server 0 only, uniform capacity: the assigners are
+    // penalty-oblivious, so the expanded placement is identical at every
+    // penalty > 1 and the DES charges weakly longer remote durations as
+    // the top-tier penalty grows — the JCT cannot improve.
+    let jobs = vec![Job {
+        id: 0,
+        arrival: 0,
+        groups: vec![TaskGroup::new(120, vec![0])],
+        mu: vec![2; 16],
+    }];
+    let mut prev: Option<u64> = None;
+    for p in [2.0, 4.0, 8.0] {
+        let mut sim = SimConfig::default();
+        sim.topology = TopologyKind::MultiZone;
+        sim.locality_penalty = p;
+        let out = run_des(&jobs, 16, SchedPolicy::Fifo(AssignPolicy::Wf), &sim, 3).unwrap();
+        assert_eq!(out.tier_tasks.len(), 4);
+        assert_eq!(out.tier_tasks.iter().sum::<u64>(), 120);
+        let jct = out.jcts[0];
+        if let Some(q) = prev {
+            assert!(
+                jct >= q,
+                "penalty {p}: JCT {jct} must not beat the cheaper run's {q}"
+            );
+        }
+        prev = Some(jct);
+    }
+}
