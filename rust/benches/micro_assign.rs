@@ -140,6 +140,47 @@ fn main() {
         });
     }
 
+    // Substrate: the calendar-queue event core on the exact same loads —
+    // the O(1)-amortized streaming-scale alternative whose pop order is
+    // bit-identical to the heap (see `rust/tests/streaming_scale.rs`).
+    {
+        use taos::des::calendar::CalendarQueue;
+        use taos::des::heap::EventKind;
+        let mut cal = CalendarQueue::new();
+        for depth in [64usize, 1024] {
+            bench.run(&format!("substrate/des_calendar_queue@cycle{depth}"), || {
+                for i in 0..depth as u64 {
+                    cal.push((i * 37) % 257, EventKind::Complete {
+                        server: (i % 16) as usize,
+                        token: i,
+                    });
+                }
+                let mut last = 0;
+                while let Some(e) = cal.pop() {
+                    last = e.time;
+                }
+                cal.clear();
+                black_box(last)
+            });
+        }
+        bench.run("substrate/des_calendar_queue@interleaved256", || {
+            let mut popped = 0u64;
+            for i in 0..256u64 {
+                cal.push((i * 13) % 97, EventKind::Arrival { job: i as usize });
+                if i % 2 == 1 {
+                    if let Some(e) = cal.pop() {
+                        popped += e.time;
+                    }
+                }
+            }
+            while let Some(e) = cal.pop() {
+                popped += e.time;
+            }
+            cal.clear();
+            black_box(popped)
+        });
+    }
+
     // Scheduler: one OCWF-ACC reorder round over 12 outstanding jobs.
     {
         let jobs: Vec<taos::job::Job> = (0..12)

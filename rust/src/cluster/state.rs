@@ -135,6 +135,40 @@ impl JobProgress {
         }
     }
 
+    /// An empty progress table for streaming runs: jobs are appended by
+    /// [`JobProgress::push_job`] as the source yields them.
+    pub fn empty() -> Self {
+        JobProgress {
+            remaining: Vec::new(),
+            total_remaining: Vec::new(),
+            completion: Vec::new(),
+            last_finish: Vec::new(),
+        }
+    }
+
+    /// Append one job's progress rows (streaming ingestion). The job's id
+    /// must equal the current length — the same id-equals-position
+    /// contract as [`JobProgress::new`].
+    pub fn push_job(&mut self, job: &Job, spare: &mut Vec<Vec<TaskCount>>) {
+        debug_assert_eq!(job.id, self.remaining.len());
+        let mut row = spare.pop().unwrap_or_default();
+        row.clear();
+        row.extend(job.groups.iter().map(|g| g.size));
+        self.remaining.push(row);
+        self.total_remaining.push(job.total_tasks());
+        self.completion.push(None);
+        self.last_finish.push(job.arrival);
+    }
+
+    /// Reclaim a retired job's per-group row into the spare pool (its
+    /// scalar slots stay — they are O(1) per job). Streaming eviction.
+    pub fn reclaim(&mut self, job: usize, spare: &mut Vec<Vec<TaskCount>>) {
+        let row = std::mem::take(&mut self.remaining[job]);
+        if row.capacity() > 0 {
+            spare.push(row);
+        }
+    }
+
     pub fn all_complete(&self) -> bool {
         self.completion.iter().all(|c| c.is_some())
     }
@@ -155,6 +189,25 @@ impl JobProgress {
             .iter()
             .zip(&self.completion)
             .map(|(j, c)| c.expect("job must be complete") - j.arrival)
+            .collect();
+        let makespan = self
+            .completion
+            .iter()
+            .map(|c| c.unwrap())
+            .max()
+            .unwrap_or(0);
+        (jcts, makespan)
+    }
+
+    /// [`JobProgress::jcts_and_makespan`] for streaming runs, where job
+    /// payloads were evicted and only the arrival slots (O(1) per job)
+    /// remain resident.
+    pub fn jcts_and_makespan_from(&self, arrivals: &[Slots]) -> (Vec<Slots>, Slots) {
+        debug_assert_eq!(arrivals.len(), self.completion.len());
+        let jcts: Vec<Slots> = arrivals
+            .iter()
+            .zip(&self.completion)
+            .map(|(a, c)| c.expect("job must be complete") - a)
             .collect();
         let makespan = self
             .completion

@@ -3,6 +3,7 @@
 //! subset) so experiments are scriptable without `serde`/`toml`.
 
 use crate::cluster::placement::PlacementMode;
+use crate::des::calendar::EventQueueKind;
 use crate::des::service::{EngineKind, ServiceModel};
 use crate::topology::TopologyKind;
 use crate::trace::scenarios::Scenario;
@@ -109,6 +110,13 @@ pub struct SimConfig {
     /// deterministic service and no engine-only mechanisms the two are
     /// bit-identical (`rust/tests/des_equivalence.rs`).
     pub engine: EngineKind,
+    /// DES-only event core: the pooled binary heap (default) or the
+    /// calendar queue (`--event-queue calendar`), the O(1)-amortized
+    /// streaming-scale core. Pop order — and therefore every JCT vector
+    /// — is bit-identical under either (`rust/tests/streaming_scale.rs`),
+    /// so this is a pure wall-clock knob; `calendar` requires
+    /// `engine = des`.
+    pub event_queue: EventQueueKind,
     /// DES-only service-time model (`det` | `exp:MEAN` |
     /// `pareto:ALPHA:CAP`). Non-deterministic models require `engine =
     /// des`.
@@ -139,6 +147,7 @@ impl Default for SimConfig {
             reorder_threads: 1,
             acc_spec_chunk: 0,
             engine: EngineKind::Analytic,
+            event_queue: EventQueueKind::Heap,
             service: ServiceModel::Deterministic,
             locality_penalty: 1.0,
             topology: TopologyKind::Flat,
@@ -207,12 +216,13 @@ impl ExperimentConfig {
             && (!s.service.is_deterministic()
                 || s.locality_penalty > 1.0
                 || s.topology != TopologyKind::Flat
-                || s.speculate > 0.0)
+                || s.speculate > 0.0
+                || s.event_queue != EventQueueKind::Heap)
         {
             return Err(Error::Config(
-                "service models, locality_penalty > 1, non-flat topology and \
-                 speculate > 0 are engine-only mechanisms: set engine = des \
-                 (--engine des)"
+                "service models, locality_penalty > 1, non-flat topology, \
+                 speculate > 0 and event_queue = calendar are engine-only \
+                 mechanisms: set engine = des (--engine des)"
                     .into(),
             ));
         }
@@ -275,6 +285,10 @@ impl ExperimentConfig {
                 "engine" => {
                     cfg.sim.engine = EngineKind::parse(val)
                         .ok_or_else(|| perr("engine must be `analytic` or `des`"))?
+                }
+                "event_queue" => {
+                    cfg.sim.event_queue = EventQueueKind::parse(val)
+                        .ok_or_else(|| perr("event_queue must be `heap` or `calendar`"))?
                 }
                 "service" => {
                     cfg.sim.service = ServiceModel::parse(val).ok_or_else(|| {

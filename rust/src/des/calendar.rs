@@ -1,0 +1,579 @@
+//! The calendar-queue event core: O(1) amortized insert/pop at
+//! million-event scale, bit-identical in pop order to [`EventHeap`].
+//!
+//! A binary heap pays O(log n) per operation with n live events; a
+//! calendar queue (Brown 1988) buckets events by time so the steady-state
+//! cost per event is O(1) amortized. This implementation is a
+//! single-level wheel with an overflow day and a sorted drain run:
+//!
+//! - **`cur`** — the drain run: every pending event with `time <
+//!   cur_end`, kept sorted *descending* by the total event key so `pop`
+//!   is a `Vec::pop` from the back. Pushes into the current window (an
+//!   arrival admitted at the slot being processed, a 1-slot completion)
+//!   binary-insert into place.
+//! - **`wheel`** — `NB` buckets of `width` slots each covering
+//!   `[wheel_start, wheel_start + NB·width)`. A push beyond the drain
+//!   window lands in its bucket unsorted in O(1). When the drain run
+//!   empties, the next non-empty bucket is swapped in (capacity-
+//!   preserving) and sorted once — each event is sorted exactly once per
+//!   residence, and bucket loads are O(1) on DES workloads whose events
+//!   cluster near the simulation clock.
+//! - **`overflow`** — everything beyond the wheel's horizon. When the
+//!   wheel is exhausted the queue *rebases*: the wheel is re-anchored at
+//!   the overflow's minimum time with a width sized so the whole
+//!   overflow fits one rotation, and the overflow is redistributed. An
+//!   event is redistributed at most once per rebase and rebases advance
+//!   the horizon past every redistributed event, so the amortized cost
+//!   stays O(1) per event for forward-marching (DES) push patterns.
+//!
+//! ## The order contract
+//!
+//! Pop order is the **exact total order of [`EventHeap`]** — `(time,
+//! class, lane, seq)` with completions before arrivals at a slot and a
+//! per-queue monotone push counter breaking the remaining ties. The two
+//! cores are interchangeable behind [`EventQueue`]; every JCT vector is
+//! bit-identical under either (`rust/tests/streaming_scale.rs` asserts
+//! the differential on random streams and whole runs).
+
+use super::heap::{Event, EventHeap, EventKind};
+use crate::job::Slots;
+
+/// The common interface of the DES event cores. `pop` must yield the
+/// exact `(time, class, lane, seq)` total order documented in
+/// [`super::heap`]; `clear` must keep backing capacity; `footprint` is
+/// the reserved capacity (allocation-stability tests).
+pub trait EventQueue {
+    fn push(&mut self, time: Slots, kind: EventKind);
+    fn pop(&mut self) -> Option<Event>;
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    fn clear(&mut self);
+    fn footprint(&self) -> usize;
+}
+
+impl EventQueue for EventHeap {
+    fn push(&mut self, time: Slots, kind: EventKind) {
+        EventHeap::push(self, time, kind);
+    }
+    fn pop(&mut self) -> Option<Event> {
+        EventHeap::pop(self)
+    }
+    fn len(&self) -> usize {
+        EventHeap::len(self)
+    }
+    fn clear(&mut self) {
+        EventHeap::clear(self);
+    }
+    fn footprint(&self) -> usize {
+        EventHeap::footprint(self)
+    }
+}
+
+/// Which event core drives a DES run: the binary heap (default, O(log n)
+/// per event) or the calendar queue (O(1) amortized, the streaming-scale
+/// core). A pure wall-clock knob — pop order is identical.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EventQueueKind {
+    #[default]
+    Heap,
+    Calendar,
+}
+
+impl EventQueueKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventQueueKind::Heap => "heap",
+            EventQueueKind::Calendar => "calendar",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<EventQueueKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "heap" | "binary-heap" => Some(EventQueueKind::Heap),
+            "calendar" | "calendar-queue" | "wheel" => Some(EventQueueKind::Calendar),
+            _ => None,
+        }
+    }
+}
+
+/// Number of wheel buckets. Power of two, sized so the idle footprint
+/// (one `Vec` header per bucket) stays a few KB while typical DES event
+/// populations (≤ a few events per server) spread to O(1) per bucket.
+const NB: usize = 256;
+
+/// The calendar-queue event core. See the module docs for the layout and
+/// [`EventQueue`] for the contract.
+#[derive(Clone, Debug)]
+pub struct CalendarQueue {
+    /// Drain run: events with `time < cur_end`, sorted descending by key.
+    cur: Vec<Event>,
+    /// Exclusive upper bound of the drain window. Invariant:
+    /// `cur_end == wheel_start + day * width`.
+    cur_end: Slots,
+    /// `wheel[b]` holds events in `[wheel_start + b·width, +width)`,
+    /// unsorted. Buckets below `day` are empty (already drained).
+    wheel: Vec<Vec<Event>>,
+    /// Next bucket to swap into the drain run.
+    day: usize,
+    wheel_start: Slots,
+    width: Slots,
+    /// Events at or beyond the wheel horizon, unsorted.
+    overflow: Vec<Event>,
+    /// Rebase redistribution buffer (capacity is retained).
+    scratch: Vec<Event>,
+    len: usize,
+    seq: u64,
+}
+
+impl Default for CalendarQueue {
+    fn default() -> Self {
+        CalendarQueue {
+            cur: Vec::new(),
+            cur_end: 0,
+            wheel: (0..NB).map(|_| Vec::new()).collect(),
+            day: 0,
+            wheel_start: 0,
+            width: 1,
+            overflow: Vec::new(),
+            scratch: Vec::new(),
+            len: 0,
+            seq: 0,
+        }
+    }
+}
+
+impl CalendarQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    fn wheel_end(&self) -> Slots {
+        self.wheel_start + NB as Slots * self.width
+    }
+
+    /// File an event into its bucket or the overflow. Callers have
+    /// already ruled out the drain run (`ev.time >= cur_end`).
+    #[inline]
+    fn place(&mut self, ev: Event) {
+        debug_assert!(ev.time >= self.cur_end);
+        if ev.time < self.wheel_end() {
+            let b = ((ev.time - self.wheel_start) / self.width) as usize;
+            debug_assert!(b >= self.day);
+            self.wheel[b].push(ev);
+        } else {
+            self.overflow.push(ev);
+        }
+    }
+
+    /// Re-anchor the wheel at the overflow's minimum time with a width
+    /// that fits the whole overflow into one rotation, then
+    /// redistribute. Only called with the wheel fully drained.
+    fn rebase(&mut self) {
+        debug_assert!(self.day == NB && !self.overflow.is_empty());
+        let mut lo = Slots::MAX;
+        let mut hi = 0;
+        for e in &self.overflow {
+            lo = lo.min(e.time);
+            hi = hi.max(e.time);
+        }
+        debug_assert!(lo >= self.cur_end);
+        self.wheel_start = lo;
+        self.width = (hi - lo) / NB as Slots + 1;
+        self.cur_end = lo;
+        self.day = 0;
+        // Redistribute via the scratch buffer; the two allocations swap
+        // roles so the summed footprint stays frozen.
+        std::mem::swap(&mut self.overflow, &mut self.scratch);
+        let mut tmp = std::mem::take(&mut self.scratch);
+        for ev in tmp.drain(..) {
+            self.place(ev);
+        }
+        self.scratch = tmp;
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Drop every pending event, keeping every backing allocation, and
+    /// re-anchor the timeline at slot 0 for the next run.
+    pub fn clear(&mut self) {
+        self.cur.clear();
+        for b in &mut self.wheel {
+            b.clear();
+        }
+        self.overflow.clear();
+        self.cur_end = 0;
+        self.day = 0;
+        self.wheel_start = 0;
+        self.width = 1;
+        self.len = 0;
+    }
+
+    /// Schedule an event. Same stability contract as
+    /// [`EventHeap::push`]: equal `(time, class, lane)` fire in push
+    /// order.
+    pub fn push(&mut self, time: Slots, kind: EventKind) {
+        let ev = Event {
+            time,
+            kind,
+            seq: self.seq,
+        };
+        self.seq += 1;
+        self.len += 1;
+        if time < self.cur_end {
+            // Into the drain run, sorted descending: find the insertion
+            // point from the back (new events land near the clock).
+            let key = ev.key();
+            let pos = self
+                .cur
+                .partition_point(|e| e.key() > key);
+            self.cur.insert(pos, ev);
+        } else {
+            self.place(ev);
+        }
+    }
+
+    /// Remove and return the next event in `(time, class, lane, seq)`
+    /// order.
+    pub fn pop(&mut self) -> Option<Event> {
+        loop {
+            if let Some(ev) = self.cur.pop() {
+                self.len -= 1;
+                return Some(ev);
+            }
+            if self.len == 0 {
+                return None;
+            }
+            if self.day == NB {
+                self.rebase();
+                continue;
+            }
+            let b = self.day;
+            self.day += 1;
+            self.cur_end += self.width;
+            if !self.wheel[b].is_empty() {
+                std::mem::swap(&mut self.cur, &mut self.wheel[b]);
+                // Keys are unique (seq is a total tie-break), so an
+                // unstable sort is deterministic.
+                self.cur.sort_unstable_by(|a, b| b.key().cmp(&a.key()));
+            }
+        }
+    }
+
+    /// Reserved capacity across the drain run, every wheel bucket, the
+    /// overflow and the rebase scratch (allocation-stability tests).
+    pub fn footprint(&self) -> usize {
+        self.cur.capacity()
+            + self.wheel.capacity()
+            + self.wheel.iter().map(|b| b.capacity()).sum::<usize>()
+            + self.overflow.capacity()
+            + self.scratch.capacity()
+    }
+}
+
+impl EventQueue for CalendarQueue {
+    fn push(&mut self, time: Slots, kind: EventKind) {
+        CalendarQueue::push(self, time, kind);
+    }
+    fn pop(&mut self) -> Option<Event> {
+        CalendarQueue::pop(self)
+    }
+    fn len(&self) -> usize {
+        CalendarQueue::len(self)
+    }
+    fn clear(&mut self) {
+        CalendarQueue::clear(self);
+    }
+    fn footprint(&self) -> usize {
+        CalendarQueue::footprint(self)
+    }
+}
+
+/// Runtime-selected event core — the non-generic dispatch [`super::DesRun`]
+/// holds, so the engine's type does not go viral over the queue choice.
+#[derive(Clone, Debug)]
+pub enum AnyEventQueue {
+    Heap(EventHeap),
+    Calendar(Box<CalendarQueue>),
+}
+
+impl AnyEventQueue {
+    pub fn new(kind: EventQueueKind) -> Self {
+        match kind {
+            EventQueueKind::Heap => AnyEventQueue::Heap(EventHeap::new()),
+            EventQueueKind::Calendar => AnyEventQueue::Calendar(Box::default()),
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, time: Slots, kind: EventKind) {
+        match self {
+            AnyEventQueue::Heap(q) => q.push(time, kind),
+            AnyEventQueue::Calendar(q) => q.push(time, kind),
+        }
+    }
+
+    #[inline]
+    pub fn pop(&mut self) -> Option<Event> {
+        match self {
+            AnyEventQueue::Heap(q) => q.pop(),
+            AnyEventQueue::Calendar(q) => q.pop(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            AnyEventQueue::Heap(q) => q.len(),
+            AnyEventQueue::Calendar(q) => q.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn clear(&mut self) {
+        match self {
+            AnyEventQueue::Heap(q) => q.clear(),
+            AnyEventQueue::Calendar(q) => q.clear(),
+        }
+    }
+
+    pub fn footprint(&self) -> usize {
+        match self {
+            AnyEventQueue::Heap(q) => q.footprint(),
+            AnyEventQueue::Calendar(q) => q.footprint(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn lane_of(ev: &Event) -> (u64, u8, u64) {
+        match ev.kind {
+            EventKind::Complete { server, .. } => (ev.time, 0, server as u64),
+            EventKind::Arrival { job } => (ev.time, 1, job as u64),
+        }
+    }
+
+    #[test]
+    fn drains_in_heap_order_on_random_batches() {
+        let mut rng = Rng::seed_from(0xCA1);
+        for case in 0..20 {
+            let mut cal = CalendarQueue::new();
+            let mut heap = EventHeap::new();
+            let n = 1 + (case * 97) % 700;
+            for _ in 0..n {
+                // Wide, clustered and tie-heavy times in one mix.
+                let t = match rng.gen_range(3) {
+                    0 => rng.gen_range(10),
+                    1 => rng.gen_range(1_000),
+                    _ => 100_000 + rng.gen_range(1_000_000),
+                };
+                let kind = if rng.gen_range(2) == 0 {
+                    EventKind::Complete {
+                        server: rng.gen_range(6) as usize,
+                        token: rng.gen_range(3),
+                    }
+                } else {
+                    EventKind::Arrival {
+                        job: rng.gen_range(9) as usize,
+                    }
+                };
+                cal.push(t, kind);
+                heap.push(t, kind);
+            }
+            assert_eq!(cal.len(), heap.len());
+            while let Some(want) = heap.pop() {
+                let got = cal.pop().expect("calendar drained early");
+                assert_eq!(lane_of(&got), lane_of(&want), "case {case}");
+                assert_eq!(got.kind, want.kind, "case {case}");
+            }
+            assert!(cal.pop().is_none());
+        }
+    }
+
+    #[test]
+    fn interleaved_push_pop_matches_heap() {
+        // The DES access pattern: pops interleaved with pushes near (and
+        // sometimes exactly at) the current clock, including same-slot
+        // class/lane/seq ties and far-future completions that force
+        // overflow rebases.
+        let mut rng = Rng::seed_from(0xCA2);
+        let mut cal = CalendarQueue::new();
+        let mut heap = EventHeap::new();
+        let mut now = 0u64;
+        for step in 0..5_000u64 {
+            let burst = 1 + rng.gen_range(3);
+            for _ in 0..burst {
+                let dt = match rng.gen_range(4) {
+                    0 => 0,
+                    1 => 1 + rng.gen_range(4),
+                    2 => 1 + rng.gen_range(200),
+                    _ => 10_000 + rng.gen_range(50_000),
+                };
+                let kind = if rng.gen_range(2) == 0 {
+                    EventKind::Complete {
+                        server: rng.gen_range(4) as usize,
+                        token: step,
+                    }
+                } else {
+                    EventKind::Arrival {
+                        job: rng.gen_range(5) as usize,
+                    }
+                };
+                cal.push(now + dt, kind);
+                heap.push(now + dt, kind);
+            }
+            for _ in 0..rng.gen_range(3) {
+                match (cal.pop(), heap.pop()) {
+                    (Some(a), Some(b)) => {
+                        assert_eq!(lane_of(&a), lane_of(&b), "step {step}");
+                        assert_eq!(a.kind, b.kind, "step {step}");
+                        assert!(a.time >= now);
+                        now = a.time;
+                    }
+                    (None, None) => {}
+                    other => panic!("length divergence at step {step}: {other:?}"),
+                }
+            }
+        }
+        while let Some(want) = heap.pop() {
+            let got = cal.pop().unwrap();
+            assert_eq!(lane_of(&got), lane_of(&want));
+        }
+        assert!(cal.is_empty());
+    }
+
+    #[test]
+    fn same_slot_ties_fire_in_class_lane_seq_order() {
+        let mut q = CalendarQueue::new();
+        q.push(2, EventKind::Arrival { job: 4 });
+        q.push(2, EventKind::Arrival { job: 1 });
+        q.push(2, EventKind::Complete { server: 9, token: 0 });
+        q.push(2, EventKind::Arrival { job: 4 });
+        q.push(2, EventKind::Complete { server: 3, token: 7 });
+        let order: Vec<(u64, u8, u64)> = (0..5).map(|_| lane_of(&q.pop().unwrap())).collect();
+        assert_eq!(
+            order,
+            vec![(2, 0, 3), (2, 0, 9), (2, 1, 1), (2, 1, 4), (2, 1, 4)]
+        );
+        // Same (time, class, lane): push order (seq).
+        let mut q = CalendarQueue::new();
+        for token in [7u64, 8, 9] {
+            q.push(1, EventKind::Complete { server: 0, token });
+        }
+        let tokens: Vec<u64> = (0..3)
+            .map(|_| match q.pop().unwrap().kind {
+                EventKind::Complete { token, .. } => token,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(tokens, vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn pushes_into_the_open_drain_window_are_ordered() {
+        // Pop an event at slot 10, then push same-slot work (what a
+        // 0-width completion cascade does): the new event must come out
+        // in key order, not at the end.
+        let mut q = CalendarQueue::new();
+        q.push(10, EventKind::Arrival { job: 2 });
+        q.push(50, EventKind::Arrival { job: 3 });
+        let first = q.pop().unwrap();
+        assert_eq!(first.time, 10);
+        q.push(10, EventKind::Complete { server: 0, token: 1 });
+        q.push(20, EventKind::Arrival { job: 7 });
+        let order: Vec<u64> = (0..3).map(|_| q.pop().unwrap().time).collect();
+        assert_eq!(order, vec![10, 20, 50]);
+    }
+
+    #[test]
+    fn clear_keeps_capacity_and_restarts_the_timeline() {
+        let mut q = CalendarQueue::new();
+        for t in 0..512u64 {
+            q.push(t * 731, EventKind::Arrival { job: t as usize });
+        }
+        while q.pop().is_some() {}
+        let fp = q.footprint();
+        assert!(fp > 0);
+        q.clear();
+        assert!(q.is_empty());
+        assert_eq!(q.footprint(), fp);
+        // A fresh run starting at slot 0 must drain correctly and not
+        // grow the pools when refilled to the same depth.
+        for t in 0..512u64 {
+            q.push(t * 731, EventKind::Arrival { job: t as usize });
+        }
+        assert_eq!(q.footprint(), fp);
+        let mut last = 0;
+        while let Some(e) = q.pop() {
+            assert!(e.time >= last);
+            last = e.time;
+        }
+    }
+
+    #[test]
+    fn steady_state_cycles_freeze_the_footprint() {
+        // alloc_stability-style: after a warmup cycle, repeated
+        // push/drain waves at the same depth must not allocate.
+        let mut q = CalendarQueue::new();
+        let mut rng = Rng::seed_from(0xCA3);
+        let mut base = 0u64;
+        let wave = |q: &mut CalendarQueue, rng: &mut Rng, base: u64| {
+            for i in 0..300u64 {
+                q.push(
+                    base + rng.gen_range(5_000),
+                    EventKind::Complete {
+                        server: (i % 7) as usize,
+                        token: i,
+                    },
+                );
+            }
+            while q.pop().is_some() {}
+        };
+        wave(&mut q, &mut rng, base);
+        let fp = q.footprint();
+        for _ in 0..20 {
+            base += 100_000;
+            wave(&mut q, &mut rng, base);
+            assert_eq!(q.footprint(), fp, "steady-state wave must not allocate");
+        }
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in [EventQueueKind::Heap, EventQueueKind::Calendar] {
+            assert_eq!(EventQueueKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(EventQueueKind::parse("wheel"), Some(EventQueueKind::Calendar));
+        assert_eq!(EventQueueKind::parse("fibonacci"), None);
+        assert_eq!(EventQueueKind::default(), EventQueueKind::Heap);
+    }
+
+    #[test]
+    fn any_event_queue_dispatches_both_cores() {
+        for kind in [EventQueueKind::Heap, EventQueueKind::Calendar] {
+            let mut q = AnyEventQueue::new(kind);
+            assert!(q.is_empty());
+            q.push(5, EventKind::Arrival { job: 1 });
+            q.push(3, EventKind::Arrival { job: 0 });
+            assert_eq!(q.len(), 2);
+            assert_eq!(q.pop().unwrap().time, 3, "{}", kind.name());
+            q.clear();
+            assert!(q.is_empty());
+            assert!(q.footprint() > 0 || matches!(kind, EventQueueKind::Heap));
+        }
+    }
+}

@@ -44,12 +44,15 @@ pub enum EventKind {
 pub struct Event {
     pub time: Slots,
     pub kind: EventKind,
-    seq: u64,
+    /// Queue-assigned push counter — crate-visible so every
+    /// [`crate::des::calendar::EventQueue`] implementation can stamp the
+    /// same tie-break.
+    pub(crate) seq: u64,
 }
 
 impl Event {
     #[inline]
-    fn key(&self) -> (Slots, u8, u64, u64) {
+    pub(crate) fn key(&self) -> (Slots, u8, u64, u64) {
         let (class, lane) = match self.kind {
             EventKind::Complete { server, .. } => (0u8, server as u64),
             EventKind::Arrival { job } => (1u8, job as u64),

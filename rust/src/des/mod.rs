@@ -62,8 +62,10 @@
 //! allocations** ([`DesRun::pool_footprint`] freeze asserted by
 //! `rust/tests/alloc_stability.rs`).
 
+pub mod calendar;
 pub mod heap;
 pub mod service;
+pub mod stream;
 
 use crate::assign::{validate_assignment, Assigner};
 use crate::cluster::state::{ClusterState, EntrySink, JobProgress, QueueRebuild};
@@ -76,8 +78,10 @@ use crate::topology::{Locality, Topology};
 use crate::util::ceil_div;
 use crate::util::rng::Rng;
 use crate::util::timer::OverheadMeter;
-use heap::{EventHeap, EventKind};
+use calendar::AnyEventQueue;
+use heap::EventKind;
 use std::collections::VecDeque;
+use stream::{JobFeed, StreamFeed};
 
 /// One run-queue entry: the tasks of one job assigned to one server,
 /// split by task group — the DES twin of
@@ -138,13 +142,13 @@ struct Pair {
 /// no-locality engine at **any** task count — the f64 path rounds
 /// `2^53 + 1` tasks down, the integer path does not.
 fn entry_base(
-    jobs: &[Job],
+    job_payload: &Job,
     locality: Option<&Locality>,
     job: usize,
     parts: &[(usize, TaskCount)],
     server: ServerId,
 ) -> Slots {
-    let mu = jobs[job].mu[server];
+    let mu = job_payload.mu[server];
     let total: TaskCount = parts.iter().map(|&(_, n)| n).sum();
     let Some(loc) = locality else {
         return ceil_div(total, mu);
@@ -173,7 +177,7 @@ fn entry_base(
 struct LaneSink<'s, 'a> {
     lanes: &'s mut [Lane],
     spare: &'s mut Vec<Vec<(usize, TaskCount)>>,
-    jobs: &'a [Job],
+    feed: &'s JobFeed<'a>,
     locality: Option<&'a Locality>,
     free_est: &'s mut [Slots],
     now: Slots,
@@ -185,7 +189,7 @@ impl EntrySink for LaneSink<'_, '_> {
     }
 
     fn push_entry(&mut self, server: ServerId, job: usize, parts: Vec<(usize, TaskCount)>) {
-        let base = entry_base(self.jobs, self.locality, job, &parts, server);
+        let base = entry_base(self.feed.job(job), self.locality, job, &parts, server);
         self.free_est[server] = self.free_est[server].max(self.now) + base;
         self.lanes[server].queue.push_back(DesEntry {
             job,
@@ -203,9 +207,10 @@ impl EntrySink for LaneSink<'_, '_> {
 /// = des`) for a one-shot run; the struct itself is public so tests can
 /// pump events one at a time and probe [`DesRun::pool_footprint`].
 pub struct DesRun<'a> {
-    /// The assignment view of the jobs: the caller's slice, or the
-    /// expanded-server-set clone when multi-level locality is active.
-    jobs: &'a [Job],
+    /// The assignment view of the jobs: the caller's slice (or the
+    /// expanded-server-set clone when multi-level locality is active),
+    /// or a bounded streaming window ([`stream::JobFeed`]).
+    feed: JobFeed<'a>,
     /// Precomputed per-(job, group, server) locality tiers (`Some` iff
     /// the locality penalty is active; `jobs` then carries the expanded
     /// sets while the tier table was built from the original data-local
@@ -214,10 +219,13 @@ pub struct DesRun<'a> {
     num_servers: usize,
     policy: SchedPolicy,
     cfg: &'a SimConfig,
-    heap: EventHeap,
+    queue: AnyEventQueue,
     servers: Vec<Lane>,
     /// Recycled entry parts buffers (the engine-side spare pool).
     spare: Vec<Vec<(usize, TaskCount)>>,
+    /// Recycled per-group progress rows (streaming mode: a retired job's
+    /// row is reclaimed for the next pulled job).
+    spare_rows: Vec<Vec<TaskCount>>,
     pairs: Vec<Pair>,
     pair_free: Vec<u32>,
     progress: JobProgress,
@@ -236,6 +244,11 @@ pub struct DesRun<'a> {
     /// Tasks completed per locality tier (empty without locality): the
     /// hit-rate telemetry surfaced through `SimOutcome::tier_tasks`.
     tier_tasks: Vec<u64>,
+    /// Events popped (live + stale) — the throughput telemetry numerator
+    /// surfaced through `SimOutcome::events`.
+    events: u64,
+    /// High-water mark of the event-queue population.
+    peak_events: usize,
     arrival_idx: usize,
     now: Slots,
 }
@@ -271,24 +284,89 @@ impl<'a> DesRun<'a> {
             jobs.windows(2).all(|w| w[0].arrival <= w[1].arrival),
             "DesRun requires jobs sorted by arrival slot"
         );
+        let mut run = Self::build(
+            JobFeed::Slice(jobs),
+            JobProgress::new(jobs),
+            locality,
+            num_servers,
+            policy,
+            cfg,
+            seed,
+        );
+        for (i, job) in jobs.iter().enumerate() {
+            debug_assert!(job.mu.len() == num_servers);
+            run.queue.push(job.arrival, EventKind::Arrival { job: i });
+        }
+        run
+    }
+
+    /// A streaming run: jobs are pulled from `source` one admission
+    /// ahead, payloads are evicted on completion ([`stream::JobFeed`]),
+    /// and the outcome's JCT vector is still exact (per-job scalars stay
+    /// resident). FIFO policies with unit locality only — OCWF and the
+    /// locality model need the materialized slice.
+    pub fn new_streaming(
+        source: Box<dyn crate::sim::stream::JobSource + 'a>,
+        num_servers: usize,
+        policy: SchedPolicy,
+        cfg: &'a SimConfig,
+        seed: u64,
+    ) -> crate::Result<Self> {
+        if !matches!(policy, SchedPolicy::Fifo(_)) {
+            return Err(crate::Error::Config(
+                "streaming DES runs support FIFO policies only: OCWF reorders \
+                 every outstanding job and needs the materialized path"
+                    .into(),
+            ));
+        }
+        if cfg.locality_penalty > 1.0 {
+            return Err(crate::Error::Config(
+                "streaming DES runs require locality_penalty = 1: the locality \
+                 model precomputes per-job tier tables over the full job list"
+                    .into(),
+            ));
+        }
+        let mut run = Self::build(
+            JobFeed::Stream(StreamFeed::new(source)),
+            JobProgress::empty(),
+            None,
+            num_servers,
+            policy,
+            cfg,
+            seed,
+        );
+        run.pull_next_arrival()?;
+        Ok(run)
+    }
+
+    fn build(
+        feed: JobFeed<'a>,
+        progress: JobProgress,
+        locality: Option<&'a Locality>,
+        num_servers: usize,
+        policy: SchedPolicy,
+        cfg: &'a SimConfig,
+        seed: u64,
+    ) -> Self {
         let assigner = match policy {
             SchedPolicy::Fifo(p) => Some(p.build(seed)),
             SchedPolicy::Ocwf { .. } => None,
         };
         let mut ws = ReorderWorkspace::default();
         ws.set_spec_chunk(cfg.acc_spec_chunk);
-        let mut run = DesRun {
-            jobs,
+        DesRun {
+            feed,
             locality,
             num_servers,
             policy,
             cfg,
-            heap: EventHeap::new(),
+            queue: AnyEventQueue::new(cfg.event_queue),
             servers: vec![Lane::default(); num_servers],
             spare: Vec::new(),
+            spare_rows: Vec::new(),
             pairs: Vec::new(),
             pair_free: Vec::new(),
-            progress: JobProgress::new(jobs),
+            progress,
             rebuild: QueueRebuild::new(num_servers),
             oset: OutstandingSet::new(),
             ws,
@@ -300,14 +378,36 @@ impl<'a> DesRun<'a> {
             overhead: OverheadMeter::new(),
             wf_evals: 0,
             tier_tasks: vec![0; locality.map_or(0, |l| l.num_tiers())],
+            events: 0,
+            peak_events: 0,
             arrival_idx: 0,
             now: 0,
-        };
-        for (i, job) in jobs.iter().enumerate() {
-            debug_assert!(job.mu.len() == num_servers);
-            run.heap.push(job.arrival, EventKind::Arrival { job: i });
         }
-        run
+    }
+
+    /// Streaming mode: pull the next job from the source and schedule its
+    /// arrival event (no-op for materialized slices, whose arrivals are
+    /// all pre-pushed). Called once at construction and once per
+    /// admission, so the event queue always holds the next unadmitted
+    /// arrival — see [`stream`] for why this lazy push is bit-identical
+    /// to pushing everything up front.
+    fn pull_next_arrival(&mut self) -> crate::Result<()> {
+        let DesRun {
+            feed,
+            progress,
+            queue,
+            spare_rows,
+            num_servers,
+            ..
+        } = self;
+        if let JobFeed::Stream(sf) = feed {
+            if let Some(job) = sf.pull()? {
+                debug_assert!(job.mu.len() == *num_servers);
+                progress.push_job(job, spare_rows);
+                queue.push(job.arrival, EventKind::Arrival { job: job.id });
+            }
+        }
+        Ok(())
     }
 
     /// Current simulation time (last processed event).
@@ -319,9 +419,11 @@ impl<'a> DesRun<'a> {
     /// [`crate::Error::Sim`] when a *live* event lies beyond
     /// `cfg.max_slots`.
     pub fn pump(&mut self) -> crate::Result<bool> {
-        let Some(ev) = self.heap.pop() else {
+        self.peak_events = self.peak_events.max(self.queue.len());
+        let Some(ev) = self.queue.pop() else {
             return Ok(false);
         };
+        self.events += 1;
         // Staleness before the horizon check: a preempted or cancelled
         // entry's completion event may lie far past `max_slots` even
         // though the live schedule finishes well within it (the analytic
@@ -331,7 +433,7 @@ impl<'a> DesRun<'a> {
             EventKind::Arrival { job } => job >= self.arrival_idx,
         };
         if !live {
-            return Ok(!self.heap.is_empty());
+            return Ok(!self.queue.is_empty());
         }
         if ev.time > self.cfg.max_slots {
             return Err(crate::Error::Sim(format!(
@@ -341,7 +443,7 @@ impl<'a> DesRun<'a> {
                 self.policy.name(),
                 self.cfg.max_slots,
                 ev.time,
-                self.jobs.len(),
+                self.feed.seen(),
                 self.num_servers,
                 self.cfg.service.describe(),
                 self.cfg.speculate,
@@ -354,11 +456,11 @@ impl<'a> DesRun<'a> {
         match ev.kind {
             EventKind::Complete { server, token } => self.on_complete(server, token),
             EventKind::Arrival { job } => match self.policy {
-                SchedPolicy::Fifo(_) => self.admit_fifo(job),
+                SchedPolicy::Fifo(_) => self.admit_fifo(job)?,
                 SchedPolicy::Ocwf { acc } => self.admit_reorder_batch(job, acc),
             },
         }
-        Ok(!self.heap.is_empty())
+        Ok(!self.queue.is_empty())
     }
 
     /// Drain every event and produce the outcome.
@@ -370,11 +472,15 @@ impl<'a> DesRun<'a> {
                  unfinished ({} servers)",
                 self.policy.name(),
                 self.progress.unfinished(),
-                self.jobs.len(),
+                self.feed.seen(),
                 self.num_servers
             )));
         }
-        let (jcts, makespan) = self.progress.jcts_and_makespan(self.jobs);
+        let peak_pool = self.pool_footprint();
+        let (jcts, makespan) = match &self.feed {
+            JobFeed::Slice(jobs) => self.progress.jcts_and_makespan(jobs),
+            JobFeed::Stream(sf) => self.progress.jcts_and_makespan_from(sf.arrivals()),
+        };
         Ok(SimOutcome {
             jcts,
             overhead: self.overhead,
@@ -382,6 +488,12 @@ impl<'a> DesRun<'a> {
             wf_evals: self.wf_evals,
             oracle_stats: self.assigner.as_ref().and_then(|a| a.oracle_stats()),
             tier_tasks: self.tier_tasks,
+            telemetry: crate::sim::RunTelemetry {
+                events: self.events,
+                peak_events: self.peak_events,
+                peak_pool,
+                peak_window: self.feed.peak_window(),
+            },
         })
     }
 
@@ -399,11 +511,14 @@ impl<'a> DesRun<'a> {
                     + l.running.as_ref().map_or(0, |r| r.entry.parts.capacity())
             })
             .sum();
-        self.heap.footprint()
+        self.queue.footprint()
             + self.servers.capacity()
             + lanes
             + self.spare.capacity()
             + self.spare.iter().map(|v| v.capacity()).sum::<usize>()
+            + self.feed.footprint()
+            + self.spare_rows.capacity()
+            + self.spare_rows.iter().map(|v| v.capacity()).sum::<usize>()
             + self.pairs.capacity()
             + self.pair_free.capacity()
             + self.rebuild.footprint()
@@ -416,12 +531,15 @@ impl<'a> DesRun<'a> {
 
     /// FIFO admission: assign the arriving job once against the current
     /// queue-empty estimates (the exact cluster view the analytic
-    /// `run_fifo` computes) and append its per-server entries.
-    fn admit_fifo(&mut self, i: usize) {
+    /// `run_fifo` computes) and append its per-server entries. Streaming
+    /// feeds pull the *next* job first, so its arrival event is in the
+    /// queue before this admission completes.
+    fn admit_fifo(&mut self, i: usize) -> crate::Result<()> {
+        self.pull_next_arrival()?;
         let t = self.now;
         {
             let DesRun {
-                jobs,
+                feed,
                 locality,
                 state,
                 free_est,
@@ -432,8 +550,8 @@ impl<'a> DesRun<'a> {
                 rebuild,
                 ..
             } = self;
-            let jobs: &[Job] = *jobs;
-            let job = &jobs[i];
+            let feed: &JobFeed<'a> = feed;
+            let job = feed.job(i);
             debug_assert_eq!(job.arrival, t);
             state.observe_free(free_est.as_slice(), t);
             let inst = state.instance(&job.groups, &job.mu);
@@ -443,7 +561,7 @@ impl<'a> DesRun<'a> {
             let mut sink = LaneSink {
                 lanes: servers,
                 spare,
-                jobs,
+                feed,
                 locality: *locality,
                 free_est,
                 now: t,
@@ -452,6 +570,7 @@ impl<'a> DesRun<'a> {
         }
         self.arrival_idx = i + 1;
         self.kick_idle(t);
+        Ok(())
     }
 
     /// Reordered admission: preempt every in-service entry (crediting the
@@ -460,15 +579,18 @@ impl<'a> DesRun<'a> {
     /// distinct arrival slot, and rebuild every queue in the new order.
     fn admit_reorder_batch(&mut self, first: usize, acc: bool) {
         let t = self.now;
-        debug_assert_eq!(self.jobs[first].arrival, t);
+        debug_assert_eq!(self.feed.job(first).arrival, t);
         let mut newest = first;
-        while newest + 1 < self.jobs.len() && self.jobs[newest + 1].arrival == t {
-            newest += 1;
+        {
+            let jobs = self.feed.slice();
+            while newest + 1 < jobs.len() && jobs[newest + 1].arrival == t {
+                newest += 1;
+            }
         }
         self.preempt_all(t);
 
         let DesRun {
-            jobs,
+            feed,
             locality,
             num_servers,
             cfg,
@@ -484,7 +606,7 @@ impl<'a> DesRun<'a> {
             wf_evals,
             ..
         } = self;
-        let jobs: &'a [Job] = *jobs;
+        let jobs: &'a [Job] = feed.slice();
         oset.clear();
         for j in 0..=newest {
             if progress.total_remaining[j] > 0 {
@@ -510,7 +632,7 @@ impl<'a> DesRun<'a> {
         let mut sink = LaneSink {
             lanes: servers,
             spare,
-            jobs,
+            feed: &*feed,
             locality: *locality,
             free_est,
             now: t,
@@ -571,7 +693,7 @@ impl<'a> DesRun<'a> {
                 .locality
                 .map_or(true, |l| l.unit_rate(entry.job, &entry.parts, server));
         let mut budget = if exact {
-            elapsed * self.jobs[entry.job].mu[server]
+            elapsed * self.feed.job(entry.job).mu[server]
         } else {
             ((total as f64 * elapsed as f64 / dur as f64).floor() as TaskCount)
                 .min(total.saturating_sub(1))
@@ -670,6 +792,13 @@ impl<'a> DesRun<'a> {
             && self.progress.completion[entry.job].is_none()
         {
             self.progress.completion[entry.job] = Some(lf);
+            // Streaming eviction: a completed job has no live entries
+            // anywhere (every entry holds unapplied tasks), so its
+            // payload and per-group progress row can go now.
+            if let JobFeed::Stream(sf) = &mut self.feed {
+                self.progress.reclaim(entry.job, &mut self.spare_rows);
+                sf.retire(entry.job);
+            }
         }
     }
 
@@ -740,7 +869,8 @@ impl<'a> DesRun<'a> {
                 entry.pair = Some(p);
                 let mut parts = self.spare.pop().unwrap_or_default();
                 parts.extend_from_slice(&entry.parts);
-                let rbase = entry_base(self.jobs, self.locality, entry.job, &parts, r);
+                let rbase =
+                    entry_base(self.feed.job(entry.job), self.locality, entry.job, &parts, r);
                 self.free_est[r] = self.free_est[r].max(t) + rbase;
                 self.servers[r].queue.push_back(DesEntry {
                     job: entry.job,
@@ -755,7 +885,7 @@ impl<'a> DesRun<'a> {
             }
         }
         let token = self.servers[m].token;
-        self.heap.push(t + dur, EventKind::Complete { server: m, token });
+        self.queue.push(t + dur, EventKind::Complete { server: m, token });
         self.servers[m].running = Some(Running {
             entry,
             start: t,
@@ -773,7 +903,7 @@ impl<'a> DesRun<'a> {
         parts: &[(usize, TaskCount)],
         exclude: ServerId,
     ) -> Option<ServerId> {
-        let groups = &self.jobs[job].groups;
+        let groups = &self.feed.job(job).groups;
         let (k0, _) = parts[0];
         let mut best: Option<(Slots, ServerId)> = None;
         'srv: for &s in &groups[k0].servers {
@@ -1042,14 +1172,14 @@ mod tests {
         let topo = Topology::build(crate::topology::TopologyKind::Flat, 2);
         let loc = Locality::new(&jobs, &topo, 1.0);
         let parts = [(0usize, n)];
-        let plain = entry_base(&jobs, None, 0, &parts, 0);
+        let plain = entry_base(&jobs[0], None, 0, &parts, 0);
         assert_eq!(plain, n);
-        assert_eq!(entry_base(&jobs, Some(&loc), 0, &parts, 0), plain);
+        assert_eq!(entry_base(&jobs[0], Some(&loc), 0, &parts, 0), plain);
         // With a real penalty the weighted f64 path still applies (and
         // only to remote batches): server 1 is remote at penalty 2.
         let loc2 = Locality::new(&jobs, &topo, 2.0);
-        assert_eq!(entry_base(&jobs, Some(&loc2), 0, &[(0, 10)], 0), 10);
-        assert_eq!(entry_base(&jobs, Some(&loc2), 0, &[(0, 10)], 1), 20);
+        assert_eq!(entry_base(&jobs[0], Some(&loc2), 0, &[(0, 10)], 0), 10);
+        assert_eq!(entry_base(&jobs[0], Some(&loc2), 0, &[(0, 10)], 1), 20);
     }
 
     #[test]

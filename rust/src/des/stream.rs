@@ -1,0 +1,162 @@
+//! Streaming job ingestion for the DES engine.
+//!
+//! [`JobFeed`] is the engine's view of its workload. The classic mode is
+//! a materialized slice (every arrival event pre-pushed, zero overhead
+//! over the pre-streaming engine — and the differential oracle for the
+//! streaming mode). The streaming mode wraps a
+//! [`crate::sim::stream::JobSource`] and keeps only a *window* of job
+//! payloads resident: job `i+1` is pulled (and its arrival event pushed)
+//! when job `i` is admitted, and a completed job's payload is evicted as
+//! the retired prefix of the window advances.
+//!
+//! ## Why incremental arrival pushes cannot change the schedule
+//!
+//! The event order is the total key `(time, class, lane, seq)`
+//! ([`crate::des::heap`]). `seq` only breaks ties between events with
+//! equal `(time, class, lane)` — i.e. completions of the *same server* at
+//! the same slot, of which at most one is live (token staleness) — so
+//! pushing arrival events lazily instead of up front permutes only `seq`
+//! assignments, never the relative order of live events. Arrival `i+1` is
+//! always pushed before it can fire: admitting arrival `i` pulls it, and
+//! same-slot arrivals order by `lane` (job index), not push order.
+//! Streaming runs are therefore bit-identical to materialized runs — the
+//! equality `rust/tests/streaming_scale.rs` asserts.
+//!
+//! Residency: payloads (`groups`, `mu`, per-group progress rows) are
+//! O(window); per-job *scalars* (arrival slot, completion, last finish —
+//! needed to emit the exact JCT vector) remain O(jobs), a few words each.
+
+use crate::job::{Job, Slots};
+use crate::sim::stream::JobSource;
+use std::collections::VecDeque;
+
+/// Where [`super::DesRun`] gets its jobs: a materialized slice, or a
+/// bounded window over a streaming source.
+pub(crate) enum JobFeed<'a> {
+    Slice(&'a [Job]),
+    Stream(StreamFeed<'a>),
+}
+
+/// The streaming window: jobs pulled from the source but not yet retired.
+pub(crate) struct StreamFeed<'a> {
+    source: Box<dyn JobSource + 'a>,
+    /// Resident payloads; `window[0]` is job `base`.
+    window: VecDeque<Job>,
+    /// Parallel to `window`: completed jobs awaiting prefix eviction.
+    retired: VecDeque<bool>,
+    base: usize,
+    /// Arrival slot of every job pulled so far (O(1) per job; the exact
+    /// JCT vector needs it after the payload is gone).
+    arrivals: Vec<Slots>,
+    done: bool,
+    peak_window: usize,
+}
+
+impl<'a> StreamFeed<'a> {
+    pub(crate) fn new(source: Box<dyn JobSource + 'a>) -> Self {
+        StreamFeed {
+            source,
+            window: VecDeque::new(),
+            retired: VecDeque::new(),
+            base: 0,
+            arrivals: Vec::new(),
+            done: false,
+            peak_window: 0,
+        }
+    }
+
+    /// Pull the next job from the source into the window. `None` once the
+    /// source is exhausted.
+    pub(crate) fn pull(&mut self) -> crate::Result<Option<&Job>> {
+        if self.done {
+            return Ok(None);
+        }
+        match self.source.next_job()? {
+            None => {
+                self.done = true;
+                Ok(None)
+            }
+            Some(job) => {
+                debug_assert_eq!(job.id, self.arrivals.len(), "ids are emission order");
+                debug_assert!(
+                    self.arrivals.last().map_or(true, |&a| job.arrival >= a),
+                    "JobSource must yield non-decreasing arrivals"
+                );
+                self.arrivals.push(job.arrival);
+                self.window.push_back(job);
+                self.retired.push_back(false);
+                self.peak_window = self.peak_window.max(self.window.len());
+                Ok(self.window.back())
+            }
+        }
+    }
+
+    /// Mark job `i` complete and evict the retired window prefix.
+    pub(crate) fn retire(&mut self, i: usize) {
+        self.retired[i - self.base] = true;
+        while self.retired.front() == Some(&true) {
+            self.retired.pop_front();
+            self.window.pop_front();
+            self.base += 1;
+        }
+    }
+
+    pub(crate) fn arrivals(&self) -> &[Slots] {
+        &self.arrivals
+    }
+
+    /// High-water mark of resident payloads, combined with the source's
+    /// own window (the CSV reader's row window).
+    pub(crate) fn peak_window(&self) -> usize {
+        self.peak_window.max(self.source.peak_window())
+    }
+}
+
+impl<'a> JobFeed<'a> {
+    /// Payload of job `i`. Panics if `i` was evicted — structurally
+    /// impossible for the engine, which only touches live jobs.
+    #[inline]
+    pub(crate) fn job(&self, i: usize) -> &Job {
+        match self {
+            JobFeed::Slice(jobs) => &jobs[i],
+            JobFeed::Stream(sf) => &sf.window[i - sf.base],
+        }
+    }
+
+    /// The full materialized slice. Streaming feeds have none — the
+    /// reordering policies that need one are rejected at construction.
+    pub(crate) fn slice(&self) -> &'a [Job] {
+        match self {
+            JobFeed::Slice(jobs) => jobs,
+            JobFeed::Stream(_) => {
+                unreachable!("streaming DES runs are FIFO-only (no full job slice exists)")
+            }
+        }
+    }
+
+    /// Jobs known so far (total for slices).
+    pub(crate) fn seen(&self) -> usize {
+        match self {
+            JobFeed::Slice(jobs) => jobs.len(),
+            JobFeed::Stream(sf) => sf.arrivals.len(),
+        }
+    }
+
+    pub(crate) fn peak_window(&self) -> usize {
+        match self {
+            JobFeed::Slice(_) => 0,
+            JobFeed::Stream(sf) => sf.peak_window(),
+        }
+    }
+
+    /// Reserved capacity of the feed's own buffers (0 for slices, so the
+    /// materialized engine's footprint freeze is untouched).
+    pub(crate) fn footprint(&self) -> usize {
+        match self {
+            JobFeed::Slice(_) => 0,
+            JobFeed::Stream(sf) => {
+                sf.window.capacity() + sf.retired.capacity() + sf.arrivals.capacity()
+            }
+        }
+    }
+}

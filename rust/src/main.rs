@@ -106,6 +106,12 @@ fn build_cli() -> Cli {
                 "DES straggler speculation threshold factor (0 = off; needs \
                  --engine des) [default 0]",
             ),
+            flag_req(
+                "event-queue",
+                "DES event core: heap | calendar (bit-identical pop order; \
+                 calendar is O(1) amortized at streaming scale; needs \
+                 --engine des) [default heap]",
+            ),
         ]
     };
     Cli::new("taos", "data-locality-aware task assignment & scheduling")
@@ -117,6 +123,11 @@ fn build_cli() -> Cli {
                 "wf",
             ));
             f.push(switch("json", "emit JSON instead of text"));
+            f.push(switch(
+                "stream-stats",
+                "stream jobs through the run with O(window) memory and report \
+                 P\u{b2}-sketch percentiles + throughput telemetry (FIFO only)",
+            ));
             f
         })
         .subcommand("compare", "run all six algorithms on one setting", {
@@ -269,6 +280,10 @@ fn apply_engine_flags(
     if let Some(v) = parsed.get_parse::<f64>("speculate")? {
         cfg.sim.speculate = v;
     }
+    if let Some(s) = parsed.get("event-queue") {
+        cfg.sim.event_queue = taos::des::calendar::EventQueueKind::parse(s)
+            .ok_or_else(|| format!("--event-queue must be `heap` or `calendar`, got `{s}`"))?;
+    }
     Ok(())
 }
 
@@ -276,17 +291,53 @@ fn cmd_simulate(parsed: &taos::cli::Parsed) -> Result<(), String> {
     let cfg = config_from(parsed)?;
     let alg = parsed.get_or("alg", "wf");
     let policy = SchedPolicy::parse(alg).ok_or_else(|| format!("unknown algorithm `{alg}`"))?;
-    let out = run_experiment(&cfg, policy).map_err(|e| e.to_string())?;
-    let stats = out.jct_stats();
+    let streaming = parsed.has_switch("stream-stats");
+    let started = std::time::Instant::now();
+    let out = if streaming {
+        taos::sim::stream::run_stream_experiment(&cfg, policy)
+    } else {
+        run_experiment(&cfg, policy)
+    }
+    .map_err(|e| e.to_string())?;
+    let wall = started.elapsed().as_secs_f64().max(1e-9);
+    let tel = out.telemetry;
+    let events_per_sec = tel.events as f64 / wall;
     if parsed.has_switch("json") {
+        // Under --stream-stats the percentiles come from the fixed-size
+        // P² sketches (same keys, so downstream jq stays agnostic).
+        let jct = if streaming {
+            let s = taos::sim::stream::StreamStats::from_jcts(&out.jcts);
+            Json::obj(vec![
+                ("n", Json::num(s.n() as f64)),
+                ("mean", Json::num(s.mean())),
+                ("p50", Json::num(s.p50())),
+                ("p90", Json::num(s.p90())),
+                ("p99", Json::num(s.p99())),
+                ("max", Json::num(s.max())),
+            ])
+        } else {
+            out.jct_stats().to_json()
+        };
         let mut fields = vec![
             ("algorithm", Json::str(policy.name())),
             ("engine", Json::str(cfg.sim.engine.name())),
             ("topology", Json::str(cfg.sim.topology.name())),
-            ("jct", stats.to_json()),
+            ("jct", jct),
             ("overhead_us", Json::num(out.overhead.mean_us())),
             ("makespan", Json::num(out.makespan as f64)),
             ("wf_evals", Json::num(out.wf_evals as f64)),
+            (
+                "telemetry",
+                Json::obj(vec![
+                    ("events", Json::num(tel.events as f64)),
+                    ("peak_events", Json::num(tel.peak_events as f64)),
+                    ("peak_pool", Json::num(tel.peak_pool as f64)),
+                    ("peak_window", Json::num(tel.peak_window as f64)),
+                ]),
+            ),
+            // Wall-clock derived, so non-deterministic: CI diffs must
+            // del(.events_per_sec) alongside .overhead_us.
+            ("events_per_sec", Json::num(events_per_sec)),
         ];
         if !out.tier_tasks.is_empty() {
             fields.push((
@@ -306,12 +357,34 @@ fn cmd_simulate(parsed: &taos::cli::Parsed) -> Result<(), String> {
                 cfg.sim.topology.name()
             );
         }
-        println!("jobs           : {}", stats.n);
-        println!("mean JCT       : {:.1} slots", stats.mean);
-        println!("p50 / p90 / p99: {:.0} / {:.0} / {:.0}", stats.p50, stats.p90, stats.p99);
-        println!("max JCT        : {:.0}", stats.max);
+        if streaming {
+            let s = taos::sim::stream::StreamStats::from_jcts(&out.jcts);
+            println!(
+                "jobs           : {} (streamed, peak window {})",
+                s.n(),
+                tel.peak_window
+            );
+            println!("mean JCT       : {:.1} slots (P\u{b2} sketch percentiles)", s.mean());
+            println!("p50 / p90 / p99: {:.0} / {:.0} / {:.0}", s.p50(), s.p90(), s.p99());
+            println!("max JCT        : {:.0}", s.max());
+        } else {
+            let stats = out.jct_stats();
+            println!("jobs           : {}", stats.n);
+            println!("mean JCT       : {:.1} slots", stats.mean);
+            println!("p50 / p90 / p99: {:.0} / {:.0} / {:.0}", stats.p50, stats.p90, stats.p99);
+            println!("max JCT        : {:.0}", stats.max);
+        }
         println!("makespan       : {} slots", out.makespan);
         println!("overhead       : {:.1} us/arrival", out.overhead.mean_us());
+        if tel.events > 0 {
+            println!(
+                "DES events     : {} ({}/s, peak queue {}, peak pool {} slots)",
+                taos::benchlib::fmt_count(tel.events),
+                taos::benchlib::fmt_count(events_per_sec as u64),
+                tel.peak_events,
+                tel.peak_pool
+            );
+        }
         if out.wf_evals > 0 {
             println!(
                 "WF evaluations : {} ({} reorder thread(s))",
@@ -413,7 +486,14 @@ fn cmd_repro(parsed: &taos::cli::Parsed) -> Result<(), String> {
     // knobs — so combining it with explicit engine flags would silently
     // discard them; reject it like the `--scenario` combination above.
     if fig_id == "scenarios" {
-        for f in ["engine", "service", "locality-penalty", "speculate", "topology"] {
+        for f in [
+            "engine",
+            "service",
+            "locality-penalty",
+            "speculate",
+            "topology",
+            "event-queue",
+        ] {
             if parsed.get(f).is_some() {
                 return Err(format!(
                     "--{f} cannot be combined with --fig scenarios (each \
@@ -491,8 +571,12 @@ fn cmd_gen_trace(parsed: &taos::cli::Parsed) -> Result<(), String> {
     tcfg.jobs = jobs;
     tcfg.total_tasks = tasks;
     let trace = scenario.synth(&tcfg, &mut Rng::seed_from(seed));
-    let text = taos::trace::csv::to_batch_task_csv(&trace);
-    std::fs::write(out, text).map_err(|e| e.to_string())?;
+    // Stream rows straight to disk — no all-rows String for large traces.
+    let file = std::fs::File::create(out).map_err(|e| e.to_string())?;
+    let mut w = std::io::BufWriter::new(file);
+    taos::trace::csv::write_batch_task_csv(&trace, &mut w).map_err(|e| e.to_string())?;
+    use std::io::Write as _;
+    w.flush().map_err(|e| e.to_string())?;
     println!(
         "wrote {out}: {} jobs, {} tasks, {} groups ({} scenario)",
         trace.jobs.len(),

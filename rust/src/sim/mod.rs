@@ -32,6 +32,7 @@
 //! multi-level-locality axes the analytic model cannot express.
 
 pub mod stepping;
+pub mod stream;
 
 use crate::assign::{validate_assignment, AssignPolicy, Assigner};
 use crate::cluster::state::{ClusterState, JobProgress, QueueRebuild, ServerQueues};
@@ -42,6 +43,25 @@ use crate::sched::ocwf::{reorder_into, OutstandingSet, ReorderOutcome, ReorderWo
 use crate::sched::SchedPolicy;
 use crate::util::ceil_div;
 use crate::util::timer::OverheadMeter;
+
+/// Per-run throughput telemetry (DES engine; zero for the analytic
+/// engines, which process no events). The counters are deterministic —
+/// events/sec is computed by the caller from wall-clock time and is the
+/// only non-reproducible figure derived from them.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RunTelemetry {
+    /// Events popped from the event queue (live + stale).
+    pub events: u64,
+    /// High-water mark of the event-queue population.
+    pub peak_events: usize,
+    /// Pooled-buffer footprint at the end of the run (pools only grow,
+    /// so this is also the peak).
+    pub peak_pool: usize,
+    /// High-water mark of resident job payloads in a streaming run
+    /// (0 for materialized runs, where residency is simply the job
+    /// count) — the O(window) residency claim, observable.
+    pub peak_window: usize,
+}
 
 /// Result of one simulation run.
 #[derive(Clone, Debug)]
@@ -63,6 +83,8 @@ pub struct SimOutcome {
     /// sum to the trace's total task count — the locality hit-rate
     /// telemetry.
     pub tier_tasks: Vec<u64>,
+    /// Event-loop throughput counters (zero for analytic engines).
+    pub telemetry: RunTelemetry,
 }
 
 impl SimOutcome {
@@ -133,6 +155,7 @@ pub fn run_fifo(
         wf_evals: 0,
         oracle_stats: assigner.oracle_stats(),
         tier_tasks: Vec::new(),
+        telemetry: RunTelemetry::default(),
     })
 }
 
@@ -298,6 +321,7 @@ impl<'a> ReorderedRun<'a> {
             wf_evals: self.wf_evals,
             oracle_stats: None,
             tier_tasks: Vec::new(),
+            telemetry: RunTelemetry::default(),
         })
     }
 

@@ -117,6 +117,7 @@ pub fn run_fifo_stepping(
         wf_evals: 0,
         oracle_stats: None,
         tier_tasks: Vec::new(),
+        telemetry: crate::sim::RunTelemetry::default(),
     }
 }
 

@@ -1,0 +1,359 @@
+//! Streaming job ingestion: million-job runs without materializing the
+//! job list.
+//!
+//! [`materialize_jobs`](crate::sim::materialize_jobs) builds every
+//! [`Job`] up front — O(jobs) resident payloads (server sets, μ vectors),
+//! which caps runs around 10⁴–10⁵ jobs. This module pulls jobs through a
+//! [`JobSource`] one at a time instead:
+//!
+//! - [`JobStream`] — the production source. Synthetic traces keep the
+//!   *compact* trace (arrival + group sizes, ~20× smaller than payloads)
+//!   resident and materialize payloads on demand; CSV traces stream
+//!   through the windowed reader
+//!   ([`crate::trace::csv::CsvWindowReader`]), so nothing is O(jobs) but
+//!   a few scalars per job. Both drive the per-job RNG draws in the exact
+//!   order of `materialize_jobs` (shared
+//!   [`crate::trace::materialize_one`]), so [`JobStream::collect_all`]
+//!   reproduces it bit for bit — the differential-oracle contract
+//!   `rust/tests/streaming_scale.rs` asserts.
+//! - [`run_fifo_stream`] — the analytic FIFO engine as a per-job fold:
+//!   O(servers) state, one job resident at a time.
+//! - Streaming DES runs go through [`crate::des::DesRun::new_streaming`],
+//!   which windows payload residency over the event cascade.
+//! - [`StreamStats`] — fixed-footprint summary (Welford + P² quantile
+//!   sketches) for `--stream-stats` output, replacing the sort-based
+//!   percentile path.
+//!
+//! Scope: streaming runs are FIFO-policy, unit-locality only. OCWF
+//! reorders *every* outstanding job on each arrival and the locality
+//! model precomputes per-job tier tables — both need the materialized
+//! path, which remains available via [`JobStream::collect_all`].
+
+use crate::assign::{validate_assignment, AssignPolicy};
+use crate::cluster::placement::Placement;
+use crate::cluster::Cluster;
+use crate::config::{ExperimentConfig, SimConfig};
+use crate::des::service::EngineKind;
+use crate::job::Job;
+use crate::sched::SchedPolicy;
+use crate::sim::{RunTelemetry, SimOutcome};
+use crate::trace::csv::{CsvWindowReader, DEFAULT_LOOKAHEAD};
+use crate::trace::{arrival_span, materialize_one, raw_last, Trace, TraceJob};
+use crate::util::ceil_div;
+use crate::util::rng::Rng;
+use crate::util::stats::{P2Quantile, Welford};
+use crate::util::timer::OverheadMeter;
+
+/// A source of materialized jobs in arrival order. Contract: emitted jobs
+/// carry `id == emission index` and non-decreasing `arrival` slots.
+pub trait JobSource {
+    fn next_job(&mut self) -> crate::Result<Option<Job>>;
+    /// Total job count when known up front (both built-in sources know
+    /// it: synthetic from the trace config, CSV from pass 1).
+    fn len_hint(&self) -> Option<usize>;
+    /// High-water mark of the source's own lookahead window (CSV rows);
+    /// 0 for sources with no window.
+    fn peak_window(&self) -> usize {
+        0
+    }
+}
+
+enum Provider {
+    /// Compact synthetic trace, payloads materialized on demand.
+    Synth { trace: Trace, next: usize },
+    /// Windowed CSV reader (two passes over the file, O(window) rows).
+    Csv(CsvWindowReader),
+}
+
+/// The production [`JobSource`]: cluster + placement + RNG state plus a
+/// trace provider, materializing one job per pull with the exact RNG
+/// sequence of [`crate::sim::materialize_jobs`].
+pub struct JobStream {
+    provider: Provider,
+    cluster: Cluster,
+    placement: Placement,
+    span: f64,
+    raw_last: f64,
+    rng: Rng,
+    next_id: usize,
+    len: usize,
+}
+
+impl JobStream {
+    /// Open a stream for a config, with the default CSV lookahead window.
+    pub fn open(cfg: &ExperimentConfig) -> crate::Result<JobStream> {
+        Self::open_with_lookahead(cfg, DEFAULT_LOOKAHEAD)
+    }
+
+    /// [`JobStream::open`] with an explicit CSV lookahead bound (raw
+    /// trace-time units; ignored for synthetic traces, which arrive
+    /// sorted by construction).
+    ///
+    /// The construction sequence — seed fork, cluster generation, trace
+    /// build, placement — mirrors `materialize_jobs` statement for
+    /// statement, so the per-job draws that follow line up bit for bit.
+    pub fn open_with_lookahead(cfg: &ExperimentConfig, lookahead: f64) -> crate::Result<JobStream> {
+        cfg.validate()?;
+        let root = Rng::seed_from(cfg.seed);
+        let mut rng = root.fork(1);
+        let cluster = Cluster::generate(&cfg.cluster, &mut rng);
+        // Trace::build consumes RNG only on the synthetic path; the CSV
+        // path replaces the batch parse with the windowed reader and
+        // leaves the RNG untouched, exactly like `Trace::from_csv_file`.
+        let (provider, total_tasks, last_raw, len) = match &cfg.trace.csv_path {
+            Some(path) => {
+                let (reader, stats) = CsvWindowReader::open(path, lookahead)?;
+                (
+                    Provider::Csv(reader),
+                    stats.total_tasks,
+                    Some(stats.raw_last),
+                    stats.jobs,
+                )
+            }
+            None => {
+                let trace = cfg.trace.scenario.synth(&cfg.trace, &mut rng);
+                let total = trace.total_tasks();
+                let last = trace.jobs.last().map(|j| j.arrival_raw);
+                let len = trace.jobs.len();
+                (Provider::Synth { trace, next: 0 }, total, last, len)
+            }
+        };
+        let placement = Placement::with_mode(
+            cfg.cluster.servers,
+            cfg.cluster.zipf_alpha,
+            cfg.cluster.placement_mode,
+            &mut rng,
+        );
+        let span = arrival_span(total_tasks, cfg.trace.utilization, &cluster)?;
+        Ok(JobStream {
+            provider,
+            cluster,
+            placement,
+            span,
+            raw_last: raw_last(last_raw),
+            rng,
+            next_id: 0,
+            len,
+        })
+    }
+
+    pub fn num_servers(&self) -> usize {
+        self.cluster.num_servers()
+    }
+
+    /// Drain the stream into a `Vec<Job>` — the collect-all adapter for
+    /// small runs and tests; bit-identical to
+    /// [`crate::sim::materialize_jobs`] on the same config.
+    pub fn collect_all(mut self) -> crate::Result<Vec<Job>> {
+        let mut jobs = Vec::with_capacity(self.len);
+        while let Some(job) = self.next_job()? {
+            jobs.push(job);
+        }
+        Ok(jobs)
+    }
+}
+
+impl JobSource for JobStream {
+    fn next_job(&mut self) -> crate::Result<Option<Job>> {
+        let owned;
+        let tj: &TraceJob = match &mut self.provider {
+            Provider::Synth { trace, next } => {
+                if *next >= trace.jobs.len() {
+                    return Ok(None);
+                }
+                let tj = &trace.jobs[*next];
+                *next += 1;
+                tj
+            }
+            Provider::Csv(reader) => match reader.next_trace_job()? {
+                Some(tj) => {
+                    owned = tj;
+                    &owned
+                }
+                None => return Ok(None),
+            },
+        };
+        let job = materialize_one(
+            self.next_id,
+            tj,
+            &self.cluster,
+            &self.placement,
+            self.span,
+            self.raw_last,
+            &mut self.rng,
+        );
+        self.next_id += 1;
+        Ok(Some(job))
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.len)
+    }
+
+    fn peak_window(&self) -> usize {
+        match &self.provider {
+            Provider::Synth { .. } => 0,
+            Provider::Csv(reader) => reader.peak_window(),
+        }
+    }
+}
+
+/// The analytic FIFO engine ([`crate::sim::run_fifo`]) as a streaming
+/// fold: identical per-job arithmetic, one job resident at a time.
+pub fn run_fifo_stream(
+    source: &mut dyn JobSource,
+    num_servers: usize,
+    policy: AssignPolicy,
+    cfg: &SimConfig,
+    seed: u64,
+) -> crate::Result<SimOutcome> {
+    let mut assigner = policy.build(seed);
+    let mut free: Vec<crate::job::Slots> = vec![0; num_servers];
+    let mut state = crate::cluster::state::ClusterState::new(num_servers);
+    let mut jcts = Vec::with_capacity(source.len_hint().unwrap_or(0));
+    let mut overhead = OverheadMeter::new();
+    let mut makespan = 0;
+    let mut seen = 0usize;
+
+    while let Some(job) = source.next_job()? {
+        debug_assert!(job.mu.len() == num_servers);
+        seen += 1;
+        state.observe_free(&free, job.arrival);
+        let inst = state.instance(&job.groups, &job.mu);
+        let a = overhead.measure(|| assigner.assign(&inst));
+        debug_assert_eq!(validate_assignment(&inst, &a), Ok(()));
+        let mut completion = job.arrival;
+        for (m, n) in a.per_server() {
+            let start = free[m].max(job.arrival);
+            let fin = start + ceil_div(n, job.mu[m]);
+            free[m] = fin;
+            completion = completion.max(fin);
+        }
+        if completion > cfg.max_slots {
+            return Err(crate::Error::Sim(format!(
+                "fifo/{} run exceeded max_slots = {}: job {} (arrival {}) \
+                 would complete at slot {} ({} jobs, {} servers); \
+                 utilization config too hot",
+                policy.name(),
+                cfg.max_slots,
+                job.id,
+                job.arrival,
+                completion,
+                seen,
+                num_servers
+            )));
+        }
+        jcts.push(completion - job.arrival);
+        makespan = makespan.max(completion);
+    }
+
+    Ok(SimOutcome {
+        jcts,
+        overhead,
+        makespan,
+        wf_evals: 0,
+        oracle_stats: assigner.oracle_stats(),
+        tier_tasks: Vec::new(),
+        telemetry: RunTelemetry {
+            peak_window: source.peak_window().max(1),
+            ..RunTelemetry::default()
+        },
+    })
+}
+
+/// One streaming run for a config: [`JobStream`] pulled through the
+/// analytic FIFO fold or the streaming DES engine, per `cfg.sim.engine`.
+/// Rejects non-FIFO policies and active locality penalties — those need
+/// the materialized path.
+pub fn run_stream_experiment(
+    cfg: &ExperimentConfig,
+    policy: SchedPolicy,
+) -> crate::Result<SimOutcome> {
+    let SchedPolicy::Fifo(alg) = policy else {
+        return Err(crate::Error::Config(
+            "streaming runs support FIFO policies only: OCWF reorders every \
+             outstanding job and needs the materialized path"
+                .into(),
+        ));
+    };
+    let mut stream = JobStream::open(cfg)?;
+    let servers = stream.num_servers();
+    let seed = cfg.seed ^ 0xA55A;
+    match cfg.sim.engine {
+        EngineKind::Analytic => run_fifo_stream(&mut stream, servers, alg, &cfg.sim, seed),
+        EngineKind::Des => {
+            crate::des::DesRun::new_streaming(Box::new(stream), servers, policy, &cfg.sim, seed)?
+                .finish()
+        }
+    }
+}
+
+/// Fixed-footprint streaming summary: mean/std via [`Welford`], p50/p90/
+/// p99 via [`P2Quantile`] sketches, exact min/max. `Copy`-sized no matter
+/// how many samples pass through — the `--stream-stats` output path.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamStats {
+    w: Welford,
+    p50: P2Quantile,
+    p90: P2Quantile,
+    p99: P2Quantile,
+    min: f64,
+    max: f64,
+}
+
+impl Default for StreamStats {
+    fn default() -> Self {
+        StreamStats {
+            w: Welford::default(),
+            p50: P2Quantile::new(0.50),
+            p90: P2Quantile::new(0.90),
+            p99: P2Quantile::new(0.99),
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl StreamStats {
+    pub fn push(&mut self, x: f64) {
+        self.w.push(x);
+        self.p50.push(x);
+        self.p90.push(x);
+        self.p99.push(x);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn from_jcts(jcts: &[crate::job::Slots]) -> StreamStats {
+        let mut s = StreamStats::default();
+        for &j in jcts {
+            s.push(j as f64);
+        }
+        s
+    }
+
+    pub fn n(&self) -> u64 {
+        self.w.n()
+    }
+    pub fn mean(&self) -> f64 {
+        self.w.mean()
+    }
+    pub fn std(&self) -> f64 {
+        self.w.std()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+    pub fn p50(&self) -> f64 {
+        self.p50.value()
+    }
+    pub fn p90(&self) -> f64 {
+        self.p90.value()
+    }
+    pub fn p99(&self) -> f64 {
+        self.p99.value()
+    }
+}

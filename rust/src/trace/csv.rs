@@ -9,52 +9,127 @@
 //! minimum `create_timestamp` over its rows. Jobs are emitted in arrival
 //! order. Rows with `instance_num <= 0` or unparsable fields are rejected
 //! with a line number so trace problems are debuggable.
+//!
+//! Two readers share one row parser:
+//!
+//! - [`parse_batch_task`] — the batch path: the whole text in memory, a
+//!   `BTreeMap` keyed by job id, a final global sort. Exact for any row
+//!   order; the differential oracle for the streaming reader.
+//! - [`CsvWindowReader`] — the streaming path: rows are consumed through
+//!   a bounded lookahead window (trace-time units), jobs are emitted in
+//!   the same `(arrival, job_id)` order with O(window) resident rows. A
+//!   row further than `lookahead` behind the stream head is an error
+//!   (raise the lookahead or fall back to the batch parser), which is
+//!   exactly the bound that makes bounded memory safe.
 
-use std::collections::BTreeMap;
+use std::collections::VecDeque;
+use std::io::{self, BufRead, Write};
 
 use super::{Trace, TraceJob};
 use crate::{Error, Result};
 
+/// Default streaming lookahead, in raw trace-time units (seconds for the
+/// Alibaba trace): how far out of order rows may arrive.
+pub const DEFAULT_LOOKAHEAD: f64 = 3600.0;
+
+/// One parsed row: borrowed job id, so the contiguous-job fast path can
+/// compare ids without allocating.
+struct Row<'l> {
+    ts: f64,
+    job_id: &'l str,
+    instances: u64,
+}
+
+/// Parse one line into a [`Row`], `None` for blank/comment lines.
+/// `lineno` is zero-based; errors report it one-based. All three readers
+/// (batch, fast path, windowed) go through here, so field validation and
+/// line-numbered errors cannot drift between them.
+fn parse_row(raw: &str, lineno: usize) -> Result<Option<Row<'_>>> {
+    let line = raw.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    let mut fields = [""; 5];
+    let mut n = 0usize;
+    for f in line.split(',') {
+        if n < 5 {
+            fields[n] = f.trim();
+        }
+        n += 1;
+    }
+    if n < 5 {
+        return Err(Error::TraceParse {
+            line: lineno + 1,
+            msg: format!("expected >= 5 comma-separated fields, got {n}"),
+        });
+    }
+    let ts: f64 = fields[0].parse().map_err(|_| Error::TraceParse {
+        line: lineno + 1,
+        msg: format!("bad create_timestamp `{}`", fields[0]),
+    })?;
+    let job_id = fields[2];
+    if job_id.is_empty() {
+        return Err(Error::TraceParse {
+            line: lineno + 1,
+            msg: "empty job_id".into(),
+        });
+    }
+    let instances: i64 = fields[4].parse().map_err(|_| Error::TraceParse {
+        line: lineno + 1,
+        msg: format!("bad instance_num `{}`", fields[4]),
+    })?;
+    if instances <= 0 {
+        return Err(Error::TraceParse {
+            line: lineno + 1,
+            msg: format!("instance_num must be positive, got {instances}"),
+        });
+    }
+    Ok(Some(Row {
+        ts,
+        job_id,
+        instances: instances as u64,
+    }))
+}
+
 /// Parse CSV text in the `batch_task.csv` schema into a [`Trace`].
+///
+/// Trace rows for one job are typically contiguous, so the accumulator
+/// for the *last-seen* job id is kept outside the map and matched against
+/// the borrowed id of each row — the contiguous case touches neither the
+/// map nor the allocator. On a job switch the accumulator is flushed into
+/// the map (merging with any earlier burst of the same job, preserving
+/// row order within the job).
 pub fn parse_batch_task(text: &str) -> Result<Trace> {
+    use std::collections::BTreeMap;
     // job key -> (min create ts, group sizes in row order)
     let mut jobs: BTreeMap<String, (f64, Vec<u64>)> = BTreeMap::new();
+    let mut last: Option<(String, (f64, Vec<u64>))> = None;
     for (lineno, raw) in text.lines().enumerate() {
-        let line = raw.trim();
-        if line.is_empty() || line.starts_with('#') {
+        let Some(row) = parse_row(raw, lineno)? else {
             continue;
+        };
+        match &mut last {
+            Some((id, acc)) if id.as_str() == row.job_id => {
+                acc.0 = acc.0.min(row.ts);
+                acc.1.push(row.instances);
+            }
+            _ => {
+                if let Some((id, acc)) = last.take() {
+                    merge_into(&mut jobs, id, acc);
+                }
+                // Resume an earlier non-contiguous burst of this job so
+                // group order stays row order.
+                let mut acc = jobs
+                    .remove(row.job_id)
+                    .unwrap_or_else(|| (f64::INFINITY, Vec::new()));
+                acc.0 = acc.0.min(row.ts);
+                acc.1.push(row.instances);
+                last = Some((row.job_id.to_string(), acc));
+            }
         }
-        let fields: Vec<&str> = line.split(',').map(|f| f.trim()).collect();
-        if fields.len() < 5 {
-            return Err(Error::TraceParse {
-                line: lineno + 1,
-                msg: format!("expected >= 5 comma-separated fields, got {}", fields.len()),
-            });
-        }
-        let create_ts: f64 = fields[0].parse().map_err(|_| Error::TraceParse {
-            line: lineno + 1,
-            msg: format!("bad create_timestamp `{}`", fields[0]),
-        })?;
-        let job_id = fields[2].to_string();
-        if job_id.is_empty() {
-            return Err(Error::TraceParse {
-                line: lineno + 1,
-                msg: "empty job_id".into(),
-            });
-        }
-        let instances: i64 = fields[4].parse().map_err(|_| Error::TraceParse {
-            line: lineno + 1,
-            msg: format!("bad instance_num `{}`", fields[4]),
-        })?;
-        if instances <= 0 {
-            return Err(Error::TraceParse {
-                line: lineno + 1,
-                msg: format!("instance_num must be positive, got {instances}"),
-            });
-        }
-        let entry = jobs.entry(job_id).or_insert((f64::INFINITY, Vec::new()));
-        entry.0 = entry.0.min(create_ts);
-        entry.1.push(instances as u64);
+    }
+    if let Some((id, acc)) = last.take() {
+        merge_into(&mut jobs, id, acc);
     }
     if jobs.is_empty() {
         return Err(Error::TraceParse {
@@ -76,23 +151,294 @@ pub fn parse_batch_task(text: &str) -> Result<Trace> {
     })
 }
 
-/// Serialize a [`Trace`] back into the `batch_task.csv` schema — the
-/// exact inverse of [`parse_batch_task`] up to timestamp quantization
-/// (raw arrivals are emitted in milliseconds with 3 decimals). Job ids
-/// are zero-padded so ties in the quantized timestamp keep the original
-/// job order through the parser's stable sort.
-pub fn to_batch_task_csv(trace: &Trace) -> String {
-    let mut out = String::new();
+fn merge_into(
+    jobs: &mut std::collections::BTreeMap<String, (f64, Vec<u64>)>,
+    id: String,
+    acc: (f64, Vec<u64>),
+) {
+    let entry = jobs.entry(id).or_insert((f64::INFINITY, Vec::new()));
+    entry.0 = entry.0.min(acc.0);
+    entry.1.extend_from_slice(&acc.1);
+}
+
+/// Serialize a [`Trace`] into the `batch_task.csv` schema through any
+/// writer — the exact inverse of [`parse_batch_task`] up to timestamp
+/// quantization (raw arrivals are emitted in milliseconds with 3
+/// decimals). Job ids are zero-padded so ties in the quantized timestamp
+/// keep the original job order through the parser's stable sort. Rows are
+/// formatted into one recycled line buffer, so exporting a large trace
+/// streams through the writer instead of building it in memory; wrap the
+/// target in a `BufWriter` for file output.
+pub fn write_batch_task_csv(trace: &Trace, out: &mut impl Write) -> io::Result<()> {
+    let mut line = String::with_capacity(64);
     for (j, job) in trace.jobs.iter().enumerate() {
         let ts = job.arrival_raw * 1000.0;
         for (g, size) in job.group_sizes.iter().enumerate() {
-            out.push_str(&format!(
-                "{ts:.3},{:.3},j_{j:06},t_{g},{size},Terminated,100,0.5\n",
+            line.clear();
+            use std::fmt::Write as _;
+            let _ = writeln!(
+                line,
+                "{ts:.3},{:.3},j_{j:06},t_{g},{size},Terminated,100,0.5",
                 ts + 1.0,
-            ));
+            );
+            out.write_all(line.as_bytes())?;
         }
     }
-    out
+    Ok(())
+}
+
+/// [`write_batch_task_csv`] collected into a `String` — small traces and
+/// tests.
+pub fn to_batch_task_csv(trace: &Trace) -> String {
+    let mut out = Vec::new();
+    write_batch_task_csv(trace, &mut out).expect("Vec<u8> writes are infallible");
+    String::from_utf8(out).expect("csv rows are ASCII")
+}
+
+/// Aggregates of one CSV pass the materializer needs *before* the first
+/// job can be emitted: produced by [`scan_batch_task`] (pass 1 of the
+/// streaming reader) with the same windowed state as pass 2.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CsvStreamStats {
+    /// Number of distinct jobs.
+    pub jobs: usize,
+    /// Σ instance_num over every row.
+    pub total_tasks: u64,
+    /// Smallest create_timestamp (the arrival-zero anchor).
+    pub t0: f64,
+    /// Largest per-job arrival, already normalized: `max_j min-ts(j) - t0`,
+    /// floored at 1e-9 ([`super::raw_last`]).
+    pub raw_last: f64,
+}
+
+/// One open (or closed-but-unemitted) job in the streaming window.
+#[derive(Debug)]
+struct WinJob {
+    id: String,
+    min_ts: f64,
+    groups: Vec<u64>,
+}
+
+fn window_err(lineno: usize, ts: f64, head: f64, lookahead: f64) -> Error {
+    Error::TraceParse {
+        line: lineno + 1,
+        msg: format!(
+            "row at create_timestamp {ts} is {:.3} behind the stream head {head}; \
+             the streaming reader's lookahead window is {lookahead} — raise it or \
+             use the batch parser",
+            head - ts
+        ),
+    }
+}
+
+/// Pass 1 of the streaming reader: windowed scan computing
+/// [`CsvStreamStats`]. Enforces the same lookahead invariant as pass 2,
+/// so a trace that scans cleanly also streams cleanly.
+pub fn scan_batch_task(reader: impl BufRead, lookahead: f64) -> Result<CsvStreamStats> {
+    let mut open: Vec<(String, f64)> = Vec::new();
+    let mut head = f64::NEG_INFINITY;
+    let mut t0 = f64::INFINITY;
+    let mut max_min = f64::NEG_INFINITY;
+    let mut jobs = 0usize;
+    let mut total_tasks = 0u64;
+    let mut buf = String::new();
+    let mut lineno = 0usize;
+    let mut r = reader;
+    loop {
+        buf.clear();
+        if r.read_line(&mut buf).map_err(Error::Io)? == 0 {
+            break;
+        }
+        let Some(row) = parse_row(&buf, lineno)? else {
+            lineno += 1;
+            continue;
+        };
+        if row.ts < head - lookahead {
+            return Err(window_err(lineno, row.ts, head, lookahead));
+        }
+        head = head.max(row.ts);
+        t0 = t0.min(row.ts);
+        total_tasks += row.instances;
+        match open.iter_mut().find(|(id, _)| id == row.job_id) {
+            Some((_, min_ts)) => *min_ts = min_ts.min(row.ts),
+            None => {
+                jobs += 1;
+                open.push((row.job_id.to_string(), row.ts));
+            }
+        }
+        // A job whose first row is more than 2·lookahead behind the head
+        // can receive no further rows (any row for it would be > lookahead
+        // late), so its min is final — retire it from the window.
+        open.retain(|&(_, min_ts)| {
+            if head > min_ts + 2.0 * lookahead {
+                max_min = max_min.max(min_ts);
+                false
+            } else {
+                true
+            }
+        });
+        lineno += 1;
+    }
+    if jobs == 0 {
+        return Err(Error::TraceParse {
+            line: 0,
+            msg: "trace contains no rows".into(),
+        });
+    }
+    for (_, min_ts) in open {
+        max_min = max_min.max(min_ts);
+    }
+    Ok(CsvStreamStats {
+        jobs,
+        total_tasks,
+        t0,
+        raw_last: super::raw_last(Some(max_min - t0)),
+    })
+}
+
+/// Pass 2 of the streaming reader: emits [`TraceJob`]s in the exact
+/// `(arrival_raw, job_id)` order of [`parse_batch_task`], holding only
+/// the jobs within `2 × lookahead` of the stream head.
+///
+/// Emission rule: the window's smallest `(min_ts, id)` job is emitted
+/// once it is *closed* (`head > min_ts + 2·lookahead`, so no further row
+/// can belong to it) — and closure also guarantees no later row can open
+/// a job that sorts before it (a new job's first row is within
+/// `lookahead` of the head, hence strictly after the closed job's min).
+pub struct CsvWindowReader {
+    reader: Box<dyn BufRead>,
+    lookahead: f64,
+    t0: f64,
+    window: Vec<WinJob>,
+    ready: VecDeque<TraceJob>,
+    head: f64,
+    buf: String,
+    lineno: usize,
+    eof: bool,
+    peak_window: usize,
+}
+
+impl CsvWindowReader {
+    pub fn new(reader: Box<dyn BufRead>, stats: &CsvStreamStats, lookahead: f64) -> Self {
+        CsvWindowReader {
+            reader,
+            lookahead,
+            t0: stats.t0,
+            window: Vec::new(),
+            ready: VecDeque::new(),
+            head: f64::NEG_INFINITY,
+            buf: String::new(),
+            lineno: 0,
+            eof: false,
+            peak_window: 0,
+        }
+    }
+
+    /// Open a CSV file for streaming: pass 1 ([`scan_batch_task`]) then a
+    /// reader positioned for pass 2. The file is opened twice; only
+    /// O(window) state is ever resident.
+    pub fn open(path: &str, lookahead: f64) -> Result<(Self, CsvStreamStats)> {
+        let stats = scan_batch_task(
+            io::BufReader::new(std::fs::File::open(path).map_err(Error::Io)?),
+            lookahead,
+        )?;
+        let reader = io::BufReader::new(std::fs::File::open(path).map_err(Error::Io)?);
+        Ok((Self::new(Box::new(reader), &stats, lookahead), stats))
+    }
+
+    /// High-water mark of jobs resident in the window (the O(window)
+    /// residency claim, observable).
+    pub fn peak_window(&self) -> usize {
+        self.peak_window
+    }
+
+    /// Move every closed window job that sorts before all others into the
+    /// ready queue, in `(min_ts, id)` order.
+    fn drain_closed(&mut self) {
+        loop {
+            let Some(best) = self
+                .window
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| {
+                    a.min_ts
+                        .partial_cmp(&b.min_ts)
+                        .unwrap()
+                        .then_with(|| a.id.cmp(&b.id))
+                })
+                .map(|(i, _)| i)
+            else {
+                return;
+            };
+            let closed = self.head > self.window[best].min_ts + 2.0 * self.lookahead;
+            if !closed {
+                return;
+            }
+            let wj = self.window.swap_remove(best);
+            self.ready.push_back(TraceJob {
+                arrival_raw: wj.min_ts - self.t0,
+                group_sizes: wj.groups,
+            });
+        }
+    }
+
+    /// Flush the whole window at EOF, sorted.
+    fn drain_all(&mut self) {
+        self.window.sort_by(|a, b| {
+            a.min_ts
+                .partial_cmp(&b.min_ts)
+                .unwrap()
+                .then_with(|| a.id.cmp(&b.id))
+        });
+        for wj in self.window.drain(..) {
+            self.ready.push_back(TraceJob {
+                arrival_raw: wj.min_ts - self.t0,
+                group_sizes: wj.groups,
+            });
+        }
+    }
+
+    /// The next trace job in arrival order, `None` at end of trace.
+    pub fn next_trace_job(&mut self) -> Result<Option<TraceJob>> {
+        loop {
+            if let Some(tj) = self.ready.pop_front() {
+                return Ok(Some(tj));
+            }
+            if self.eof {
+                return Ok(None);
+            }
+            self.buf.clear();
+            if self.reader.read_line(&mut self.buf).map_err(Error::Io)? == 0 {
+                self.eof = true;
+                self.drain_all();
+                continue;
+            }
+            let lineno = self.lineno;
+            self.lineno += 1;
+            let Some(row) = parse_row(&self.buf, lineno)? else {
+                continue;
+            };
+            if row.ts < self.head - self.lookahead {
+                return Err(window_err(lineno, row.ts, self.head, self.lookahead));
+            }
+            self.head = self.head.max(row.ts);
+            match self.window.iter_mut().find(|w| w.id == row.job_id) {
+                Some(w) => {
+                    w.min_ts = w.min_ts.min(row.ts);
+                    w.groups.push(row.instances);
+                }
+                None => {
+                    self.window.push(WinJob {
+                        id: row.job_id.to_string(),
+                        min_ts: row.ts,
+                        groups: vec![row.instances],
+                    });
+                    self.peak_window = self.peak_window.max(self.window.len());
+                }
+            }
+            self.drain_closed();
+        }
+    }
 }
 
 #[cfg(test)]
@@ -122,6 +468,21 @@ mod tests {
     }
 
     #[test]
+    fn noncontiguous_job_rows_keep_row_order() {
+        // j_1's bursts are split by j_2; the fast path must merge them
+        // in row order, like the plain map did.
+        let t = parse_batch_task(
+            "10,0,j_1,t_1,1,T,1,1\n\
+             12,0,j_2,t_1,2,T,1,1\n\
+             11,0,j_1,t_2,3,T,1,1\n",
+        )
+        .unwrap();
+        assert_eq!(t.jobs.len(), 2);
+        assert_eq!(t.jobs[0].group_sizes, vec![1, 3]);
+        assert_eq!(t.jobs[1].group_sizes, vec![2]);
+    }
+
+    #[test]
     fn skips_blank_and_comment_lines() {
         let t = parse_batch_task("# header\n\n1,2,j_1,t_1,3,T,1,1\n").unwrap();
         assert_eq!(t.jobs.len(), 1);
@@ -147,5 +508,89 @@ mod tests {
     #[test]
     fn rejects_empty_trace() {
         assert!(parse_batch_task("\n\n").is_err());
+        assert!(scan_batch_task("\n\n".as_bytes(), 10.0).is_err());
+    }
+
+    #[test]
+    fn writer_roundtrips_through_parser() {
+        let t = parse_batch_task(SAMPLE).unwrap();
+        let mut out = Vec::new();
+        write_batch_task_csv(&t, &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert_eq!(text, to_batch_task_csv(&t), "string wrapper is the writer");
+        let back = parse_batch_task(&text).unwrap();
+        assert_eq!(back.jobs.len(), t.jobs.len());
+        for (a, b) in back.jobs.iter().zip(&t.jobs) {
+            assert_eq!(a.group_sizes, b.group_sizes);
+        }
+    }
+
+    fn stream_all(text: &str, lookahead: f64) -> Result<(Vec<TraceJob>, CsvStreamStats)> {
+        let stats = scan_batch_task(text.as_bytes(), lookahead)?;
+        let mut r = CsvWindowReader::new(
+            Box::new(io::Cursor::new(text.as_bytes().to_vec())),
+            &stats,
+            lookahead,
+        );
+        let mut jobs = Vec::new();
+        while let Some(tj) = r.next_trace_job()? {
+            jobs.push(tj);
+        }
+        Ok((jobs, stats))
+    }
+
+    #[test]
+    fn windowed_reader_matches_batch_parser() {
+        for lookahead in [30.0, 100.0, 1e6] {
+            let (jobs, stats) = stream_all(SAMPLE, lookahead).unwrap();
+            let t = parse_batch_task(SAMPLE).unwrap();
+            assert_eq!(jobs, t.jobs, "lookahead {lookahead}");
+            assert_eq!(stats.jobs, 3);
+            assert_eq!(stats.total_tasks, 29);
+            assert_eq!(stats.t0, 90.0);
+            assert_eq!(stats.raw_last, 60.0);
+        }
+    }
+
+    #[test]
+    fn windowed_reader_emits_before_eof_with_bounded_window() {
+        // 100 single-row jobs spaced 10 apart, lookahead 10: closure at
+        // head > min + 20, so the window never holds more than a few jobs.
+        let mut text = String::new();
+        for j in 0..100 {
+            text.push_str(&format!("{},0,j_{j:03},t_0,1,T,1,1\n", j * 10));
+        }
+        let (jobs, stats) = stream_all(&text, 10.0).unwrap();
+        assert_eq!(jobs.len(), 100);
+        assert_eq!(stats.jobs, 100);
+        let t = parse_batch_task(&text).unwrap();
+        assert_eq!(jobs, t.jobs);
+        let stats2 = scan_batch_task(text.as_bytes(), 10.0).unwrap();
+        let mut r = CsvWindowReader::new(
+            Box::new(io::Cursor::new(text.as_bytes().to_vec())),
+            &stats2,
+            10.0,
+        );
+        while r.next_trace_job().unwrap().is_some() {}
+        assert!(
+            r.peak_window() <= 4,
+            "O(window) residency: {}",
+            r.peak_window()
+        );
+    }
+
+    #[test]
+    fn windowed_reader_rejects_rows_beyond_lookahead() {
+        let text = "1000,0,j_1,t_0,1,T,1,1\n10,0,j_2,t_0,1,T,1,1\n";
+        let err = stream_all(text, 100.0).unwrap_err();
+        match err {
+            Error::TraceParse { line, msg } => {
+                assert_eq!(line, 2);
+                assert!(msg.contains("lookahead"), "{msg}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // A big enough window accepts the same text.
+        assert!(stream_all(text, 1000.0).is_ok());
     }
 }

@@ -168,6 +168,11 @@ impl Trace {
     /// Offered-load calibration: total work ≈ Σ_c |T_c| / E[μ] server-slots
     /// must equal `utilization · M · span`, so
     /// `span = total_tasks / (utilization · M · E[μ])`.
+    ///
+    /// Internally this is a loop over [`materialize_one`] — the same
+    /// per-job step the streaming ingestion path
+    /// ([`crate::sim::stream::JobStream`]) drives one job at a time, so
+    /// the two paths draw the identical RNG sequence by construction.
     pub fn materialize(
         &self,
         cluster: &Cluster,
@@ -175,43 +180,72 @@ impl Trace {
         utilization: f64,
         rng: &mut Rng,
     ) -> Result<Vec<Job>> {
-        if !(utilization > 0.0 && utilization < 1.0) {
-            return Err(Error::Config("utilization must be in (0,1)".into()));
-        }
-        let m = cluster.num_servers() as f64;
-        let span = self.total_tasks() as f64 / (utilization * m * cluster.mean_mu());
-        let raw_last = self
-            .jobs
-            .last()
-            .map(|j| j.arrival_raw)
-            .unwrap_or(0.0)
-            .max(1e-9);
-        let cfg = cluster.config();
+        let span = arrival_span(self.total_tasks(), utilization, cluster)?;
+        let raw_last = raw_last(self.jobs.last().map(|j| j.arrival_raw));
         let mut jobs = Vec::with_capacity(self.jobs.len());
         for (id, tj) in self.jobs.iter().enumerate() {
-            let arrival = ((tj.arrival_raw / raw_last) * span).floor() as Slots;
-            let groups = tj
-                .group_sizes
-                .iter()
-                .map(|&size| {
-                    TaskGroup::new(
-                        size,
-                        placement.sample_group_servers(rng, cfg.avail_lo, cfg.avail_hi),
-                    )
-                })
-                .collect();
-            jobs.push(Job {
-                id,
-                arrival,
-                groups,
-                mu: cluster.sample_mu(rng),
-            });
+            jobs.push(materialize_one(
+                id, tj, cluster, placement, span, raw_last, rng,
+            ));
         }
         // Arrival order must be non-decreasing (trace order is chronological).
         for w in jobs.windows(2) {
             debug_assert!(w[0].arrival <= w[1].arrival);
         }
         Ok(jobs)
+    }
+}
+
+/// The arrival-timeline span (in slots) that realizes an offered load of
+/// `utilization`: `total_tasks / (utilization · M · E[μ])`. Shared by
+/// [`Trace::materialize`] and the streaming materializer so the rescaling
+/// cannot drift between the two paths.
+pub fn arrival_span(total_tasks: u64, utilization: f64, cluster: &Cluster) -> Result<f64> {
+    if !(utilization > 0.0 && utilization < 1.0) {
+        return Err(Error::Config("utilization must be in (0,1)".into()));
+    }
+    let m = cluster.num_servers() as f64;
+    Ok(total_tasks as f64 / (utilization * m * cluster.mean_mu()))
+}
+
+/// The raw-arrival normalizer: the *last* job's `arrival_raw` (trace
+/// order is chronological), floored at 1e-9 so an empty or single-instant
+/// trace still divides cleanly.
+pub fn raw_last(last_arrival_raw: Option<f64>) -> f64 {
+    last_arrival_raw.unwrap_or(0.0).max(1e-9)
+}
+
+/// Materialize a single trace job: rescale its arrival onto the slot
+/// timeline and sample its per-group server sets and per-server μ. The
+/// RNG draws happen in a fixed order (each group's placement, then the μ
+/// vector), so a sequential scan over trace jobs — whether batch
+/// ([`Trace::materialize`]) or streaming — produces bit-identical jobs.
+pub fn materialize_one(
+    id: usize,
+    tj: &TraceJob,
+    cluster: &Cluster,
+    placement: &Placement,
+    span: f64,
+    raw_last: f64,
+    rng: &mut Rng,
+) -> Job {
+    let cfg = cluster.config();
+    let arrival = ((tj.arrival_raw / raw_last) * span).floor() as Slots;
+    let groups = tj
+        .group_sizes
+        .iter()
+        .map(|&size| {
+            TaskGroup::new(
+                size,
+                placement.sample_group_servers(rng, cfg.avail_lo, cfg.avail_hi),
+            )
+        })
+        .collect();
+    Job {
+        id,
+        arrival,
+        groups,
+        mu: cluster.sample_mu(rng),
     }
 }
 

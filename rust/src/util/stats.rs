@@ -114,7 +114,7 @@ impl Ecdf {
 }
 
 /// Online mean/variance accumulator (Welford) for streaming timers.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default)]
 pub struct Welford {
     n: u64,
     mean: f64,
@@ -147,6 +147,124 @@ impl Welford {
     }
     pub fn std(&self) -> f64 {
         self.var().sqrt()
+    }
+}
+
+/// Online quantile estimator with a fixed footprint: the P² algorithm
+/// (Jain & Chlamtac, CACM 1985). Five markers track the target quantile,
+/// its half-way neighbours and the extremes; marker heights move by
+/// piecewise-parabolic interpolation as observations stream in. No heap
+/// storage at all — `size_of::<P2Quantile>()` bytes regardless of the
+/// sample size — which is what lets a million-job streaming run report
+/// p50/p99 without retaining (or sorting) the sample.
+///
+/// Accuracy is approximate (the classic trade for O(1) memory); exact
+/// percentiles stay on [`Summary::from`] wherever tests assert exactness.
+#[derive(Clone, Copy, Debug)]
+pub struct P2Quantile {
+    /// Target quantile in (0,1).
+    p: f64,
+    /// Marker heights.
+    q: [f64; 5],
+    /// Marker positions (1-based observation counts).
+    n: [f64; 5],
+    /// Desired marker positions.
+    np: [f64; 5],
+    /// Desired-position increments per observation.
+    dn: [f64; 5],
+    count: u64,
+}
+
+impl P2Quantile {
+    pub fn new(p: f64) -> Self {
+        assert!(p > 0.0 && p < 1.0, "quantile must be in (0,1)");
+        P2Quantile {
+            p,
+            q: [0.0; 5],
+            n: [1.0, 2.0, 3.0, 4.0, 5.0],
+            np: [1.0, 1.0 + 2.0 * p, 1.0 + 4.0 * p, 3.0 + 2.0 * p, 5.0],
+            dn: [0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0],
+            count: 0,
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.count < 5 {
+            self.q[self.count as usize] = x;
+            self.count += 1;
+            if self.count == 5 {
+                self.q.sort_by(f64::total_cmp);
+            }
+            return;
+        }
+        self.count += 1;
+        // Cell the observation falls in (clamping the extremes).
+        let k = if x < self.q[0] {
+            self.q[0] = x;
+            0
+        } else if x >= self.q[4] {
+            self.q[4] = self.q[4].max(x);
+            3
+        } else {
+            let mut k = 0;
+            while k < 3 && x >= self.q[k + 1] {
+                k += 1;
+            }
+            k
+        };
+        for i in (k + 1)..5 {
+            self.n[i] += 1.0;
+        }
+        for i in 0..5 {
+            self.np[i] += self.dn[i];
+        }
+        // Adjust interior markers toward their desired positions.
+        for i in 1..4 {
+            let d = self.np[i] - self.n[i];
+            if (d >= 1.0 && self.n[i + 1] - self.n[i] > 1.0)
+                || (d <= -1.0 && self.n[i - 1] - self.n[i] < -1.0)
+            {
+                let s = d.signum();
+                let parabolic = self.parabolic(i, s);
+                if self.q[i - 1] < parabolic && parabolic < self.q[i + 1] {
+                    self.q[i] = parabolic;
+                } else {
+                    self.q[i] = self.linear(i, s);
+                }
+                self.n[i] += s;
+            }
+        }
+    }
+
+    fn parabolic(&self, i: usize, s: f64) -> f64 {
+        let (q, n) = (&self.q, &self.n);
+        q[i] + s / (n[i + 1] - n[i - 1])
+            * ((n[i] - n[i - 1] + s) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+                + (n[i + 1] - n[i] - s) * (q[i] - q[i - 1]) / (n[i] - n[i - 1]))
+    }
+
+    fn linear(&self, i: usize, s: f64) -> f64 {
+        let j = (i as f64 + s) as usize;
+        self.q[i] + s * (self.q[j] - self.q[i]) / (self.n[j] - self.n[i])
+    }
+
+    /// The current quantile estimate; exact while fewer than five
+    /// observations arrived, NaN when empty.
+    pub fn value(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        if self.count < 5 {
+            let mut head = self.q;
+            let head = &mut head[..self.count as usize];
+            head.sort_by(f64::total_cmp);
+            return percentile_sorted(head, self.p);
+        }
+        self.q[2]
     }
 }
 
@@ -240,6 +358,58 @@ mod tests {
             assert!(w[0].0 <= w[1].0);
         }
         assert!((s.last().unwrap().1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn p2_tracks_uniform_and_heavy_tail_quantiles() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from(0x92);
+        for &p in &[0.5, 0.9, 0.99] {
+            let mut sketch = P2Quantile::new(p);
+            let mut xs = Vec::new();
+            for _ in 0..20_000 {
+                // Mix of uniform and a lognormal-ish tail.
+                let x = if rng.gen_range(4) == 0 {
+                    rng.gen_lognormal(0.0, 1.0) * 50.0
+                } else {
+                    rng.gen_f64() * 100.0
+                };
+                sketch.push(x);
+                xs.push(x);
+            }
+            xs.sort_by(f64::total_cmp);
+            let exact = percentile_sorted(&xs, p);
+            let got = sketch.value();
+            let spread = xs[xs.len() - 1] - xs[0];
+            assert!(
+                (got - exact).abs() < 0.05 * spread.max(exact.abs()),
+                "p{p}: sketch {got} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn p2_is_exact_below_five_samples_and_fixed_size() {
+        let mut s = P2Quantile::new(0.5);
+        assert!(s.value().is_nan());
+        for &x in &[3.0, 1.0, 2.0] {
+            s.push(x);
+        }
+        assert!((s.value() - 2.0).abs() < 1e-12, "exact median of 3 samples");
+        assert_eq!(s.count(), 3);
+        // The fixed-footprint contract: a plain Copy struct, no heap.
+        let _copy: P2Quantile = s;
+        assert!(std::mem::size_of::<P2Quantile>() <= 200);
+    }
+
+    #[test]
+    fn p2_monotone_input_lands_on_exact_quantile_region() {
+        let mut s = P2Quantile::new(0.9);
+        for i in 0..10_000 {
+            s.push(i as f64);
+        }
+        let v = s.value();
+        assert!((v - 9000.0).abs() < 150.0, "p90 of 0..10000 ≈ 9000, got {v}");
     }
 
     #[test]

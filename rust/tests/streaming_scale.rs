@@ -1,0 +1,356 @@
+//! Million-job streaming-scale oracles.
+//!
+//! Three differential contracts, each pinning a streaming-scale layer to
+//! its exact materialized twin:
+//!
+//! 1. The calendar-queue event core must pop in the *bit-identical*
+//!    `(time, class, lane, seq)` order of the binary heap — on random
+//!    interleaved event streams and on whole DES runs for every policy ×
+//!    scenario preset.
+//! 2. [`JobStream`] must reproduce `materialize_jobs` job for job (ids,
+//!    arrivals, groups, μ vectors) on every preset and through the
+//!    windowed CSV reader, and streaming runs must reproduce the
+//!    materialized engines' JCT vectors.
+//! 3. The bounded-memory structures must actually be bounded: the
+//!    calendar's allocation footprint stays O(live events) under
+//!    hundreds of thousands of pushes, the CSV window stays below the
+//!    job count, and [`StreamStats`] is a fixed-size value type whose
+//!    exact fields (n, min, max, mean) match the sort-based summary.
+
+use taos::config::ExperimentConfig;
+use taos::des::calendar::{CalendarQueue, EventQueueKind};
+use taos::des::heap::{EventHeap, EventKind};
+use taos::des::service::EngineKind;
+use taos::job::Job;
+use taos::sched::SchedPolicy;
+use taos::sim::stream::{run_stream_experiment, JobStream, StreamStats};
+use taos::sim::{materialize_jobs, run_experiment};
+use taos::sweep;
+use taos::trace::csv::CsvWindowReader;
+use taos::trace::scenarios::Scenario;
+use taos::util::rng::Rng;
+use taos::util::stats::Summary;
+
+fn tiny_cfg(scenario: Scenario) -> ExperimentConfig {
+    let mut cfg = sweep::quick_base(0x57AE);
+    cfg.trace.jobs = 18;
+    cfg.trace.total_tasks = 900;
+    cfg.cluster.servers = 14;
+    cfg.cluster.avail_lo = 3;
+    cfg.cluster.avail_hi = 5;
+    scenario.apply(&mut cfg);
+    cfg
+}
+
+fn assert_jobs_eq(a: &[Job], b: &[Job], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: job count");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.id, y.id, "{ctx}");
+        assert_eq!(x.arrival, y.arrival, "{ctx}: job {}", x.id);
+        assert_eq!(x.groups, y.groups, "{ctx}: job {}", x.id);
+        assert_eq!(x.mu, y.mu, "{ctx}: job {}", x.id);
+    }
+}
+
+#[test]
+fn calendar_matches_heap_pop_order_on_random_streams() {
+    // Random interleaved push/pop bursts, with same-slot ties across
+    // both event classes and lanes, plus occasional far-future pushes to
+    // force wheel overflow and rebase. `seq` is queue-private, so the
+    // observable contract is the popped `(time, kind)` sequence — which
+    // also covers push-order stability, because both queues stamp the
+    // same push sequence.
+    let mut rng = Rng::seed_from(0xCA1E);
+    let mut heap = EventHeap::new();
+    let mut cal = CalendarQueue::new();
+    let mut now = 0u64;
+    for round in 0..2_000 {
+        for _ in 0..(1 + rng.gen_range(6)) {
+            let time = match rng.gen_range(10) {
+                0 => now, // same-slot tie with whatever pops next
+                1 => now + 1_000_000 + rng.gen_range(1_000_000), // overflow
+                _ => now + rng.gen_range(4_096),
+            };
+            let kind = if rng.gen_range(2) == 0 {
+                EventKind::Complete {
+                    server: rng.gen_range(8) as usize,
+                    token: rng.gen_range(4),
+                }
+            } else {
+                EventKind::Arrival {
+                    job: rng.gen_range(8) as usize,
+                }
+            };
+            heap.push(time, kind);
+            cal.push(time, kind);
+        }
+        for _ in 0..rng.gen_range(8) {
+            let h = heap.pop();
+            let c = cal.pop();
+            match (h, c) {
+                (None, None) => break,
+                (Some(h), Some(c)) => {
+                    assert_eq!(
+                        (h.time, h.kind),
+                        (c.time, c.kind),
+                        "pop order diverged at round {round}"
+                    );
+                    assert!(h.time >= now, "time went backwards");
+                    now = h.time;
+                }
+                (h, c) => panic!("length diverged at round {round}: {h:?} vs {c:?}"),
+            }
+        }
+        assert_eq!(heap.len(), cal.len(), "round {round}");
+    }
+    // Drain the rest in lockstep.
+    while let Some(h) = heap.pop() {
+        let c = cal.pop().expect("calendar ran dry first");
+        assert_eq!((h.time, h.kind), (c.time, c.kind), "drain order diverged");
+    }
+    assert!(cal.pop().is_none());
+    assert!(cal.is_empty());
+}
+
+#[test]
+fn calendar_runs_bit_identical_to_heap_on_every_preset_and_policy() {
+    for scenario in Scenario::ALL {
+        let mut cfg = tiny_cfg(scenario);
+        cfg.sim.engine = EngineKind::Des;
+        let mut cal_cfg = cfg.clone();
+        cal_cfg.sim.event_queue = EventQueueKind::Calendar;
+        assert_eq!(cfg.sim.event_queue, EventQueueKind::Heap);
+        for policy in SchedPolicy::ALL {
+            let heap = run_experiment(&cfg, policy)
+                .unwrap_or_else(|e| panic!("{}/{}: {e}", scenario.name(), policy.name()));
+            let cal = run_experiment(&cal_cfg, policy)
+                .unwrap_or_else(|e| panic!("{}/{}: {e}", scenario.name(), policy.name()));
+            assert_eq!(
+                heap.jcts,
+                cal.jcts,
+                "{}/{}: calendar queue must reproduce the heap's JCT vector",
+                scenario.name(),
+                policy.name()
+            );
+            assert_eq!(heap.makespan, cal.makespan, "{}/{}", scenario.name(), policy.name());
+            assert_eq!(heap.wf_evals, cal.wf_evals, "{}/{}", scenario.name(), policy.name());
+            assert_eq!(
+                heap.telemetry.events,
+                cal.telemetry.events,
+                "{}/{}: the processed event sequences must be identical",
+                scenario.name(),
+                policy.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn job_stream_reproduces_materialize_jobs_on_every_preset() {
+    for scenario in Scenario::ALL {
+        let cfg = tiny_cfg(scenario);
+        let all = materialize_jobs(&cfg).unwrap_or_else(|e| panic!("{}: {e}", scenario.name()));
+        let streamed = JobStream::open(&cfg)
+            .and_then(JobStream::collect_all)
+            .unwrap_or_else(|e| panic!("{}: {e}", scenario.name()));
+        assert_jobs_eq(&all, &streamed, scenario.name());
+    }
+}
+
+#[test]
+fn job_stream_reproduces_materialize_jobs_through_csv() {
+    let dir = std::env::temp_dir().join("taos_streaming_scale_csv");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.csv");
+    let mut tcfg = taos::config::TraceConfig::default();
+    tcfg.jobs = 30;
+    tcfg.total_tasks = 900;
+    let trace = Scenario::Alibaba.synth(&tcfg, &mut Rng::seed_from(11));
+    std::fs::write(&path, taos::trace::csv::to_batch_task_csv(&trace)).unwrap();
+    let path = path.to_str().unwrap().to_string();
+
+    let mut cfg = sweep::quick_base(0xC5F);
+    cfg.trace.csv_path = Some(path.clone());
+    let all = materialize_jobs(&cfg).unwrap();
+    assert_eq!(all.len(), 30);
+    let streamed = JobStream::open(&cfg).and_then(JobStream::collect_all).unwrap();
+    assert_jobs_eq(&all, &streamed, "csv");
+
+    // The windowed reader is genuinely windowed: with a lookahead of 1/8
+    // of the trace span, early jobs retire before late ones open.
+    let (mut wide, stats) = CsvWindowReader::open(&path, 1e18).unwrap();
+    let mut n = 0;
+    while wide.next_trace_job().unwrap().is_some() {
+        n += 1;
+    }
+    assert_eq!(n, stats.jobs);
+    assert_eq!(stats.jobs, 30);
+    let (mut narrow, _) = CsvWindowReader::open(&path, (stats.raw_last / 8.0).max(1.0)).unwrap();
+    let mut m = 0;
+    while narrow.next_trace_job().unwrap().is_some() {
+        m += 1;
+    }
+    assert_eq!(m, stats.jobs, "the bounded window must not drop jobs");
+    assert!(
+        narrow.peak_window() < stats.jobs,
+        "peak window {} must stay below the job count {}",
+        narrow.peak_window(),
+        stats.jobs
+    );
+
+    // And the full streaming pipeline over the CSV matches the
+    // materialized engines on both engine kinds.
+    let policy = SchedPolicy::Fifo(taos::assign::AssignPolicy::Wf);
+    for engine in [EngineKind::Analytic, EngineKind::Des] {
+        cfg.sim.engine = engine;
+        let full = run_experiment(&cfg, policy).unwrap();
+        let stream = run_stream_experiment(&cfg, policy).unwrap();
+        assert_eq!(full.jcts, stream.jcts, "{}: csv streaming run", engine.name());
+        assert_eq!(full.makespan, stream.makespan, "{}", engine.name());
+        assert!(stream.telemetry.peak_window >= 1);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn streaming_runs_match_materialized_runs_on_unit_locality_presets() {
+    for scenario in Scenario::ALL {
+        let cfg = tiny_cfg(scenario);
+        if cfg.sim.locality_penalty > 1.0 {
+            // Outside the streaming scope (asserted below).
+            continue;
+        }
+        for alg in [taos::assign::AssignPolicy::Wf, taos::assign::AssignPolicy::Rd] {
+            let policy = SchedPolicy::Fifo(alg);
+            let full = run_experiment(&cfg, policy)
+                .unwrap_or_else(|e| panic!("{}/{}: {e}", scenario.name(), alg.name()));
+            let stream = run_stream_experiment(&cfg, policy)
+                .unwrap_or_else(|e| panic!("{}/{}: {e}", scenario.name(), alg.name()));
+            assert_eq!(
+                full.jcts,
+                stream.jcts,
+                "{}/{}: streaming run must reproduce the materialized JCT vector",
+                scenario.name(),
+                alg.name()
+            );
+            assert_eq!(full.makespan, stream.makespan, "{}/{}", scenario.name(), alg.name());
+            assert_eq!(stream.jcts.len(), cfg.trace.jobs, "{}", scenario.name());
+            if cfg.sim.engine == EngineKind::Des {
+                assert!(stream.telemetry.events > 0, "{}", scenario.name());
+                assert!(stream.telemetry.peak_events > 0, "{}", scenario.name());
+                assert!(stream.telemetry.peak_window >= 1, "{}", scenario.name());
+            } else {
+                // Synthetic analytic streaming holds exactly one job.
+                assert_eq!(stream.telemetry.peak_window, 1, "{}", scenario.name());
+            }
+        }
+    }
+    // All three layers composed: streaming ingestion + calendar core vs
+    // the materialized heap run.
+    let mut cfg = tiny_cfg(Scenario::Alibaba);
+    cfg.sim.engine = EngineKind::Des;
+    let policy = SchedPolicy::Fifo(taos::assign::AssignPolicy::Wf);
+    let heap_full = run_experiment(&cfg, policy).unwrap();
+    cfg.sim.event_queue = EventQueueKind::Calendar;
+    let cal_stream = run_stream_experiment(&cfg, policy).unwrap();
+    assert_eq!(
+        heap_full.jcts, cal_stream.jcts,
+        "calendar-core streaming run must match the materialized heap run"
+    );
+    assert_eq!(heap_full.makespan, cal_stream.makespan);
+}
+
+#[test]
+fn streaming_rejects_out_of_scope_configs() {
+    let cfg = tiny_cfg(Scenario::Alibaba);
+    let err = run_stream_experiment(&cfg, SchedPolicy::Ocwf { acc: false })
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("FIFO"), "{err}");
+
+    let mut cfg = tiny_cfg(Scenario::Alibaba);
+    cfg.sim.engine = EngineKind::Des;
+    cfg.sim.locality_penalty = 2.0;
+    let err = run_stream_experiment(&cfg, SchedPolicy::Fifo(taos::assign::AssignPolicy::Wf))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("locality_penalty"), "{err}");
+}
+
+#[test]
+fn calendar_footprint_stays_bounded_under_streaming_churn() {
+    // Hold the live population at 64 while half a million events cycle
+    // through — with periodic million-slot jumps to force overflow and
+    // rebase. Every backing allocation is O(live): the wheel has a fixed
+    // 256 buckets and each Vec's capacity is bounded by the peak
+    // simultaneous occupancy it ever saw (≤ 64, ≤ 128 after growth
+    // doubling), so the frozen footprint sits orders of magnitude below
+    // the 500k total pushes.
+    let mut rng = Rng::seed_from(0xF00);
+    let mut cq = CalendarQueue::new();
+    for i in 0..64 {
+        cq.push(rng.gen_range(1_000), EventKind::Arrival { job: i });
+    }
+    let mut pushed = 64usize;
+    while pushed < 500_000 {
+        let ev = cq.pop().expect("live population never empties");
+        let step = if pushed % 977 == 0 {
+            1_000_000
+        } else {
+            1 + rng.gen_range(4_096)
+        };
+        cq.push(
+            ev.time + step,
+            EventKind::Complete {
+                server: pushed % 64,
+                token: pushed as u64,
+            },
+        );
+        pushed += 1;
+    }
+    assert_eq!(cq.len(), 64);
+    let fp = cq.footprint();
+    assert!(
+        fp < 40_000,
+        "footprint {fp} must stay O(live events), not O(total pushed)"
+    );
+    let mut prev = 0;
+    while let Some(ev) = cq.pop() {
+        assert!(ev.time >= prev, "drain left the time order");
+        prev = ev.time;
+    }
+    assert!(cq.is_empty());
+    assert_eq!(cq.len(), 0);
+}
+
+#[test]
+fn stream_stats_is_fixed_size_and_exact_on_the_exact_fields() {
+    // The sketch is a Copy value type: its size is frozen at compile
+    // time no matter how many samples pass through.
+    assert!(
+        std::mem::size_of::<StreamStats>() <= 1024,
+        "StreamStats must stay a small fixed-size value"
+    );
+    let cfg = tiny_cfg(Scenario::Alibaba);
+    let out = run_experiment(&cfg, SchedPolicy::Fifo(taos::assign::AssignPolicy::Wf)).unwrap();
+    let s = StreamStats::from_jcts(&out.jcts);
+    let xs: Vec<f64> = out.jcts.iter().map(|&x| x as f64).collect();
+    let exact = Summary::from(&xs);
+    assert_eq!(s.n() as usize, exact.n);
+    assert_eq!(s.min(), exact.min, "min is tracked exactly");
+    assert_eq!(s.max(), exact.max, "max is tracked exactly");
+    assert!(
+        (s.mean() - exact.mean).abs() <= 1e-9 * exact.mean.abs().max(1.0),
+        "Welford mean {} vs exact {}",
+        s.mean(),
+        exact.mean
+    );
+    for (q, v) in [("p50", s.p50()), ("p90", s.p90()), ("p99", s.p99())] {
+        assert!(
+            (exact.min..=exact.max).contains(&v),
+            "{q} sketch value {v} escaped the sample range [{}, {}]",
+            exact.min,
+            exact.max
+        );
+    }
+}
