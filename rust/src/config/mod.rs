@@ -4,7 +4,7 @@
 
 use crate::cluster::placement::PlacementMode;
 use crate::des::calendar::EventQueueKind;
-use crate::des::service::{EngineKind, ServiceModel};
+use crate::des::service::{EngineKind, ReplicationBudget, ServiceModel};
 use crate::topology::TopologyKind;
 use crate::trace::scenarios::Scenario;
 use crate::{Error, Result};
@@ -132,11 +132,21 @@ pub struct SimConfig {
     /// the scalar two-level model; non-flat topologies require
     /// `engine = des` (they only affect the locality mechanism).
     pub topology: TopologyKind,
-    /// DES-only straggler speculation threshold (0 = off): an entry whose
-    /// sampled duration reaches `speculate ×` its deterministic estimate
-    /// launches one racing replica; the first completion cancels the
-    /// sibling. Values > 0 require `engine = des`.
+    /// DES-only straggler speculation threshold (0 = off): the tail
+    /// criterion of the replication budget, and — when `replicas` is left
+    /// at 0 — the K = 2 alias (one racing replica, first completion
+    /// cancels the loser, the pre-k-replica behavior bit for bit).
+    /// Values > 0 require `engine = des`.
     pub speculate: f64,
+    /// DES-only replica-set size K: 0 (default) derives K from
+    /// `speculate` (2 when armed, else 1 = off); 1 disables racing even
+    /// with `speculate` set; K >= 2 forks up to K − 1 replicas per
+    /// budget-passing entry. Values >= 2 require `engine = des`.
+    pub replicas: usize,
+    /// DES-only replication budget gating the forks (`tail` | `idle` |
+    /// `always`, see [`ReplicationBudget`]). `tail` is the legacy
+    /// `speculate` gate; non-default values require `engine = des`.
+    pub replication_budget: ReplicationBudget,
 }
 
 impl Default for SimConfig {
@@ -152,6 +162,22 @@ impl Default for SimConfig {
             locality_penalty: 1.0,
             topology: TopologyKind::Flat,
             speculate: 0.0,
+            replicas: 0,
+            replication_budget: ReplicationBudget::Tail,
+        }
+    }
+}
+
+impl SimConfig {
+    /// Effective replica-set size K: `replicas` when set explicitly,
+    /// otherwise the `speculate` K = 2 alias (or 1 = racing off).
+    pub fn effective_replicas(&self) -> usize {
+        if self.replicas > 0 {
+            self.replicas
+        } else if self.speculate > 0.0 {
+            2
+        } else {
+            1
         }
     }
 }
@@ -212,17 +238,38 @@ impl ExperimentConfig {
                 s.speculate
             )));
         }
+        if s.replicas > 16 {
+            return Err(Error::Config(format!(
+                "replicas must be in [0, 16] (0 = derive from speculate), got {}",
+                s.replicas
+            )));
+        }
+        if s.replicas >= 2
+            && s.speculate == 0.0
+            && s.replication_budget != ReplicationBudget::Always
+        {
+            return Err(Error::Config(format!(
+                "replicas = {} under the `{}` budget never forks: the tail \
+                 criterion needs speculate >= 1, or use replication_budget = \
+                 always",
+                s.replicas,
+                s.replication_budget.name()
+            )));
+        }
         if s.engine == EngineKind::Analytic
             && (!s.service.is_deterministic()
                 || s.locality_penalty > 1.0
                 || s.topology != TopologyKind::Flat
                 || s.speculate > 0.0
+                || s.replicas >= 2
+                || s.replication_budget != ReplicationBudget::Tail
                 || s.event_queue != EventQueueKind::Heap)
         {
             return Err(Error::Config(
                 "service models, locality_penalty > 1, non-flat topology, \
-                 speculate > 0 and event_queue = calendar are engine-only \
-                 mechanisms: set engine = des (--engine des)"
+                 speculate > 0, replicas >= 2, a non-tail replication budget \
+                 and event_queue = calendar are engine-only mechanisms: set \
+                 engine = des (--engine des)"
                     .into(),
             ));
         }
@@ -304,6 +351,12 @@ impl ExperimentConfig {
                     })?
                 }
                 "speculate" => cfg.sim.speculate = val.parse().map_err(|_| perr("bad f64"))?,
+                "replicas" => cfg.sim.replicas = val.parse().map_err(|_| perr("bad usize"))?,
+                "replication_budget" => {
+                    cfg.sim.replication_budget = ReplicationBudget::parse(val).ok_or_else(|| {
+                        perr("replication_budget must be `tail`, `idle` or `always`")
+                    })?
+                }
                 "seed" => cfg.seed = val.parse().map_err(|_| perr("bad u64"))?,
                 other => {
                     return Err(Error::TraceParse {
@@ -514,6 +567,62 @@ mod tests {
         assert!(ExperimentConfig::from_str("engine = des\nspeculate = 0.5").is_err());
         assert!(ExperimentConfig::from_str("engine = des\nservice = exp:0").is_err());
         assert!(ExperimentConfig::from_str("engine = des\nservice = pareto:1.5:0.5").is_err());
+    }
+
+    #[test]
+    fn parses_replication_keys() {
+        let cfg = ExperimentConfig::from_str(
+            "engine = des\nservice = pareto:1.5:20\nspeculate = 2.0\n\
+             replicas = 3\nreplication_budget = idle",
+        )
+        .unwrap();
+        assert_eq!(cfg.sim.replicas, 3);
+        assert_eq!(cfg.sim.replication_budget, ReplicationBudget::Idle);
+        assert_eq!(cfg.sim.effective_replicas(), 3);
+
+        // `always` forks without a tail threshold.
+        let cfg =
+            ExperimentConfig::from_str("engine = des\nreplicas = 4\nreplication_budget = always")
+                .unwrap();
+        assert_eq!(cfg.sim.effective_replicas(), 4);
+
+        assert!(ExperimentConfig::from_str("engine = des\nreplication_budget = maybe").is_err());
+        assert!(ExperimentConfig::from_str("engine = des\nreplicas = 99").is_err());
+    }
+
+    #[test]
+    fn effective_replicas_speculate_alias() {
+        // The K = 2 alias: speculate alone arms one racing replica;
+        // an explicit replicas = 1 disables racing even with the
+        // threshold set; replicas > 0 always wins over the alias.
+        let mut s = SimConfig::default();
+        assert_eq!(s.effective_replicas(), 1);
+        s.speculate = 2.0;
+        assert_eq!(s.effective_replicas(), 2);
+        s.replicas = 1;
+        assert_eq!(s.effective_replicas(), 1);
+        s.replicas = 4;
+        assert_eq!(s.effective_replicas(), 4);
+    }
+
+    #[test]
+    fn replication_knobs_require_des_and_a_live_budget() {
+        // Engine gate: k-replica racing and non-tail budgets are
+        // DES-only mechanisms.
+        assert!(ExperimentConfig::from_str("replicas = 2").is_err());
+        assert!(ExperimentConfig::from_str("replication_budget = idle").is_err());
+        // Footgun gate: replicas >= 2 under a tail/idle budget with
+        // speculate = 0 would silently never fork.
+        assert!(ExperimentConfig::from_str("engine = des\nreplicas = 2").is_err());
+        assert!(
+            ExperimentConfig::from_str("engine = des\nreplicas = 2\nspeculate = 1.5").is_ok()
+        );
+        assert!(ExperimentConfig::from_str(
+            "engine = des\nreplicas = 2\nreplication_budget = always"
+        )
+        .is_ok());
+        // replicas = 1 is "racing off" and valid anywhere.
+        assert!(ExperimentConfig::from_str("replicas = 1").is_ok());
     }
 
     #[test]

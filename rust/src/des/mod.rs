@@ -14,14 +14,18 @@
 //!   are `max(1, round(base × X))` where `base` is the analytic
 //!   `ceil(n/μ)` figure and `X` a sampled slowdown factor (exponential
 //!   noise or a capped Pareto straggler tail).
-//! - **Straggler speculation** (`SimConfig::speculate`): in the spirit of
-//!   Wang–Joshi–Wornell's task-replication analysis, an entry whose
-//!   sampled duration reaches `speculate ×` its deterministic estimate
-//!   launches one racing replica on the least-loaded other server every
-//!   task of the entry could run on (the replicas RD would have deleted
-//!   actually race); the first completion applies the progress and
-//!   cancels its sibling — a running loser frees its server immediately,
-//!   a queued loser is removed from its queue.
+//! - **Budgeted k-replica redundancy** (`SimConfig::replicas` +
+//!   `SimConfig::replication_budget`, with `SimConfig::speculate` as the
+//!   K = 2 alias): in the spirit of Wang–Joshi–Wornell's task-replication
+//!   analysis, an entry whose start passes the replication budget forks
+//!   onto up to K − 1 eligible servers, least-loaded first (the replicas
+//!   RD would have deleted actually race); the first completion applies
+//!   the progress and eagerly cancels *every* loser — a running loser
+//!   frees its server at the winner's slot, a queued loser is dropped at
+//!   its queue head in O(1) via the entry's back-index into the replica
+//!   set (no queue scan). The slots losers burned are surfaced as
+//!   `SimOutcome::wasted_work`, the cost axis of the replication
+//!   frontier.
 //! - **Hierarchical multi-level locality** (`SimConfig::locality_penalty`
 //!   graded by `SimConfig::topology`, see [`crate::topology`]): per
 //!   Yekkehkhany's near-data model, every server can run every task, but
@@ -56,7 +60,8 @@
 //! All steady-state state is pooled: the event heap keeps its backing
 //! storage, run-queue entries recycle their parts buffers through a spare
 //! pool (the [`EntrySink`] side of the shared [`QueueRebuild`] grouping
-//! path), replica pairs live in a slab with a free list, and the reorder
+//! path), replica sets live in a slab with a free list (their member
+//! lists recycle through a spare pool of their own), and the reorder
 //! workspace/outcome/outstanding-set pools are the same ones the analytic
 //! engine uses. After warmup, event processing performs **zero heap
 //! allocations** ([`DesRun::pool_footprint`] freeze asserted by
@@ -94,9 +99,11 @@ struct DesEntry {
     /// Deterministic duration estimate in slots (`ceil(n/μ)`, with the
     /// locality penalty folded in for remote parts).
     base: Slots,
-    /// Replica-race pair this entry belongs to, if any.
-    pair: Option<u32>,
-    /// True for the speculative copy (replicas never re-replicate and
+    /// Back-index into the replica-set slab, if this entry races: the
+    /// O(1) handle a queued loser is dropped through (the set's `done`
+    /// flag is checked when the entry surfaces at its queue head).
+    set: Option<u32>,
+    /// True for a speculative copy (replicas never re-replicate and
     /// contribute no partial progress at a reorder preemption).
     replica: bool,
 }
@@ -121,14 +128,20 @@ struct Lane {
     token: u64,
 }
 
-/// A replica race: primary and speculative copy of one entry. Resolved
-/// pairs are freed immediately (both members are retired eagerly), so any
-/// entry holding a pair id references a live, pending pair.
-#[derive(Clone, Copy, Debug)]
-struct Pair {
+/// A k-member replica race: the primary copy of one entry plus up to
+/// K − 1 speculative copies, one per member lane. The winner resolves
+/// the set (`done`); running losers retire at that very slot, queued
+/// losers linger as tombstones until their queue head pops them, so the
+/// slab slot recycles only when `live` reaches zero — an entry holding a
+/// set id therefore always references a live slot.
+#[derive(Clone, Debug, Default)]
+struct ReplicaSet {
+    /// Resolved: a member completed; every other member is a loser.
     done: bool,
-    primary_server: ServerId,
-    replica_server: ServerId,
+    /// Members not yet retired (completed, cancelled, or dropped).
+    live: u32,
+    /// Member lanes in fork order: `members[0]` is the primary.
+    members: Vec<ServerId>,
 }
 
 /// Deterministic duration estimate of a parts batch on `server`:
@@ -195,7 +208,7 @@ impl EntrySink for LaneSink<'_, '_> {
             job,
             parts,
             base,
-            pair: None,
+            set: None,
             replica: false,
         });
     }
@@ -226,8 +239,21 @@ pub struct DesRun<'a> {
     /// Recycled per-group progress rows (streaming mode: a retired job's
     /// row is reclaimed for the next pulled job).
     spare_rows: Vec<Vec<TaskCount>>,
-    pairs: Vec<Pair>,
-    pair_free: Vec<u32>,
+    /// The replica-set slab (+ free list); member lists recycle through
+    /// `member_spare` so reorder preemptions stay allocation-free.
+    sets: Vec<ReplicaSet>,
+    set_free: Vec<u32>,
+    member_spare: Vec<Vec<ServerId>>,
+    /// Scratch: lanes woken by replica forks during a start, drained by
+    /// `kick_lane` (one fork can wake up to K − 1 idle lanes).
+    woken: Vec<ServerId>,
+    /// Scratch: lanes freed by cancelling running losers, kicked after
+    /// the winner's lane.
+    freed: Vec<ServerId>,
+    /// Scratch: replica target lanes (fork order, primary first) and the
+    /// matching deterministic estimates while a fork is being built.
+    fork_members: Vec<ServerId>,
+    fork_bases: Vec<Slots>,
     progress: JobProgress,
     rebuild: QueueRebuild,
     oset: OutstandingSet<'a>,
@@ -244,6 +270,13 @@ pub struct DesRun<'a> {
     /// Tasks completed per locality tier (empty without locality): the
     /// hit-rate telemetry surfaced through `SimOutcome::tier_tasks`.
     tier_tasks: Vec<u64>,
+    /// Slots burned by replica-race losers (running losers' elapsed time
+    /// at cancellation or reorder preemption): the cost axis of the
+    /// replication frontier, surfaced through `SimOutcome::wasted_work`.
+    wasted_work: u64,
+    /// Total slots any server spent in service (useful + wasted): the
+    /// denominator of the wasted-work fraction.
+    busy_work: u64,
     /// Events popped (live + stale) — the throughput telemetry numerator
     /// surfaced through `SimOutcome::events`.
     events: u64,
@@ -364,8 +397,13 @@ impl<'a> DesRun<'a> {
             servers: vec![Lane::default(); num_servers],
             spare: Vec::new(),
             spare_rows: Vec::new(),
-            pairs: Vec::new(),
-            pair_free: Vec::new(),
+            sets: Vec::new(),
+            set_free: Vec::new(),
+            member_spare: Vec::new(),
+            woken: Vec::new(),
+            freed: Vec::new(),
+            fork_members: Vec::new(),
+            fork_bases: Vec::new(),
             progress,
             rebuild: QueueRebuild::new(num_servers),
             oset: OutstandingSet::new(),
@@ -378,6 +416,8 @@ impl<'a> DesRun<'a> {
             overhead: OverheadMeter::new(),
             wf_evals: 0,
             tier_tasks: vec![0; locality.map_or(0, |l| l.num_tiers())],
+            wasted_work: 0,
+            busy_work: 0,
             events: 0,
             peak_events: 0,
             arrival_idx: 0,
@@ -488,6 +528,8 @@ impl<'a> DesRun<'a> {
             wf_evals: self.wf_evals,
             oracle_stats: self.assigner.as_ref().and_then(|a| a.oracle_stats()),
             tier_tasks: self.tier_tasks,
+            wasted_work: self.wasted_work,
+            busy_work: self.busy_work,
             telemetry: crate::sim::RunTelemetry {
                 events: self.events,
                 peak_events: self.peak_events,
@@ -498,9 +540,9 @@ impl<'a> DesRun<'a> {
     }
 
     /// Reserved capacity across every pooled buffer of the event path:
-    /// the heap, lane queues (live entries + spare parts pool), the pair
-    /// slab, the rebuild rows, and the reorder pools shared with the
-    /// analytic engine (allocation-stability tests).
+    /// the heap, lane queues (live entries + spare parts pool), the
+    /// replica-set slab, the rebuild rows, and the reorder pools shared
+    /// with the analytic engine (allocation-stability tests).
     pub fn pool_footprint(&self) -> usize {
         let lanes: usize = self
             .servers
@@ -519,8 +561,15 @@ impl<'a> DesRun<'a> {
             + self.feed.footprint()
             + self.spare_rows.capacity()
             + self.spare_rows.iter().map(|v| v.capacity()).sum::<usize>()
-            + self.pairs.capacity()
-            + self.pair_free.capacity()
+            + self.sets.capacity()
+            + self.sets.iter().map(|s| s.members.capacity()).sum::<usize>()
+            + self.set_free.capacity()
+            + self.member_spare.capacity()
+            + self.member_spare.iter().map(|v| v.capacity()).sum::<usize>()
+            + self.woken.capacity()
+            + self.freed.capacity()
+            + self.fork_members.capacity()
+            + self.fork_bases.capacity()
             + self.rebuild.footprint()
             + self.oset.footprint()
             + self.ws.footprint()
@@ -651,20 +700,24 @@ impl<'a> DesRun<'a> {
 
     /// Preempt every server for a reorder: credit the in-service primary
     /// entries' partial progress, drop every queued entry (all remaining
-    /// tasks are about to be reassigned), dissolve every replica pair.
+    /// tasks are about to be reassigned), dissolve every replica set.
     fn preempt_all(&mut self, t: Slots) {
         for m in 0..self.num_servers {
             self.servers[m].token += 1;
             if let Some(run) = self.servers[m].running.take() {
+                let elapsed = t - run.start;
+                self.busy_work += elapsed;
                 // Replicas never contribute progress at a preemption: the
                 // primary copy of the same tasks is credited instead (a
-                // resolved pair would have retired both members already).
+                // won race would have retired every member already) —
+                // their elapsed slots are burned, not banked.
                 if !run.entry.replica {
-                    let elapsed = t - run.start;
                     debug_assert!(elapsed < run.dur, "completion events fire before arrivals");
                     if elapsed > 0 {
                         self.apply_partial(&run.entry, m, elapsed, run.dur);
                     }
+                } else {
+                    self.wasted_work += elapsed;
                 }
                 self.recycle(run.entry);
             }
@@ -672,8 +725,13 @@ impl<'a> DesRun<'a> {
                 self.recycle(e);
             }
         }
-        self.pairs.clear();
-        self.pair_free.clear();
+        // Every member entry was just dropped, so the whole slab
+        // dissolves; the member lists go back to the spare pool.
+        for mut s in self.sets.drain(..) {
+            s.members.clear();
+            self.member_spare.push(s.members);
+        }
+        self.set_free.clear();
     }
 
     /// Credit the whole slots an in-service entry ran before a
@@ -695,8 +753,11 @@ impl<'a> DesRun<'a> {
         let mut budget = if exact {
             elapsed * self.feed.job(entry.job).mu[server]
         } else {
-            ((total as f64 * elapsed as f64 / dur as f64).floor() as TaskCount)
-                .min(total.saturating_sub(1))
+            // Proportional credit in u128: the f64 product loses integer
+            // precision above 2^53 (the entry_base bug class), crediting
+            // a 2^53 + 1 task batch one task short.
+            let prop = (total as u128 * elapsed as u128 / dur as u128) as TaskCount;
+            prop.min(total.saturating_sub(1))
         };
         debug_assert!(!exact || budget < total);
         for &(k, n) in &entry.parts {
@@ -717,8 +778,10 @@ impl<'a> DesRun<'a> {
     }
 
     /// A completion event fired. Stale tokens (preempted or cancelled
-    /// entries) are ignored; a replica-race winner cancels its sibling
-    /// eagerly — a running loser frees its server at this very slot.
+    /// entries) are ignored; a replica-race winner eagerly cancels every
+    /// loser — running losers free their servers at this very slot,
+    /// queued losers tombstone in place and are dropped in O(1) when
+    /// they surface at their queue head (no queue scan).
     fn on_complete(&mut self, server: ServerId, token: u64) {
         if token != self.servers[server].token {
             return;
@@ -729,50 +792,65 @@ impl<'a> DesRun<'a> {
         };
         let t = self.now;
         debug_assert_eq!(run.start + run.dur, t);
+        self.busy_work += run.dur;
         let entry = run.entry;
-        let mut freed_sibling = None;
-        if let Some(p) = entry.pair {
-            let pair = self.pairs[p as usize];
-            debug_assert!(!pair.done, "losers are cancelled eagerly");
-            self.pairs[p as usize].done = true;
-            let sib = if entry.replica {
-                pair.primary_server
-            } else {
-                pair.replica_server
-            };
-            freed_sibling = self.cancel_sibling(sib, p);
-            self.pair_free.push(p);
+        debug_assert!(self.freed.is_empty());
+        if let Some(p) = entry.set {
+            debug_assert!(!self.sets[p as usize].done, "losers are cancelled eagerly");
+            self.sets[p as usize].done = true;
+            // Cancel running losers in fork order (primary first); the
+            // slots they burned are the race's wasted work.
+            for i in 0..self.sets[p as usize].members.len() {
+                let s = self.sets[p as usize].members[i];
+                if s == server {
+                    continue;
+                }
+                let running_loser = self.servers[s]
+                    .running
+                    .as_ref()
+                    .map_or(false, |r| r.entry.set == Some(p));
+                if running_loser {
+                    self.servers[s].token += 1;
+                    let r = self.servers[s].running.take().unwrap();
+                    let elapsed = t - r.start;
+                    self.busy_work += elapsed;
+                    self.wasted_work += elapsed;
+                    self.retire_member(p);
+                    self.recycle(r.entry);
+                    self.freed.push(s);
+                }
+            }
+            self.retire_member(p);
         }
         self.apply_full(&entry, server, t);
         self.recycle(entry);
         // Targeted kicks: completions are the hot event, and only the
-        // completing lane (and a freed race loser's lane) can have become
-        // startable — no full lane rescan.
+        // completing lane (and the freed race losers' lanes) can have
+        // become startable — no full lane rescan.
         self.kick_lane(server, t);
-        if let Some(sib) = freed_sibling {
-            self.kick_lane(sib, t);
+        let mut i = 0;
+        while i < self.freed.len() {
+            let s = self.freed[i];
+            i += 1;
+            self.kick_lane(s, t);
         }
+        self.freed.clear();
     }
 
-    /// Retire the race loser: preempt it if running (returning its lane
-    /// so the caller restarts it at the winner's completion slot), remove
-    /// it if still queued.
-    fn cancel_sibling(&mut self, sib: ServerId, p: u32) -> Option<ServerId> {
-        let running_loser = self.servers[sib]
-            .running
-            .as_ref()
-            .map_or(false, |r| r.entry.pair == Some(p));
-        if running_loser {
-            self.servers[sib].token += 1;
-            let r = self.servers[sib].running.take().unwrap();
-            self.recycle(r.entry);
-            return Some(sib);
+    /// Retire one member of a replica set (completed, cancelled while
+    /// running, or dropped at its queue head). The slab slot recycles
+    /// only when every member is gone — queued tombstones outlive the
+    /// resolution, so their back-indices always reference a live slot.
+    fn retire_member(&mut self, p: u32) {
+        let set = &mut self.sets[p as usize];
+        debug_assert!(set.live > 0);
+        set.live -= 1;
+        if set.live == 0 {
+            let mut members = std::mem::take(&mut set.members);
+            members.clear();
+            self.member_spare.push(members);
+            self.set_free.push(p);
         }
-        if let Some(idx) = self.servers[sib].queue.iter().position(|e| e.pair == Some(p)) {
-            let e = self.servers[sib].queue.remove(idx).unwrap();
-            self.recycle(e);
-        }
-        None
     }
 
     /// Credit a completed entry's full task batch, mirroring the analytic
@@ -810,104 +888,179 @@ impl<'a> DesRun<'a> {
     /// Start the head entry on every idle server with queued work — the
     /// admission-path kick, where any lane may have received entries
     /// (admissions are O(num_servers) in the analytic engines too).
-    /// Looped because starting a straggler may enqueue a replica on
-    /// another idle lane the scan already passed; replicas never
-    /// re-replicate, so the loop settles in at most two passes.
+    /// Looped because starting a straggler may enqueue replicas on idle
+    /// lanes the scan already passed; replicas never re-replicate, so
+    /// only the first two passes may start anything and the third must
+    /// come up empty. That invariant is load-bearing (it bounds the
+    /// admission kick), so it is debug-asserted rather than trusted.
     fn kick_idle(&mut self, t: Slots) {
+        let mut passes = 0u32;
         loop {
+            passes += 1;
+            debug_assert!(
+                passes <= 3,
+                "kick_idle failed to settle in two starting passes: \
+                 a replica re-replicated"
+            );
             let mut started = false;
             for m in 0..self.num_servers {
                 if self.servers[m].running.is_none() && !self.servers[m].queue.is_empty() {
                     self.start_next(m, t);
-                    started = true;
+                    started |= self.servers[m].running.is_some();
                 }
             }
+            // Forks' woken lanes are re-found by the next full scan.
+            self.woken.clear();
             if !started {
                 return;
             }
         }
     }
 
-    /// Start lane `m` if it is idle with queued work, then chase the one
-    /// lane a start can wake in turn (an idle replica target). The
-    /// completion-path kick: O(1) lanes instead of a full rescan.
+    /// Start lane `m` if it is idle with queued work, then chase every
+    /// lane a start wakes in turn (idle replica targets — one fork can
+    /// wake up to K − 1 of them). The completion-path kick: O(woken)
+    /// lanes instead of a full rescan.
     fn kick_lane(&mut self, m: ServerId, t: Slots) {
-        let mut next = Some(m);
-        while let Some(l) = next {
-            next = None;
+        debug_assert!(self.woken.is_empty());
+        if self.servers[m].running.is_none() && !self.servers[m].queue.is_empty() {
+            self.start_next(m, t);
+        }
+        let mut i = 0;
+        while i < self.woken.len() {
+            let l = self.woken[i];
+            i += 1;
             if self.servers[l].running.is_none() && !self.servers[l].queue.is_empty() {
-                next = self.start_next(l, t);
+                self.start_next(l, t);
+            }
+        }
+        self.woken.clear();
+    }
+
+    /// Pop the head entry of lane `m` (dropping cancelled-race
+    /// tombstones in O(1) each), sample its duration, schedule its
+    /// completion, and — when the replication budget passes — fork up to
+    /// K − 1 racing replicas. Forks that land on *idle* lanes are pushed
+    /// onto the `woken` scratch (the caller must kick them).
+    fn start_next(&mut self, m: ServerId, t: Slots) {
+        loop {
+            let Some(mut entry) = self.servers[m].queue.pop_front() else {
+                return;
+            };
+            // A queued race loser: its set resolved while it waited. Drop
+            // it here — the entry's back-index makes this O(1), no queue
+            // scan at cancellation time — and consume no service draw.
+            if let Some(p) = entry.set {
+                if self.sets[p as usize].done {
+                    self.retire_member(p);
+                    self.recycle(entry);
+                    continue;
+                }
+            }
+            let base = entry.base;
+            let dur = if self.cfg.service.is_deterministic() {
+                base
+            } else {
+                let f = self.cfg.service.sample_factor(&mut self.service_rng);
+                ((base as f64 * f).round() as Slots).max(1)
+            };
+            let k = self.cfg.effective_replicas();
+            if k >= 2 && !entry.replica && entry.set.is_none() && self.budget_passes(dur, base) {
+                self.fork_replicas(&mut entry, m, t, k);
+            }
+            let token = self.servers[m].token;
+            self.queue.push(t + dur, EventKind::Complete { server: m, token });
+            self.servers[m].running = Some(Running {
+                entry,
+                start: t,
+                dur,
+            });
+            return;
+        }
+    }
+
+    /// The replication budget: does this primary's draw earn replicas?
+    /// `tail` (the legacy `speculate` gate) forks only when the sampled
+    /// duration crosses `speculate ×` the deterministic estimate; `idle`
+    /// adds the constraint that targets must be idle (checked per target
+    /// in [`Self::replica_target`]); `always` forks unconditionally.
+    fn budget_passes(&self, dur: Slots, base: Slots) -> bool {
+        match self.cfg.replication_budget {
+            crate::des::service::ReplicationBudget::Always => true,
+            crate::des::service::ReplicationBudget::Tail
+            | crate::des::service::ReplicationBudget::Idle => {
+                self.cfg.speculate > 0.0
+                    && dur > base
+                    && dur as f64 >= self.cfg.speculate * base as f64
             }
         }
     }
 
-    /// Pop the head entry of lane `m`, sample its duration, schedule its
-    /// completion, and — when straggler speculation is armed and the draw
-    /// crossed the threshold — launch one racing replica. Returns the
-    /// replica's lane when it landed on an *idle* one (the caller must
-    /// kick it).
-    fn start_next(&mut self, m: ServerId, t: Slots) -> Option<ServerId> {
-        let Some(mut entry) = self.servers[m].queue.pop_front() else {
-            return None;
-        };
-        let base = entry.base;
-        let dur = if self.cfg.service.is_deterministic() {
-            base
-        } else {
-            let f = self.cfg.service.sample_factor(&mut self.service_rng);
-            ((base as f64 * f).round() as Slots).max(1)
-        };
-        let mut woken = None;
-        if self.cfg.speculate > 0.0
-            && !entry.replica
-            && entry.pair.is_none()
-            && dur > base
-            && dur as f64 >= self.cfg.speculate * base as f64
-        {
-            if let Some(r) = self.replica_target(entry.job, &entry.parts, m) {
-                let p = self.alloc_pair(m, r);
-                entry.pair = Some(p);
+    /// Fork up to `k − 1` replicas of `entry` (about to start on lane
+    /// `m`), least-loaded eligible lane first; each chosen target's
+    /// queue-empty estimate is bumped before the next pick so the
+    /// replicas spread. Allocates one replica-set slot iff at least one
+    /// target exists; K = 2 reproduces the old one-sibling pair engine
+    /// bit for bit (same single target, same estimate bump, same queue
+    /// push, same wake signal).
+    fn fork_replicas(&mut self, entry: &mut DesEntry, m: ServerId, t: Slots, k: usize) {
+        let idle_only =
+            self.cfg.replication_budget == crate::des::service::ReplicationBudget::Idle;
+        debug_assert!(self.fork_members.is_empty() && self.fork_bases.is_empty());
+        self.fork_members.push(m);
+        for _ in 1..k {
+            let Some(r) = self.replica_target(entry.job, &entry.parts, idle_only) else {
+                break;
+            };
+            let rbase = entry_base(self.feed.job(entry.job), self.locality, entry.job, &entry.parts, r);
+            self.free_est[r] = self.free_est[r].max(t) + rbase;
+            self.fork_members.push(r);
+            self.fork_bases.push(rbase);
+        }
+        if self.fork_members.len() > 1 {
+            let p = self.alloc_set();
+            entry.set = Some(p);
+            for i in 0..self.fork_bases.len() {
+                let r = self.fork_members[i + 1];
+                let rbase = self.fork_bases[i];
                 let mut parts = self.spare.pop().unwrap_or_default();
                 parts.extend_from_slice(&entry.parts);
-                let rbase =
-                    entry_base(self.feed.job(entry.job), self.locality, entry.job, &parts, r);
-                self.free_est[r] = self.free_est[r].max(t) + rbase;
                 self.servers[r].queue.push_back(DesEntry {
                     job: entry.job,
                     parts,
                     base: rbase,
-                    pair: Some(p),
+                    set: Some(p),
                     replica: true,
                 });
                 if self.servers[r].running.is_none() {
-                    woken = Some(r);
+                    self.woken.push(r);
                 }
             }
         }
-        let token = self.servers[m].token;
-        self.queue.push(t + dur, EventKind::Complete { server: m, token });
-        self.servers[m].running = Some(Running {
-            entry,
-            start: t,
-            dur,
-        });
-        woken
+        self.fork_members.clear();
+        self.fork_bases.clear();
     }
 
-    /// Where a replica of this entry may race: the least-loaded server
-    /// (by queue-empty estimate, ties to the lowest id) that every part's
-    /// group allows, excluding the primary's server.
+    /// Where the next replica of this entry may race: the least-loaded
+    /// server (by queue-empty estimate, ties to the lowest id) that every
+    /// part's group allows, excluding the primary and the targets already
+    /// chosen (all in `fork_members`). Under the `idle` budget only
+    /// strictly idle lanes (nothing running, nothing queued) qualify.
     fn replica_target(
         &self,
         job: usize,
         parts: &[(usize, TaskCount)],
-        exclude: ServerId,
+        idle_only: bool,
     ) -> Option<ServerId> {
         let groups = &self.feed.job(job).groups;
         let (k0, _) = parts[0];
         let mut best: Option<(Slots, ServerId)> = None;
         'srv: for &s in &groups[k0].servers {
-            if s == exclude {
+            if self.fork_members.contains(&s) {
+                continue;
+            }
+            if idle_only && (self.servers[s].running.is_some() || !self.servers[s].queue.is_empty())
+            {
                 continue;
             }
             for &(k, _) in &parts[1..] {
@@ -923,18 +1076,24 @@ impl<'a> DesRun<'a> {
         best.map(|(_, s)| s)
     }
 
-    fn alloc_pair(&mut self, primary: ServerId, replica: ServerId) -> u32 {
-        let pair = Pair {
+    /// Allocate a replica-set slot for the lanes in `fork_members` (fork
+    /// order, primary first); member lists recycle through the spare
+    /// pool so steady-state forks stay allocation-free.
+    fn alloc_set(&mut self) -> u32 {
+        let mut members = self.member_spare.pop().unwrap_or_default();
+        members.clear();
+        members.extend_from_slice(&self.fork_members);
+        let set = ReplicaSet {
             done: false,
-            primary_server: primary,
-            replica_server: replica,
+            live: members.len() as u32,
+            members,
         };
-        if let Some(p) = self.pair_free.pop() {
-            self.pairs[p as usize] = pair;
+        if let Some(p) = self.set_free.pop() {
+            self.sets[p as usize] = set;
             p
         } else {
-            self.pairs.push(pair);
-            (self.pairs.len() - 1) as u32
+            self.sets.push(set);
+            (self.sets.len() - 1) as u32
         }
     }
 }

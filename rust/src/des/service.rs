@@ -144,6 +144,53 @@ impl EngineKind {
     }
 }
 
+/// What earns a primary entry its racing replicas (DES engine,
+/// `SimConfig::replicas >= 2` or the `speculate` K = 2 alias). The
+/// budget makes wasted work a policy choice instead of an accident:
+///
+/// - [`ReplicationBudget::Tail`] (default, the legacy `speculate`
+///   behavior): fork only when the sampled duration crosses
+///   `speculate ×` the deterministic estimate — replicate the straggler
+///   tail, wherever the targets' queues stand.
+/// - [`ReplicationBudget::Idle`]: the tail threshold *and* only strictly
+///   idle targets (nothing running, nothing queued) — replicate the tail
+///   only when spare capacity exists.
+/// - [`ReplicationBudget::Always`]: fork every primary entry regardless
+///   of its draw — the full-replication end of the
+///   Wang–Joshi–Wornell frontier.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ReplicationBudget {
+    #[default]
+    Tail,
+    Idle,
+    Always,
+}
+
+impl ReplicationBudget {
+    pub const ALL: [ReplicationBudget; 3] = [
+        ReplicationBudget::Tail,
+        ReplicationBudget::Idle,
+        ReplicationBudget::Always,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReplicationBudget::Tail => "tail",
+            ReplicationBudget::Idle => "idle",
+            ReplicationBudget::Always => "always",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ReplicationBudget> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "tail" => Some(ReplicationBudget::Tail),
+            "idle" => Some(ReplicationBudget::Idle),
+            "always" | "all" => Some(ReplicationBudget::Always),
+            _ => None,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -230,5 +277,18 @@ mod tests {
         for k in [EngineKind::Analytic, EngineKind::Des] {
             assert_eq!(EngineKind::parse(k.name()), Some(k));
         }
+    }
+
+    #[test]
+    fn replication_budget_parse() {
+        assert_eq!(ReplicationBudget::default(), ReplicationBudget::Tail);
+        for b in ReplicationBudget::ALL {
+            assert_eq!(ReplicationBudget::parse(b.name()), Some(b));
+        }
+        assert_eq!(
+            ReplicationBudget::parse("ALL"),
+            Some(ReplicationBudget::Always)
+        );
+        assert_eq!(ReplicationBudget::parse("sometimes"), None);
     }
 }

@@ -4,10 +4,11 @@
 //! - `simulate`   run one scheduling policy over a (synthetic or CSV)
 //!                trace and print JCT statistics + overhead.
 //! - `repro`      regenerate a paper table/figure (10, 11, 12, 13, 14,
-//!                `table1`, the `scenarios` catalog sweep, or the
-//!                `topology` locality-penalty sweep); fans the
-//!                (policy × setting × trial) cells across `--threads`
-//!                worker threads with bit-identical results.
+//!                `table1`, the `scenarios` catalog sweep, the `topology`
+//!                locality-penalty sweep, or the `replication` k-replica
+//!                frontier); fans the (policy × setting × trial) cells
+//!                across `--threads` worker threads with bit-identical
+//!                results.
 //! - `compare`    run all six algorithms on one setting side by side.
 //! - `gen-trace`  emit a synthetic Alibaba-like trace as batch_task.csv.
 //! - `live`       run the live coordinator (leader/workers + PJRT
@@ -68,8 +69,8 @@ fn build_cli() -> Cli {
             flag_req(
                 "scenario",
                 "named workload: alibaba | bursty | heavy-tail | hetero-cap | hotspot | \
-                 bursty-hetero | hotspot-heavy-tail | straggler | multi-locality | \
-                 multi-rack | multi-zone",
+                 bursty-hetero | hotspot-heavy-tail | straggler | k-replica | \
+                 multi-locality | multi-rack | multi-zone",
             ),
             flag_req(
                 "reorder-threads",
@@ -107,6 +108,18 @@ fn build_cli() -> Cli {
                  --engine des) [default 0]",
             ),
             flag_req(
+                "replicas",
+                "DES replica-set size K (0 = derive from --speculate: 2 when \
+                 armed, else off; 1 = racing off; needs --engine des for \
+                 K >= 2) [default 0]",
+            ),
+            flag_req(
+                "replication-budget",
+                "what earns an entry its racing replicas: tail | idle | \
+                 always (tail = the --speculate threshold; needs --engine \
+                 des for non-tail) [default tail]",
+            ),
+            flag_req(
                 "event-queue",
                 "DES event core: heap | calendar (bit-identical pop order; \
                  calendar is O(1) amortized at streaming scale; needs \
@@ -139,7 +152,7 @@ fn build_cli() -> Cli {
             let mut f = common();
             f.push(flag(
                 "fig",
-                "10 | 11 | 12 | 13 | 14 | table1 | scenarios | topology",
+                "10 | 11 | 12 | 13 | 14 | table1 | scenarios | topology | replication",
                 "12",
             ));
             f.push(switch("quick", "scaled-down workload for fast runs"));
@@ -280,6 +293,15 @@ fn apply_engine_flags(
     if let Some(v) = parsed.get_parse::<f64>("speculate")? {
         cfg.sim.speculate = v;
     }
+    if let Some(v) = parsed.get_parse::<usize>("replicas")? {
+        cfg.sim.replicas = v;
+    }
+    if let Some(s) = parsed.get("replication-budget") {
+        cfg.sim.replication_budget = taos::des::service::ReplicationBudget::parse(s)
+            .ok_or_else(|| {
+                format!("--replication-budget must be `tail`, `idle` or `always`, got `{s}`")
+            })?;
+    }
     if let Some(s) = parsed.get("event-queue") {
         cfg.sim.event_queue = taos::des::calendar::EventQueueKind::parse(s)
             .ok_or_else(|| format!("--event-queue must be `heap` or `calendar`, got `{s}`"))?;
@@ -345,14 +367,22 @@ fn cmd_simulate(parsed: &taos::cli::Parsed) -> Result<(), String> {
                 Json::arr(out.tier_tasks.iter().map(|&n| Json::num(n as f64))),
             ));
         }
+        if out.busy_work > 0 {
+            fields.push(("wasted_work", Json::num(out.wasted_work as f64)));
+            fields.push(("busy_work", Json::num(out.busy_work as f64)));
+            fields.push(("wasted_frac", Json::num(out.wasted_fraction())));
+        }
         println!("{}", Json::obj(fields).to_string());
     } else {
         println!("algorithm      : {}", policy.name());
         if cfg.sim.engine == taos::des::service::EngineKind::Des {
             println!(
-                "engine         : des (service {}, speculate {}, locality penalty {}, topology {})",
+                "engine         : des (service {}, speculate {}, replicas {}, budget {}, \
+                 locality penalty {}, topology {})",
                 cfg.sim.service.describe(),
                 cfg.sim.speculate,
+                cfg.sim.effective_replicas(),
+                cfg.sim.replication_budget.name(),
                 cfg.sim.locality_penalty,
                 cfg.sim.topology.name()
             );
@@ -383,6 +413,14 @@ fn cmd_simulate(parsed: &taos::cli::Parsed) -> Result<(), String> {
                 taos::benchlib::fmt_count(events_per_sec as u64),
                 tel.peak_events,
                 tel.peak_pool
+            );
+        }
+        if out.wasted_work > 0 {
+            println!(
+                "wasted work    : {} replica-loser slots ({:.1}% of {} service slots)",
+                taos::benchlib::fmt_count(out.wasted_work),
+                out.wasted_fraction() * 100.0,
+                taos::benchlib::fmt_count(out.busy_work)
             );
         }
         if out.wf_evals > 0 {
@@ -493,6 +531,8 @@ fn cmd_repro(parsed: &taos::cli::Parsed) -> Result<(), String> {
             "speculate",
             "topology",
             "event-queue",
+            "replicas",
+            "replication-budget",
         ] {
             if parsed.get(f).is_some() {
                 return Err(format!(
@@ -509,11 +549,62 @@ fn cmd_repro(parsed: &taos::cli::Parsed) -> Result<(), String> {
                     (the sweep's x-axis owns the penalty)"
             .into());
     }
+    // The replication figure's x-axis is K and it iterates the three
+    // service models itself; both flags would be silently overwritten.
+    if fig_id == "replication" {
+        for f in ["replicas", "service"] {
+            if parsed.get(f).is_some() {
+                return Err(format!(
+                    "--{f} cannot be combined with --fig replication (the \
+                     sweep's axes own the replica count and service model)"
+                ));
+            }
+        }
+    }
     apply_engine_flags(parsed, &mut base)?;
+    // The replication sweep is DES-only; forcing the engine here lets
+    // `--speculate` / `--replication-budget` ride along without also
+    // requiring an explicit `--engine des`.
+    if fig_id == "replication" {
+        base.sim.engine = taos::des::service::EngineKind::Des;
+    }
     base.validate().map_err(|e| e.to_string())?;
     let opts = taos::sweep::SweepOptions::default()
         .with_threads(parsed.get_parse::<usize>("threads")?.unwrap_or(1))
         .with_trials(parsed.get_parse::<usize>("trials")?.unwrap_or(1));
+    // The replication frontier is three figures (one per service model:
+    // det is the no-straggler control, exp and Pareto supply the tails),
+    // each sweeping the replica-set size K — so it renders and exports
+    // them together instead of going through the single-figure path.
+    if fig_id == "replication" {
+        use taos::des::service::ServiceModel;
+        let services = [
+            ServiceModel::Deterministic,
+            ServiceModel::Exp { mean: 1.0 },
+            ServiceModel::ParetoTail {
+                alpha: 1.5,
+                cap: 20.0,
+            },
+        ];
+        let mut figs = Vec::new();
+        for service in services {
+            let f = sweep::fig_replication_opts(&base, service, &[1, 2, 3, 4], &opts)
+                .map_err(|e| e.to_string())?;
+            println!("{}", f.render());
+            figs.push(f);
+        }
+        if let Some(out) = parsed.get("out") {
+            if !out.is_empty() {
+                let j = Json::obj(vec![(
+                    "figures",
+                    Json::arr(figs.iter().map(|f| f.to_json())),
+                )]);
+                std::fs::write(out, j.to_string()).map_err(|e| e.to_string())?;
+                println!("wrote {out}");
+            }
+        }
+        return Ok(());
+    }
     let alphas = [0.0, 0.5, 1.0, 1.5, 2.0];
     let fig = match fig_id {
         "10" => sweep::fig_alpha_util_opts(&base, 0.25, &alphas, &opts),

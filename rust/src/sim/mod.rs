@@ -83,6 +83,13 @@ pub struct SimOutcome {
     /// sum to the trace's total task count — the locality hit-rate
     /// telemetry.
     pub tier_tasks: Vec<u64>,
+    /// Slots burned by replica-race losers (DES runs with replication
+    /// active; 0 otherwise) — the cost axis of the k-replica frontier.
+    pub wasted_work: u64,
+    /// Total slots servers spent in service, useful + wasted (DES runs
+    /// only; 0 for the analytic engines, which never track per-slot
+    /// busy time) — the denominator of the wasted-work fraction.
+    pub busy_work: u64,
     /// Event-loop throughput counters (zero for analytic engines).
     pub telemetry: RunTelemetry,
 }
@@ -94,6 +101,17 @@ impl SimOutcome {
 
     pub fn mean_jct(&self) -> f64 {
         self.jct_stats().mean
+    }
+
+    /// Fraction of total service slots burned by replica-race losers
+    /// (`wasted_work / busy_work`; 0 when no server ever ran or the
+    /// engine does not track busy time).
+    pub fn wasted_fraction(&self) -> f64 {
+        if self.busy_work == 0 {
+            0.0
+        } else {
+            self.wasted_work as f64 / self.busy_work as f64
+        }
     }
 }
 
@@ -155,6 +173,8 @@ pub fn run_fifo(
         wf_evals: 0,
         oracle_stats: assigner.oracle_stats(),
         tier_tasks: Vec::new(),
+        wasted_work: 0,
+        busy_work: 0,
         telemetry: RunTelemetry::default(),
     })
 }
@@ -321,6 +341,8 @@ impl<'a> ReorderedRun<'a> {
             wf_evals: self.wf_evals,
             oracle_stats: None,
             tier_tasks: Vec::new(),
+            wasted_work: 0,
+            busy_work: 0,
             telemetry: RunTelemetry::default(),
         })
     }

@@ -117,6 +117,8 @@ pub fn run_fifo_stepping(
         wf_evals: 0,
         oracle_stats: None,
         tier_tasks: Vec::new(),
+        wasted_work: 0,
+        busy_work: 0,
         telemetry: crate::sim::RunTelemetry::default(),
     }
 }

@@ -254,6 +254,8 @@ pub fn run_fifo_stream(
         wf_evals: 0,
         oracle_stats: assigner.oracle_stats(),
         tier_tasks: Vec::new(),
+        wasted_work: 0,
+        busy_work: 0,
         telemetry: RunTelemetry {
             peak_window: source.peak_window().max(1),
             ..RunTelemetry::default()

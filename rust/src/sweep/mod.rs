@@ -64,6 +64,15 @@ pub struct Cell {
     /// with locality only; index 0 = data-local). Empty for analytic
     /// cells, so historical figure JSON stays byte-identical.
     pub tier_tasks: Vec<u64>,
+    /// Service slots burned by replica-race losers, summed over the
+    /// cell's trials (DES engine with replication only; 0 otherwise) —
+    /// the cost axis of the k-replica frontier.
+    pub wasted_work: u64,
+    /// Total service slots (useful + wasted), summed over the cell's
+    /// trials. 0 for analytic cells, which never track per-slot busy
+    /// time; the JSON export keys off this so analytic figures stay
+    /// byte-identical.
+    pub busy_work: u64,
 }
 
 impl Cell {
@@ -84,6 +93,25 @@ impl Cell {
             ),
             None => "-".into(),
         }
+    }
+
+    /// Wasted-work fraction of the cell's total service slots
+    /// (`wasted_work / busy_work`; 0 without replication).
+    pub fn wasted_fraction(&self) -> f64 {
+        if self.busy_work == 0 {
+            0.0
+        } else {
+            self.wasted_work as f64 / self.busy_work as f64
+        }
+    }
+
+    /// Wasted-work summary for the replication table (`wasted%` of the
+    /// service slots), or `-` when the cell tracked no busy time.
+    pub fn wasted_summary(&self) -> String {
+        if self.busy_work == 0 {
+            return "-".into();
+        }
+        format!("{:.1}%", self.wasted_fraction() * 100.0)
     }
 
     /// Tier hit rates as percentages of the cell's total task count, or
@@ -254,6 +282,29 @@ impl Figure {
             }
             out.push_str(&t4.render());
         }
+
+        // Wasted-work fractions: only rendered when at least one cell
+        // actually burned replica slots, so replication-free figures keep
+        // their historical layout.
+        if self.cells.iter().any(|c| c.wasted_work > 0) {
+            out.push_str(&format!(
+                "\n== {} : wasted work (replica-loser slots, % of service slots) ==\n",
+                self.name
+            ));
+            let mut t5 = TextTable::new(&hdr_refs);
+            for policy in SchedPolicy::ALL {
+                let mut row = vec![policy.name().to_string()];
+                for &s in &settings {
+                    row.push(match self.cell(policy.name(), s) {
+                        Some(c) => c.wasted_summary(),
+                        None => "-".into(),
+                    });
+                }
+                row.push("".into());
+                t5.row(row);
+            }
+            out.push_str(&t5.render());
+        }
         out
     }
 
@@ -284,6 +335,11 @@ impl Figure {
                             "tier_tasks",
                             Json::arr(c.tier_tasks.iter().map(|&n| Json::num(n as f64))),
                         ));
+                    }
+                    if c.busy_work > 0 {
+                        fields.push(("wasted_work", Json::num(c.wasted_work as f64)));
+                        fields.push(("busy_work", Json::num(c.busy_work as f64)));
+                        fields.push(("wasted_frac", Json::num(c.wasted_fraction())));
                     }
                     if let Some(o) = &c.oracle {
                         fields.push((
@@ -462,11 +518,15 @@ fn cells_from(specs: &[CellSpec], outcomes: &[SimOutcome], trials: usize) -> Vec
         let mut wf_evals_sum = 0u64;
         let mut oracle: Option<OracleStats> = None;
         let mut tier_tasks: Vec<u64> = Vec::new();
+        let mut wasted_work = 0u64;
+        let mut busy_work = 0u64;
         for o in group {
             jct_sum += o.mean_jct();
             ov_sum += o.overhead.mean_us();
             jcts.extend_from_slice(&o.jcts);
             wf_evals_sum += o.wf_evals;
+            wasted_work += o.wasted_work;
+            busy_work += o.busy_work;
             if let Some(st) = &o.oracle_stats {
                 oracle.get_or_insert_with(OracleStats::default).merge(st);
             }
@@ -489,6 +549,8 @@ fn cells_from(specs: &[CellSpec], outcomes: &[SimOutcome], trials: usize) -> Vec
             wf_evals: wf_evals_sum,
             oracle,
             tier_tasks,
+            wasted_work,
+            busy_work,
         });
         i += trials;
     }
@@ -646,6 +708,56 @@ pub fn fig_topology_opts(
                 cfg.sim.topology = TopologyKind::MultiRack;
             }
             cfg.sim.locality_penalty = p;
+        },
+    )
+}
+
+/// Replication-frontier sweep: mean/p99 JCT and the wasted-work fraction
+/// as the replica-set size K grows, under one service model (serial
+/// single-trial path; see [`fig_replication_opts`]).
+pub fn fig_replication(
+    base: &ExperimentConfig,
+    service: crate::des::service::ServiceModel,
+    ks: &[usize],
+) -> crate::Result<Figure> {
+    fig_replication_opts(base, service, ks, &SweepOptions::default())
+}
+
+/// Replication-frontier sweep with explicit execution options. Forces the
+/// DES engine (replication is engine-only), applies the given service
+/// model, and — when the base config leaves the tail threshold unarmed
+/// under a tail/idle budget — arms `speculate = 1.5` so the sweep
+/// actually forks. K = 1 is the racing-off baseline (bit-identical to no
+/// speculation); K = 2 is the legacy one-sibling pair engine; higher K
+/// trades wasted work for tail latency — the Wang–Joshi–Wornell frontier.
+pub fn fig_replication_opts(
+    base: &ExperimentConfig,
+    service: crate::des::service::ServiceModel,
+    ks: &[usize],
+    opts: &SweepOptions,
+) -> crate::Result<Figure> {
+    use crate::des::service::{EngineKind, ReplicationBudget, ServiceModel};
+    let settings: Vec<f64> = ks.iter().map(|&k| k as f64).collect();
+    let tag = match service {
+        ServiceModel::Deterministic => "det",
+        ServiceModel::Exp { .. } => "exp",
+        ServiceModel::ParetoTail { .. } => "pareto",
+    };
+    run_figure(
+        format!("fig-replication-{tag}"),
+        "k",
+        base,
+        &settings,
+        opts,
+        &|cfg, k| {
+            cfg.sim.engine = EngineKind::Des;
+            cfg.sim.service = service;
+            cfg.sim.replicas = (k as usize).max(1);
+            if cfg.sim.speculate == 0.0
+                && cfg.sim.replication_budget != ReplicationBudget::Always
+            {
+                cfg.sim.speculate = 1.5;
+            }
         },
     )
 }
@@ -826,6 +938,43 @@ mod tests {
         assert!(cells
             .iter()
             .any(|c| c.get("tier_tasks").is_some()));
+    }
+
+    #[test]
+    fn replication_sweep_reports_wasted_work() {
+        use crate::des::service::ServiceModel;
+        let base = quick_base(19);
+        let fig = fig_replication_opts(
+            &base,
+            ServiceModel::ParetoTail {
+                alpha: 0.9,
+                cap: 20.0,
+            },
+            &[1, 3],
+            &SweepOptions::default().with_threads(0),
+        )
+        .unwrap();
+        assert_eq!(fig.cells.len(), 2 * 6);
+        let mut any_wasted = false;
+        for c in &fig.cells {
+            assert!(c.mean_jct.is_finite() && c.mean_jct > 0.0, "{}", c.policy);
+            assert!(c.busy_work > 0, "DES cells track busy time: {}", c.policy);
+            if c.setting == 1.0 {
+                // K = 1 is the racing-off baseline: nothing ever forks.
+                assert_eq!(c.wasted_work, 0, "{}", c.policy);
+            } else {
+                any_wasted |= c.wasted_work > 0;
+                assert!(c.wasted_work <= c.busy_work, "{}", c.policy);
+            }
+        }
+        assert!(any_wasted, "a Pareto tail at K = 3 must burn some replicas");
+        let text = fig.render();
+        assert!(text.contains("wasted work"), "{text}");
+        let parsed = crate::util::json::Json::parse(&fig.to_json().to_string()).unwrap();
+        let cells = parsed.get("cells").unwrap().as_arr().unwrap();
+        assert!(cells.iter().all(|c| c.get("wasted_work").is_some()
+            && c.get("busy_work").is_some()
+            && c.get("wasted_frac").is_some()));
     }
 
     #[test]

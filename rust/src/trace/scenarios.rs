@@ -20,6 +20,7 @@
 //! | `bursty-hetero` | compound: bursty arrivals × Zipf server speeds |
 //! | `hotspot-heavy-tail` | compound: Pareto sizes × hot-spot placement |
 //! | `straggler` | DES engine: Pareto service tails + racing replicas |
+//! | `k-replica` | DES engine: Pareto tails + budgeted K = 3 replica races |
 //! | `multi-locality` | DES engine: flat two-tier locality, remote at `μ/penalty` |
 //! | `multi-rack` | DES engine: rack hierarchy, tiered locality penalties |
 //! | `multi-zone` | DES engine: rack+zone hierarchy, tiered locality penalties |
@@ -82,6 +83,12 @@ pub enum Scenario {
     /// race, first completion cancels the sibling (Wang–Joshi–Wornell's
     /// replication regime).
     Straggler,
+    /// Engine preset (DES only): the `straggler` service tail with a
+    /// K = 3 replica set under the tail budget — each sampled straggler
+    /// forks up to two racing replicas, first completion cancels every
+    /// loser, and the burned loser slots surface as wasted-work
+    /// telemetry.
+    KReplica,
     /// Engine preset (DES only): two-level data locality on the `flat`
     /// topology — every server can run every task, but remote execution
     /// pays a rate penalty (Yekkehkhany's near-data scheduling regime).
@@ -97,7 +104,7 @@ pub enum Scenario {
 }
 
 impl Scenario {
-    pub const ALL: [Scenario; 11] = [
+    pub const ALL: [Scenario; 12] = [
         Scenario::Alibaba,
         Scenario::Bursty,
         Scenario::HeavyTail,
@@ -106,6 +113,7 @@ impl Scenario {
         Scenario::BurstyHetero,
         Scenario::HotspotHeavyTail,
         Scenario::Straggler,
+        Scenario::KReplica,
         Scenario::MultiLocality,
         Scenario::MultiRack,
         Scenario::MultiZone,
@@ -121,6 +129,7 @@ impl Scenario {
             Scenario::BurstyHetero => "bursty-hetero",
             Scenario::HotspotHeavyTail => "hotspot-heavy-tail",
             Scenario::Straggler => "straggler",
+            Scenario::KReplica => "k-replica",
             Scenario::MultiLocality => "multi-locality",
             Scenario::MultiRack => "multi-rack",
             Scenario::MultiZone => "multi-zone",
@@ -138,6 +147,7 @@ impl Scenario {
             Scenario::BurstyHetero => "compound: arrival bursts x Zipf-skewed speeds",
             Scenario::HotspotHeavyTail => "compound: Pareto sizes x hot-spot placement",
             Scenario::Straggler => "DES: Pareto service tails + racing replica speculation",
+            Scenario::KReplica => "DES: Pareto tails + budgeted K=3 replica races",
             Scenario::MultiLocality => "DES: flat locality, remote execution at mu/penalty",
             Scenario::MultiRack => "DES: rack topology, tiered locality penalties",
             Scenario::MultiZone => "DES: rack+zone topology, three graded remote tiers",
@@ -156,6 +166,7 @@ impl Scenario {
                 Some(Scenario::HotspotHeavyTail)
             }
             "straggler" | "stragglers" | "straggler-spec" => Some(Scenario::Straggler),
+            "k-replica" | "k_replica" | "kreplica" | "replication" => Some(Scenario::KReplica),
             "multi-locality" | "multi_locality" | "multilocality" | "locality" => {
                 Some(Scenario::MultiLocality)
             }
@@ -191,6 +202,7 @@ impl Scenario {
         matches!(
             self,
             Scenario::Straggler
+                | Scenario::KReplica
                 | Scenario::MultiLocality
                 | Scenario::MultiRack
                 | Scenario::MultiZone
@@ -208,7 +220,7 @@ impl Scenario {
     /// first and the explicit overrides after (which is what the CLI and
     /// the config-file parser do).
     pub fn apply(&self, cfg: &mut ExperimentConfig) {
-        use crate::des::service::{EngineKind, ServiceModel};
+        use crate::des::service::{EngineKind, ReplicationBudget, ServiceModel};
         use crate::topology::TopologyKind;
         cfg.trace.scenario = *self;
         cfg.cluster.mu_skew = 0.0;
@@ -220,6 +232,8 @@ impl Scenario {
         cfg.sim.locality_penalty = 1.0;
         cfg.sim.topology = TopologyKind::Flat;
         cfg.sim.speculate = 0.0;
+        cfg.sim.replicas = 0;
+        cfg.sim.replication_budget = ReplicationBudget::Tail;
         match self {
             Scenario::HeteroCap | Scenario::BurstyHetero => {
                 cfg.cluster.mu_skew = 1.0;
@@ -235,6 +249,15 @@ impl Scenario {
                     cap: 20.0,
                 };
                 cfg.sim.speculate = 2.0;
+            }
+            Scenario::KReplica => {
+                cfg.sim.engine = EngineKind::Des;
+                cfg.sim.service = ServiceModel::ParetoTail {
+                    alpha: 1.5,
+                    cap: 20.0,
+                };
+                cfg.sim.speculate = 2.0;
+                cfg.sim.replicas = 3;
             }
             Scenario::MultiLocality => {
                 cfg.sim.engine = EngineKind::Des;
@@ -270,6 +293,7 @@ impl Scenario {
             | Scenario::HeteroCap
             | Scenario::Hotspot
             | Scenario::Straggler
+            | Scenario::KReplica
             | Scenario::MultiLocality
             | Scenario::MultiRack
             | Scenario::MultiZone => Trace::synth_alibaba(cfg, rng),
@@ -490,6 +514,20 @@ mod tests {
         assert!(!Scenario::Straggler.has_cluster_twist());
         assert!(Scenario::Straggler.has_engine_twist());
         // ...and re-selecting the baseline restores the analytic engine.
+        Scenario::Alibaba.apply(&mut c);
+        assert_eq!(c, ExperimentConfig::default());
+
+        // The k-replica preset arms a K = 3 tail-budget race and resets
+        // cleanly.
+        let mut c = ExperimentConfig::default();
+        Scenario::KReplica.apply(&mut c);
+        assert_eq!(c.sim.engine, EngineKind::Des);
+        assert!(matches!(c.sim.service, ServiceModel::ParetoTail { .. }));
+        assert_eq!(c.sim.replicas, 3);
+        assert_eq!(c.sim.effective_replicas(), 3);
+        assert!(c.sim.speculate >= 1.0);
+        c.validate().unwrap();
+        assert!(Scenario::KReplica.has_engine_twist());
         Scenario::Alibaba.apply(&mut c);
         assert_eq!(c, ExperimentConfig::default());
 

@@ -162,7 +162,7 @@ impl Welford {
 /// percentiles stay on [`Summary::from`] wherever tests assert exactness.
 #[derive(Clone, Copy, Debug)]
 pub struct P2Quantile {
-    /// Target quantile in (0,1).
+    /// Target quantile in [0, 1]; 0 and 1 degenerate to exact min/max.
     p: f64,
     /// Marker heights.
     q: [f64; 5],
@@ -176,8 +176,17 @@ pub struct P2Quantile {
 }
 
 impl P2Quantile {
+    /// Build a sketch for quantile `p ∈ [0, 1]`. The interior range
+    /// (0, 1) runs the five-marker P² estimator; the extremes are
+    /// special-cased to exact running min (`p = 0`) / max (`p = 1`)
+    /// tracking — the marker dance degenerates there (its desired-position
+    /// increments collapse onto the extreme markers, and the old
+    /// constructor rejected both). Out-of-range and NaN `p` panic.
     pub fn new(p: f64) -> Self {
-        assert!(p > 0.0 && p < 1.0, "quantile must be in (0,1)");
+        assert!(
+            (0.0..=1.0).contains(&p),
+            "quantile must be in [0, 1], got {p}"
+        );
         P2Quantile {
             p,
             q: [0.0; 5],
@@ -193,6 +202,18 @@ impl P2Quantile {
     }
 
     pub fn push(&mut self, x: f64) {
+        // Extreme quantiles track exactly: q[0] is the running minimum,
+        // q[4] the running maximum (no marker adjustment ever runs).
+        if self.p == 0.0 || self.p == 1.0 {
+            if self.count == 0 {
+                self.q = [x; 5];
+            } else {
+                self.q[0] = self.q[0].min(x);
+                self.q[4] = self.q[4].max(x);
+            }
+            self.count += 1;
+            return;
+        }
         if self.count < 5 {
             self.q[self.count as usize] = x;
             self.count += 1;
@@ -257,6 +278,12 @@ impl P2Quantile {
     pub fn value(&self) -> f64 {
         if self.count == 0 {
             return f64::NAN;
+        }
+        if self.p == 0.0 {
+            return self.q[0];
+        }
+        if self.p == 1.0 {
+            return self.q[4];
         }
         if self.count < 5 {
             let mut head = self.q;
@@ -410,6 +437,84 @@ mod tests {
         }
         let v = s.value();
         assert!((v - 9000.0).abs() < 150.0, "p90 of 0..10000 ≈ 9000, got {v}");
+    }
+
+    #[test]
+    fn p2_extreme_quantiles_track_exact_min_max() {
+        use crate::util::rng::Rng;
+        // Property: for p = 0 and p = 1 the sketch is not an estimate —
+        // it equals the exact running min / max at every prefix length,
+        // including lengths below the five-sample warm-up.
+        for seed in [0x11u64, 0x22, 0x33] {
+            let mut rng = Rng::seed_from(seed);
+            let mut lo = P2Quantile::new(0.0);
+            let mut hi = P2Quantile::new(1.0);
+            let (mut min, mut max) = (f64::INFINITY, f64::NEG_INFINITY);
+            for _ in 0..2_000 {
+                let x = rng.gen_lognormal(0.0, 1.5) - 2.0;
+                lo.push(x);
+                hi.push(x);
+                min = min.min(x);
+                max = max.max(x);
+                assert!((lo.value() - min).abs() < 1e-12, "p0 == running min");
+                assert!((hi.value() - max).abs() < 1e-12, "p1 == running max");
+            }
+        }
+        // Empty sketches still report NaN at the extremes.
+        assert!(P2Quantile::new(0.0).value().is_nan());
+        assert!(P2Quantile::new(1.0).value().is_nan());
+    }
+
+    #[test]
+    fn p2_constant_stream_is_exact_for_any_p() {
+        // Property: a constant stream has every quantile equal to the
+        // constant; marker adjustment must not drift off it (the
+        // parabolic/linear updates see zero height everywhere).
+        for &p in &[0.0, 0.01, 0.25, 0.5, 0.75, 0.99, 1.0] {
+            for &c in &[-3.5, 0.0, 7.25] {
+                let mut s = P2Quantile::new(p);
+                for n in 1..=500u64 {
+                    s.push(c);
+                    assert_eq!(s.count(), n);
+                    assert!(
+                        (s.value() - c).abs() < 1e-12,
+                        "p{p} of constant {c} drifted to {} at n={n}",
+                        s.value()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn p2_value_stays_within_observed_range() {
+        use crate::util::rng::Rng;
+        // Property: for any p and any stream, the sketch never reports a
+        // value outside the observed [min, max] envelope.
+        for seed in [0xa1u64, 0xb2, 0xc3] {
+            for &p in &[0.0, 0.1, 0.5, 0.9, 0.999, 1.0] {
+                let mut rng = Rng::seed_from(seed ^ p.to_bits());
+                let mut s = P2Quantile::new(p);
+                let (mut min, mut max) = (f64::INFINITY, f64::NEG_INFINITY);
+                for _ in 0..3_000 {
+                    let x = rng.gen_f64() * 200.0 - 100.0;
+                    s.push(x);
+                    min = min.min(x);
+                    max = max.max(x);
+                }
+                let v = s.value();
+                assert!(
+                    v >= min - 1e-9 && v <= max + 1e-9,
+                    "p{p} reported {v} outside [{min}, {max}]"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "quantile must be in [0, 1]")]
+    fn p2_rejects_out_of_range_quantile() {
+        let _ = P2Quantile::new(1.5);
     }
 
     #[test]

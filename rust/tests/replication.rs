@@ -1,0 +1,210 @@
+//! Differential suite for the k-replica redundancy engine.
+//!
+//! The k-member replica-set slab replaced the hard-coded two-member
+//! pair slab, so the contract is backwards bit-compatibility plus new
+//! conservation laws:
+//!
+//! - `--replicas 2` (explicit) is bit-identical to the `--speculate`
+//!   alias (replicas = 0, speculate armed) — the old one-sibling
+//!   engine's behaviour — on the straggler preset at every reorder
+//!   thread count.
+//! - `--replicas 1` (racing off) is bit-identical to no speculation at
+//!   all: the fork gate never opens and no telemetry accrues.
+//! - Wasted work obeys conservation: `wasted_work <= busy_work`, the
+//!   fraction lands in [0, 1], and a race-free run wastes nothing.
+//! - Every K is seed-reproducible: same seed, same config, same JCT
+//!   vector and the same wasted-work ledger, run after run.
+//!
+//! Thread counts come from `TAOS_TEST_THREADS` (default 1,2,8) so the
+//! CI determinism matrix can pin one count per leg, exactly like
+//! `des_equivalence` / `sweep_determinism`.
+
+use taos::assign::AssignPolicy;
+use taos::config::ExperimentConfig;
+use taos::des::service::{EngineKind, ReplicationBudget, ServiceModel};
+use taos::sched::SchedPolicy;
+use taos::sim::run_experiment;
+use taos::sweep::{self, pool};
+use taos::trace::scenarios::Scenario;
+
+fn straggler_cfg() -> ExperimentConfig {
+    let mut cfg = sweep::quick_base(0x4E90);
+    cfg.trace.jobs = 18;
+    cfg.trace.total_tasks = 900;
+    cfg.cluster.servers = 14;
+    cfg.cluster.avail_lo = 3;
+    cfg.cluster.avail_hi = 5;
+    Scenario::Straggler.apply(&mut cfg);
+    cfg
+}
+
+#[test]
+fn explicit_k2_bit_identical_to_speculate_alias() {
+    // The speculate alias (replicas = 0, speculate armed) must be the
+    // same engine as an explicit two-member race: same fork decisions,
+    // same winner, same RNG stream, same ledger.
+    let alias = straggler_cfg();
+    assert_eq!(alias.sim.replicas, 0, "preset leaves the alias in charge");
+    assert!(alias.sim.speculate > 0.0);
+    let mut explicit = alias.clone();
+    explicit.sim.replicas = 2;
+    for policy in [
+        SchedPolicy::Fifo(AssignPolicy::Wf),
+        SchedPolicy::Fifo(AssignPolicy::Rd),
+        SchedPolicy::Ocwf { acc: true },
+    ] {
+        for threads in pool::test_thread_counts() {
+            let mut a = alias.clone();
+            let mut e = explicit.clone();
+            a.sim.reorder_threads = threads;
+            e.sim.reorder_threads = threads;
+            let old = run_experiment(&a, policy)
+                .unwrap_or_else(|err| panic!("alias/{}/{threads}: {err}", policy.name()));
+            let new = run_experiment(&e, policy)
+                .unwrap_or_else(|err| panic!("k2/{}/{threads}: {err}", policy.name()));
+            assert_eq!(
+                old.jcts,
+                new.jcts,
+                "{}/{threads} threads: K=2 must be bit-identical to the speculate alias",
+                policy.name()
+            );
+            assert_eq!(old.makespan, new.makespan, "{}/{threads}", policy.name());
+            assert_eq!(old.wf_evals, new.wf_evals, "{}/{threads}", policy.name());
+            assert_eq!(
+                (old.wasted_work, old.busy_work),
+                (new.wasted_work, new.busy_work),
+                "{}/{threads}: the wasted-work ledger is part of the contract",
+                policy.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn k1_bit_identical_to_no_speculation() {
+    // replicas = 1 means "racing off" even with --speculate armed: the
+    // fork gate never opens, so the run must match speculate = 0 bit
+    // for bit and waste nothing.
+    let mut off = straggler_cfg();
+    off.sim.speculate = 0.0;
+    let mut k1 = straggler_cfg();
+    k1.sim.replicas = 1; // speculate stays armed from the preset
+    for policy in [SchedPolicy::Fifo(AssignPolicy::Wf), SchedPolicy::Ocwf { acc: false }] {
+        let base = run_experiment(&off, policy)
+            .unwrap_or_else(|e| panic!("off/{}: {e}", policy.name()));
+        let solo = run_experiment(&k1, policy)
+            .unwrap_or_else(|e| panic!("k1/{}: {e}", policy.name()));
+        assert_eq!(
+            base.jcts,
+            solo.jcts,
+            "{}: K=1 must equal no-speculation bit for bit",
+            policy.name()
+        );
+        assert_eq!(base.makespan, solo.makespan, "{}", policy.name());
+        assert_eq!(solo.wasted_work, 0, "{}: no race, no waste", policy.name());
+        assert_eq!(base.wasted_work, 0, "{}", policy.name());
+        assert!(solo.busy_work > 0, "{}: DES runs account service slots", policy.name());
+        assert_eq!(solo.busy_work, base.busy_work, "{}", policy.name());
+    }
+}
+
+#[test]
+fn wasted_work_obeys_conservation() {
+    // On the k-replica preset (K = 3, Pareto tails) the loser slots are
+    // a strict subset of all service slots, the fraction is a
+    // probability, and the races actually fire.
+    let mut cfg = sweep::quick_base(0x4E91);
+    cfg.trace.jobs = 18;
+    cfg.trace.total_tasks = 900;
+    cfg.cluster.servers = 14;
+    cfg.cluster.avail_lo = 3;
+    cfg.cluster.avail_hi = 5;
+    Scenario::KReplica.apply(&mut cfg);
+    assert_eq!(cfg.sim.replicas, 3);
+    let mut any_wasted = false;
+    for policy in [
+        SchedPolicy::Fifo(AssignPolicy::Wf),
+        SchedPolicy::Fifo(AssignPolicy::Rd),
+        SchedPolicy::Ocwf { acc: true },
+    ] {
+        let out = run_experiment(&cfg, policy)
+            .unwrap_or_else(|e| panic!("{}: {e}", policy.name()));
+        assert!(out.busy_work > 0, "{}", policy.name());
+        assert!(
+            out.wasted_work <= out.busy_work,
+            "{}: losers ({}) cannot outnumber all service slots ({})",
+            policy.name(),
+            out.wasted_work,
+            out.busy_work
+        );
+        let f = out.wasted_fraction();
+        assert!((0.0..=1.0).contains(&f), "{}: fraction {f}", policy.name());
+        any_wasted |= out.wasted_work > 0;
+    }
+    assert!(
+        any_wasted,
+        "K=3 Pareto races must cancel at least one running loser across policies"
+    );
+}
+
+#[test]
+fn every_k_is_seed_reproducible() {
+    // Same seed, same K → byte-identical JCTs and the same ledger, for
+    // every replica count the CLI accepts on this preset.
+    for k in 1..=4usize {
+        let mut cfg = straggler_cfg();
+        cfg.sim.replicas = k;
+        for policy in [SchedPolicy::Fifo(AssignPolicy::Wf), SchedPolicy::Ocwf { acc: true }] {
+            let a = run_experiment(&cfg, policy)
+                .unwrap_or_else(|e| panic!("k{k}/{}: {e}", policy.name()));
+            let b = run_experiment(&cfg, policy).unwrap();
+            assert_eq!(
+                a.jcts,
+                b.jcts,
+                "k{k}/{}: same seed must give byte-identical JCTs",
+                policy.name()
+            );
+            assert_eq!(a.makespan, b.makespan, "k{k}/{}", policy.name());
+            assert_eq!(
+                (a.wasted_work, a.busy_work),
+                (b.wasted_work, b.busy_work),
+                "k{k}/{}: the ledger must reproduce too",
+                policy.name()
+            );
+            assert_eq!(a.jcts.len(), cfg.trace.jobs, "k{k}/{}", policy.name());
+        }
+    }
+}
+
+#[test]
+fn budget_gates_are_live_and_deterministic() {
+    // `always` forks without a speculate threshold; `idle` only forks
+    // onto strictly idle servers. Both must validate, run, and
+    // reproduce; `always` on an exponential cluster must actually burn
+    // loser slots.
+    let mut cfg = straggler_cfg();
+    cfg.sim.engine = EngineKind::Des;
+    cfg.sim.service = ServiceModel::Exp { mean: 1.0 };
+    cfg.sim.speculate = 0.0;
+    cfg.sim.replicas = 2;
+    cfg.sim.replication_budget = ReplicationBudget::Always;
+    cfg.validate().expect("always-budget racing needs no speculate threshold");
+    let policy = SchedPolicy::Fifo(AssignPolicy::Wf);
+    let a = run_experiment(&cfg, policy).unwrap();
+    let b = run_experiment(&cfg, policy).unwrap();
+    assert_eq!(a.jcts, b.jcts, "always-budget runs must reproduce");
+    assert!(
+        a.wasted_work > 0,
+        "forking every primary on exp service must cancel some loser mid-flight"
+    );
+    assert!(a.wasted_work <= a.busy_work);
+
+    let mut idle = straggler_cfg();
+    idle.sim.replicas = 3;
+    idle.sim.replication_budget = ReplicationBudget::Idle;
+    idle.validate().expect("idle budget rides the preset's speculate threshold");
+    let i1 = run_experiment(&idle, policy).unwrap();
+    let i2 = run_experiment(&idle, policy).unwrap();
+    assert_eq!(i1.jcts, i2.jcts, "idle-budget runs must reproduce");
+    assert!(i1.wasted_work <= i1.busy_work);
+}
