@@ -29,9 +29,9 @@ fn main() {
     );
 
     for policy in [
-        SchedPolicy::Fifo(AssignPolicy::Wf),
-        SchedPolicy::Fifo(AssignPolicy::Obta),
-        SchedPolicy::Ocwf { acc: true },
+        SchedPolicy::fifo(AssignPolicy::Wf),
+        SchedPolicy::fifo(AssignPolicy::Obta),
+        SchedPolicy::ocwf(true),
     ] {
         let out = taos::sim::run_experiment(&cfg, policy).expect("run");
         let s = out.jct_stats();

@@ -18,9 +18,9 @@ fn main() {
     for &alpha in &[0.0, 0.5, 1.0, 1.5, 2.0] {
         let mut cfg = base.clone();
         cfg.cluster.zipf_alpha = alpha;
-        let fifo = taos::sim::run_experiment(&cfg, SchedPolicy::Fifo(AssignPolicy::Wf)).unwrap();
-        let ocwf = taos::sim::run_experiment(&cfg, SchedPolicy::Ocwf { acc: false }).unwrap();
-        let acc = taos::sim::run_experiment(&cfg, SchedPolicy::Ocwf { acc: true }).unwrap();
+        let fifo = taos::sim::run_experiment(&cfg, SchedPolicy::fifo(AssignPolicy::Wf)).unwrap();
+        let ocwf = taos::sim::run_experiment(&cfg, SchedPolicy::ocwf(false)).unwrap();
+        let acc = taos::sim::run_experiment(&cfg, SchedPolicy::ocwf(true)).unwrap();
         assert_eq!(
             ocwf.jcts, acc.jcts,
             "OCWF and OCWF-ACC must produce identical schedules"

@@ -13,8 +13,8 @@ fn main() {
     // One spec per (scenario, policy): small enough to finish in seconds,
     // fanned out across all cores by the sweep pool.
     let policies = [
-        SchedPolicy::Fifo(taos::assign::AssignPolicy::Wf),
-        SchedPolicy::Ocwf { acc: true },
+        SchedPolicy::fifo(taos::assign::AssignPolicy::Wf),
+        SchedPolicy::ocwf(true),
     ];
     let mut specs = Vec::new();
     for (i, sc) in Scenario::ALL.iter().enumerate() {

@@ -1,0 +1,147 @@
+//! Delay scheduling (Zaharia et al., EuroSys 2010).
+//!
+//! Launch on a replica-holding server whenever the estimated local wait
+//! is tolerable; fall back to the shortest remote queue only when the
+//! best holder's wait exceeds the configured delay bound D
+//! ([`crate::assign::AssignParams::delay_bound`], CLI `--delay-bound`).
+//! The original system waits in *time* for a local slot; in this slotted
+//! model the wait is the holder's estimated queue length, so D is
+//! expressed in slots. Under the flat model (holders == eligible set)
+//! the rule degenerates to chunked JSQ — the locality trade-off only
+//! bites once the DES topology expansion widens the eligible set beyond
+//! the holders ([`crate::job::TaskGroup::holders`]).
+//!
+//! Deterministic integer arithmetic, no RNG: the analytic and DES
+//! engines produce bit-identical schedules.
+
+use super::jsq::{emit_row, shortest_queue};
+use super::{Assigner, Assignment, Instance};
+use crate::job::{Slots, TaskCount};
+
+/// Delay scheduling with bound D, pooled chunk-routing workspace.
+pub struct Delay {
+    bound: Slots,
+    eff: Vec<Slots>,
+    counts: Vec<TaskCount>,
+}
+
+impl Delay {
+    pub fn new(bound: Slots) -> Self {
+        Delay {
+            bound,
+            eff: Vec::new(),
+            counts: Vec::new(),
+        }
+    }
+
+    /// Reserved workspace capacity (allocation-stability tests).
+    pub fn scratch_footprint(&self) -> usize {
+        self.eff.capacity() + self.counts.capacity()
+    }
+}
+
+impl Assigner for Delay {
+    fn name(&self) -> &'static str {
+        "delay"
+    }
+
+    fn assign(&mut self, inst: &Instance) -> Assignment {
+        let m = inst.busy.len();
+        self.eff.clear();
+        self.eff.extend_from_slice(inst.busy);
+        self.counts.resize(m, 0);
+        let mut per_group = Vec::with_capacity(inst.groups.len());
+        let mut phi: Slots = 0;
+        for g in inst.groups {
+            if g.size == 0 {
+                per_group.push(Vec::new());
+                continue;
+            }
+            let holders = g.holders();
+            let mut remaining = g.size;
+            while remaining > 0 {
+                let local = shortest_queue(&self.eff, inst.mu, holders);
+                // Tolerable local wait → stay on the holder; otherwise
+                // the chunk goes to the globally shortest eligible queue
+                // (which may still be the holder when remote is no
+                // better).
+                let target = if self.eff[local] <= self.bound {
+                    local
+                } else {
+                    shortest_queue(&self.eff, inst.mu, &g.servers)
+                };
+                let chunk = remaining.min(inst.mu[target]);
+                self.counts[target] += chunk;
+                self.eff[target] += 1;
+                phi = phi.max(self.eff[target]);
+                remaining -= chunk;
+            }
+            per_group.push(emit_row(&mut self.counts, &g.servers));
+        }
+        Assignment { per_group, phi }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{program_phi, validate_assignment, DEFAULT_DELAY_BOUND};
+    use super::*;
+    use crate::job::TaskGroup;
+
+    fn inst<'a>(groups: &'a [TaskGroup], mu: &'a [u64], busy: &'a [Slots]) -> Instance<'a> {
+        Instance { groups, mu, busy }
+    }
+
+    #[test]
+    fn waits_out_short_local_queues() {
+        // Holder 0 is busy (2 slots) but every chunk's wait — including
+        // the self-load of earlier chunks — stays within D = 3, so the
+        // idle remote server never sees a task.
+        let groups = vec![TaskGroup::with_local(4, vec![0, 1], vec![0])];
+        let mu = vec![2, 2];
+        let busy = vec![2, 0];
+        let out = Delay::new(3).assign(&inst(&groups, &mu, &busy));
+        assert_eq!(out.per_group, vec![vec![(0, 4)]]);
+        assert_eq!(out.phi, 4);
+    }
+
+    #[test]
+    fn spills_remote_past_the_bound() {
+        // Same instance with D = 1: the local wait (2) exceeds the bound,
+        // so chunks go to the shortest eligible queue instead.
+        let groups = vec![TaskGroup::with_local(4, vec![0, 1], vec![0])];
+        let mu = vec![2, 2];
+        let busy = vec![2, 0];
+        let out = Delay::new(1).assign(&inst(&groups, &mu, &busy));
+        assert_eq!(out.per_group, vec![vec![(1, 4)]]);
+        assert_eq!(out.phi, 2);
+    }
+
+    #[test]
+    fn bound_zero_is_work_conserving_jsq() {
+        // D = 0 tolerates no local queue at all: the first chunk lands on
+        // the idle holder, subsequent chunks chase the shortest queue.
+        let groups = vec![TaskGroup::with_local(6, vec![0, 1, 2], vec![0])];
+        let mu = vec![2, 2, 2];
+        let busy = vec![0, 0, 0];
+        let out = Delay::new(0).assign(&inst(&groups, &mu, &busy));
+        assert_eq!(out.per_group, vec![vec![(0, 2), (1, 2), (2, 2)]]);
+        assert_eq!(out.phi, 1);
+    }
+
+    #[test]
+    fn phi_is_exact_program_phi_on_random_instances() {
+        use crate::assign::testutil::random_instance;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from(0xDE1A_7);
+        for _ in 0..300 {
+            let oi = random_instance(&mut rng, 6, 4, 12, 6);
+            let inst = oi.view();
+            for bound in [0, DEFAULT_DELAY_BOUND, 50] {
+                let out = Delay::new(bound).assign(&inst);
+                validate_assignment(&inst, &out).unwrap();
+                assert_eq!(out.phi, program_phi(&inst, &out.per_group));
+            }
+        }
+    }
+}

@@ -1,0 +1,281 @@
+//! Join-shortest-estimated-queue baselines.
+//!
+//! [`Jsq`] is the classic locality-oblivious policy (Winston 1977): each
+//! task group joins the server with the shortest *estimated completion*
+//! among its available servers, whole group at once. [`JsqAffinity`] is
+//! the affinity-scheduling variant (arXiv 1705.03125): work is routed in
+//! capacity-sized chunks to the shortest queue *among replica holders*,
+//! spilling to the full eligible set only when every holder's queue is
+//! strictly longer than the global shortest — JSQ with overflow
+//! fallback.
+//!
+//! Both are deterministic pure functions of the [`Instance`] (integer
+//! arithmetic, no RNG), so the analytic and DES engines produce
+//! bit-identical schedules for free. Selection keys order by
+//! `(queue, fastest-μ, server id)` so that whenever `(busy, μ)` pairs
+//! are pairwise distinguishable the choice is label-independent — the
+//! property the metamorphic relabeling suite pins down.
+
+use std::cmp::Reverse;
+
+use super::{Assigner, Assignment, Instance};
+use crate::job::{ServerId, Slots, TaskCount};
+use crate::util::ceil_div;
+
+/// Shortest-queue server of `set`: minimal `(eff, Reverse(μ), id)` —
+/// shortest estimated queue, faster server on ties, lowest id last.
+pub(super) fn shortest_queue(eff: &[Slots], mu: &[u64], set: &[ServerId]) -> ServerId {
+    let mut best: Option<(Slots, Reverse<u64>, ServerId)> = None;
+    for &s in set {
+        let key = (eff[s], Reverse(mu[s]), s);
+        if best.map_or(true, |b| key < b) {
+            best = Some(key);
+        }
+    }
+    best.expect("non-empty server set").2
+}
+
+/// Emit one group's accumulated per-server counts as a sorted sparse
+/// row, resetting the touched counters (the pooled-workspace contract:
+/// `counts` is all-zero between groups).
+pub(super) fn emit_row(
+    counts: &mut [TaskCount],
+    servers: &[ServerId],
+) -> Vec<(ServerId, TaskCount)> {
+    let mut row = Vec::new();
+    for &s in servers {
+        if counts[s] > 0 {
+            row.push((s, counts[s]));
+            counts[s] = 0;
+        }
+    }
+    row
+}
+
+/// Locality-oblivious join-shortest-estimated-queue: every group goes,
+/// whole, to the available server minimizing its estimated completion
+/// `eff_m + ceil(n/μ_m)` (self-load aware across the job's groups).
+pub struct Jsq {
+    eff: Vec<Slots>,
+}
+
+impl Jsq {
+    pub fn new() -> Self {
+        Jsq { eff: Vec::new() }
+    }
+
+    /// Reserved workspace capacity (allocation-stability tests).
+    pub fn scratch_footprint(&self) -> usize {
+        self.eff.capacity()
+    }
+}
+
+impl Default for Jsq {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Assigner for Jsq {
+    fn name(&self) -> &'static str {
+        "jsq"
+    }
+
+    fn assign(&mut self, inst: &Instance) -> Assignment {
+        self.eff.clear();
+        self.eff.extend_from_slice(inst.busy);
+        let mut per_group = Vec::with_capacity(inst.groups.len());
+        let mut phi: Slots = 0;
+        for g in inst.groups {
+            if g.size == 0 {
+                per_group.push(Vec::new());
+                continue;
+            }
+            let mut best: Option<(Slots, Slots, Reverse<u64>, ServerId)> = None;
+            for &s in &g.servers {
+                let est = self.eff[s] + ceil_div(g.size, inst.mu[s]);
+                let key = (est, self.eff[s], Reverse(inst.mu[s]), s);
+                if best.map_or(true, |b| key < b) {
+                    best = Some(key);
+                }
+            }
+            let (est, _, _, s) = best.expect("non-empty group server set");
+            self.eff[s] = est;
+            phi = phi.max(est);
+            per_group.push(vec![(s, g.size)]);
+        }
+        Assignment { per_group, phi }
+    }
+}
+
+/// JSQ restricted to replica holders with overflow fallback: work is
+/// routed chunk by chunk (one slot's worth, `μ_m` tasks) to the
+/// shortest-queue *holder*; when every holder's queue is strictly longer
+/// than the global shortest among the group's eligible servers, the
+/// chunk overflows to that global shortest instead. Under the flat model
+/// (holders == eligible set) this degenerates to chunked JSQ.
+pub struct JsqAffinity {
+    eff: Vec<Slots>,
+    counts: Vec<TaskCount>,
+}
+
+impl JsqAffinity {
+    pub fn new() -> Self {
+        JsqAffinity {
+            eff: Vec::new(),
+            counts: Vec::new(),
+        }
+    }
+
+    /// Reserved workspace capacity (allocation-stability tests).
+    pub fn scratch_footprint(&self) -> usize {
+        self.eff.capacity() + self.counts.capacity()
+    }
+}
+
+impl Default for JsqAffinity {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Assigner for JsqAffinity {
+    fn name(&self) -> &'static str {
+        "jsq-affinity"
+    }
+
+    fn assign(&mut self, inst: &Instance) -> Assignment {
+        let m = inst.busy.len();
+        self.eff.clear();
+        self.eff.extend_from_slice(inst.busy);
+        self.counts.resize(m, 0);
+        let mut per_group = Vec::with_capacity(inst.groups.len());
+        let mut phi: Slots = 0;
+        for g in inst.groups {
+            if g.size == 0 {
+                per_group.push(Vec::new());
+                continue;
+            }
+            let holders = g.holders();
+            let mut remaining = g.size;
+            while remaining > 0 {
+                let local = shortest_queue(&self.eff, inst.mu, holders);
+                let global = shortest_queue(&self.eff, inst.mu, &g.servers);
+                // A holder matching the global shortest queue keeps the
+                // chunk local; otherwise it overflows.
+                let target = if self.eff[local] == self.eff[global] {
+                    local
+                } else {
+                    global
+                };
+                let chunk = remaining.min(inst.mu[target]);
+                self.counts[target] += chunk;
+                self.eff[target] += 1;
+                phi = phi.max(self.eff[target]);
+                remaining -= chunk;
+            }
+            per_group.push(emit_row(&mut self.counts, &g.servers));
+        }
+        Assignment { per_group, phi }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{program_phi, validate_assignment};
+    use super::*;
+    use crate::job::TaskGroup;
+
+    fn inst<'a>(groups: &'a [TaskGroup], mu: &'a [u64], busy: &'a [Slots]) -> Instance<'a> {
+        Instance { groups, mu, busy }
+    }
+
+    #[test]
+    fn jsq_joins_shortest_estimated_completion() {
+        // Server 1 has the longer queue but is fast enough to win on the
+        // completion estimate: 3 + ceil(8/8) = 4 < 0 + ceil(8/1) = 8.
+        let groups = vec![TaskGroup::new(8, vec![0, 1])];
+        let mu = vec![1, 8];
+        let busy = vec![0, 3];
+        let mut a = Jsq::new();
+        let out = a.assign(&inst(&groups, &mu, &busy));
+        assert_eq!(out.per_group, vec![vec![(1, 8)]]);
+        assert_eq!(out.phi, 4);
+    }
+
+    #[test]
+    fn jsq_ties_prefer_faster_then_lower_id() {
+        // Equal estimates and queues: the faster server wins.
+        let groups = vec![TaskGroup::new(4, vec![0, 1])];
+        let mu = vec![2, 4];
+        let busy = vec![1, 2];
+        // est0 = 1 + 2 = 3, est1 = 2 + 1 = 3; eff0 = 1 < eff1 = 2.
+        let out = Jsq::new().assign(&inst(&groups, &mu, &busy));
+        assert_eq!(out.per_group, vec![vec![(0, 4)]]);
+        // Fully symmetric servers: lowest id.
+        let groups = vec![TaskGroup::new(4, vec![2, 1])];
+        let mu = vec![3, 3, 3];
+        let busy = vec![0, 0, 0];
+        let out = Jsq::new().assign(&inst(&groups, &mu, &busy));
+        assert_eq!(out.per_group, vec![vec![(1, 4)]]);
+    }
+
+    #[test]
+    fn jsq_is_self_load_aware_across_groups() {
+        // Two identical groups, two symmetric servers: the second group
+        // must see the first group's load and take the other server.
+        let groups = vec![TaskGroup::new(3, vec![0, 1]), TaskGroup::new(3, vec![0, 1])];
+        let mu = vec![3, 3];
+        let busy = vec![0, 0];
+        let out = Jsq::new().assign(&inst(&groups, &mu, &busy));
+        assert_eq!(out.per_group, vec![vec![(0, 3)], vec![(1, 3)]]);
+        assert_eq!(out.phi, 1);
+    }
+
+    #[test]
+    fn affinity_stays_local_until_holders_overflow() {
+        // Group eligible on {0,1,2} but only 0 holds a replica. With the
+        // holder idle, chunks go local; once its queue passes the best
+        // remote queue, chunks spill.
+        let groups = vec![TaskGroup::with_local(6, vec![0, 1, 2], vec![0])];
+        let mu = vec![2, 2, 2];
+        let busy = vec![0, 1, 1];
+        let out = JsqAffinity::new().assign(&inst(&groups, &mu, &busy));
+        // Chunks of 2: s0 (eff 0→1), s0 ties global min 1 (holders win
+        // ties) → s0 (1→2), now best remote eff is 1 < 2 → spill to s1.
+        assert_eq!(out.per_group, vec![vec![(0, 4), (1, 2)]]);
+        assert_eq!(out.phi, 2);
+        let v = validate_assignment(&inst(&groups, &mu, &busy), &out);
+        assert!(v.is_ok(), "{v:?}");
+    }
+
+    #[test]
+    fn affinity_without_local_set_is_chunked_jsq() {
+        // Flat model: holders == servers, so the overflow rule never
+        // fires and the allocation water-levels across the set.
+        let groups = vec![TaskGroup::new(9, vec![0, 1, 2])];
+        let mu = vec![3, 3, 3];
+        let busy = vec![0, 0, 0];
+        let out = JsqAffinity::new().assign(&inst(&groups, &mu, &busy));
+        assert_eq!(out.per_group, vec![vec![(0, 3), (1, 3), (2, 3)]]);
+        assert_eq!(out.phi, 1);
+    }
+
+    #[test]
+    fn phi_is_exact_program_phi_on_random_instances() {
+        use crate::assign::testutil::random_instance;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from(0x15_0_5);
+        for _ in 0..300 {
+            let oi = random_instance(&mut rng, 6, 4, 12, 6);
+            let inst = oi.view();
+            for out in [
+                Jsq::new().assign(&inst),
+                JsqAffinity::new().assign(&inst),
+            ] {
+                validate_assignment(&inst, &out).unwrap();
+                assert_eq!(out.phi, program_phi(&inst, &out.per_group));
+            }
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! MaxWeight-style priority routing (Tassiulas–Ephremides; the
+//! JSQ-MaxWeight affinity flavor of arXiv 1705.03125).
+//!
+//! Each capacity-sized chunk goes to the eligible server maximizing a
+//! locality-weighted service-to-backlog priority
+//! `w_m · μ_m / (1 + eff_m)`, where `w_m = 2` for replica holders and
+//! `1` for remote servers: fast, data-local, short-queue servers win.
+//! The ratio comparison is done by u128 cross-multiplication so the rule
+//! is exact integer arithmetic — deterministic, engine-agnostic, and
+//! invariant under uniform rate scaling (both sides carry exactly one μ
+//! factor). Ties fall back to the shortest-queue key `(eff, Reverse(μ),
+//! id)`.
+
+use std::cmp::Reverse;
+
+use super::jsq::emit_row;
+use super::{Assigner, Assignment, Instance};
+use crate::job::{ServerId, Slots, TaskCount};
+
+/// Locality weight: replica holders count double.
+const LOCAL_WEIGHT: u64 = 2;
+const REMOTE_WEIGHT: u64 = 1;
+
+/// MaxWeight router with pooled chunk-routing workspace.
+pub struct MaxWeight {
+    eff: Vec<Slots>,
+    counts: Vec<TaskCount>,
+}
+
+impl MaxWeight {
+    pub fn new() -> Self {
+        MaxWeight {
+            eff: Vec::new(),
+            counts: Vec::new(),
+        }
+    }
+
+    /// Reserved workspace capacity (allocation-stability tests).
+    pub fn scratch_footprint(&self) -> usize {
+        self.eff.capacity() + self.counts.capacity()
+    }
+}
+
+impl Default for MaxWeight {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Assigner for MaxWeight {
+    fn name(&self) -> &'static str {
+        "maxweight"
+    }
+
+    fn assign(&mut self, inst: &Instance) -> Assignment {
+        let m = inst.busy.len();
+        self.eff.clear();
+        self.eff.extend_from_slice(inst.busy);
+        self.counts.resize(m, 0);
+        let mut per_group = Vec::with_capacity(inst.groups.len());
+        let mut phi: Slots = 0;
+        for g in inst.groups {
+            if g.size == 0 {
+                per_group.push(Vec::new());
+                continue;
+            }
+            let holders = g.holders();
+            let mut remaining = g.size;
+            while remaining > 0 {
+                // argmax of w·μ/(1+eff) over the eligible set; exact via
+                // cross-multiplication, ties broken shortest-queue-first.
+                let mut best: Option<(ServerId, u64, Slots)> = None; // (id, w·μ, eff)
+                for &s in &g.servers {
+                    let w = if holders.binary_search(&s).is_ok() {
+                        LOCAL_WEIGHT
+                    } else {
+                        REMOTE_WEIGHT
+                    };
+                    let wmu = w * inst.mu[s];
+                    let better = match best {
+                        None => true,
+                        Some((bs, bwmu, beff)) => {
+                            let cand = wmu as u128 * (1 + beff) as u128;
+                            let incumbent = bwmu as u128 * (1 + self.eff[s]) as u128;
+                            cand > incumbent
+                                || (cand == incumbent
+                                    && (self.eff[s], Reverse(inst.mu[s]), s)
+                                        < (beff, Reverse(inst.mu[bs]), bs))
+                        }
+                    };
+                    if better {
+                        best = Some((s, wmu, self.eff[s]));
+                    }
+                }
+                let (target, _, _) = best.expect("non-empty group server set");
+                let chunk = remaining.min(inst.mu[target]);
+                self.counts[target] += chunk;
+                self.eff[target] += 1;
+                phi = phi.max(self.eff[target]);
+                remaining -= chunk;
+            }
+            per_group.push(emit_row(&mut self.counts, &g.servers));
+        }
+        Assignment { per_group, phi }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{program_phi, validate_assignment};
+    use super::*;
+    use crate::job::TaskGroup;
+
+    fn inst<'a>(groups: &'a [TaskGroup], mu: &'a [u64], busy: &'a [Slots]) -> Instance<'a> {
+        Instance { groups, mu, busy }
+    }
+
+    #[test]
+    fn prefers_holders_at_equal_queue_and_rate() {
+        // Symmetric servers, but only 1 holds a replica: the double
+        // locality weight routes the first chunks there until its queue
+        // halves the priority below the remote servers'.
+        let groups = vec![TaskGroup::with_local(6, vec![0, 1, 2], vec![1])];
+        let mu = vec![2, 2, 2];
+        let busy = vec![0, 0, 0];
+        let out = MaxWeight::new().assign(&inst(&groups, &mu, &busy));
+        // Priorities: s1 = 4/1 wins; then s1 = 4/2 = 2/1 ties remote w·μ
+        // ratio... 4/(1+1) = 2 vs 2/(1+0) = 2 → tie, shortest queue wins
+        // (s0); then s1 4/2 vs s2 2/1 tie → s2 shorter queue; repeat.
+        assert_eq!(out.total_assigned(), 6);
+        let row = &out.per_group[0];
+        let s1 = row.iter().find(|&&(s, _)| s == 1).map(|&(_, n)| n);
+        assert!(s1.is_some(), "holder must receive work: {row:?}");
+        validate_assignment(&inst(&groups, &mu, &busy), &out).unwrap();
+    }
+
+    #[test]
+    fn weighs_rate_against_backlog() {
+        // No locality split (flat): a 4× faster server absorbs chunks
+        // until its backlog erodes the priority ratio below the slow
+        // server's.
+        let groups = vec![TaskGroup::new(10, vec![0, 1])];
+        let mu = vec![8, 2];
+        let busy = vec![0, 0];
+        let out = MaxWeight::new().assign(&inst(&groups, &mu, &busy));
+        let row = &out.per_group[0];
+        let fast = row.iter().find(|&&(s, _)| s == 0).map_or(0, |&(_, n)| n);
+        let slow = row.iter().find(|&&(s, _)| s == 1).map_or(0, |&(_, n)| n);
+        assert!(fast > slow, "fast server must take the bulk: {row:?}");
+        assert_eq!(fast + slow, 10);
+    }
+
+    #[test]
+    fn phi_is_exact_program_phi_on_random_instances() {
+        use crate::assign::testutil::random_instance;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from(0x3A_11);
+        for _ in 0..300 {
+            let oi = random_instance(&mut rng, 6, 4, 12, 6);
+            let inst = oi.view();
+            let out = MaxWeight::new().assign(&inst);
+            validate_assignment(&inst, &out).unwrap();
+            assert_eq!(out.phi, program_phi(&inst, &out.per_group));
+        }
+    }
+}

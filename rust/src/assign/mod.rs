@@ -14,11 +14,24 @@
 //! - [`wf::Wf`] — the water-filling approximation (§III-B, Alg 2), tight
 //!   K_c-approximate (Thms 1–2).
 //! - [`rd::Rd`] — the replica-deletion heuristic (§III-C).
+//!
+//! Classic baselines beyond the paper (the `--policies` panel):
+//! - [`jsq::Jsq`] — join-shortest-estimated-queue, locality-oblivious.
+//! - [`jsq::JsqAffinity`] — JSQ restricted to replica holders with
+//!   overflow fallback (affinity scheduling, arXiv 1705.03125).
+//! - [`delay::Delay`] — delay scheduling (Zaharia et al., EuroSys 2010):
+//!   prefer replica holders, go remote only when the estimated local
+//!   wait exceeds the delay bound D ([`AssignParams::delay_bound`]).
+//! - [`maxweight::MaxWeight`] — queue-length × locality-weight priority
+//!   routing (JSQ-MaxWeight flavor, arXiv 1705.03125).
 
 pub mod bounds;
 pub mod brute;
+pub mod delay;
 pub mod feasible;
 pub mod ilp;
+pub mod jsq;
+pub mod maxweight;
 pub mod nlip;
 pub mod obta;
 pub mod rd;
@@ -148,6 +161,32 @@ pub enum AssignPolicy {
     Obta,
     Wf,
     Rd,
+    Jsq,
+    JsqAffinity,
+    Delay,
+    MaxWeight,
+}
+
+/// Knobs an assigner may need beyond the RNG seed. Threaded from
+/// [`crate::config::SimConfig`] at every engine build site; `build`
+/// without params uses the defaults.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AssignParams {
+    /// Delay scheduling's bound D (slots): [`delay::Delay`] goes remote
+    /// only when the best replica holder's estimated wait exceeds D.
+    pub delay_bound: Slots,
+}
+
+/// Default delay bound D: tolerate a short local queue (the classic
+/// delay-scheduling sweet spot of "wait a little, win locality").
+pub const DEFAULT_DELAY_BOUND: Slots = 2;
+
+impl Default for AssignParams {
+    fn default() -> Self {
+        AssignParams {
+            delay_bound: DEFAULT_DELAY_BOUND,
+        }
+    }
 }
 
 impl AssignPolicy {
@@ -157,6 +196,10 @@ impl AssignPolicy {
             AssignPolicy::Obta => "obta",
             AssignPolicy::Wf => "wf",
             AssignPolicy::Rd => "rd",
+            AssignPolicy::Jsq => "jsq",
+            AssignPolicy::JsqAffinity => "jsq-affinity",
+            AssignPolicy::Delay => "delay",
+            AssignPolicy::MaxWeight => "maxweight",
         }
     }
 
@@ -166,27 +209,52 @@ impl AssignPolicy {
             "obta" => Some(AssignPolicy::Obta),
             "wf" => Some(AssignPolicy::Wf),
             "rd" => Some(AssignPolicy::Rd),
+            "jsq" => Some(AssignPolicy::Jsq),
+            "jsq-affinity" | "jsq_affinity" | "jsqaffinity" | "jsqa" => {
+                Some(AssignPolicy::JsqAffinity)
+            }
+            "delay" | "delay-sched" | "delay_sched" => Some(AssignPolicy::Delay),
+            "maxweight" | "max-weight" | "max_weight" => Some(AssignPolicy::MaxWeight),
             _ => None,
         }
     }
 
-    /// Instantiate the assigner. `seed` only affects RD's random
-    /// tie-breaking (paper §III-C: ties among equal-copy replicas are
-    /// broken randomly).
+    /// Instantiate the assigner with default [`AssignParams`]. `seed`
+    /// only affects RD's random tie-breaking (paper §III-C: ties among
+    /// equal-copy replicas are broken randomly).
     pub fn build(&self, seed: u64) -> Box<dyn Assigner> {
+        self.build_with(seed, &AssignParams::default())
+    }
+
+    /// Instantiate the assigner with explicit parameters (the engines
+    /// call this with [`crate::config::SimConfig::assign_params`]).
+    pub fn build_with(&self, seed: u64, params: &AssignParams) -> Box<dyn Assigner> {
         match self {
             AssignPolicy::Nlip => Box::new(nlip::Nlip::new()),
             AssignPolicy::Obta => Box::new(obta::Obta::new()),
             AssignPolicy::Wf => Box::new(wf::Wf::new()),
             AssignPolicy::Rd => Box::new(rd::Rd::new(seed)),
+            AssignPolicy::Jsq => Box::new(jsq::Jsq::new()),
+            AssignPolicy::JsqAffinity => Box::new(jsq::JsqAffinity::new()),
+            AssignPolicy::Delay => Box::new(delay::Delay::new(params.delay_bound)),
+            AssignPolicy::MaxWeight => Box::new(maxweight::MaxWeight::new()),
         }
     }
 
+    /// The paper's four assignment algorithms (§III).
     pub const ALL: [AssignPolicy; 4] = [
         AssignPolicy::Nlip,
         AssignPolicy::Obta,
         AssignPolicy::Wf,
         AssignPolicy::Rd,
+    ];
+
+    /// The classic baseline assigners beyond the paper.
+    pub const BASELINES: [AssignPolicy; 4] = [
+        AssignPolicy::Jsq,
+        AssignPolicy::JsqAffinity,
+        AssignPolicy::Delay,
+        AssignPolicy::MaxWeight,
     ];
 }
 
@@ -358,9 +426,14 @@ mod tests {
 
     #[test]
     fn policy_parse_roundtrip() {
-        for p in AssignPolicy::ALL {
+        for p in AssignPolicy::ALL.into_iter().chain(AssignPolicy::BASELINES) {
             assert_eq!(AssignPolicy::parse(p.name()), Some(p));
         }
         assert_eq!(AssignPolicy::parse("bogus"), None);
+        assert_eq!(AssignPolicy::parse("jsqa"), Some(AssignPolicy::JsqAffinity));
+        assert_eq!(
+            AssignPolicy::parse("max-weight"),
+            Some(AssignPolicy::MaxWeight)
+        );
     }
 }

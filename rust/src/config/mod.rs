@@ -2,9 +2,12 @@
 //! parameters (§V-A), plus a small `key = value` config-file parser (TOML
 //! subset) so experiments are scriptable without `serde`/`toml`.
 
+use crate::assign::{AssignParams, DEFAULT_DELAY_BOUND};
 use crate::cluster::placement::PlacementMode;
 use crate::des::calendar::EventQueueKind;
 use crate::des::service::{EngineKind, ReplicationBudget, ServiceModel};
+use crate::job::Slots;
+use crate::sched::PolicySet;
 use crate::topology::TopologyKind;
 use crate::trace::scenarios::Scenario;
 use crate::{Error, Result};
@@ -147,6 +150,11 @@ pub struct SimConfig {
     /// `always`, see [`ReplicationBudget`]). `tail` is the legacy
     /// `speculate` gate; non-default values require `engine = des`.
     pub replication_budget: ReplicationBudget,
+    /// Delay-scheduling bound D in slots (`delay` baseline, CLI
+    /// `--delay-bound`): a chunk stays on a replica holder while the
+    /// holder's estimated queue is <= D, and spills to the shortest
+    /// eligible queue past it. Other policies ignore the knob.
+    pub delay_bound: Slots,
 }
 
 impl Default for SimConfig {
@@ -164,6 +172,7 @@ impl Default for SimConfig {
             speculate: 0.0,
             replicas: 0,
             replication_budget: ReplicationBudget::Tail,
+            delay_bound: DEFAULT_DELAY_BOUND,
         }
     }
 }
@@ -180,6 +189,13 @@ impl SimConfig {
             1
         }
     }
+
+    /// Assigner construction parameters carried by this config.
+    pub fn assign_params(&self) -> AssignParams {
+        AssignParams {
+            delay_bound: self.delay_bound,
+        }
+    }
 }
 
 /// Top-level experiment configuration.
@@ -188,6 +204,11 @@ pub struct ExperimentConfig {
     pub cluster: ClusterConfig,
     pub trace: TraceConfig,
     pub sim: SimConfig,
+    /// Which scheduling policies a sweep runs (`policies` key, CLI
+    /// `--policies`). Defaults to the paper's six-policy panel so
+    /// existing figures stay byte-identical; see
+    /// [`crate::sched::REGISTRY`] for the full catalog.
+    pub policies: PolicySet,
     /// Master seed for all randomness.
     pub seed: u64,
 }
@@ -349,6 +370,12 @@ impl ExperimentConfig {
                     cfg.sim.topology = TopologyKind::parse(val).ok_or_else(|| {
                         perr("topology must be `flat`, `multi-rack`, `multi-zone` or `fat-tree`")
                     })?
+                }
+                "delay_bound" => {
+                    cfg.sim.delay_bound = val.parse().map_err(|_| perr("bad u64"))?
+                }
+                "policies" => {
+                    cfg.policies = PolicySet::parse(val).map_err(|e| perr(&e))?;
                 }
                 "speculate" => cfg.sim.speculate = val.parse().map_err(|_| perr("bad f64"))?,
                 "replicas" => cfg.sim.replicas = val.parse().map_err(|_| perr("bad usize"))?,

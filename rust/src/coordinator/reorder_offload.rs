@@ -131,6 +131,7 @@ impl OffloadedReorder {
                 .map(|(g, &r)| TaskGroup {
                     size: r,
                     servers: g.servers.clone(),
+                    local: None,
                 })
                 .collect();
             let inst = Instance {

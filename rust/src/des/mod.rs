@@ -345,7 +345,7 @@ impl<'a> DesRun<'a> {
         cfg: &'a SimConfig,
         seed: u64,
     ) -> crate::Result<Self> {
-        if !matches!(policy, SchedPolicy::Fifo(_)) {
+        if !policy.is_fifo() {
             return Err(crate::Error::Config(
                 "streaming DES runs support FIFO policies only: OCWF reorders \
                  every outstanding job and needs the materialized path"
@@ -381,10 +381,9 @@ impl<'a> DesRun<'a> {
         cfg: &'a SimConfig,
         seed: u64,
     ) -> Self {
-        let assigner = match policy {
-            SchedPolicy::Fifo(p) => Some(p.build(seed)),
-            SchedPolicy::Ocwf { .. } => None,
-        };
+        let assigner = policy
+            .fifo_assign()
+            .map(|p| p.build_with(seed, &cfg.assign_params()));
         let mut ws = ReorderWorkspace::default();
         ws.set_spec_chunk(cfg.acc_spec_chunk);
         DesRun {
@@ -495,9 +494,9 @@ impl<'a> DesRun<'a> {
         self.now = ev.time;
         match ev.kind {
             EventKind::Complete { server, token } => self.on_complete(server, token),
-            EventKind::Arrival { job } => match self.policy {
-                SchedPolicy::Fifo(_) => self.admit_fifo(job)?,
-                SchedPolicy::Ocwf { acc } => self.admit_reorder_batch(job, acc),
+            EventKind::Arrival { job } => match self.policy.ordering {
+                crate::sched::Ordering::Fifo => self.admit_fifo(job)?,
+                crate::sched::Ordering::Reorder { acc } => self.admit_reorder_batch(job, acc),
             },
         }
         Ok(!self.queue.is_empty())
@@ -1114,7 +1113,16 @@ fn expand_jobs(jobs: &[Job], topo: &Topology) -> Vec<Job> {
             groups: j
                 .groups
                 .iter()
-                .map(|g| TaskGroup::new(g.size, topo.eligible_within(&g.servers, top)))
+                .map(|g| {
+                    // The pre-expansion available set is the replica-holder
+                    // set: affinity-aware assigners (delay, jsq-affinity,
+                    // maxweight) read it via `TaskGroup::holders`.
+                    TaskGroup::with_local(
+                        g.size,
+                        topo.eligible_within(&g.servers, top),
+                        g.local.clone().unwrap_or_else(|| g.servers.clone()),
+                    )
+                })
                 .collect(),
             mu: j.mu.clone(),
         })
@@ -1199,7 +1207,7 @@ mod tests {
             for policy in AssignPolicy::ALL {
                 let analytic = run_fifo(&jobs, m, policy, &cfg, 3).unwrap();
                 let des =
-                    run_des(&jobs, m, SchedPolicy::Fifo(policy), &cfg, 3).unwrap();
+                    run_des(&jobs, m, SchedPolicy::fifo(policy), &cfg, 3).unwrap();
                 assert_eq!(analytic.jcts, des.jcts, "case {case}, {}", policy.name());
                 assert_eq!(analytic.makespan, des.makespan, "case {case}, {}", policy.name());
             }
@@ -1216,7 +1224,7 @@ mod tests {
             for acc in [false, true] {
                 let analytic = run_reordered(&jobs, m, acc, &cfg).unwrap();
                 let des =
-                    run_des(&jobs, m, SchedPolicy::Ocwf { acc }, &cfg, 3).unwrap();
+                    run_des(&jobs, m, SchedPolicy::ocwf(acc), &cfg, 3).unwrap();
                 assert_eq!(analytic.jcts, des.jcts, "case {case}, acc={acc}");
                 assert_eq!(analytic.makespan, des.makespan, "case {case}, acc={acc}");
                 assert_eq!(analytic.wf_evals, des.wf_evals, "case {case}, acc={acc}");
@@ -1234,7 +1242,7 @@ mod tests {
             alpha: 0.8,
             cap: 10.0,
         };
-        let out = run_des(&jobs, 1, SchedPolicy::Fifo(AssignPolicy::Wf), &cfg, 1).unwrap();
+        let out = run_des(&jobs, 1, SchedPolicy::fifo(AssignPolicy::Wf), &cfg, 1).unwrap();
         assert_eq!(out.jcts.len(), 1);
         assert!(out.jcts[0] >= 5, "Pareto is a pure slowdown: {:?}", out.jcts);
         assert!(out.jcts[0] <= 50, "cap bounds the tail: {:?}", out.jcts);
@@ -1252,9 +1260,9 @@ mod tests {
             alpha: 0.5,
             cap: 50.0,
         };
-        let slow = run_des(&jobs, 2, SchedPolicy::Fifo(AssignPolicy::Wf), &cfg, 7).unwrap();
+        let slow = run_des(&jobs, 2, SchedPolicy::fifo(AssignPolicy::Wf), &cfg, 7).unwrap();
         cfg.speculate = 1.5;
-        let raced = run_des(&jobs, 2, SchedPolicy::Fifo(AssignPolicy::Wf), &cfg, 7).unwrap();
+        let raced = run_des(&jobs, 2, SchedPolicy::fifo(AssignPolicy::Wf), &cfg, 7).unwrap();
         assert_eq!(raced.jcts.len(), 1);
         // Both runs are valid executions; the raced one must still
         // process every task exactly once (completion recorded).
@@ -1291,9 +1299,9 @@ mod tests {
                 let topo = Topology::build(kind, cfg.cluster.servers);
                 let loc = Locality::new(&jobs, &topo, 1.0);
                 for policy in [
-                    SchedPolicy::Fifo(AssignPolicy::Wf),
-                    SchedPolicy::Fifo(AssignPolicy::Obta),
-                    SchedPolicy::Ocwf { acc: true },
+                    SchedPolicy::fifo(AssignPolicy::Wf),
+                    SchedPolicy::fifo(AssignPolicy::Obta),
+                    SchedPolicy::ocwf(true),
                 ] {
                     let m = cfg.cluster.servers;
                     let plain = DesRun::new(&jobs, m, policy, &sim, 3).finish().unwrap();
@@ -1351,7 +1359,7 @@ mod tests {
         let mut cfg = SimConfig::default();
         cfg.locality_penalty = 3.0;
         cfg.topology = TopologyKind::MultiRack;
-        let out = run_des(&jobs, 8, SchedPolicy::Fifo(AssignPolicy::Wf), &cfg, 1).unwrap();
+        let out = run_des(&jobs, 8, SchedPolicy::fifo(AssignPolicy::Wf), &cfg, 1).unwrap();
         assert_eq!(out.jcts.len(), 1);
         assert_eq!(out.tier_tasks.len(), 3);
         assert_eq!(out.tier_tasks.iter().sum::<u64>(), 24);
@@ -1369,7 +1377,7 @@ mod tests {
         let jobs = vec![job(0, 0, &[12], &[&[0]], vec![3, 3])];
         let mut cfg = SimConfig::default();
         cfg.locality_penalty = 2.0;
-        let out = run_des(&jobs, 2, SchedPolicy::Fifo(AssignPolicy::Wf), &cfg, 1).unwrap();
+        let out = run_des(&jobs, 2, SchedPolicy::fifo(AssignPolicy::Wf), &cfg, 1).unwrap();
         assert_eq!(out.jcts.len(), 1);
         // Fully local would take ceil(12/3) = 4 slots; remote-only would
         // take ceil(12*2/3) = 8. Any valid split lands in between.
@@ -1388,8 +1396,8 @@ mod tests {
         };
         cfg.speculate = 2.0;
         for policy in [
-            SchedPolicy::Fifo(AssignPolicy::Wf),
-            SchedPolicy::Ocwf { acc: true },
+            SchedPolicy::fifo(AssignPolicy::Wf),
+            SchedPolicy::ocwf(true),
         ] {
             let a = run_des(&jobs, m, policy, &cfg, 11).unwrap();
             let b = run_des(&jobs, m, policy, &cfg, 11).unwrap();
@@ -1409,7 +1417,7 @@ mod tests {
             max_slots: 1,
             ..SimConfig::default()
         };
-        let err = run_des(&jobs, 1, SchedPolicy::Fifo(AssignPolicy::Wf), &cfg, 0).unwrap_err();
+        let err = run_des(&jobs, 1, SchedPolicy::fifo(AssignPolicy::Wf), &cfg, 0).unwrap_err();
         match err {
             crate::Error::Sim(msg) => {
                 assert!(msg.contains("des/wf"), "{msg}");

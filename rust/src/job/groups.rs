@@ -26,7 +26,11 @@ pub fn derive_groups(task_servers: &[Vec<ServerId>]) -> Vec<TaskGroup> {
             Some(&gi) => groups[gi].size += 1,
             None => {
                 index.insert(key.clone(), groups.len());
-                groups.push(TaskGroup { size: 1, servers: key });
+                groups.push(TaskGroup {
+                    size: 1,
+                    servers: key,
+                    local: None,
+                });
             }
         }
     }

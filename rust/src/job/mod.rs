@@ -16,6 +16,13 @@ pub type Slots = u64;
 pub struct TaskGroup {
     pub size: TaskCount,
     pub servers: Vec<ServerId>,
+    /// The replica-holding subset of `servers` (sorted, deduped). `None`
+    /// means every server in `servers` holds a replica — the flat model,
+    /// where availability and locality coincide. The DES topology
+    /// expansion widens `servers` to the whole eligible set and records
+    /// the pre-expansion holders here so affinity-aware assigners
+    /// (delay, jsq-affinity, maxweight) can still tell local from remote.
+    pub local: Option<Vec<ServerId>>,
 }
 
 impl TaskGroup {
@@ -23,7 +30,32 @@ impl TaskGroup {
         servers.sort_unstable();
         servers.dedup();
         assert!(!servers.is_empty(), "task group with no available servers");
-        TaskGroup { size, servers }
+        TaskGroup {
+            size,
+            servers,
+            local: None,
+        }
+    }
+
+    /// A group whose eligible set `servers` is wider than its
+    /// replica-holder set `local` (the topology-expanded view).
+    pub fn with_local(size: TaskCount, servers: Vec<ServerId>, mut local: Vec<ServerId>) -> Self {
+        let mut g = TaskGroup::new(size, servers);
+        local.sort_unstable();
+        local.dedup();
+        debug_assert!(
+            local.iter().all(|s| g.servers.contains(s)),
+            "holder set must be a subset of the eligible set"
+        );
+        assert!(!local.is_empty(), "task group with no replica holders");
+        g.local = Some(local);
+        g
+    }
+
+    /// The servers holding a data replica for this group: `local` when
+    /// the group was topology-expanded, else the full available set.
+    pub fn holders(&self) -> &[ServerId] {
+        self.local.as_deref().unwrap_or(&self.servers)
     }
 }
 

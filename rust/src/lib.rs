@@ -36,7 +36,7 @@
 //! use taos::prelude::*;
 //! let mut cfg = ExperimentConfig::default();
 //! cfg.cluster.zipf_alpha = 1.0;
-//! let outcome = taos::sim::run_experiment(&cfg, SchedPolicy::Fifo(AssignPolicy::Wf)).unwrap();
+//! let outcome = taos::sim::run_experiment(&cfg, SchedPolicy::fifo(AssignPolicy::Wf)).unwrap();
 //! println!("avg JCT = {:.1} slots", outcome.jct_stats().mean);
 //! ```
 

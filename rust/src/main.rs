@@ -5,11 +5,13 @@
 //!                trace and print JCT statistics + overhead.
 //! - `repro`      regenerate a paper table/figure (10, 11, 12, 13, 14,
 //!                `table1`, the `scenarios` catalog sweep, the `topology`
-//!                locality-penalty sweep, or the `replication` k-replica
-//!                frontier); fans the (policy × setting × trial) cells
-//!                across `--threads` worker threads with bit-identical
-//!                results.
-//! - `compare`    run all six algorithms on one setting side by side.
+//!                locality-penalty sweep, the `replication` k-replica
+//!                frontier, or the `baselines` load sweep over the
+//!                extended policy panel); fans the (policy × setting ×
+//!                trial) cells across `--threads` worker threads with
+//!                bit-identical results. `--policies` narrows or extends
+//!                the panel.
+//! - `compare`    run the policy panel on one setting side by side.
 //! - `gen-trace`  emit a synthetic Alibaba-like trace as batch_task.csv.
 //! - `live`       run the live coordinator (leader/workers + PJRT
 //!                payload kernel) on a small workload; needs artifacts
@@ -125,6 +127,12 @@ fn build_cli() -> Cli {
                  calendar is O(1) amortized at streaming scale; needs \
                  --engine des) [default heap]",
             ),
+            flag_req(
+                "delay-bound",
+                "delay-scheduling bound D in slots: a chunk stays on a \
+                 replica holder while its estimated queue is <= D (only \
+                 the `delay` policy reads it) [default 2]",
+            ),
         ]
     };
     Cli::new("taos", "data-locality-aware task assignment & scheduling")
@@ -132,7 +140,8 @@ fn build_cli() -> Cli {
             let mut f = common();
             f.push(flag(
                 "alg",
-                "nlip | obta | wf | rd | ocwf | ocwf-acc",
+                "nlip | obta | wf | rd | ocwf | ocwf-acc | jsq | jsq-affinity | \
+                 delay | maxweight",
                 "wf",
             ));
             f.push(switch("json", "emit JSON instead of text"));
@@ -143,8 +152,13 @@ fn build_cli() -> Cli {
             ));
             f
         })
-        .subcommand("compare", "run all six algorithms on one setting", {
+        .subcommand("compare", "run the policy panel on one setting", {
             let mut f = common();
+            f.push(flag_req(
+                "policies",
+                "comma-separated policy panel, e.g. obta,wf,jsq (see the \
+                 README policy table) [default: the paper's six]",
+            ));
             f.push(switch("json", "emit JSON instead of text"));
             f
         })
@@ -152,8 +166,14 @@ fn build_cli() -> Cli {
             let mut f = common();
             f.push(flag(
                 "fig",
-                "10 | 11 | 12 | 13 | 14 | table1 | scenarios | topology | replication",
+                "10 | 11 | 12 | 13 | 14 | table1 | scenarios | topology | \
+                 replication | baselines",
                 "12",
+            ));
+            f.push(flag_req(
+                "policies",
+                "comma-separated policy panel for the sweep [default: the \
+                 paper's six; `baselines` defaults to the full ten]",
             ));
             f.push(switch("quick", "scaled-down workload for fast runs"));
             f.push(flag("out", "also write JSON to this path", ""));
@@ -259,6 +279,9 @@ fn config_from(parsed: &taos::cli::Parsed) -> Result<ExperimentConfig, String> {
     if let Some(v) = parsed.get_parse::<usize>("acc-spec-chunk")? {
         cfg.sim.acc_spec_chunk = v;
     }
+    if let Some(s) = parsed.get("policies") {
+        cfg.policies = taos::sched::PolicySet::parse(s)?;
+    }
     apply_engine_flags(parsed, &mut cfg)?;
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(cfg)
@@ -305,6 +328,9 @@ fn apply_engine_flags(
     if let Some(s) = parsed.get("event-queue") {
         cfg.sim.event_queue = taos::des::calendar::EventQueueKind::parse(s)
             .ok_or_else(|| format!("--event-queue must be `heap` or `calendar`, got `{s}`"))?;
+    }
+    if let Some(v) = parsed.get_parse::<u64>("delay-bound")? {
+        cfg.sim.delay_bound = v;
     }
     Ok(())
 }
@@ -459,7 +485,7 @@ fn cmd_simulate(parsed: &taos::cli::Parsed) -> Result<(), String> {
 fn cmd_compare(parsed: &taos::cli::Parsed) -> Result<(), String> {
     let cfg = config_from(parsed)?;
     let mut rows = Vec::new();
-    for policy in SchedPolicy::ALL {
+    for policy in &cfg.policies {
         let out = run_experiment(&cfg, policy).map_err(|e| e.to_string())?;
         rows.push((policy.name(), out.mean_jct(), out.overhead.mean_us()));
     }
@@ -569,9 +595,18 @@ fn cmd_repro(parsed: &taos::cli::Parsed) -> Result<(), String> {
         base.sim.engine = taos::des::service::EngineKind::Des;
     }
     base.validate().map_err(|e| e.to_string())?;
+    // The policy panel: explicit --policies wins; the baselines figure
+    // defaults to the full extended panel (that's its point); everything
+    // else keeps the paper's six so historical exports stay byte-identical.
+    let policies = match parsed.get("policies") {
+        Some(s) => taos::sched::PolicySet::parse(s)?,
+        None if fig_id == "baselines" => taos::sched::PolicySet::extended(),
+        None => taos::sched::PolicySet::default(),
+    };
     let opts = taos::sweep::SweepOptions::default()
         .with_threads(parsed.get_parse::<usize>("threads")?.unwrap_or(1))
-        .with_trials(parsed.get_parse::<usize>("trials")?.unwrap_or(1));
+        .with_trials(parsed.get_parse::<usize>("trials")?.unwrap_or(1))
+        .with_policies(policies);
     // The replication frontier is three figures (one per service model:
     // det is the no-straggler control, exp and Pareto supply the tails),
     // each sweeping the replica-set size K — so it renders and exports
@@ -613,6 +648,7 @@ fn cmd_repro(parsed: &taos::cli::Parsed) -> Result<(), String> {
         "13" | "table1" => sweep::fig_servers_opts(&base, &[4, 6, 8, 10, 12], &opts),
         "14" => sweep::fig_capacity_opts(&base, &[2, 3, 4, 5, 6], &opts),
         "topology" => sweep::fig_topology_opts(&base, &[1.0, 2.0, 4.0, 8.0, 16.0], &opts),
+        "baselines" => sweep::fig_baselines_opts(&base, &[0.25, 0.5, 0.75, 0.9], &opts),
         "scenarios" => {
             println!("scenario legend:");
             for (i, sc) in Scenario::ALL.iter().enumerate() {

@@ -1,49 +1,281 @@
 //! Scheduling policies (paper §II's two scenarios): FIFO queues, and
 //! prioritized reordering of outstanding jobs (§IV).
+//!
+//! A policy is the composition of two independent axes: [`Ordering`] —
+//! *when* a job's tasks are (re)assigned — and
+//! [`crate::assign::AssignPolicy`] — *how* one job's tasks are placed.
+//! The [`REGISTRY`] is the single extensible catalog of named
+//! compositions: adding a policy means one `AssignPolicy` variant plus
+//! one registry row; parsing, the sweep panels ([`PolicySet`]) and the
+//! CLI listings all derive from it.
 
 pub mod ocwf;
 
 use crate::assign::AssignPolicy;
 
-/// The queueing/scheduling discipline for a simulation run.
+/// When tasks are (re)assigned. FIFO assigns each job once on arrival
+/// (paper §III); reordering (OCWF, §IV) reorders all outstanding jobs
+/// shortest-estimated-time-first on every arrival and reassigns their
+/// remaining tasks. `acc` enables the early-exit technique (OCWF-ACC,
+/// Algorithm 3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum SchedPolicy {
-    /// FIFO queues; each arriving job is assigned once by the given
-    /// algorithm (paper §III).
-    Fifo(AssignPolicy),
-    /// Order-conscious water-filling (§IV): on every arrival, reorder all
-    /// outstanding jobs shortest-estimated-time-first and reassign their
-    /// remaining tasks with WF. `acc` enables the early-exit technique
-    /// (OCWF-ACC, Algorithm 3).
-    Ocwf { acc: bool },
+pub enum Ordering {
+    Fifo,
+    Reorder { acc: bool },
+}
+
+/// The queueing/scheduling discipline for a simulation run: an
+/// [`Ordering`] composed with an assignment algorithm. FIFO composes
+/// with every assigner; reordering canonically pairs with WF (§IV
+/// evaluates candidate orders by water-filling), so [`SchedPolicy::ocwf`]
+/// pins `assign` to WF and equality stays structural.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SchedPolicy {
+    pub ordering: Ordering,
+    pub assign: AssignPolicy,
 }
 
 impl SchedPolicy {
+    /// FIFO ordering with the given assignment algorithm.
+    pub const fn fifo(assign: AssignPolicy) -> SchedPolicy {
+        SchedPolicy {
+            ordering: Ordering::Fifo,
+            assign,
+        }
+    }
+
+    /// Order-conscious water-filling (§IV), canonical WF assignment.
+    pub const fn ocwf(acc: bool) -> SchedPolicy {
+        SchedPolicy {
+            ordering: Ordering::Reorder { acc },
+            assign: AssignPolicy::Wf,
+        }
+    }
+
+    pub fn is_fifo(&self) -> bool {
+        matches!(self.ordering, Ordering::Fifo)
+    }
+
+    /// The assignment algorithm when this is a FIFO policy. Reordering
+    /// returns `None`: OCWF drives WF through its own reorder workspace,
+    /// not through a boxed [`crate::assign::Assigner`].
+    pub fn fifo_assign(&self) -> Option<AssignPolicy> {
+        match self.ordering {
+            Ordering::Fifo => Some(self.assign),
+            Ordering::Reorder { .. } => None,
+        }
+    }
+
     pub fn name(&self) -> &'static str {
-        match self {
-            SchedPolicy::Fifo(p) => p.name(),
-            SchedPolicy::Ocwf { acc: false } => "ocwf",
-            SchedPolicy::Ocwf { acc: true } => "ocwf-acc",
+        match self.ordering {
+            Ordering::Fifo => self.assign.name(),
+            Ordering::Reorder { acc: false } => "ocwf",
+            Ordering::Reorder { acc: true } => "ocwf-acc",
         }
     }
 
     pub fn parse(s: &str) -> Option<SchedPolicy> {
-        match s.to_ascii_lowercase().as_str() {
-            "ocwf" => Some(SchedPolicy::Ocwf { acc: false }),
-            "ocwf-acc" | "ocwfacc" | "ocwf_acc" => Some(SchedPolicy::Ocwf { acc: true }),
-            other => AssignPolicy::parse(other).map(SchedPolicy::Fifo),
-        }
+        let lower = s.to_ascii_lowercase();
+        REGISTRY
+            .iter()
+            .find(|d| d.policy.name() == lower || d.aliases.contains(&lower.as_str()))
+            .map(|d| d.policy)
     }
 
     /// All six algorithms evaluated in the paper (§V-A).
     pub const ALL: [SchedPolicy; 6] = [
-        SchedPolicy::Fifo(AssignPolicy::Nlip),
-        SchedPolicy::Fifo(AssignPolicy::Obta),
-        SchedPolicy::Fifo(AssignPolicy::Wf),
-        SchedPolicy::Fifo(AssignPolicy::Rd),
-        SchedPolicy::Ocwf { acc: false },
-        SchedPolicy::Ocwf { acc: true },
+        SchedPolicy::fifo(AssignPolicy::Nlip),
+        SchedPolicy::fifo(AssignPolicy::Obta),
+        SchedPolicy::fifo(AssignPolicy::Wf),
+        SchedPolicy::fifo(AssignPolicy::Rd),
+        SchedPolicy::ocwf(false),
+        SchedPolicy::ocwf(true),
     ];
+
+    /// The classic baseline panel beyond the paper: delay scheduling,
+    /// JSQ with and without replica affinity, and MaxWeight.
+    pub const BASELINES: [SchedPolicy; 4] = [
+        SchedPolicy::fifo(AssignPolicy::Jsq),
+        SchedPolicy::fifo(AssignPolicy::JsqAffinity),
+        SchedPolicy::fifo(AssignPolicy::Delay),
+        SchedPolicy::fifo(AssignPolicy::MaxWeight),
+    ];
+
+    /// Paper panel + baseline panel (the `repro --fig baselines` default).
+    pub const EXTENDED: [SchedPolicy; 10] = [
+        SchedPolicy::ALL[0],
+        SchedPolicy::ALL[1],
+        SchedPolicy::ALL[2],
+        SchedPolicy::ALL[3],
+        SchedPolicy::ALL[4],
+        SchedPolicy::ALL[5],
+        SchedPolicy::BASELINES[0],
+        SchedPolicy::BASELINES[1],
+        SchedPolicy::BASELINES[2],
+        SchedPolicy::BASELINES[3],
+    ];
+}
+
+/// One registry row: a named policy with its accepted spellings, a
+/// one-line semantic summary, and its literature anchor. The row order
+/// is the canonical panel order ([`SchedPolicy::EXTENDED`]).
+pub struct PolicyDesc {
+    pub policy: SchedPolicy,
+    pub aliases: &'static [&'static str],
+    pub summary: &'static str,
+    pub citation: &'static str,
+}
+
+/// The policy catalog. Every parseable policy name lives here; adding a
+/// policy is one [`AssignPolicy`] variant plus one row.
+pub const REGISTRY: &[PolicyDesc] = &[
+    PolicyDesc {
+        policy: SchedPolicy::fifo(AssignPolicy::Nlip),
+        aliases: &[],
+        summary: "exact program-P optimum, unnarrowed ILP search",
+        citation: "paper §III (NLIP)",
+    },
+    PolicyDesc {
+        policy: SchedPolicy::fifo(AssignPolicy::Obta),
+        aliases: &[],
+        summary: "exact optimum with the narrowed [phi-, phi+] search",
+        citation: "paper §III-A (OBTA)",
+    },
+    PolicyDesc {
+        policy: SchedPolicy::fifo(AssignPolicy::Wf),
+        aliases: &[],
+        summary: "water-filling approximation, K_c-tight",
+        citation: "paper §III-B (Alg 2)",
+    },
+    PolicyDesc {
+        policy: SchedPolicy::fifo(AssignPolicy::Rd),
+        aliases: &[],
+        summary: "replica-deletion heuristic, random tie-breaks",
+        citation: "paper §III-C",
+    },
+    PolicyDesc {
+        policy: SchedPolicy::ocwf(false),
+        aliases: &[],
+        summary: "reorder outstanding jobs SETF, reassign with WF",
+        citation: "paper §IV (Alg 1)",
+    },
+    PolicyDesc {
+        policy: SchedPolicy::ocwf(true),
+        aliases: &["ocwfacc", "ocwf_acc"],
+        summary: "OCWF with accelerated early-exit reordering",
+        citation: "paper §IV (Alg 3)",
+    },
+    PolicyDesc {
+        policy: SchedPolicy::fifo(AssignPolicy::Jsq),
+        aliases: &[],
+        summary: "join shortest estimated queue, locality-oblivious",
+        citation: "Winston 1977 (JSQ)",
+    },
+    PolicyDesc {
+        policy: SchedPolicy::fifo(AssignPolicy::JsqAffinity),
+        aliases: &["jsq_affinity", "jsqaffinity", "jsqa"],
+        summary: "JSQ over replica holders, overflow spills remote",
+        citation: "arXiv 1705.03125 (affinity scheduling)",
+    },
+    PolicyDesc {
+        policy: SchedPolicy::fifo(AssignPolicy::Delay),
+        aliases: &["delay-sched", "delay_sched"],
+        summary: "hold for a replica holder unless local wait > D",
+        citation: "Zaharia et al., EuroSys 2010 (delay scheduling)",
+    },
+    PolicyDesc {
+        policy: SchedPolicy::fifo(AssignPolicy::MaxWeight),
+        aliases: &["max-weight", "max_weight"],
+        summary: "queue-length x locality-weight priority routing",
+        citation: "arXiv 1705.03125 (JSQ-MaxWeight)",
+    },
+];
+
+/// An ordered, deduplicated set of policies — the panel a sweep or
+/// comparison actually runs. Defaults to the paper's six so every
+/// historical figure and golden export stays byte-identical.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PolicySet(Vec<SchedPolicy>);
+
+impl PolicySet {
+    /// The paper's six-policy panel ([`SchedPolicy::ALL`]).
+    pub fn paper() -> PolicySet {
+        PolicySet(SchedPolicy::ALL.to_vec())
+    }
+
+    /// Paper panel plus the four classic baselines.
+    pub fn extended() -> PolicySet {
+        PolicySet(SchedPolicy::EXTENDED.to_vec())
+    }
+
+    /// Parse a comma-separated policy list (`"obta,wf,jsq"`). Duplicate
+    /// names collapse onto their first occurrence; unknown names error
+    /// with the full known-name list.
+    pub fn parse(s: &str) -> Result<PolicySet, String> {
+        let mut out: Vec<SchedPolicy> = Vec::new();
+        for raw in s.split(',') {
+            let tok = raw.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            let p = SchedPolicy::parse(tok).ok_or_else(|| {
+                format!(
+                    "unknown policy `{tok}` (known: {})",
+                    REGISTRY
+                        .iter()
+                        .map(|d| d.policy.name())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })?;
+            if !out.contains(&p) {
+                out.push(p);
+            }
+        }
+        if out.is_empty() {
+            return Err("empty policy list".into());
+        }
+        Ok(PolicySet(out))
+    }
+
+    pub fn as_slice(&self) -> &[SchedPolicy] {
+        &self.0
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    pub fn contains(&self, p: SchedPolicy) -> bool {
+        self.0.contains(&p)
+    }
+
+    /// Comma-joined canonical names (config round-trip / display form).
+    pub fn names(&self) -> String {
+        self.0
+            .iter()
+            .map(|p| p.name())
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+impl Default for PolicySet {
+    fn default() -> Self {
+        PolicySet::paper()
+    }
+}
+
+impl<'a> IntoIterator for &'a PolicySet {
+    type Item = SchedPolicy;
+    type IntoIter = std::iter::Copied<std::slice::Iter<'a, SchedPolicy>>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.0.iter().copied()
+    }
 }
 
 #[cfg(test)]
@@ -52,9 +284,69 @@ mod tests {
 
     #[test]
     fn parse_all_names() {
-        for p in SchedPolicy::ALL {
+        for p in SchedPolicy::EXTENDED {
             assert_eq!(SchedPolicy::parse(p.name()), Some(p));
         }
         assert_eq!(SchedPolicy::parse("nope"), None);
+        // Aliases resolve to their canonical policy.
+        assert_eq!(SchedPolicy::parse("ocwf_acc"), Some(SchedPolicy::ocwf(true)));
+        assert_eq!(
+            SchedPolicy::parse("jsqa"),
+            Some(SchedPolicy::fifo(AssignPolicy::JsqAffinity))
+        );
+        assert_eq!(
+            SchedPolicy::parse("max_weight"),
+            Some(SchedPolicy::fifo(AssignPolicy::MaxWeight))
+        );
+    }
+
+    #[test]
+    fn registry_is_the_extended_panel_in_order() {
+        assert_eq!(REGISTRY.len(), SchedPolicy::EXTENDED.len());
+        for (d, p) in REGISTRY.iter().zip(SchedPolicy::EXTENDED) {
+            assert_eq!(d.policy, p);
+            assert!(!d.summary.is_empty() && !d.citation.is_empty());
+        }
+        let mut names: Vec<&str> = REGISTRY.iter().map(|d| d.policy.name()).collect();
+        names.sort_unstable();
+        let n = names.len();
+        names.dedup();
+        assert_eq!(names.len(), n, "registry names must be unique");
+    }
+
+    #[test]
+    fn ordering_splits_from_assignment() {
+        assert!(SchedPolicy::fifo(AssignPolicy::Jsq).is_fifo());
+        assert_eq!(
+            SchedPolicy::fifo(AssignPolicy::Rd).fifo_assign(),
+            Some(AssignPolicy::Rd)
+        );
+        assert_eq!(SchedPolicy::ocwf(true).fifo_assign(), None);
+        assert_eq!(
+            SchedPolicy::ocwf(false).ordering,
+            Ordering::Reorder { acc: false }
+        );
+        // OCWF's canonical assign axis is WF, keeping equality structural.
+        assert_eq!(SchedPolicy::ocwf(true).assign, AssignPolicy::Wf);
+    }
+
+    #[test]
+    fn policy_set_parses_dedups_and_defaults() {
+        assert_eq!(PolicySet::default(), PolicySet::paper());
+        assert_eq!(PolicySet::paper().len(), 6);
+        assert_eq!(PolicySet::extended().len(), 10);
+        let ps = PolicySet::parse("obta, wf,obta,jsq").unwrap();
+        assert_eq!(
+            ps.as_slice(),
+            &[
+                SchedPolicy::fifo(AssignPolicy::Obta),
+                SchedPolicy::fifo(AssignPolicy::Wf),
+                SchedPolicy::fifo(AssignPolicy::Jsq),
+            ]
+        );
+        assert_eq!(ps.names(), "obta,wf,jsq");
+        let err = PolicySet::parse("obta,bogus").unwrap_err();
+        assert!(err.contains("bogus") && err.contains("maxweight"), "{err}");
+        assert!(PolicySet::parse(" , ").is_err());
     }
 }

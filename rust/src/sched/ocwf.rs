@@ -308,6 +308,7 @@ impl ReorderWorkspace {
                     row.push(TaskGroup {
                         size: o.remaining[j],
                         servers: g.servers.clone(),
+                        local: None,
                     });
                 }
             }

@@ -126,7 +126,7 @@ pub fn run_fifo(
     cfg: &SimConfig,
     seed: u64,
 ) -> crate::Result<SimOutcome> {
-    let mut assigner = policy.build(seed);
+    let mut assigner = policy.build_with(seed, &cfg.assign_params());
     // Absolute slot at which each server's queue empties.
     let mut free: Vec<Slots> = vec![0; num_servers];
     // Busy time at arrival (eq. 2): remaining queue length in slots.
@@ -391,9 +391,9 @@ pub fn run_policy(
     if cfg.engine == crate::des::service::EngineKind::Des {
         return crate::des::run_des(jobs, num_servers, policy, cfg, seed);
     }
-    match policy {
-        SchedPolicy::Fifo(p) => run_fifo(jobs, num_servers, p, cfg, seed),
-        SchedPolicy::Ocwf { acc } => run_reordered(jobs, num_servers, acc, cfg),
+    match policy.ordering {
+        crate::sched::Ordering::Fifo => run_fifo(jobs, num_servers, policy.assign, cfg, seed),
+        crate::sched::Ordering::Reorder { acc } => run_reordered(jobs, num_servers, acc, cfg),
     }
 }
 
@@ -654,9 +654,9 @@ mod tests {
         cfg.cluster.servers = 20;
         cfg.cluster.avail_lo = 3;
         cfg.cluster.avail_hi = 6;
-        let out = run_experiment(&cfg, SchedPolicy::Fifo(AssignPolicy::Wf)).unwrap();
+        let out = run_experiment(&cfg, SchedPolicy::fifo(AssignPolicy::Wf)).unwrap();
         assert_eq!(out.jcts.len(), 15);
-        let out2 = run_experiment(&cfg, SchedPolicy::Ocwf { acc: true }).unwrap();
+        let out2 = run_experiment(&cfg, SchedPolicy::ocwf(true)).unwrap();
         assert_eq!(out2.jcts.len(), 15);
     }
 }

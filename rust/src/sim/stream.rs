@@ -207,7 +207,7 @@ pub fn run_fifo_stream(
     cfg: &SimConfig,
     seed: u64,
 ) -> crate::Result<SimOutcome> {
-    let mut assigner = policy.build(seed);
+    let mut assigner = policy.build_with(seed, &cfg.assign_params());
     let mut free: Vec<crate::job::Slots> = vec![0; num_servers];
     let mut state = crate::cluster::state::ClusterState::new(num_servers);
     let mut jcts = Vec::with_capacity(source.len_hint().unwrap_or(0));
@@ -271,7 +271,7 @@ pub fn run_stream_experiment(
     cfg: &ExperimentConfig,
     policy: SchedPolicy,
 ) -> crate::Result<SimOutcome> {
-    let SchedPolicy::Fifo(alg) = policy else {
+    let Some(alg) = policy.fifo_assign() else {
         return Err(crate::Error::Config(
             "streaming runs support FIFO policies only: OCWF reorders every \
              outstanding job and needs the materialized path"

@@ -33,7 +33,7 @@ use crate::benchlib::{fmt_count, TextTable};
 use crate::config::ExperimentConfig;
 use crate::job::Slots;
 use crate::metrics::jct_cdf;
-use crate::sched::SchedPolicy;
+use crate::sched::{PolicySet, SchedPolicy};
 use crate::sim::{run_experiment, SimOutcome};
 use crate::util::json::Json;
 
@@ -155,6 +155,20 @@ impl Figure {
             .find(|c| c.policy == policy && c.setting == setting)
     }
 
+    /// The policy names actually present in the cells, deduped in
+    /// first-appearance order. Rendering iterates this — not a hardcoded
+    /// panel — so a narrowed `--policies` sweep prints no ghost rows and
+    /// an extended one prints every baseline.
+    pub fn policies(&self) -> Vec<&'static str> {
+        let mut ps: Vec<&'static str> = Vec::new();
+        for c in &self.cells {
+            if !ps.contains(&c.policy) {
+                ps.push(c.policy);
+            }
+        }
+        ps
+    }
+
     /// Render the figure's headline table: mean JCT (and overhead) per
     /// algorithm × setting, exactly the rows the paper plots.
     pub fn render(&self) -> String {
@@ -168,12 +182,12 @@ impl Figure {
 
         let mut out = format!("== {} : mean JCT (slots) ==\n", self.name);
         let mut t = TextTable::new(&hdr_refs);
-        for policy in SchedPolicy::ALL {
-            let mut row = vec![policy.name().to_string()];
+        for policy in self.policies() {
+            let mut row = vec![policy.to_string()];
             let mut sum = 0.0;
             let mut cnt = 0;
             for &s in &settings {
-                match self.cell(policy.name(), s) {
+                match self.cell(policy, s) {
                     Some(c) => {
                         row.push(format!("{:.0}", c.mean_jct));
                         sum += c.mean_jct;
@@ -196,10 +210,10 @@ impl Figure {
             self.name
         ));
         let mut tp = TextTable::new(&hdr_refs);
-        for policy in SchedPolicy::ALL {
-            let mut row = vec![policy.name().to_string()];
+        for policy in self.policies() {
+            let mut row = vec![policy.to_string()];
             for &s in &settings {
-                row.push(match self.cell(policy.name(), s) {
+                row.push(match self.cell(policy, s) {
                     Some(c) => format!("{:.0}/{:.0}", c.p50_jct, c.p99_jct),
                     None => "-".into(),
                 });
@@ -211,12 +225,12 @@ impl Figure {
 
         out.push_str(&format!("\n== {} : overhead per arrival (us) ==\n", self.name));
         let mut t2 = TextTable::new(&hdr_refs);
-        for policy in SchedPolicy::ALL {
-            let mut row = vec![policy.name().to_string()];
+        for policy in self.policies() {
+            let mut row = vec![policy.to_string()];
             let mut sum = 0.0;
             let mut cnt = 0;
             for &s in &settings {
-                match self.cell(policy.name(), s) {
+                match self.cell(policy, s) {
                     Some(c) => {
                         row.push(format!("{:.1}", c.overhead_us));
                         sum += c.overhead_us;
@@ -239,11 +253,11 @@ impl Figure {
             self.name
         ));
         let mut t3 = TextTable::new(&hdr_refs);
-        for policy in SchedPolicy::ALL {
-            let mut row = vec![policy.name().to_string()];
+        for policy in self.policies() {
+            let mut row = vec![policy.to_string()];
             let mut any = false;
             for &s in &settings {
-                row.push(match self.cell(policy.name(), s) {
+                row.push(match self.cell(policy, s) {
                     Some(c) => {
                         let txt = c.work_summary();
                         if txt != "-" {
@@ -269,10 +283,10 @@ impl Figure {
                 self.name
             ));
             let mut t4 = TextTable::new(&hdr_refs);
-            for policy in SchedPolicy::ALL {
-                let mut row = vec![policy.name().to_string()];
+            for policy in self.policies() {
+                let mut row = vec![policy.to_string()];
                 for &s in &settings {
-                    row.push(match self.cell(policy.name(), s) {
+                    row.push(match self.cell(policy, s) {
                         Some(c) => c.tier_summary(),
                         None => "-".into(),
                     });
@@ -292,10 +306,10 @@ impl Figure {
                 self.name
             ));
             let mut t5 = TextTable::new(&hdr_refs);
-            for policy in SchedPolicy::ALL {
-                let mut row = vec![policy.name().to_string()];
+            for policy in self.policies() {
+                let mut row = vec![policy.to_string()];
                 for &s in &settings {
-                    row.push(match self.cell(policy.name(), s) {
+                    row.push(match self.cell(policy, s) {
                         Some(c) => c.wasted_summary(),
                         None => "-".into(),
                     });
@@ -373,6 +387,10 @@ pub struct SweepOptions {
     /// Independent trials per (policy, setting) cell; metrics are averaged
     /// and CDFs pooled. Trial `t` runs with [`trial_seed`]`(seed, t)`.
     pub trials: usize,
+    /// The policy panel the sweep runs, in panel order (`--policies`).
+    /// Defaults to the paper's six so every historical figure and golden
+    /// export stays byte-identical.
+    pub policies: PolicySet,
 }
 
 impl Default for SweepOptions {
@@ -380,6 +398,7 @@ impl Default for SweepOptions {
         SweepOptions {
             threads: 1,
             trials: 1,
+            policies: PolicySet::paper(),
         }
     }
 }
@@ -392,6 +411,11 @@ impl SweepOptions {
 
     pub fn with_trials(mut self, trials: usize) -> Self {
         self.trials = trials.max(1);
+        self
+    }
+
+    pub fn with_policies(mut self, policies: PolicySet) -> Self {
+        self.policies = policies;
         self
     }
 
@@ -478,14 +502,15 @@ fn specs_for(
     base: &ExperimentConfig,
     settings: &[f64],
     trials: usize,
+    policies: &PolicySet,
     mutate: &dyn Fn(&mut ExperimentConfig, f64),
 ) -> Vec<CellSpec> {
     let trials = trials.max(1);
-    let mut specs = Vec::with_capacity(settings.len() * SchedPolicy::ALL.len() * trials);
+    let mut specs = Vec::with_capacity(settings.len() * policies.len() * trials);
     for &setting in settings {
         let mut cfg = base.clone();
         mutate(&mut cfg, setting);
-        for policy in SchedPolicy::ALL {
+        for policy in policies {
             for trial in 0..trials as u64 {
                 let mut cell_cfg = cfg.clone();
                 cell_cfg.seed = trial_seed(base.seed, trial);
@@ -565,7 +590,7 @@ fn run_figure(
     opts: &SweepOptions,
     mutate: &dyn Fn(&mut ExperimentConfig, f64),
 ) -> crate::Result<Figure> {
-    let specs = specs_for(base, settings, opts.trials, mutate);
+    let specs = specs_for(base, settings, opts.trials, &opts.policies, mutate);
     let outcomes = run_specs(&specs, opts.effective_threads())?;
     Ok(Figure {
         name,
@@ -762,6 +787,39 @@ pub fn fig_replication_opts(
     )
 }
 
+/// Baseline-panel sweep: mean JCT versus offered load (utilization) at
+/// α = 2, canonically over the full extended panel — the paper's six
+/// algorithms plus delay scheduling, JSQ, JSQ-affinity and MaxWeight
+/// (serial single-trial path; see [`fig_baselines_opts`]).
+pub fn fig_baselines(base: &ExperimentConfig, utils: &[f64]) -> crate::Result<Figure> {
+    fig_baselines_opts(
+        base,
+        utils,
+        &SweepOptions::default().with_policies(PolicySet::extended()),
+    )
+}
+
+/// Baseline-panel sweep with explicit execution options. The panel comes
+/// from `opts.policies` like every other sweep, so `--policies` can
+/// narrow or reorder it.
+pub fn fig_baselines_opts(
+    base: &ExperimentConfig,
+    utils: &[f64],
+    opts: &SweepOptions,
+) -> crate::Result<Figure> {
+    run_figure(
+        "fig-baselines-load".into(),
+        "util",
+        base,
+        utils,
+        opts,
+        &|cfg, util| {
+            cfg.cluster.zipf_alpha = 2.0;
+            cfg.trace.utilization = util;
+        },
+    )
+}
+
 /// A scaled-down base config for quick runs (CI, `--quick`): same
 /// structure as the paper's setup, smaller trace.
 pub fn quick_base(seed: u64) -> ExperimentConfig {
@@ -843,13 +901,13 @@ mod tests {
         let specs = vec![
             CellSpec {
                 cfg: cfg.clone(),
-                policy: SchedPolicy::Fifo(crate::assign::AssignPolicy::Wf),
+                policy: SchedPolicy::fifo(crate::assign::AssignPolicy::Wf),
                 setting: 0.5,
                 trial: 3,
             },
             CellSpec {
                 cfg,
-                policy: SchedPolicy::Ocwf { acc: true },
+                policy: SchedPolicy::ocwf(true),
                 setting: 0.5,
                 trial: 0,
             },
@@ -878,7 +936,7 @@ mod tests {
     #[test]
     fn specs_grouped_by_trial_runs() {
         let base = quick_base(3);
-        let specs = specs_for(&base, &[0.0, 1.0], 2, &|cfg, a| {
+        let specs = specs_for(&base, &[0.0, 1.0], 2, &PolicySet::paper(), &|cfg, a| {
             cfg.cluster.zipf_alpha = a;
         });
         assert_eq!(specs.len(), 2 * 6 * 2);
@@ -975,6 +1033,39 @@ mod tests {
         assert!(cells.iter().all(|c| c.get("wasted_work").is_some()
             && c.get("busy_work").is_some()
             && c.get("wasted_frac").is_some()));
+    }
+
+    #[test]
+    fn render_iterates_only_policies_present() {
+        // A narrowed `--policies` sweep must not render ghost rows for
+        // absent policies.
+        let base = quick_base(23);
+        let opts =
+            SweepOptions::default().with_policies(PolicySet::parse("obta,jsq").unwrap());
+        let fig = fig_alpha_util_opts(&base, 0.5, &[0.0], &opts).unwrap();
+        assert_eq!(fig.cells.len(), 2);
+        assert_eq!(fig.policies(), vec!["obta", "jsq"]);
+        let text = fig.render();
+        assert!(text.contains("obta") && text.contains("jsq"), "{text}");
+        assert!(!text.contains("ocwf"), "ghost row for absent policy:\n{text}");
+        assert!(!text.contains("nlip"), "ghost row for absent policy:\n{text}");
+    }
+
+    #[test]
+    fn baselines_sweep_runs_the_extended_panel() {
+        let base = quick_base(29);
+        let fig = fig_baselines(&base, &[0.5]).unwrap();
+        assert_eq!(fig.cells.len(), SchedPolicy::EXTENDED.len());
+        // Cells come out in registry panel order, every metric live.
+        let names: Vec<_> = fig.cells.iter().map(|c| c.policy).collect();
+        let expect: Vec<_> = SchedPolicy::EXTENDED.iter().map(|p| p.name()).collect();
+        assert_eq!(names, expect);
+        for c in &fig.cells {
+            assert!(c.mean_jct.is_finite() && c.mean_jct > 0.0, "{}", c.policy);
+            assert!(!c.cdf.is_empty(), "{}", c.policy);
+        }
+        let text = fig.render();
+        assert!(text.contains("maxweight") && text.contains("jsq-affinity"), "{text}");
     }
 
     #[test]

@@ -617,7 +617,7 @@ mod tests {
             c.trace.jobs = 15;
             c.trace.total_tasks = 900;
             sc.apply(&mut c);
-            let out = run_experiment(&c, SchedPolicy::Ocwf { acc: true })
+            let out = run_experiment(&c, SchedPolicy::ocwf(true))
                 .unwrap_or_else(|e| panic!("{}: {e}", sc.name()));
             assert_eq!(out.jcts.len(), 15, "{}", sc.name());
         }

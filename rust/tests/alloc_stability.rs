@@ -317,9 +317,9 @@ fn des_event_path_footprint_freezes_after_warmup() {
 
     let warmup_deadline = 2 * 10_000; // two full waves
     for (policy, threads) in [
-        (SchedPolicy::Fifo(taos::assign::AssignPolicy::Wf), 1usize),
-        (SchedPolicy::Ocwf { acc: true }, 1),
-        (SchedPolicy::Ocwf { acc: true }, 2),
+        (SchedPolicy::fifo(taos::assign::AssignPolicy::Wf), 1usize),
+        (SchedPolicy::ocwf(true), 1),
+        (SchedPolicy::ocwf(true), 2),
     ] {
         let cfg = SimConfig {
             reorder_threads: threads,
@@ -384,8 +384,8 @@ fn des_stochastic_speculation_footprint_freezes_after_warmup() {
 
     let warmup_deadline = 6 * 50_000; // six of twelve waves
     for policy in [
-        SchedPolicy::Fifo(taos::assign::AssignPolicy::Wf),
-        SchedPolicy::Ocwf { acc: true },
+        SchedPolicy::fifo(taos::assign::AssignPolicy::Wf),
+        SchedPolicy::ocwf(true),
     ] {
         let mut cfg = SimConfig::default();
         cfg.service = ServiceModel::ParetoTail {

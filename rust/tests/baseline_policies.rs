@@ -1,0 +1,196 @@
+//! Integration surface for the extensible policy registry and the
+//! baseline panel (PR 9).
+//!
+//! - The registry is the single source of truth: canonical names and
+//!   every alias parse back to their row, rows follow the canonical
+//!   panel order, and `PolicySet` round-trips through its display form.
+//! - The `policies` / `delay_bound` config keys reach the engine knobs
+//!   (`ExperimentConfig::policies`, `SimConfig::assign_params`).
+//! - Delay scheduling's bound D is exercised *end to end* on a
+//!   hand-built two-job fixture whose outcome is fully hand-traceable:
+//!   a patient bound waits out a holder's backlog, an impatient one
+//!   spills the whole group to the idle remote server — identically on
+//!   the analytic and DES paths.
+//! - The `fig-baselines-load` sweep runs the full ten-policy panel
+//!   bit-identically across worker thread counts, and a narrowed
+//!   `--policies` panel renders no ghost rows.
+
+use taos::assign::AssignPolicy;
+use taos::config::{ExperimentConfig, SimConfig};
+use taos::des::run_des;
+use taos::job::{Job, TaskGroup};
+use taos::sched::{PolicySet, SchedPolicy, REGISTRY};
+use taos::sim::run_fifo;
+use taos::sweep::{self, pool, SweepOptions};
+
+#[test]
+fn registry_names_and_aliases_parse_to_their_row() {
+    let panel: Vec<&str> = SchedPolicy::EXTENDED.iter().map(|p| p.name()).collect();
+    let rows: Vec<&str> = REGISTRY.iter().map(|d| d.policy.name()).collect();
+    assert_eq!(rows, panel, "registry rows must follow the canonical panel order");
+    for d in REGISTRY {
+        assert_eq!(SchedPolicy::parse(d.policy.name()), Some(d.policy));
+        for &alias in d.aliases {
+            assert_eq!(SchedPolicy::parse(alias), Some(d.policy), "alias {alias}");
+        }
+        assert!(!d.summary.is_empty(), "{}: summary", d.policy.name());
+        assert!(!d.citation.is_empty(), "{}: citation", d.policy.name());
+    }
+    assert_eq!(SchedPolicy::parse("no-such-policy"), None);
+}
+
+#[test]
+fn policy_set_parses_dedups_and_round_trips() {
+    let set = PolicySet::parse("obta, jsq ,obta,max_weight").unwrap();
+    assert_eq!(set.names(), "obta,jsq,maxweight");
+    assert_eq!(set.len(), 3);
+    assert!(set.contains(SchedPolicy::fifo(AssignPolicy::Jsq)));
+    assert!(!set.contains(SchedPolicy::ocwf(true)));
+
+    assert_eq!(PolicySet::default(), PolicySet::paper());
+    assert_eq!(PolicySet::extended().len(), 10);
+    assert_eq!(
+        PolicySet::parse(&PolicySet::extended().names()).unwrap(),
+        PolicySet::extended(),
+        "canonical names must re-parse to the same panel"
+    );
+
+    let err = PolicySet::parse("obta,bogus").unwrap_err();
+    assert!(
+        err.contains("bogus") && err.contains("maxweight"),
+        "the error must name the offender and list the registry: {err}"
+    );
+    assert!(PolicySet::parse("  ,, ").is_err(), "empty list must error");
+}
+
+#[test]
+fn config_keys_reach_the_engine_knobs() {
+    let cfg = ExperimentConfig::from_str("policies = \"jsq,delay\"\ndelay_bound = 7\n").unwrap();
+    assert_eq!(cfg.policies.names(), "jsq,delay");
+    assert_eq!(cfg.sim.delay_bound, 7);
+    assert_eq!(cfg.sim.assign_params().delay_bound, 7);
+    assert_eq!(ExperimentConfig::default().policies, PolicySet::paper());
+    assert!(
+        ExperimentConfig::from_str("policies = \"jsq,nope\"").is_err(),
+        "unknown policy names must be a config error"
+    );
+}
+
+/// Two jobs on two servers, μ = 2 everywhere. Job 0 backlogs server 0
+/// (4 forced tasks → its queue frees at slot 2); job 1 holds its
+/// replicas on server 0 but is eligible to spill to the idle server 1.
+fn replica_holder_fixture() -> Vec<Job> {
+    vec![
+        Job {
+            id: 0,
+            arrival: 0,
+            groups: vec![TaskGroup::new(4, vec![0])],
+            mu: vec![2, 2],
+        },
+        Job {
+            id: 1,
+            arrival: 0,
+            groups: vec![TaskGroup::with_local(4, vec![0, 1], vec![0])],
+            mu: vec![2, 2],
+        },
+    ]
+}
+
+#[test]
+fn delay_bound_trades_locality_for_queueing_end_to_end() {
+    // Bound 3 tolerates job 1's 2-slot local wait — all four tasks stay
+    // on the holder and finish at slot 4. Bound 1 does not — the whole
+    // group spills to the idle remote server and finishes at slot 2.
+    // Deterministic integer schedule, so analytic and DES agree bit for
+    // bit.
+    let jobs = replica_holder_fixture();
+    for (bound, want, span) in [(3u64, vec![2u64, 4], 4u64), (1, vec![2, 2], 2)] {
+        let mut cfg = SimConfig::default();
+        cfg.delay_bound = bound;
+        let fifo = run_fifo(&jobs, 2, AssignPolicy::Delay, &cfg, 0).unwrap();
+        assert_eq!(fifo.jcts, want, "bound {bound}: analytic JCTs");
+        assert_eq!(fifo.makespan, span, "bound {bound}");
+        let policy = SchedPolicy::fifo(AssignPolicy::Delay);
+        let des = run_des(&jobs, 2, policy, &cfg, 0).unwrap();
+        assert_eq!(fifo.jcts, des.jcts, "bound {bound}: DES must agree");
+        assert_eq!(fifo.makespan, des.makespan, "bound {bound}");
+    }
+}
+
+#[test]
+fn baseline_panel_semantics_on_the_replica_holder_fixture() {
+    // One fixture, four hand-traced schedules. jsq and jsq-affinity
+    // spill everything (the idle remote queue beats the 2-slot local
+    // wait; affinity only stays local when the holder ties the global
+    // minimum). delay's default bound D = 2 keeps the first chunk local
+    // and spills the rest once its own chunk pushes the wait past D.
+    // maxweight's 2× holder weight routes the first chunk remote while
+    // the backlog dominates, then back to the holder — same split, so
+    // the same completion times by a different rule.
+    let jobs = replica_holder_fixture();
+    let cfg = SimConfig::default();
+    for (alg, want) in [
+        (AssignPolicy::Jsq, vec![2u64, 2]),
+        (AssignPolicy::JsqAffinity, vec![2, 2]),
+        (AssignPolicy::Delay, vec![2, 3]),
+        (AssignPolicy::MaxWeight, vec![2, 3]),
+    ] {
+        let out = run_fifo(&jobs, 2, alg, &cfg, 0).unwrap();
+        assert_eq!(out.jcts, want, "{}", alg.name());
+    }
+}
+
+fn tiny_base(seed: u64) -> ExperimentConfig {
+    let mut cfg = sweep::quick_base(seed);
+    cfg.trace.jobs = 16;
+    cfg.trace.total_tasks = 800;
+    cfg.cluster.servers = 12;
+    cfg.cluster.avail_lo = 2;
+    cfg.cluster.avail_hi = 4;
+    cfg
+}
+
+#[test]
+fn baselines_figure_bit_identical_across_thread_counts() {
+    let base = tiny_base(77);
+    let utils = [0.4, 0.8];
+    let opts = |threads| {
+        SweepOptions::default()
+            .with_policies(PolicySet::extended())
+            .with_threads(threads)
+    };
+    let reference = sweep::fig_baselines_opts(&base, &utils, &opts(1)).unwrap();
+    let panel: Vec<&str> = SchedPolicy::EXTENDED.iter().map(|p| p.name()).collect();
+    assert_eq!(reference.policies(), panel, "full panel in canonical order");
+    assert_eq!(reference.cells.len(), panel.len() * utils.len());
+    for threads in pool::test_thread_counts() {
+        let fig = sweep::fig_baselines_opts(&base, &utils, &opts(threads)).unwrap();
+        assert_eq!(fig.cells.len(), reference.cells.len());
+        for (a, b) in reference.cells.iter().zip(&fig.cells) {
+            assert_eq!(
+                (a.policy, a.setting),
+                (b.policy, b.setting),
+                "cell order moved at {threads} threads"
+            );
+            assert_eq!(a.mean_jct, b.mean_jct, "{}@{}: {threads} threads", a.policy, a.setting);
+            assert_eq!(a.p50_jct, b.p50_jct, "{}@{}", a.policy, a.setting);
+            assert_eq!(a.p99_jct, b.p99_jct, "{}@{}", a.policy, a.setting);
+            assert_eq!(a.cdf, b.cdf, "{}@{}", a.policy, a.setting);
+        }
+    }
+}
+
+#[test]
+fn narrowed_policy_set_renders_no_ghost_rows() {
+    let base = tiny_base(5);
+    let opts = SweepOptions::default()
+        .with_threads(1)
+        .with_policies(PolicySet::parse("delay,jsq").unwrap());
+    let fig = sweep::fig_baselines_opts(&base, &[0.5], &opts).unwrap();
+    assert_eq!(fig.policies(), vec!["delay", "jsq"], "panel order as given");
+    let text = fig.render();
+    assert!(text.contains("delay") && text.contains("jsq"));
+    for absent in ["obta", "nlip", "ocwf", "maxweight"] {
+        assert!(!text.contains(absent), "ghost row `{absent}` in:\n{text}");
+    }
+}

@@ -39,7 +39,11 @@ fn deterministic_des_matches_analytic_on_every_preset_and_policy() {
         assert_eq!(cfg.sim.engine, EngineKind::Analytic);
         let mut des_cfg = cfg.clone();
         des_cfg.sim.engine = EngineKind::Des;
-        for policy in SchedPolicy::ALL {
+        // The whole extended panel: the paper's six plus the baseline
+        // assigners (jsq, jsq-affinity, delay, maxweight) — deterministic
+        // pure integer functions of the instance, so the bit-identity
+        // invariant extends to them with no per-policy carve-outs.
+        for policy in SchedPolicy::EXTENDED {
             let analytic = run_experiment(&cfg, policy)
                 .unwrap_or_else(|e| panic!("{}/{}: {e}", scenario.name(), policy.name()));
             let des = run_experiment(&des_cfg, policy)
@@ -84,7 +88,7 @@ fn des_reordered_bit_identical_across_reorder_thread_counts() {
         let mut cfg = tiny_cfg(scenario);
         cfg.sim.engine = EngineKind::Des;
         for acc in [false, true] {
-            let policy = SchedPolicy::Ocwf { acc };
+            let policy = SchedPolicy::ocwf(acc);
             cfg.sim.reorder_threads = 1;
             let reference = run_experiment(&cfg, policy)
                 .unwrap_or_else(|e| panic!("{}/acc={acc}: {e}", scenario.name()));
@@ -105,6 +109,35 @@ fn des_reordered_bit_identical_across_reorder_thread_counts() {
 }
 
 #[test]
+fn baseline_assigners_match_analytic_at_every_thread_count() {
+    // The four baseline assigners are deterministic pure functions of
+    // the instance, so analytic-vs-DES bit-identity must hold per policy
+    // × preset × thread count. The reorder fan-out is inert for FIFO
+    // policies — asserting identity under it is the point.
+    for scenario in [Scenario::Alibaba, Scenario::Hotspot] {
+        let cfg = tiny_cfg(scenario);
+        let mut des_cfg = cfg.clone();
+        des_cfg.sim.engine = EngineKind::Des;
+        for policy in SchedPolicy::BASELINES {
+            let reference = run_experiment(&cfg, policy)
+                .unwrap_or_else(|e| panic!("{}/{}: {e}", scenario.name(), policy.name()));
+            for threads in pool::test_thread_counts() {
+                des_cfg.sim.reorder_threads = threads;
+                let des = run_experiment(&des_cfg, policy).unwrap();
+                assert_eq!(
+                    reference.jcts,
+                    des.jcts,
+                    "{}/{}: baseline DES JCTs diverged at {threads} threads",
+                    scenario.name(),
+                    policy.name()
+                );
+                assert_eq!(reference.makespan, des.makespan);
+            }
+        }
+    }
+}
+
+#[test]
 fn stochastic_presets_are_seed_reproducible() {
     for scenario in [
         Scenario::Straggler,
@@ -115,9 +148,13 @@ fn stochastic_presets_are_seed_reproducible() {
         let cfg = tiny_cfg(scenario);
         assert_eq!(cfg.sim.engine, EngineKind::Des);
         for policy in [
-            SchedPolicy::Fifo(taos::assign::AssignPolicy::Wf),
-            SchedPolicy::Fifo(taos::assign::AssignPolicy::Rd),
-            SchedPolicy::Ocwf { acc: true },
+            SchedPolicy::fifo(taos::assign::AssignPolicy::Wf),
+            SchedPolicy::fifo(taos::assign::AssignPolicy::Rd),
+            // Affinity-aware baselines: exercises the holder sets the
+            // topology expansion records (`TaskGroup::local`).
+            SchedPolicy::fifo(taos::assign::AssignPolicy::JsqAffinity),
+            SchedPolicy::fifo(taos::assign::AssignPolicy::Delay),
+            SchedPolicy::ocwf(true),
         ] {
             let a = run_experiment(&cfg, policy)
                 .unwrap_or_else(|e| panic!("{}/{}: {e}", scenario.name(), policy.name()));
@@ -148,7 +185,7 @@ fn straggler_tails_actually_move_completion_times() {
     let mut det = cfg.clone();
     det.sim.service = ServiceModel::Deterministic;
     det.sim.speculate = 0.0;
-    let policy = SchedPolicy::Fifo(taos::assign::AssignPolicy::Wf);
+    let policy = SchedPolicy::fifo(taos::assign::AssignPolicy::Wf);
     let noisy = run_experiment(&cfg, policy).unwrap();
     let clean = run_experiment(&det, policy).unwrap();
     assert_ne!(
@@ -172,8 +209,8 @@ fn hierarchical_presets_report_tier_hit_rates() {
     ] {
         let cfg = tiny_cfg(scenario);
         for policy in [
-            SchedPolicy::Fifo(taos::assign::AssignPolicy::Wf),
-            SchedPolicy::Ocwf { acc: false },
+            SchedPolicy::fifo(taos::assign::AssignPolicy::Wf),
+            SchedPolicy::ocwf(false),
         ] {
             let out = run_experiment(&cfg, policy)
                 .unwrap_or_else(|e| panic!("{}/{}: {e}", scenario.name(), policy.name()));
@@ -201,7 +238,7 @@ fn multi_locality_penalty_trades_against_spreading() {
     // expanded sets); remote work runs slower. The run must complete,
     // reproduce, and differ from the strictly-local deterministic run.
     let cfg = tiny_cfg(Scenario::MultiLocality);
-    let policy = SchedPolicy::Ocwf { acc: true };
+    let policy = SchedPolicy::ocwf(true);
     let remote = run_experiment(&cfg, policy).unwrap();
     let mut local = cfg.clone();
     local.sim.locality_penalty = 1.0;

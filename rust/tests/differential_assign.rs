@@ -22,19 +22,22 @@
 //! tie-breaking can lose individual instances.
 
 use taos::assign::brute::brute_force_opt_phi;
-use taos::assign::{program_phi, validate_assignment, AssignPolicy, Assigner, Instance};
+use taos::assign::{program_phi, realized_phi, validate_assignment, AssignPolicy, Assigner, Instance};
 use taos::cluster::Cluster;
 use taos::config::ExperimentConfig;
 use taos::job::TaskGroup;
 use taos::trace::scenarios::Scenario;
 use taos::util::rng::Rng;
 
-/// Corpus-level counters for the aggregate RD-vs-WF check.
+/// Corpus-level counters for the aggregate RD-vs-WF and
+/// OBTA-vs-baseline checks.
 #[derive(Default)]
 struct Tally {
     total: u64,
     rd_le_wf: u64,
     wf_strictly_above_opt: u64,
+    baseline_checks: u64,
+    obta_at_or_below_realized: u64,
 }
 
 impl Tally {
@@ -49,6 +52,20 @@ impl Tally {
             "{corpus}: RD ≤ WF on only {}/{} instances",
             self.rd_le_wf,
             self.total
+        );
+        // OBTA's program optimum vs the baselines' *realized* schedule.
+        // Not a per-instance theorem: realized accounting pools tasks
+        // across groups on a server (ceil of the sum ≤ sum of ceils), so
+        // a baseline's realized Φ can dip below the program optimum on
+        // instances where the per-group ceiling slack dominates. On
+        // small corpora that slack is rare — an overwhelming-majority
+        // floor is the strongest defensible assertion.
+        assert!(self.baseline_checks > 0, "{corpus}: no baseline checks ran");
+        assert!(
+            self.obta_at_or_below_realized * 10 >= self.baseline_checks * 9,
+            "{corpus}: OBTA ≤ baseline realized Φ on only {}/{} checks",
+            self.obta_at_or_below_realized,
+            self.baseline_checks
         );
     }
 }
@@ -89,6 +106,33 @@ fn check_instance(tag: &str, groups: &[TaskGroup], mu: &[u64], busy: &[u64], see
     let rd = AssignPolicy::Rd.build(seed).assign(&inst);
     validate_assignment(&inst, &rd).unwrap_or_else(|e| panic!("{tag}: RD invalid: {e}"));
     assert!(opt <= rd.phi, "{tag}: optimum {opt} cannot exceed RD {}", rd.phi);
+
+    // The baseline panel (jsq, jsq-affinity, delay, maxweight):
+    // heuristics with no optimality claim, so the per-instance
+    // assertions are validity, exact Φ accounting, and the Φ* lower
+    // bound; OBTA-dominance on the realized schedule is a corpus
+    // aggregate (see `Tally::assert_aggregate`).
+    for baseline in AssignPolicy::BASELINES {
+        let out = baseline.build(seed).assign(&inst);
+        validate_assignment(&inst, &out)
+            .unwrap_or_else(|e| panic!("{tag}: {} invalid: {e}", baseline.name()));
+        assert_eq!(
+            out.phi,
+            program_phi(&inst, &out.per_group),
+            "{tag}: {} must report its exact program objective",
+            baseline.name()
+        );
+        assert!(
+            opt <= out.phi,
+            "{tag}: optimum {opt} cannot exceed {} {}",
+            baseline.name(),
+            out.phi
+        );
+        tally.baseline_checks += 1;
+        if obta.phi <= realized_phi(&inst, &out.per_group) {
+            tally.obta_at_or_below_realized += 1;
+        }
+    }
 
     tally.total += 1;
     if rd.phi <= wf.phi {

@@ -38,8 +38,8 @@ fn obta_and_nlip_identical_jcts_across_whole_trace() {
     // (the paper: "OBTA and NLIP have fairly close performance ... both
     // are theoretically optimal").
     let cfg = quick_cfg(2, 2.0, 0.75);
-    let obta = run_experiment(&cfg, SchedPolicy::Fifo(AssignPolicy::Obta)).unwrap();
-    let nlip = run_experiment(&cfg, SchedPolicy::Fifo(AssignPolicy::Nlip)).unwrap();
+    let obta = run_experiment(&cfg, SchedPolicy::fifo(AssignPolicy::Obta)).unwrap();
+    let nlip = run_experiment(&cfg, SchedPolicy::fifo(AssignPolicy::Nlip)).unwrap();
     assert_eq!(obta.jcts, nlip.jcts);
     // And the narrowing must cut the number of feasibility probes (the
     // deterministic measure of the paper's efficiency claim; wall-clock
@@ -59,8 +59,8 @@ fn obta_and_nlip_identical_jcts_across_whole_trace() {
 #[test]
 fn ocwf_acc_identical_to_ocwf_and_cheaper() {
     let cfg = quick_cfg(3, 2.0, 0.75);
-    let ocwf = run_experiment(&cfg, SchedPolicy::Ocwf { acc: false }).unwrap();
-    let acc = run_experiment(&cfg, SchedPolicy::Ocwf { acc: true }).unwrap();
+    let ocwf = run_experiment(&cfg, SchedPolicy::ocwf(false)).unwrap();
+    let acc = run_experiment(&cfg, SchedPolicy::ocwf(true)).unwrap();
     assert_eq!(ocwf.jcts, acc.jcts, "early-exit must not change the schedule");
     assert!(
         acc.wf_evals < ocwf.wf_evals,
@@ -73,8 +73,8 @@ fn ocwf_acc_identical_to_ocwf_and_cheaper() {
 #[test]
 fn wf_overhead_orders_of_magnitude_below_obta() {
     let cfg = quick_cfg(4, 1.0, 0.5);
-    let wf = run_experiment(&cfg, SchedPolicy::Fifo(AssignPolicy::Wf)).unwrap();
-    let obta = run_experiment(&cfg, SchedPolicy::Fifo(AssignPolicy::Obta)).unwrap();
+    let wf = run_experiment(&cfg, SchedPolicy::fifo(AssignPolicy::Wf)).unwrap();
+    let obta = run_experiment(&cfg, SchedPolicy::fifo(AssignPolicy::Obta)).unwrap();
     assert!(
         wf.overhead.mean_us() * 10.0 < obta.overhead.mean_us(),
         "WF {:.1}us vs OBTA {:.1}us",
@@ -87,16 +87,16 @@ fn wf_overhead_orders_of_magnitude_below_obta() {
 fn reordering_robust_to_skew_fifo_degrades() {
     // Figs 10-12's trend: FIFO JCT grows sharply with alpha; OCWF stays
     // comparatively flat.
-    let lo = run_experiment(&quick_cfg(5, 0.0, 0.75), SchedPolicy::Fifo(AssignPolicy::Wf))
+    let lo = run_experiment(&quick_cfg(5, 0.0, 0.75), SchedPolicy::fifo(AssignPolicy::Wf))
         .unwrap()
         .mean_jct();
-    let hi = run_experiment(&quick_cfg(5, 2.0, 0.75), SchedPolicy::Fifo(AssignPolicy::Wf))
+    let hi = run_experiment(&quick_cfg(5, 2.0, 0.75), SchedPolicy::fifo(AssignPolicy::Wf))
         .unwrap()
         .mean_jct();
-    let ocwf_lo = run_experiment(&quick_cfg(5, 0.0, 0.75), SchedPolicy::Ocwf { acc: true })
+    let ocwf_lo = run_experiment(&quick_cfg(5, 0.0, 0.75), SchedPolicy::ocwf(true))
         .unwrap()
         .mean_jct();
-    let ocwf_hi = run_experiment(&quick_cfg(5, 2.0, 0.75), SchedPolicy::Ocwf { acc: true })
+    let ocwf_hi = run_experiment(&quick_cfg(5, 2.0, 0.75), SchedPolicy::ocwf(true))
         .unwrap()
         .mean_jct();
     assert!(hi > lo, "FIFO WF must degrade with skew: {lo} -> {hi}");
@@ -110,7 +110,7 @@ fn reordering_robust_to_skew_fifo_degrades() {
 
 #[test]
 fn jct_decreases_with_utilization_drop() {
-    for policy in [SchedPolicy::Fifo(AssignPolicy::Wf), SchedPolicy::Ocwf { acc: true }] {
+    for policy in [SchedPolicy::fifo(AssignPolicy::Wf), SchedPolicy::ocwf(true)] {
         let hi = run_experiment(&quick_cfg(6, 1.0, 0.75), policy).unwrap().mean_jct();
         let lo = run_experiment(&quick_cfg(6, 1.0, 0.25), policy).unwrap().mean_jct();
         assert!(
@@ -153,7 +153,7 @@ fn csv_trace_roundtrip_through_simulation() {
         .materialize(&cluster, &placement, 0.5, &mut rng)
         .unwrap();
     let out =
-        run_policy(&jobs, 20, SchedPolicy::Fifo(AssignPolicy::Rd), &Default::default(), 3).unwrap();
+        run_policy(&jobs, 20, SchedPolicy::fifo(AssignPolicy::Rd), &Default::default(), 3).unwrap();
     assert_eq!(out.jcts.len(), 12);
 }
 
@@ -266,7 +266,7 @@ fn property_theorem1_family_ratio() {
 #[test]
 fn deterministic_replay_same_seed_same_results() {
     let cfg = quick_cfg(7, 1.5, 0.5);
-    for policy in [SchedPolicy::Fifo(AssignPolicy::Rd), SchedPolicy::Ocwf { acc: true }] {
+    for policy in [SchedPolicy::fifo(AssignPolicy::Rd), SchedPolicy::ocwf(true)] {
         let a = run_experiment(&cfg, policy).unwrap();
         let b = run_experiment(&cfg, policy).unwrap();
         assert_eq!(a.jcts, b.jcts, "{}", policy.name());

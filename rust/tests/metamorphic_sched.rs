@@ -14,6 +14,14 @@
 //!   (`ceil(cn/cμ) = ceil(n/μ)`): OBTA's optimum is unchanged and WF's
 //!   walk is reproduced step for step, so its allocation scales exactly
 //!   entry by entry.
+//! - **Baseline invariances**: with pairwise-distinct μ the jsq and
+//!   delay selection keys `(…, Reverse(μ), id)` never reach their
+//!   server-id tie-break, so both are exactly relabel-*covariant* (the
+//!   allocation is the permuted original). Uniform rate scaling
+//!   preserves every comparison those keys make (slot counts are
+//!   invariant, μ order and μ ties survive multiplication), so the
+//!   server choices are identical and the allocations scale entry by
+//!   entry — no distinct-μ hypothesis needed.
 //! - **Engine agreement**: the analytic FIFO engine and the slot-stepping
 //!   ground-truth validator must produce identical JCTs/makespans on the
 //!   *compound* scenario presets (`bursty-hetero`, `hotspot-heavy-tail`),
@@ -70,6 +78,33 @@ fn random_instance(rng: &mut Rng, max_m: usize) -> OwnedInst {
         mu: (0..m).map(|_| rng.gen_range_incl(1, 5)).collect(),
         busy: (0..m).map(|_| rng.gen_range(9)).collect(),
     }
+}
+
+/// Like [`random_instance`] but with pairwise-distinct μ (a shuffled
+/// `1..=m`): the jsq/delay selection keys then never reach the
+/// server-id tie-break, making their allocations functions of values
+/// alone — the hypothesis the relabeling covariance test needs.
+fn random_distinct_mu_instance(rng: &mut Rng, max_m: usize) -> OwnedInst {
+    let mut inst = random_instance(rng, max_m);
+    let m = inst.mu.len();
+    let mut mu: Vec<u64> = (1..=m as u64).collect();
+    rng.shuffle(&mut mu);
+    inst.mu = mu;
+    inst
+}
+
+/// Canonicalize an allocation for order-insensitive comparison: the
+/// chunked baselines emit each group's rows in (relabeling-dependent)
+/// server order.
+fn canon(per_group: &[Vec<(usize, u64)>]) -> Vec<Vec<(usize, u64)>> {
+    per_group
+        .iter()
+        .map(|g| {
+            let mut v = g.clone();
+            v.sort_unstable();
+            v
+        })
+        .collect()
 }
 
 /// Apply the server relabeling `perm` (old id → new id) to an instance.
@@ -167,6 +202,84 @@ fn uniform_rate_scaling_preserves_schedules() {
     }
 }
 
+#[test]
+fn baseline_relabeling_is_exactly_covariant_with_distinct_mu() {
+    let mut rng = Rng::seed_from(0xBA5E);
+    for case in 0..60 {
+        let orig = random_distinct_mu_instance(&mut rng, 6);
+        let m = orig.mu.len();
+        let mut perm: Vec<usize> = (0..m).collect();
+        rng.shuffle(&mut perm);
+        let renamed = relabel(&orig, &perm);
+        for alg in [AssignPolicy::Jsq, AssignPolicy::Delay] {
+            let a = alg.build(0).assign(&orig.view());
+            let b = alg.build(0).assign(&renamed.view());
+            validate_assignment(&renamed.view(), &b)
+                .unwrap_or_else(|e| panic!("case {case}/{}: {e}", alg.name()));
+            assert_eq!(
+                a.phi,
+                b.phi,
+                "case {case}: {} Φ moved under relabeling",
+                alg.name()
+            );
+            let mapped: Vec<Vec<(usize, u64)>> = a
+                .per_group
+                .iter()
+                .map(|g| g.iter().map(|&(s, n)| (perm[s], n)).collect())
+                .collect();
+            assert_eq!(
+                canon(&mapped),
+                canon(&b.per_group),
+                "case {case}: {} allocation must be the permuted original",
+                alg.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn baseline_rate_scaling_preserves_schedules() {
+    // No distinct-μ hypothesis here: multiplying every μ by the same c
+    // preserves μ order *and* μ ties, so the id tie-break fires on
+    // exactly the same comparisons and the whole selection sequence is
+    // reproduced step for step.
+    let mut rng = Rng::seed_from(0x5CA1F);
+    for case in 0..60 {
+        let orig = random_instance(&mut rng, 6);
+        let c = [2u64, 3, 5][(case % 3) as usize];
+        let scaled = OwnedInst {
+            groups: orig
+                .groups
+                .iter()
+                .map(|g| TaskGroup::new(g.size * c, g.servers.clone()))
+                .collect(),
+            mu: orig.mu.iter().map(|&x| x * c).collect(),
+            busy: orig.busy.clone(),
+        };
+        for alg in [AssignPolicy::Jsq, AssignPolicy::Delay] {
+            let a = alg.build(0).assign(&orig.view());
+            let b = alg.build(0).assign(&scaled.view());
+            assert_eq!(
+                a.phi,
+                b.phi,
+                "case {case} c={c}: {} Φ must be scale-invariant",
+                alg.name()
+            );
+            let scaled_a: Vec<Vec<(usize, u64)>> = a
+                .per_group
+                .iter()
+                .map(|g| g.iter().map(|&(s, n)| (s, n * c)).collect())
+                .collect();
+            assert_eq!(
+                canon(&scaled_a),
+                canon(&b.per_group),
+                "case {case} c={c}: {} allocation must scale entry by entry",
+                alg.name()
+            );
+        }
+    }
+}
+
 fn random_jobs(rng: &mut Rng, m: usize, njobs: usize, single_server_groups: bool) -> Vec<Job> {
     let mut arrival = 0u64;
     (0..njobs)
@@ -237,10 +350,10 @@ fn des_engine_commutes_with_server_relabeling() {
         let renamed = relabel_jobs(&jobs, &perm);
         for variant in [&jobs, &renamed] {
             let fifo = run_fifo(variant, m, AssignPolicy::Wf, &cfg, 3).unwrap();
-            let des = run_des(variant, m, SchedPolicy::Fifo(AssignPolicy::Wf), &cfg, 3).unwrap();
+            let des = run_des(variant, m, SchedPolicy::fifo(AssignPolicy::Wf), &cfg, 3).unwrap();
             assert_eq!(fifo.jcts, des.jcts, "case {case}: FIFO commutation");
             let re = run_reordered(variant, m, true, &cfg).unwrap();
-            let des_re = run_des(variant, m, SchedPolicy::Ocwf { acc: true }, &cfg, 3).unwrap();
+            let des_re = run_des(variant, m, SchedPolicy::ocwf(true), &cfg, 3).unwrap();
             assert_eq!(re.jcts, des_re.jcts, "case {case}: reordered commutation");
         }
     }
@@ -263,10 +376,10 @@ fn des_engine_relabel_invariant_on_forced_placements() {
         rng.shuffle(&mut perm);
         let renamed = relabel_jobs(&jobs, &perm);
         for policy in [
-            SchedPolicy::Fifo(AssignPolicy::Wf),
-            SchedPolicy::Fifo(AssignPolicy::Obta),
-            SchedPolicy::Ocwf { acc: false },
-            SchedPolicy::Ocwf { acc: true },
+            SchedPolicy::fifo(AssignPolicy::Wf),
+            SchedPolicy::fifo(AssignPolicy::Obta),
+            SchedPolicy::ocwf(false),
+            SchedPolicy::ocwf(true),
         ] {
             let a = run_des(&jobs, m, policy, &cfg, 3).unwrap();
             let b = run_des(&renamed, m, policy, &cfg, 3).unwrap();

@@ -34,10 +34,10 @@ fn reordered_schedules_bit_identical_across_thread_counts() {
     let counts = taos::sweep::pool::test_thread_counts();
     for sc in Scenario::ALL {
         for acc in [false, true] {
-            let reference = run_experiment(&scenario_cfg(sc, 1), SchedPolicy::Ocwf { acc })
+            let reference = run_experiment(&scenario_cfg(sc, 1), SchedPolicy::ocwf(acc))
                 .unwrap_or_else(|e| panic!("{}: {e}", sc.name()));
             for &threads in &counts {
-                let out = run_experiment(&scenario_cfg(sc, threads), SchedPolicy::Ocwf { acc })
+                let out = run_experiment(&scenario_cfg(sc, threads), SchedPolicy::ocwf(acc))
                     .unwrap_or_else(|e| panic!("{}: {e}", sc.name()));
                 let tag = format!("{} acc={acc} threads={threads}", sc.name());
                 assert_eq!(reference.jcts, out.jcts, "JCTs diverged: {tag}");
@@ -53,9 +53,9 @@ fn acc_still_prunes_under_parallel_rounds() {
     // The early-exit savings must survive the chunked speculative driver:
     // the *counted* wf_evals are the serial ACC's, at every thread count.
     for sc in Scenario::ALL {
-        let plain = run_experiment(&scenario_cfg(sc, 8), SchedPolicy::Ocwf { acc: false })
+        let plain = run_experiment(&scenario_cfg(sc, 8), SchedPolicy::ocwf(false))
             .unwrap_or_else(|e| panic!("{}: {e}", sc.name()));
-        let accd = run_experiment(&scenario_cfg(sc, 8), SchedPolicy::Ocwf { acc: true })
+        let accd = run_experiment(&scenario_cfg(sc, 8), SchedPolicy::ocwf(true))
             .unwrap_or_else(|e| panic!("{}: {e}", sc.name()));
         assert_eq!(plain.jcts, accd.jcts, "{}: OCWF == OCWF-ACC", sc.name());
         assert!(
@@ -156,7 +156,7 @@ fn composed_sweep_and_reorder_fanout_matches_direct_serial_run() {
         for acc in [false, true] {
             specs.push(CellSpec {
                 cfg: scenario_cfg(sc, 4),
-                policy: SchedPolicy::Ocwf { acc },
+                policy: SchedPolicy::ocwf(acc),
                 setting: si as f64,
                 trial: 0,
             });
@@ -187,8 +187,8 @@ fn scenario_cfg_serial(spec: &taos::sweep::CellSpec) -> ExperimentConfig {
 fn reorder_threads_zero_resolves_to_all_cores() {
     // `0` must behave like "some parallel count": still bit-identical.
     let sc = Scenario::Hotspot;
-    let serial = run_experiment(&scenario_cfg(sc, 1), SchedPolicy::Ocwf { acc: true }).unwrap();
-    let auto = run_experiment(&scenario_cfg(sc, 0), SchedPolicy::Ocwf { acc: true }).unwrap();
+    let serial = run_experiment(&scenario_cfg(sc, 1), SchedPolicy::ocwf(true)).unwrap();
+    let auto = run_experiment(&scenario_cfg(sc, 0), SchedPolicy::ocwf(true)).unwrap();
     assert_eq!(serial.jcts, auto.jcts);
     assert_eq!(serial.wf_evals, auto.wf_evals);
 }

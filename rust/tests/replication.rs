@@ -49,9 +49,9 @@ fn explicit_k2_bit_identical_to_speculate_alias() {
     let mut explicit = alias.clone();
     explicit.sim.replicas = 2;
     for policy in [
-        SchedPolicy::Fifo(AssignPolicy::Wf),
-        SchedPolicy::Fifo(AssignPolicy::Rd),
-        SchedPolicy::Ocwf { acc: true },
+        SchedPolicy::fifo(AssignPolicy::Wf),
+        SchedPolicy::fifo(AssignPolicy::Rd),
+        SchedPolicy::ocwf(true),
     ] {
         for threads in pool::test_thread_counts() {
             let mut a = alias.clone();
@@ -89,7 +89,7 @@ fn k1_bit_identical_to_no_speculation() {
     off.sim.speculate = 0.0;
     let mut k1 = straggler_cfg();
     k1.sim.replicas = 1; // speculate stays armed from the preset
-    for policy in [SchedPolicy::Fifo(AssignPolicy::Wf), SchedPolicy::Ocwf { acc: false }] {
+    for policy in [SchedPolicy::fifo(AssignPolicy::Wf), SchedPolicy::ocwf(false)] {
         let base = run_experiment(&off, policy)
             .unwrap_or_else(|e| panic!("off/{}: {e}", policy.name()));
         let solo = run_experiment(&k1, policy)
@@ -123,9 +123,9 @@ fn wasted_work_obeys_conservation() {
     assert_eq!(cfg.sim.replicas, 3);
     let mut any_wasted = false;
     for policy in [
-        SchedPolicy::Fifo(AssignPolicy::Wf),
-        SchedPolicy::Fifo(AssignPolicy::Rd),
-        SchedPolicy::Ocwf { acc: true },
+        SchedPolicy::fifo(AssignPolicy::Wf),
+        SchedPolicy::fifo(AssignPolicy::Rd),
+        SchedPolicy::ocwf(true),
     ] {
         let out = run_experiment(&cfg, policy)
             .unwrap_or_else(|e| panic!("{}: {e}", policy.name()));
@@ -154,7 +154,7 @@ fn every_k_is_seed_reproducible() {
     for k in 1..=4usize {
         let mut cfg = straggler_cfg();
         cfg.sim.replicas = k;
-        for policy in [SchedPolicy::Fifo(AssignPolicy::Wf), SchedPolicy::Ocwf { acc: true }] {
+        for policy in [SchedPolicy::fifo(AssignPolicy::Wf), SchedPolicy::ocwf(true)] {
             let a = run_experiment(&cfg, policy)
                 .unwrap_or_else(|e| panic!("k{k}/{}: {e}", policy.name()));
             let b = run_experiment(&cfg, policy).unwrap();
@@ -189,7 +189,7 @@ fn budget_gates_are_live_and_deterministic() {
     cfg.sim.replicas = 2;
     cfg.sim.replication_budget = ReplicationBudget::Always;
     cfg.validate().expect("always-budget racing needs no speculate threshold");
-    let policy = SchedPolicy::Fifo(AssignPolicy::Wf);
+    let policy = SchedPolicy::fifo(AssignPolicy::Wf);
     let a = run_experiment(&cfg, policy).unwrap();
     let b = run_experiment(&cfg, policy).unwrap();
     assert_eq!(a.jcts, b.jcts, "always-budget runs must reproduce");

@@ -200,7 +200,7 @@ fn job_stream_reproduces_materialize_jobs_through_csv() {
 
     // And the full streaming pipeline over the CSV matches the
     // materialized engines on both engine kinds.
-    let policy = SchedPolicy::Fifo(taos::assign::AssignPolicy::Wf);
+    let policy = SchedPolicy::fifo(taos::assign::AssignPolicy::Wf);
     for engine in [EngineKind::Analytic, EngineKind::Des] {
         cfg.sim.engine = engine;
         let full = run_experiment(&cfg, policy).unwrap();
@@ -220,8 +220,15 @@ fn streaming_runs_match_materialized_runs_on_unit_locality_presets() {
             // Outside the streaming scope (asserted below).
             continue;
         }
-        for alg in [taos::assign::AssignPolicy::Wf, taos::assign::AssignPolicy::Rd] {
-            let policy = SchedPolicy::Fifo(alg);
+        // Jsq rides along as the baseline-panel representative: streaming
+        // ingestion must reproduce the materialized run for the new
+        // assigners too, not just the paper pair.
+        for alg in [
+            taos::assign::AssignPolicy::Wf,
+            taos::assign::AssignPolicy::Rd,
+            taos::assign::AssignPolicy::Jsq,
+        ] {
+            let policy = SchedPolicy::fifo(alg);
             let full = run_experiment(&cfg, policy)
                 .unwrap_or_else(|e| panic!("{}/{}: {e}", scenario.name(), alg.name()));
             let stream = run_stream_experiment(&cfg, policy)
@@ -249,7 +256,7 @@ fn streaming_runs_match_materialized_runs_on_unit_locality_presets() {
     // the materialized heap run.
     let mut cfg = tiny_cfg(Scenario::Alibaba);
     cfg.sim.engine = EngineKind::Des;
-    let policy = SchedPolicy::Fifo(taos::assign::AssignPolicy::Wf);
+    let policy = SchedPolicy::fifo(taos::assign::AssignPolicy::Wf);
     let heap_full = run_experiment(&cfg, policy).unwrap();
     cfg.sim.event_queue = EventQueueKind::Calendar;
     let cal_stream = run_stream_experiment(&cfg, policy).unwrap();
@@ -263,7 +270,7 @@ fn streaming_runs_match_materialized_runs_on_unit_locality_presets() {
 #[test]
 fn streaming_rejects_out_of_scope_configs() {
     let cfg = tiny_cfg(Scenario::Alibaba);
-    let err = run_stream_experiment(&cfg, SchedPolicy::Ocwf { acc: false })
+    let err = run_stream_experiment(&cfg, SchedPolicy::ocwf(false))
         .unwrap_err()
         .to_string();
     assert!(err.contains("FIFO"), "{err}");
@@ -271,7 +278,7 @@ fn streaming_rejects_out_of_scope_configs() {
     let mut cfg = tiny_cfg(Scenario::Alibaba);
     cfg.sim.engine = EngineKind::Des;
     cfg.sim.locality_penalty = 2.0;
-    let err = run_stream_experiment(&cfg, SchedPolicy::Fifo(taos::assign::AssignPolicy::Wf))
+    let err = run_stream_experiment(&cfg, SchedPolicy::fifo(taos::assign::AssignPolicy::Wf))
         .unwrap_err()
         .to_string();
     assert!(err.contains("locality_penalty"), "{err}");
@@ -332,7 +339,7 @@ fn stream_stats_is_fixed_size_and_exact_on_the_exact_fields() {
         "StreamStats must stay a small fixed-size value"
     );
     let cfg = tiny_cfg(Scenario::Alibaba);
-    let out = run_experiment(&cfg, SchedPolicy::Fifo(taos::assign::AssignPolicy::Wf)).unwrap();
+    let out = run_experiment(&cfg, SchedPolicy::fifo(taos::assign::AssignPolicy::Wf)).unwrap();
     let s = StreamStats::from_jcts(&out.jcts);
     let xs: Vec<f64> = out.jcts.iter().map(|&x| x as f64).collect();
     let exact = Summary::from(&xs);

@@ -82,7 +82,7 @@ fn combined_sweep_and_reorder_parallelism_bit_identical() {
             for acc in [false, true] {
                 out.push(CellSpec {
                     cfg: cfg.clone(),
-                    policy: SchedPolicy::Ocwf { acc },
+                    policy: SchedPolicy::ocwf(acc),
                     setting: si as f64,
                     trial: 0,
                 });

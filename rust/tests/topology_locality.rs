@@ -48,8 +48,8 @@ fn unit_penalty_des_is_flat_identical_for_every_topology() {
             des_cfg.sim.engine = EngineKind::Des;
             des_cfg.sim.topology = kind;
             for policy in [
-                SchedPolicy::Fifo(AssignPolicy::Wf),
-                SchedPolicy::Ocwf { acc: true },
+                SchedPolicy::fifo(AssignPolicy::Wf),
+                SchedPolicy::ocwf(true),
             ] {
                 let analytic = run_experiment(&cfg, policy)
                     .unwrap_or_else(|e| panic!("{}/{}: {e}", scenario.name(), policy.name()));
@@ -84,8 +84,8 @@ fn tier_telemetry_counts_every_task_exactly_once() {
         sim.locality_penalty = 3.0;
         sim.topology = kind;
         for policy in [
-            SchedPolicy::Fifo(AssignPolicy::Wf),
-            SchedPolicy::Ocwf { acc: false },
+            SchedPolicy::fifo(AssignPolicy::Wf),
+            SchedPolicy::ocwf(false),
         ] {
             let out = run_des(&jobs, cfg.cluster.servers, policy, &sim, 7).unwrap();
             assert_eq!(
@@ -177,8 +177,8 @@ fn within_rack_relabeling_keeps_telemetry_shape() {
             sim.locality_penalty = 2.0;
             sim.topology = kind;
             for policy in [
-                SchedPolicy::Fifo(AssignPolicy::Wf),
-                SchedPolicy::Ocwf { acc: true },
+                SchedPolicy::fifo(AssignPolicy::Wf),
+                SchedPolicy::ocwf(true),
             ] {
                 let a = run_des(&jobs, m, policy, &sim, 3).unwrap();
                 let b = run_des(&renamed, m, policy, &sim, 3).unwrap();
@@ -226,7 +226,7 @@ fn growing_penalty_never_speeds_a_pinned_job() {
         let mut sim = SimConfig::default();
         sim.topology = TopologyKind::MultiZone;
         sim.locality_penalty = p;
-        let out = run_des(&jobs, 16, SchedPolicy::Fifo(AssignPolicy::Wf), &sim, 3).unwrap();
+        let out = run_des(&jobs, 16, SchedPolicy::fifo(AssignPolicy::Wf), &sim, 3).unwrap();
         assert_eq!(out.tier_tasks.len(), 4);
         assert_eq!(out.tier_tasks.iter().sum::<u64>(), 120);
         let jct = out.jcts[0];
