@@ -120,6 +120,12 @@ pub struct JobProgress {
     pub completion: Vec<Option<Slots>>,
     /// Latest finish observed so far per job (starts at the arrival).
     pub last_finish: Vec<Slots>,
+    /// Earliest slot at which any of a job's tasks made progress — the
+    /// service side of the latency decomposition (`wait = first_start −
+    /// arrival`, `service = jct − wait`). `None` until the job first
+    /// runs (or forever, for zero-task jobs, which wait 0 by
+    /// definition).
+    pub first_start: Vec<Option<Slots>>,
 }
 
 impl JobProgress {
@@ -132,6 +138,7 @@ impl JobProgress {
             total_remaining: jobs.iter().map(|j| j.total_tasks()).collect(),
             completion: vec![None; jobs.len()],
             last_finish: jobs.iter().map(|j| j.arrival).collect(),
+            first_start: vec![None; jobs.len()],
         }
     }
 
@@ -143,6 +150,7 @@ impl JobProgress {
             total_remaining: Vec::new(),
             completion: Vec::new(),
             last_finish: Vec::new(),
+            first_start: Vec::new(),
         }
     }
 
@@ -158,6 +166,18 @@ impl JobProgress {
         self.total_remaining.push(job.total_tasks());
         self.completion.push(None);
         self.last_finish.push(job.arrival);
+        self.first_start.push(None);
+    }
+
+    /// Record that `job` made progress at slot `t`, keeping the minimum
+    /// (a job's work can start on several servers; the wait ends at the
+    /// earliest).
+    #[inline]
+    pub fn note_start(&mut self, job: usize, t: Slots) {
+        match self.first_start[job] {
+            Some(s) if s <= t => {}
+            _ => self.first_start[job] = Some(t),
+        }
     }
 
     /// Reclaim a retired job's per-group row into the spare pool (its
@@ -197,6 +217,28 @@ impl JobProgress {
             .max()
             .unwrap_or(0);
         (jcts, makespan)
+    }
+
+    /// Assemble the per-job queueing-wait vector (`first_start −
+    /// arrival`, in job order; 0 for jobs that never recorded a start).
+    /// Companion of [`JobProgress::jcts_and_makespan`] — together they
+    /// give the `jct = wait + service` decomposition.
+    pub fn waits(&self, jobs: &[Job]) -> Vec<Slots> {
+        jobs.iter()
+            .zip(&self.first_start)
+            .map(|(j, s)| s.map_or(0, |t| t.saturating_sub(j.arrival)))
+            .collect()
+    }
+
+    /// [`JobProgress::waits`] for streaming runs, where only the arrival
+    /// slots remain resident.
+    pub fn waits_from(&self, arrivals: &[Slots]) -> Vec<Slots> {
+        debug_assert_eq!(arrivals.len(), self.first_start.len());
+        arrivals
+            .iter()
+            .zip(&self.first_start)
+            .map(|(a, s)| s.map_or(0, |t| t.saturating_sub(*a)))
+            .collect()
     }
 
     /// [`JobProgress::jcts_and_makespan`] for streaming runs, where job
@@ -308,7 +350,9 @@ impl ServerQueues {
                 let mu = jobs[entry.job].mu[m];
                 let slots = ceil_div(entry.total(), mu);
                 if t + slots <= to {
-                    // Entry fully processed at t + slots.
+                    // Entry fully processed at t + slots; its service
+                    // began at the current cursor.
+                    progress.note_start(entry.job, t);
                     t += slots;
                     for &(k, n) in &entry.parts {
                         progress.remaining[entry.job][k] -= n;
@@ -322,7 +366,9 @@ impl ServerQueues {
                     }
                     consumed += 1;
                 } else {
-                    // Partial: (to − t) whole slots of this entry.
+                    // Partial: (to − t) whole slots of this entry
+                    // (t < to here, so at least one slot of progress).
+                    progress.note_start(entry.job, t);
                     let mut budget = (to - t) * mu;
                     for (k, n) in entry.parts.iter_mut() {
                         let take = (*n).min(budget);
@@ -639,5 +685,22 @@ mod tests {
         assert_eq!(progress.completion[0], Some(2));
         assert_eq!(progress.total_remaining[1], 1);
         assert!(progress.completion[1].is_none());
+        // Latency decomposition: job 0 started at 0, job 1 at 2 (after
+        // job 0's entry retired) — waits 0 and 2.
+        assert_eq!(progress.first_start, vec![Some(0), Some(2)]);
+        assert_eq!(progress.waits(&jobs), vec![0, 2]);
+    }
+
+    #[test]
+    fn note_start_keeps_minimum() {
+        let jobs = vec![job(0, 3, &[4], &[&[0]], vec![1])];
+        let mut progress = JobProgress::new(&jobs);
+        assert_eq!(progress.waits(&jobs), vec![0], "no start yet → wait 0");
+        progress.note_start(0, 9);
+        progress.note_start(0, 5);
+        progress.note_start(0, 7);
+        assert_eq!(progress.first_start[0], Some(5));
+        assert_eq!(progress.waits(&jobs), vec![2]);
+        assert_eq!(progress.waits_from(&[3]), vec![2]);
     }
 }

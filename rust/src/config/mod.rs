@@ -155,6 +155,11 @@ pub struct SimConfig {
     /// holder's estimated queue is <= D, and spills to the shortest
     /// eligible queue past it. Other policies ignore the knob.
     pub delay_bound: Slots,
+    /// Heartbeat period for long runs (CLI `--progress`): every N
+    /// processed events (DES) or admitted jobs (streaming fold) a
+    /// one-line progress report goes to *stderr*. 0 (the default)
+    /// disables it; stdout artifacts are never touched.
+    pub progress_every: u64,
 }
 
 impl Default for SimConfig {
@@ -173,6 +178,7 @@ impl Default for SimConfig {
             replicas: 0,
             replication_budget: ReplicationBudget::Tail,
             delay_bound: DEFAULT_DELAY_BOUND,
+            progress_every: 0,
         }
     }
 }
@@ -373,6 +379,9 @@ impl ExperimentConfig {
                 }
                 "delay_bound" => {
                     cfg.sim.delay_bound = val.parse().map_err(|_| perr("bad u64"))?
+                }
+                "progress_every" => {
+                    cfg.sim.progress_every = val.parse().map_err(|_| perr("bad u64"))?
                 }
                 "policies" => {
                     cfg.policies = PolicySet::parse(val).map_err(|e| perr(&e))?;

@@ -76,6 +76,7 @@ use crate::assign::{validate_assignment, Assigner};
 use crate::cluster::state::{ClusterState, EntrySink, JobProgress, QueueRebuild};
 use crate::config::SimConfig;
 use crate::job::{Job, ServerId, Slots, TaskCount, TaskGroup};
+use crate::obs::ObsSink;
 use crate::sched::ocwf::{reorder_into, OutstandingSet, ReorderOutcome, ReorderWorkspace};
 use crate::sched::SchedPolicy;
 use crate::sim::SimOutcome;
@@ -284,6 +285,13 @@ pub struct DesRun<'a> {
     peak_events: usize,
     arrival_idx: usize,
     now: Slots,
+    /// The observability sink (default: off — one branch per emission
+    /// site). Attach via [`DesRun::attach_obs`]; scheduling decisions
+    /// never read it, so outcomes are bit-identical tracing on or off.
+    obs: ObsSink,
+    /// Construction instant, for the `--progress` heartbeat's
+    /// events-per-second figure (stderr only; never in artifacts).
+    t0: std::time::Instant,
 }
 
 impl<'a> DesRun<'a> {
@@ -421,7 +429,17 @@ impl<'a> DesRun<'a> {
             peak_events: 0,
             arrival_idx: 0,
             now: 0,
+            obs: ObsSink::off(),
+            t0: std::time::Instant::now(),
         }
+    }
+
+    /// Attach an observability sink (default: off). The DES engine emits
+    /// the full event vocabulary: arrivals, per-server assignment rows,
+    /// task start/finish spans, replica fork/win/lose, reorder rounds,
+    /// preemptions and job completions.
+    pub fn attach_obs(&mut self, obs: ObsSink) {
+        self.obs = obs;
     }
 
     /// Streaming mode: pull the next job from the source and schedule its
@@ -463,6 +481,24 @@ impl<'a> DesRun<'a> {
             return Ok(false);
         };
         self.events += 1;
+        if self.cfg.progress_every > 0 && self.events % self.cfg.progress_every == 0 {
+            let seen = self.feed.seen();
+            let done = seen - self.progress.unfinished();
+            let secs = self.t0.elapsed().as_secs_f64();
+            let rate = if secs > 0.0 {
+                self.events as f64 / secs
+            } else {
+                0.0
+            };
+            eprintln!(
+                "[taos des] events={} jobs={}/{} rate={:.0} ev/s peak_window={}",
+                self.events,
+                done,
+                seen,
+                rate,
+                self.feed.peak_window()
+            );
+        }
         // Staleness before the horizon check: a preempted or cancelled
         // entry's completion event may lie far past `max_slots` even
         // though the live schedule finishes well within it (the analytic
@@ -503,7 +539,17 @@ impl<'a> DesRun<'a> {
     }
 
     /// Drain every event and produce the outcome.
-    pub fn finish(mut self) -> crate::Result<SimOutcome> {
+    pub fn finish(self) -> crate::Result<SimOutcome> {
+        self.finish_inner().map(|(out, _)| out)
+    }
+
+    /// [`DesRun::finish`] returning the attached [`ObsSink`] as well, so
+    /// callers can export the trace / metrics it collected.
+    pub fn finish_with_obs(self) -> crate::Result<(SimOutcome, ObsSink)> {
+        self.finish_inner()
+    }
+
+    fn finish_inner(mut self) -> crate::Result<(SimOutcome, ObsSink)> {
         while self.pump()? {}
         if !self.progress.all_complete() {
             return Err(crate::Error::Sim(format!(
@@ -520,22 +566,30 @@ impl<'a> DesRun<'a> {
             JobFeed::Slice(jobs) => self.progress.jcts_and_makespan(jobs),
             JobFeed::Stream(sf) => self.progress.jcts_and_makespan_from(sf.arrivals()),
         };
-        Ok(SimOutcome {
-            jcts,
-            overhead: self.overhead,
-            makespan,
-            wf_evals: self.wf_evals,
-            oracle_stats: self.assigner.as_ref().and_then(|a| a.oracle_stats()),
-            tier_tasks: self.tier_tasks,
-            wasted_work: self.wasted_work,
-            busy_work: self.busy_work,
-            telemetry: crate::sim::RunTelemetry {
-                events: self.events,
-                peak_events: self.peak_events,
-                peak_pool,
-                peak_window: self.feed.peak_window(),
+        let waits = match &self.feed {
+            JobFeed::Slice(jobs) => self.progress.waits(jobs),
+            JobFeed::Stream(sf) => self.progress.waits_from(sf.arrivals()),
+        };
+        Ok((
+            SimOutcome {
+                jcts,
+                waits,
+                overhead: self.overhead,
+                makespan,
+                wf_evals: self.wf_evals,
+                oracle_stats: self.assigner.as_ref().and_then(|a| a.oracle_stats()),
+                tier_tasks: self.tier_tasks,
+                wasted_work: self.wasted_work,
+                busy_work: self.busy_work,
+                telemetry: crate::sim::RunTelemetry {
+                    events: self.events,
+                    peak_events: self.peak_events,
+                    peak_pool,
+                    peak_window: self.feed.peak_window(),
+                },
             },
-        })
+            self.obs,
+        ))
     }
 
     /// Reserved capacity across every pooled buffer of the event path:
@@ -575,6 +629,7 @@ impl<'a> DesRun<'a> {
             + self.outcome.footprint()
             + self.state.footprint()
             + self.free_est.capacity()
+            + self.obs.footprint()
     }
 
     /// FIFO admission: assign the arriving job once against the current
@@ -596,16 +651,29 @@ impl<'a> DesRun<'a> {
                 servers,
                 spare,
                 rebuild,
+                obs,
                 ..
             } = self;
             let feed: &JobFeed<'a> = feed;
             let job = feed.job(i);
             debug_assert_eq!(job.arrival, t);
+            obs.trace
+                .job_arrive(t, i, job.groups.len() as u64, job.total_tasks());
             state.observe_free(free_est.as_slice(), t);
+            if obs.metrics {
+                for &f in free_est.iter() {
+                    obs.queue_depth.observe(f.saturating_sub(t));
+                }
+            }
             let inst = state.instance(&job.groups, &job.mu);
             let assigner = assigner.as_mut().expect("FIFO policy has an assigner");
             let a = overhead.measure(|| assigner.assign(&inst));
             debug_assert_eq!(validate_assignment(&inst, &a), Ok(()));
+            if obs.trace.on() {
+                for (m, n) in a.per_server() {
+                    obs.trace.assign(t, i, m, n, 0);
+                }
+            }
             let mut sink = LaneSink {
                 lanes: servers,
                 spare,
@@ -635,6 +703,14 @@ impl<'a> DesRun<'a> {
                 newest += 1;
             }
         }
+        if self.obs.trace.on() {
+            let jobs = self.feed.slice();
+            for i in first..=newest {
+                self.obs
+                    .trace
+                    .job_arrive(t, i, jobs[i].groups.len() as u64, jobs[i].total_tasks());
+            }
+        }
         self.preempt_all(t);
 
         let DesRun {
@@ -652,6 +728,7 @@ impl<'a> DesRun<'a> {
             outcome,
             overhead,
             wf_evals,
+            obs,
             ..
         } = self;
         let jobs: &'a [Job] = feed.slice();
@@ -662,6 +739,8 @@ impl<'a> DesRun<'a> {
             }
         }
         let outstanding = oset.as_slice();
+        obs.trace
+            .reorder_round(t, (newest + 1 - first) as u64, outstanding.len() as u64);
         overhead.measure(|| {
             reorder_into(
                 outstanding,
@@ -713,11 +792,17 @@ impl<'a> DesRun<'a> {
                 if !run.entry.replica {
                     debug_assert!(elapsed < run.dur, "completion events fire before arrivals");
                     if elapsed > 0 {
+                        // Latency decomposition: the entry made real
+                        // progress from `run.start` — the same rule as
+                        // the analytic drain, which only notes starts
+                        // for entries that processed at least one slot.
+                        self.progress.note_start(run.entry.job, run.start);
                         self.apply_partial(&run.entry, m, elapsed, run.dur);
                     }
                 } else {
                     self.wasted_work += elapsed;
                 }
+                self.obs.trace.preempt(t, run.entry.job, m, elapsed);
                 self.recycle(run.entry);
             }
             while let Some(e) = self.servers[m].queue.pop_front() {
@@ -793,10 +878,19 @@ impl<'a> DesRun<'a> {
         debug_assert_eq!(run.start + run.dur, t);
         self.busy_work += run.dur;
         let entry = run.entry;
+        // Latency decomposition: the completed batch made progress from
+        // `run.start` (a winning replica counts — it is the copy whose
+        // work the job banks).
+        self.progress.note_start(entry.job, run.start);
+        if self.obs.trace.on() {
+            let tasks: TaskCount = entry.parts.iter().map(|&(_, n)| n).sum();
+            self.obs.trace.task_finish(t, entry.job, server, tasks, run.dur);
+        }
         debug_assert!(self.freed.is_empty());
         if let Some(p) = entry.set {
             debug_assert!(!self.sets[p as usize].done, "losers are cancelled eagerly");
             self.sets[p as usize].done = true;
+            self.obs.trace.replica_win(t, entry.job, server, p as u64);
             // Cancel running losers in fork order (primary first); the
             // slots they burned are the race's wasted work.
             for i in 0..self.sets[p as usize].members.len() {
@@ -814,6 +908,7 @@ impl<'a> DesRun<'a> {
                     let elapsed = t - r.start;
                     self.busy_work += elapsed;
                     self.wasted_work += elapsed;
+                    self.obs.trace.replica_lose(t, r.entry.job, s, elapsed, p as u64);
                     self.retire_member(p);
                     self.recycle(r.entry);
                     self.freed.push(s);
@@ -869,6 +964,10 @@ impl<'a> DesRun<'a> {
             && self.progress.completion[entry.job].is_none()
         {
             self.progress.completion[entry.job] = Some(lf);
+            if self.obs.trace.on() {
+                let arrival = self.feed.job(entry.job).arrival;
+                self.obs.trace.job_complete(lf, entry.job, lf - arrival);
+            }
             // Streaming eviction: a completed job has no live entries
             // anywhere (every entry holds unapplied tasks), so its
             // payload and per-group progress row can go now.
@@ -951,6 +1050,7 @@ impl<'a> DesRun<'a> {
             // scan at cancellation time — and consume no service draw.
             if let Some(p) = entry.set {
                 if self.sets[p as usize].done {
+                    self.obs.trace.replica_lose(t, entry.job, m, 0, p as u64);
                     self.retire_member(p);
                     self.recycle(entry);
                     continue;
@@ -969,6 +1069,10 @@ impl<'a> DesRun<'a> {
             }
             let token = self.servers[m].token;
             self.queue.push(t + dur, EventKind::Complete { server: m, token });
+            if self.obs.trace.on() {
+                let tasks: TaskCount = entry.parts.iter().map(|&(_, n)| n).sum();
+                self.obs.trace.task_start(t, entry.job, m, tasks, dur);
+            }
             self.servers[m].running = Some(Running {
                 entry,
                 start: t,
@@ -1019,6 +1123,11 @@ impl<'a> DesRun<'a> {
         if self.fork_members.len() > 1 {
             let p = self.alloc_set();
             entry.set = Some(p);
+            let tasks: TaskCount = if self.obs.trace.on() {
+                entry.parts.iter().map(|&(_, n)| n).sum()
+            } else {
+                0
+            };
             for i in 0..self.fork_bases.len() {
                 let r = self.fork_members[i + 1];
                 let rbase = self.fork_bases[i];
@@ -1031,6 +1140,7 @@ impl<'a> DesRun<'a> {
                     set: Some(p),
                     replica: true,
                 });
+                self.obs.trace.replica_fork(t, entry.job, r, tasks, p as u64);
                 if self.servers[r].running.is_none() {
                     self.woken.push(r);
                 }
@@ -1142,14 +1252,38 @@ pub fn run_des(
     cfg: &SimConfig,
     seed: u64,
 ) -> crate::Result<SimOutcome> {
-    if cfg.locality_penalty > 1.0 {
+    let mut obs = ObsSink::off();
+    run_des_obs(jobs, num_servers, policy, cfg, seed, &mut obs)
+}
+
+/// [`run_des`] with an observability sink. The sink is taken over for
+/// the duration of the run (the consuming [`DesRun`] owns it while it
+/// executes) and handed back — populated — through `obs` on success.
+pub fn run_des_obs(
+    jobs: &[Job],
+    num_servers: usize,
+    policy: SchedPolicy,
+    cfg: &SimConfig,
+    seed: u64,
+    obs: &mut ObsSink,
+) -> crate::Result<SimOutcome> {
+    let sink = std::mem::replace(obs, ObsSink::off());
+    let result = if cfg.locality_penalty > 1.0 {
         let topo = Topology::build(cfg.topology, num_servers);
         let locality = Locality::new(jobs, &topo, cfg.locality_penalty);
         let expanded = expand_jobs(jobs, &topo);
-        DesRun::with_locality(&expanded, Some(&locality), num_servers, policy, cfg, seed).finish()
+        let mut run =
+            DesRun::with_locality(&expanded, Some(&locality), num_servers, policy, cfg, seed);
+        run.attach_obs(sink);
+        run.finish_with_obs()
     } else {
-        DesRun::new(jobs, num_servers, policy, cfg, seed).finish()
-    }
+        let mut run = DesRun::new(jobs, num_servers, policy, cfg, seed);
+        run.attach_obs(sink);
+        run.finish_with_obs()
+    };
+    let (out, sink) = result?;
+    *obs = sink;
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -1210,6 +1344,12 @@ mod tests {
                     run_des(&jobs, m, SchedPolicy::fifo(policy), &cfg, 3).unwrap();
                 assert_eq!(analytic.jcts, des.jcts, "case {case}, {}", policy.name());
                 assert_eq!(analytic.makespan, des.makespan, "case {case}, {}", policy.name());
+                assert_eq!(
+                    analytic.waits,
+                    des.waits,
+                    "case {case}, {}: FIFO latency decomposition must agree",
+                    policy.name()
+                );
             }
         }
     }
@@ -1407,6 +1547,46 @@ mod tests {
                 a.jcts != c.jcts || a.makespan == c.makespan,
                 "different seeds should usually differ (sanity)"
             );
+        }
+    }
+
+    #[test]
+    fn obs_sink_traces_lifecycle_without_changing_outcomes() {
+        let m = 4;
+        let mut rng = Rng::seed_from(0xDE54);
+        let jobs = random_jobs(&mut rng, m, 6);
+        let cfg = SimConfig::default();
+        for policy in [SchedPolicy::fifo(AssignPolicy::Wf), SchedPolicy::ocwf(true)] {
+            let plain = run_des(&jobs, m, policy, &cfg, 5).unwrap();
+            let mut obs = ObsSink::new(4096, true);
+            let traced = run_des_obs(&jobs, m, policy, &cfg, 5, &mut obs).unwrap();
+            assert_eq!(plain.jcts, traced.jcts, "{}", policy.name());
+            assert_eq!(plain.waits, traced.waits, "{}", policy.name());
+            assert!(obs.trace.total() > 0, "{}: trace recorded", policy.name());
+            use crate::obs::TraceKind;
+            let kinds: Vec<TraceKind> =
+                obs.trace.iter_in_order().map(|e| e.kind).collect();
+            assert!(kinds.contains(&TraceKind::JobArrive));
+            assert!(kinds.contains(&TraceKind::TaskStart));
+            assert!(kinds.contains(&TraceKind::TaskFinish));
+            assert_eq!(
+                kinds
+                    .iter()
+                    .filter(|k| **k == TraceKind::JobComplete)
+                    .count(),
+                jobs.len(),
+                "{}: one completion per job",
+                policy.name()
+            );
+            if policy.is_fifo() {
+                assert_eq!(
+                    obs.queue_depth.count(),
+                    (jobs.len() * m) as u64,
+                    "one depth sample per server per arrival"
+                );
+            } else {
+                assert!(kinds.contains(&TraceKind::ReorderRound));
+            }
         }
     }
 

@@ -51,6 +51,7 @@ pub mod des;
 pub mod flow;
 pub mod job;
 pub mod metrics;
+pub mod obs;
 pub mod proptest;
 pub mod runtime;
 pub mod sched;

@@ -150,6 +150,29 @@ fn build_cli() -> Cli {
                 "stream jobs through the run with O(window) memory and report \
                  P\u{b2}-sketch percentiles + throughput telemetry (FIFO only)",
             ));
+            f.push(flag_req(
+                "trace-out",
+                "write a decision trace of the run: Chrome trace-event JSON \
+                 (load in Perfetto / chrome://tracing), or JSONL when the \
+                 path ends in .jsonl (off by default; not with --stream-stats)",
+            ));
+            f.push(flag(
+                "trace-limit",
+                "decision-trace ring capacity in events; when full, the \
+                 oldest events are dropped",
+                "1000000",
+            ));
+            f.push(flag_req(
+                "metrics-out",
+                "write the run's metrics registry: JSON, or Prometheus text \
+                 exposition when the path ends in .prom",
+            ));
+            f.push(flag(
+                "progress",
+                "heartbeat to stderr every N DES events / streamed jobs \
+                 (0 = off; stdout stays byte-identical)",
+                "0",
+            ));
             f
         })
         .subcommand("compare", "run the policy panel on one setting", {
@@ -336,17 +359,65 @@ fn apply_engine_flags(
 }
 
 fn cmd_simulate(parsed: &taos::cli::Parsed) -> Result<(), String> {
-    let cfg = config_from(parsed)?;
+    let mut cfg = config_from(parsed)?;
     let alg = parsed.get_or("alg", "wf");
     let policy = SchedPolicy::parse(alg).ok_or_else(|| format!("unknown algorithm `{alg}`"))?;
     let streaming = parsed.has_switch("stream-stats");
+    if let Some(v) = parsed.get_parse::<u64>("progress")? {
+        cfg.sim.progress_every = v;
+    }
+    let trace_out = parsed.get("trace-out").filter(|p| !p.is_empty());
+    let metrics_out = parsed.get("metrics-out").filter(|p| !p.is_empty());
+    if streaming && trace_out.is_some() {
+        return Err("--trace-out cannot be combined with --stream-stats (the \
+                    streaming fold keeps O(window) state and records no \
+                    per-job lifecycle events)"
+            .into());
+    }
+    let trace_limit = parsed.get_parse::<usize>("trace-limit")?.unwrap_or(1_000_000);
+    // Off unless asked for: ObsSink::off() records nothing and costs
+    // nothing; outcomes are bit-identical either way (asserted by
+    // rust/tests/obs_trace.rs).
+    let mut obs = if trace_out.is_some() || (metrics_out.is_some() && !streaming) {
+        taos::obs::ObsSink::new(
+            if trace_out.is_some() { trace_limit } else { 0 },
+            metrics_out.is_some(),
+        )
+    } else {
+        taos::obs::ObsSink::off()
+    };
     let started = std::time::Instant::now();
     let out = if streaming {
         taos::sim::stream::run_stream_experiment(&cfg, policy)
+    } else if trace_out.is_some() || metrics_out.is_some() {
+        taos::sim::run_experiment_obs(&cfg, policy, &mut obs)
     } else {
         run_experiment(&cfg, policy)
     }
     .map_err(|e| e.to_string())?;
+    if let Some(path) = trace_out {
+        let body = if path.ends_with(".jsonl") {
+            taos::obs::to_jsonl(&obs.trace)
+        } else {
+            taos::obs::to_chrome_json(&obs.trace, cfg.cluster.servers)
+        };
+        std::fs::write(path, body).map_err(|e| e.to_string())?;
+        eprintln!(
+            "wrote {path}: {} trace events ({} dropped by the ring)",
+            obs.trace.len(),
+            obs.trace.dropped()
+        );
+    }
+    if let Some(path) = metrics_out {
+        let reg = taos::obs::registry_from(&out, &obs);
+        let body = if path.ends_with(".prom") {
+            reg.to_prometheus()
+        } else {
+            reg.to_json().to_string()
+        };
+        std::fs::write(path, body).map_err(|e| e.to_string())?;
+        eprintln!("wrote {path}: {} metrics", reg.len());
+    }
     let wall = started.elapsed().as_secs_f64().max(1e-9);
     let tel = out.telemetry;
     let events_per_sec = tel.events as f64 / wall;
@@ -371,7 +442,15 @@ fn cmd_simulate(parsed: &taos::cli::Parsed) -> Result<(), String> {
             ("engine", Json::str(cfg.sim.engine.name())),
             ("topology", Json::str(cfg.sim.topology.name())),
             ("jct", jct),
+            // JCT = wait + service, both means in slots (deterministic,
+            // unlike the wall-clock overhead keys).
+            ("mean_wait", Json::num(out.mean_wait())),
+            ("mean_service", Json::num(out.mean_service())),
             ("overhead_us", Json::num(out.overhead.mean_us())),
+            // Wall-clock tail estimates: CI diffs must del() these
+            // alongside .overhead_us and .events_per_sec.
+            ("overhead_p50_us", Json::num(out.overhead.p50_us())),
+            ("overhead_p99_us", Json::num(out.overhead.p99_us())),
             ("makespan", Json::num(out.makespan as f64)),
             ("wf_evals", Json::num(out.wf_evals as f64)),
             (
@@ -431,7 +510,17 @@ fn cmd_simulate(parsed: &taos::cli::Parsed) -> Result<(), String> {
             println!("max JCT        : {:.0}", stats.max);
         }
         println!("makespan       : {} slots", out.makespan);
-        println!("overhead       : {:.1} us/arrival", out.overhead.mean_us());
+        println!(
+            "wait / service : {:.1} / {:.1} slots (mean; wait + service = JCT)",
+            out.mean_wait(),
+            out.mean_service()
+        );
+        println!(
+            "overhead       : {:.1} us/arrival (p50 {:.1}, p99 {:.1})",
+            out.overhead.mean_us(),
+            out.overhead.p50_us(),
+            out.overhead.p99_us()
+        );
         if tel.events > 0 {
             println!(
                 "DES events     : {} ({}/s, peak queue {}, peak pool {} slots)",
@@ -487,21 +576,41 @@ fn cmd_compare(parsed: &taos::cli::Parsed) -> Result<(), String> {
     let mut rows = Vec::new();
     for policy in &cfg.policies {
         let out = run_experiment(&cfg, policy).map_err(|e| e.to_string())?;
-        rows.push((policy.name(), out.mean_jct(), out.overhead.mean_us()));
+        rows.push((
+            policy.name(),
+            out.mean_jct(),
+            out.mean_wait(),
+            out.mean_service(),
+            out.overhead.mean_us(),
+        ));
     }
     if parsed.has_switch("json") {
-        let j = Json::arr(rows.iter().map(|(name, jct, ov)| {
+        let j = Json::arr(rows.iter().map(|(name, jct, wait, service, ov)| {
             Json::obj(vec![
                 ("algorithm", Json::str(*name)),
                 ("mean_jct", Json::num(*jct)),
+                ("mean_wait", Json::num(*wait)),
+                ("mean_service", Json::num(*service)),
                 ("overhead_us", Json::num(*ov)),
             ])
         }));
         println!("{}", j.to_string());
     } else {
-        let mut t = taos::benchlib::TextTable::new(&["algorithm", "mean JCT", "overhead (us)"]);
-        for (name, jct, ov) in rows {
-            t.row(vec![name.into(), format!("{jct:.0}"), format!("{ov:.1}")]);
+        let mut t = taos::benchlib::TextTable::new(&[
+            "algorithm",
+            "mean JCT",
+            "wait",
+            "service",
+            "overhead (us)",
+        ]);
+        for (name, jct, wait, service, ov) in rows {
+            t.row(vec![
+                name.into(),
+                format!("{jct:.0}"),
+                format!("{wait:.0}"),
+                format!("{service:.0}"),
+                format!("{ov:.1}"),
+            ]);
         }
         print!("{}", t.render());
     }

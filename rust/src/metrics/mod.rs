@@ -5,7 +5,38 @@
 //! efficiency").
 
 use crate::util::json::Json;
-use crate::util::stats::{Ecdf, Summary};
+use crate::util::stats::{ecdf_series_sorted, Summary};
+
+/// Pooled sort buffer for the per-cell statistics of a sweep: one
+/// `f64` scratch vector reused across every
+/// [`JctStats::from_jcts_pooled`] / [`jct_cdf_pooled`] call, so a
+/// sweep's render loop performs no per-cell stats allocations once the
+/// buffer has grown to the largest trial (`rust/tests/alloc_stability.rs`
+/// asserts the capacity freeze).
+#[derive(Debug, Default)]
+pub struct StatsScratch {
+    xs: Vec<f64>,
+}
+
+impl StatsScratch {
+    pub fn new() -> StatsScratch {
+        StatsScratch::default()
+    }
+
+    /// Reserved capacity of the scratch buffer (in elements).
+    pub fn footprint(&self) -> usize {
+        self.xs.capacity()
+    }
+
+    /// Clear, refill from `jcts` and sort — the shared front half of
+    /// both pooled entry points.
+    fn load_sorted(&mut self, jcts: &[u64]) -> &[f64] {
+        self.xs.clear();
+        self.xs.extend(jcts.iter().map(|&x| x as f64));
+        self.xs.sort_by(f64::total_cmp);
+        &self.xs
+    }
+}
 
 /// Summary of per-job completion times (in slots).
 #[derive(Clone, Debug)]
@@ -20,8 +51,13 @@ pub struct JctStats {
 
 impl JctStats {
     pub fn from_jcts(jcts: &[u64]) -> JctStats {
-        let xs: Vec<f64> = jcts.iter().map(|&x| x as f64).collect();
-        let s = Summary::from(&xs);
+        JctStats::from_jcts_pooled(jcts, &mut StatsScratch::new())
+    }
+
+    /// [`JctStats::from_jcts`] through a caller-owned scratch buffer:
+    /// no allocation once the scratch has warmed up to `jcts.len()`.
+    pub fn from_jcts_pooled(jcts: &[u64], scratch: &mut StatsScratch) -> JctStats {
+        let s = Summary::from_sorted(scratch.load_sorted(jcts));
         JctStats {
             n: s.n,
             mean: s.mean,
@@ -47,8 +83,17 @@ impl JctStats {
 /// Build the empirical CDF series of completion times (the CDF subplots
 /// of Figs 10–14), sampled at `points` x-positions.
 pub fn jct_cdf(jcts: &[u64], points: usize) -> Vec<(f64, f64)> {
-    let xs: Vec<f64> = jcts.iter().map(|&x| x as f64).collect();
-    Ecdf::from(&xs).series(points)
+    jct_cdf_pooled(jcts, points, &mut StatsScratch::new())
+}
+
+/// [`jct_cdf`] through a caller-owned scratch buffer: only the returned
+/// series allocates.
+pub fn jct_cdf_pooled(
+    jcts: &[u64],
+    points: usize,
+    scratch: &mut StatsScratch,
+) -> Vec<(f64, f64)> {
+    ecdf_series_sorted(scratch.load_sorted(jcts), points)
 }
 
 /// One result row of a figure/table: algorithm → (mean JCT, overhead).
@@ -87,6 +132,26 @@ mod tests {
         assert_eq!(series.len(), 11);
         assert!((series[0].0 - 1.0).abs() < 1e-12);
         assert!((series.last().unwrap().1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pooled_stats_match_allocating_path_and_freeze() {
+        let mut scratch = StatsScratch::new();
+        let jcts: Vec<u64> = (1..=200).collect();
+        let a = JctStats::from_jcts(&jcts);
+        let b = JctStats::from_jcts_pooled(&jcts, &mut scratch);
+        assert_eq!(a.n, b.n);
+        assert_eq!(a.mean, b.mean);
+        assert_eq!(a.p50, b.p50);
+        assert_eq!(a.p99, b.p99);
+        assert_eq!(jct_cdf(&jcts, 16), jct_cdf_pooled(&jcts, 16, &mut scratch));
+        let frozen = scratch.footprint();
+        assert!(frozen >= jcts.len());
+        for _ in 0..4 {
+            let _ = JctStats::from_jcts_pooled(&jcts, &mut scratch);
+            let _ = jct_cdf_pooled(&jcts, 16, &mut scratch);
+        }
+        assert_eq!(scratch.footprint(), frozen, "scratch capacity frozen");
     }
 
     #[test]

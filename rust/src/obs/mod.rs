@@ -1,0 +1,975 @@
+//! Unified observability layer: structured decision tracing, a metrics
+//! registry, and the latency-decomposition substrate (PR 10).
+//!
+//! Three pieces, all dependency-free and allocation-disciplined:
+//!
+//! - [`Tracer`] — a pooled, bounded ring buffer of scheduler lifecycle
+//!   events ([`TraceEvent`]) stamped with *slot* time (never wall
+//!   clock, so a fixed seed yields byte-identical artifacts). Off by
+//!   default ([`Tracer::off`]) and strictly zero-cost when off: every
+//!   emitter checks one bool before touching anything. When on, the
+//!   buffer capacity is frozen at construction (`--trace-limit`), the
+//!   ring keeps the *last* N events, and [`Tracer::dropped`] reports
+//!   how many older events were overwritten. Exports:
+//!   [`to_chrome_json`] (Chrome trace-event JSON, loadable in Perfetto
+//!   or `chrome://tracing` — jobs as async spans on the scheduler
+//!   track, task executions as complete events on per-server tracks)
+//!   and [`to_jsonl`] (one JSON object per line).
+//! - [`Hist`] — a log₂-bucketed histogram over `u64` samples with a
+//!   fixed 65-bucket array (no heap at all) for slot-valued
+//!   distributions: per-server queue depth, per-job wait / service.
+//! - [`MetricsRegistry`] — named counters / gauges / histograms with
+//!   deterministic JSON ([`MetricsRegistry::to_json`]) and
+//!   Prometheus-style text ([`MetricsRegistry::to_prometheus`])
+//!   renderings. [`registry_from`] snapshots a
+//!   [`SimOutcome`](crate::sim::SimOutcome) plus the run's [`ObsSink`]
+//!   into one registry. Only deterministic, slot-derived metrics are
+//!   included — wall-clock overhead and pool high-water marks (which
+//!   may vary with thread count) stay in the simulate JSON — so
+//!   `--metrics-out` files are byte-identical for a fixed seed at any
+//!   thread count.
+//!
+//! [`ObsSink`] bundles the three for threading through the engines:
+//! `run_fifo` / `ReorderedRun` / `DesRun` each take one by `&mut` (or
+//! own one, for the consuming DES driver) and emit into it. With
+//! [`ObsSink::off`] every emission site reduces to a single branch and
+//! the schedule arithmetic is untouched — JCT vectors are bit-identical
+//! tracing on or off, which `rust/tests/obs_trace.rs` asserts.
+
+use crate::job::Slots;
+use crate::util::json::Json;
+
+/// Scheduler lifecycle event vocabulary. The `a`/`b` payload fields of
+/// [`TraceEvent`] are kind-specific (documented per variant).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceKind {
+    /// A job arrived. `a` = number of task groups, `b` = total tasks.
+    JobArrive,
+    /// One per-server assignment row. `a` = tasks placed, `b` = tier.
+    Assign,
+    /// A queue entry began service. `a` = tasks, `b` = duration (slots).
+    TaskStart,
+    /// A queue entry finished. `a` = tasks, `b` = duration (slots).
+    TaskFinish,
+    /// A replica fork placed a copy. `a` = tasks, `b` = replica-set id.
+    ReplicaFork,
+    /// First replica completed and wins. `b` = replica-set id.
+    ReplicaWin,
+    /// A losing replica was cancelled. `a` = wasted slots (0 if it
+    /// never started), `b` = replica-set id.
+    ReplicaLose,
+    /// An OCWF(-ACC) reorder round ran. `a` = jobs admitted in the
+    /// batch, `b` = outstanding jobs considered.
+    ReorderRound,
+    /// A running entry was preempted. `a` = elapsed slots credited.
+    Preempt,
+    /// A job's last task finished. `a` = JCT in slots.
+    JobComplete,
+}
+
+impl TraceKind {
+    /// Stable snake_case name used by the JSONL export.
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceKind::JobArrive => "job_arrive",
+            TraceKind::Assign => "assign",
+            TraceKind::TaskStart => "task_start",
+            TraceKind::TaskFinish => "task_finish",
+            TraceKind::ReplicaFork => "replica_fork",
+            TraceKind::ReplicaWin => "replica_win",
+            TraceKind::ReplicaLose => "replica_lose",
+            TraceKind::ReorderRound => "reorder_round",
+            TraceKind::Preempt => "preempt",
+            TraceKind::JobComplete => "job_complete",
+        }
+    }
+}
+
+/// One traced event: slot timestamp, kind, job/server ids and two
+/// kind-specific payload words (see [`TraceKind`]). Plain `Copy` data —
+/// the ring buffer never allocates per event.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    pub time: Slots,
+    pub kind: TraceKind,
+    pub job: u32,
+    pub server: u32,
+    pub a: u64,
+    pub b: u64,
+}
+
+/// Bounded ring buffer of [`TraceEvent`]s. Capacity is frozen at
+/// construction; once full, new events overwrite the oldest (last-N
+/// semantics — the tail of a run is usually the interesting part, and
+/// [`dropped`](Tracer::dropped) reports the truncation).
+#[derive(Clone, Debug)]
+pub struct Tracer {
+    buf: Vec<TraceEvent>,
+    /// Index of the oldest event once the ring is full.
+    head: usize,
+    /// Events ever recorded (`total - buf.len()` were dropped).
+    total: u64,
+    cap: usize,
+    enabled: bool,
+}
+
+impl Tracer {
+    /// The disabled tracer: no heap, every emitter is one branch.
+    pub fn off() -> Tracer {
+        Tracer {
+            buf: Vec::new(),
+            head: 0,
+            total: 0,
+            cap: 0,
+            enabled: false,
+        }
+    }
+
+    /// An enabled tracer holding the last `cap` events (`cap = 0`
+    /// degrades to [`Tracer::off`]). The buffer is allocated up front
+    /// and never grows — the capacity freeze `alloc_stability` asserts.
+    pub fn with_capacity(cap: usize) -> Tracer {
+        if cap == 0 {
+            return Tracer::off();
+        }
+        Tracer {
+            buf: Vec::with_capacity(cap),
+            head: 0,
+            total: 0,
+            cap,
+            enabled: true,
+        }
+    }
+
+    /// Whether emitters should record. `#[inline]` so the off path
+    /// folds to a single predictable branch at every call site.
+    #[inline]
+    pub fn on(&self) -> bool {
+        self.enabled
+    }
+
+    /// Events currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Events ever recorded, including overwritten ones.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Events lost to ring truncation.
+    pub fn dropped(&self) -> u64 {
+        self.total - self.buf.len() as u64
+    }
+
+    /// Pooled-buffer footprint in events (frozen after construction).
+    pub fn footprint(&self) -> usize {
+        self.buf.capacity()
+    }
+
+    #[inline]
+    pub fn record(&mut self, ev: TraceEvent) {
+        if !self.enabled {
+            return;
+        }
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head += 1;
+            if self.head == self.cap {
+                self.head = 0;
+            }
+        }
+        self.total += 1;
+    }
+
+    /// Iterate the retained events oldest → newest.
+    pub fn iter_in_order(&self) -> impl Iterator<Item = &TraceEvent> {
+        let (tail, front) = if self.buf.len() < self.cap {
+            (&self.buf[..], &self.buf[..0])
+        } else {
+            (&self.buf[self.head..], &self.buf[..self.head])
+        };
+        tail.iter().chain(front.iter())
+    }
+
+    // ---- inline emitters (each gated on `enabled` first) ----
+
+    #[inline]
+    pub fn job_arrive(&mut self, t: Slots, job: usize, groups: u64, tasks: u64) {
+        if self.enabled {
+            self.record(TraceEvent {
+                time: t,
+                kind: TraceKind::JobArrive,
+                job: job as u32,
+                server: 0,
+                a: groups,
+                b: tasks,
+            });
+        }
+    }
+
+    #[inline]
+    pub fn assign(&mut self, t: Slots, job: usize, server: usize, tasks: u64, tier: u64) {
+        if self.enabled {
+            self.record(TraceEvent {
+                time: t,
+                kind: TraceKind::Assign,
+                job: job as u32,
+                server: server as u32,
+                a: tasks,
+                b: tier,
+            });
+        }
+    }
+
+    #[inline]
+    pub fn task_start(&mut self, t: Slots, job: usize, server: usize, tasks: u64, dur: Slots) {
+        if self.enabled {
+            self.record(TraceEvent {
+                time: t,
+                kind: TraceKind::TaskStart,
+                job: job as u32,
+                server: server as u32,
+                a: tasks,
+                b: dur,
+            });
+        }
+    }
+
+    #[inline]
+    pub fn task_finish(&mut self, t: Slots, job: usize, server: usize, tasks: u64, dur: Slots) {
+        if self.enabled {
+            self.record(TraceEvent {
+                time: t,
+                kind: TraceKind::TaskFinish,
+                job: job as u32,
+                server: server as u32,
+                a: tasks,
+                b: dur,
+            });
+        }
+    }
+
+    #[inline]
+    pub fn replica_fork(&mut self, t: Slots, job: usize, server: usize, tasks: u64, set: u64) {
+        if self.enabled {
+            self.record(TraceEvent {
+                time: t,
+                kind: TraceKind::ReplicaFork,
+                job: job as u32,
+                server: server as u32,
+                a: tasks,
+                b: set,
+            });
+        }
+    }
+
+    #[inline]
+    pub fn replica_win(&mut self, t: Slots, job: usize, server: usize, set: u64) {
+        if self.enabled {
+            self.record(TraceEvent {
+                time: t,
+                kind: TraceKind::ReplicaWin,
+                job: job as u32,
+                server: server as u32,
+                a: 0,
+                b: set,
+            });
+        }
+    }
+
+    #[inline]
+    pub fn replica_lose(&mut self, t: Slots, job: usize, server: usize, wasted: Slots, set: u64) {
+        if self.enabled {
+            self.record(TraceEvent {
+                time: t,
+                kind: TraceKind::ReplicaLose,
+                job: job as u32,
+                server: server as u32,
+                a: wasted,
+                b: set,
+            });
+        }
+    }
+
+    #[inline]
+    pub fn reorder_round(&mut self, t: Slots, admitted: u64, outstanding: u64) {
+        if self.enabled {
+            self.record(TraceEvent {
+                time: t,
+                kind: TraceKind::ReorderRound,
+                job: u32::MAX,
+                server: 0,
+                a: admitted,
+                b: outstanding,
+            });
+        }
+    }
+
+    #[inline]
+    pub fn preempt(&mut self, t: Slots, job: usize, server: usize, elapsed: Slots) {
+        if self.enabled {
+            self.record(TraceEvent {
+                time: t,
+                kind: TraceKind::Preempt,
+                job: job as u32,
+                server: server as u32,
+                a: elapsed,
+                b: 0,
+            });
+        }
+    }
+
+    #[inline]
+    pub fn job_complete(&mut self, t: Slots, job: usize, jct: Slots) {
+        if self.enabled {
+            self.record(TraceEvent {
+                time: t,
+                kind: TraceKind::JobComplete,
+                job: job as u32,
+                server: 0,
+                a: jct,
+                b: 0,
+            });
+        }
+    }
+}
+
+/// Render a trace as Chrome trace-event JSON (the object form, with a
+/// `traceEvents` array), loadable in Perfetto / `chrome://tracing`.
+///
+/// Track layout: one process (`pid` 1); `tid` 0 is the scheduler track
+/// (job async spans `b`/`e` keyed by job id, assignment / reorder
+/// instants), `tid` m + 1 is server m's track (task executions as `X`
+/// complete events, replica / preemption instants). Every event carries
+/// `ph`/`ts`/`pid` — the schema CI checks — and timestamps are
+/// simulation slots (microseconds to the viewer), never wall clock.
+pub fn to_chrome_json(tr: &Tracer, num_servers: usize) -> String {
+    use std::fmt::Write;
+    let mut s = String::new();
+    s.push_str("{\"traceEvents\":[");
+    let mut first = true;
+    let mut sep = |s: &mut String| {
+        if first {
+            first = false;
+        } else {
+            s.push(',');
+        }
+    };
+    sep(&mut s);
+    s.push_str(
+        "{\"ph\":\"M\",\"ts\":0,\"pid\":1,\"tid\":0,\"name\":\"process_name\",\
+         \"args\":{\"name\":\"taos\"}}",
+    );
+    sep(&mut s);
+    s.push_str(
+        "{\"ph\":\"M\",\"ts\":0,\"pid\":1,\"tid\":0,\"name\":\"thread_name\",\
+         \"args\":{\"name\":\"scheduler\"}}",
+    );
+    for m in 0..num_servers {
+        sep(&mut s);
+        let _ = write!(
+            s,
+            "{{\"ph\":\"M\",\"ts\":0,\"pid\":1,\"tid\":{},\"name\":\"thread_name\",\
+             \"args\":{{\"name\":\"server {}\"}}}}",
+            m + 1,
+            m
+        );
+    }
+    for ev in tr.iter_in_order() {
+        sep(&mut s);
+        let t = ev.time;
+        match ev.kind {
+            TraceKind::JobArrive => {
+                let _ = write!(
+                    s,
+                    "{{\"ph\":\"b\",\"ts\":{t},\"pid\":1,\"tid\":0,\"cat\":\"job\",\
+                     \"id\":{j},\"name\":\"job {j}\",\
+                     \"args\":{{\"groups\":{a},\"tasks\":{b}}}}}",
+                    j = ev.job,
+                    a = ev.a,
+                    b = ev.b
+                );
+            }
+            TraceKind::JobComplete => {
+                let _ = write!(
+                    s,
+                    "{{\"ph\":\"e\",\"ts\":{t},\"pid\":1,\"tid\":0,\"cat\":\"job\",\
+                     \"id\":{j},\"name\":\"job {j}\",\"args\":{{\"jct\":{a}}}}}",
+                    j = ev.job,
+                    a = ev.a
+                );
+            }
+            TraceKind::TaskStart => {
+                let _ = write!(
+                    s,
+                    "{{\"ph\":\"X\",\"ts\":{t},\"dur\":{d},\"pid\":1,\"tid\":{tid},\
+                     \"name\":\"job {j}\",\"args\":{{\"tasks\":{a}}}}}",
+                    d = ev.b.max(1),
+                    tid = ev.server + 1,
+                    j = ev.job,
+                    a = ev.a
+                );
+            }
+            TraceKind::Assign
+            | TraceKind::TaskFinish
+            | TraceKind::ReplicaFork
+            | TraceKind::ReplicaWin
+            | TraceKind::ReplicaLose
+            | TraceKind::ReorderRound
+            | TraceKind::Preempt => {
+                let tid = match ev.kind {
+                    TraceKind::Assign | TraceKind::ReorderRound => 0,
+                    _ => ev.server + 1,
+                };
+                let _ = write!(
+                    s,
+                    "{{\"ph\":\"i\",\"ts\":{t},\"pid\":1,\"tid\":{tid},\"s\":\"t\",\
+                     \"name\":\"{name}\",\"args\":{{\"job\":{j},\"server\":{m},\
+                     \"a\":{a},\"b\":{b}}}}}",
+                    name = ev.kind.name(),
+                    j = ev.job,
+                    m = ev.server,
+                    a = ev.a,
+                    b = ev.b
+                );
+            }
+        }
+    }
+    let _ = write!(
+        s,
+        "],\"otherData\":{{\"total\":{},\"dropped\":{}}}}}",
+        tr.total(),
+        tr.dropped()
+    );
+    s
+}
+
+/// Render a trace as JSONL: one compact JSON object per line with the
+/// raw event fields (`ts`, `kind`, `job`, `server`, `a`, `b` — payload
+/// semantics per [`TraceKind`]). Line order is oldest → newest.
+pub fn to_jsonl(tr: &Tracer) -> String {
+    use std::fmt::Write;
+    let mut s = String::new();
+    for ev in tr.iter_in_order() {
+        let _ = writeln!(
+            s,
+            "{{\"ts\":{},\"kind\":\"{}\",\"job\":{},\"server\":{},\"a\":{},\"b\":{}}}",
+            ev.time,
+            ev.kind.name(),
+            ev.job,
+            ev.server,
+            ev.a,
+            ev.b
+        );
+    }
+    s
+}
+
+/// Number of log₂ buckets in [`Hist`]: bucket 0 holds the value 0,
+/// bucket i (i ≥ 1) holds values in `[2^(i-1), 2^i)`.
+pub const HIST_BUCKETS: usize = 65;
+
+/// Fixed-footprint log₂-bucketed histogram over `u64` samples. No heap
+/// at all — safe to embed in pooled engine state without disturbing the
+/// capacity-freeze contracts.
+#[derive(Clone, Debug)]
+pub struct Hist {
+    buckets: [u64; HIST_BUCKETS],
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist::new()
+    }
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist {
+            buckets: [0; HIST_BUCKETS],
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    /// Bucket index of a value: 0 for 0, else `64 - leading_zeros`.
+    #[inline]
+    fn bucket(v: u64) -> usize {
+        (64 - v.leading_zeros()) as usize
+    }
+
+    #[inline]
+    pub fn observe(&mut self, v: u64) {
+        self.buckets[Self::bucket(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &Hist) {
+        for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Non-cumulative `(upper_bound, count)` pairs for every bucket up
+    /// to the highest non-empty one. Upper bound of bucket 0 is 0;
+    /// bucket i covers up to `2^i - 1`.
+    pub fn bounds(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
+        let last = self
+            .buckets
+            .iter()
+            .rposition(|&c| c > 0)
+            .map_or(0, |i| i + 1);
+        self.buckets[..last].iter().enumerate().map(|(i, &c)| {
+            let ub = if i == 0 {
+                0
+            } else if i >= 64 {
+                u64::MAX
+            } else {
+                (1u64 << i) - 1
+            };
+            (ub, c)
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .bounds()
+            .map(|(ub, c)| Json::Arr(vec![Json::num(ub as f64), Json::num(c as f64)]))
+            .collect();
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("sum", Json::num(self.sum as f64)),
+            ("min", Json::num(self.min() as f64)),
+            ("max", Json::num(self.max as f64)),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+}
+
+/// A registered metric value.
+#[derive(Clone, Debug)]
+pub enum MetricValue {
+    Counter(u64),
+    Gauge(f64),
+    Hist(Hist),
+}
+
+/// Insertion-ordered registry of named metrics with deterministic JSON
+/// and Prometheus text renderings. Names follow the Prometheus idiom
+/// (`taos_` prefix, `_total` suffix on counters); a name may carry an
+/// inline label set (`taos_tier_tasks_total{tier="1"}`), which the
+/// text rendering passes through and the JSON rendering keys on.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    entries: Vec<(String, MetricValue)>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    pub fn counter(&mut self, name: &str, v: u64) {
+        self.entries.push((name.to_string(), MetricValue::Counter(v)));
+    }
+
+    pub fn gauge(&mut self, name: &str, v: f64) {
+        self.entries.push((name.to_string(), MetricValue::Gauge(v)));
+    }
+
+    pub fn hist(&mut self, name: &str, h: Hist) {
+        self.entries.push((name.to_string(), MetricValue::Hist(h)));
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&MetricValue> {
+        self.entries.iter().find(|(n, _)| n == name).map(|(_, v)| v)
+    }
+
+    /// Merge another registry in: counters add, gauges keep the max
+    /// (high-water semantics), histograms merge bucket-wise. Metrics
+    /// present only in `other` are appended.
+    pub fn merge(&mut self, other: &MetricsRegistry) {
+        for (name, val) in &other.entries {
+            match self.entries.iter_mut().find(|(n, _)| n == name) {
+                Some((_, mine)) => match (mine, val) {
+                    (MetricValue::Counter(a), MetricValue::Counter(b)) => *a += b,
+                    (MetricValue::Gauge(a), MetricValue::Gauge(b)) => *a = a.max(*b),
+                    (MetricValue::Hist(a), MetricValue::Hist(b)) => a.merge(b),
+                    (mine, _) => *mine = val.clone(),
+                },
+                None => self.entries.push((name.clone(), val.clone())),
+            }
+        }
+    }
+
+    /// JSON object keyed by metric name (keys sorted by the `Json`
+    /// renderer, so output is deterministic regardless of insertion
+    /// order).
+    pub fn to_json(&self) -> Json {
+        let fields: Vec<(&str, Json)> = self
+            .entries
+            .iter()
+            .map(|(name, val)| {
+                let v = match val {
+                    MetricValue::Counter(c) => Json::num(*c as f64),
+                    MetricValue::Gauge(g) => Json::num(*g),
+                    MetricValue::Hist(h) => h.to_json(),
+                };
+                (name.as_str(), v)
+            })
+            .collect();
+        Json::obj(fields)
+    }
+
+    /// Prometheus text exposition: `# TYPE` line per metric family,
+    /// `_bucket{le=...}` / `_sum` / `_count` series for histograms.
+    pub fn to_prometheus(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        for (name, val) in &self.entries {
+            // Labels ride inside the name; the TYPE line wants the
+            // bare family name.
+            let family = name.split('{').next().unwrap_or(name);
+            match val {
+                MetricValue::Counter(c) => {
+                    let _ = writeln!(s, "# TYPE {family} counter");
+                    let _ = writeln!(s, "{name} {c}");
+                }
+                MetricValue::Gauge(g) => {
+                    let _ = writeln!(s, "# TYPE {family} gauge");
+                    let _ = writeln!(s, "{name} {g}");
+                }
+                MetricValue::Hist(h) => {
+                    let _ = writeln!(s, "# TYPE {family} histogram");
+                    let mut cum = 0u64;
+                    for (ub, c) in h.bounds() {
+                        cum += c;
+                        let _ = writeln!(s, "{family}_bucket{{le=\"{ub}\"}} {cum}");
+                    }
+                    let _ = writeln!(s, "{family}_bucket{{le=\"+Inf\"}} {}", h.count());
+                    let _ = writeln!(s, "{family}_sum {}", h.sum());
+                    let _ = writeln!(s, "{family}_count {}", h.count());
+                }
+            }
+        }
+        s
+    }
+}
+
+/// The observability bundle threaded through the engines: decision
+/// tracer + metrics toggle + the queue-depth histogram the engines
+/// populate. [`ObsSink::off`] is the zero-cost default every existing
+/// entry point uses.
+#[derive(Clone, Debug)]
+pub struct ObsSink {
+    pub trace: Tracer,
+    /// When set, engines collect the extra distribution samples
+    /// (per-server queue depth at each arrival).
+    pub metrics: bool,
+    /// Per-server backlog (slots until free) sampled at each arrival.
+    pub queue_depth: Hist,
+}
+
+impl ObsSink {
+    /// Everything off: one branch per emission site, no heap.
+    pub fn off() -> ObsSink {
+        ObsSink {
+            trace: Tracer::off(),
+            metrics: false,
+            queue_depth: Hist::new(),
+        }
+    }
+
+    pub fn new(trace_cap: usize, metrics: bool) -> ObsSink {
+        ObsSink {
+            trace: Tracer::with_capacity(trace_cap),
+            metrics,
+            queue_depth: Hist::new(),
+        }
+    }
+
+    /// Pooled footprint in buffer elements (the tracer ring; frozen at
+    /// construction).
+    pub fn footprint(&self) -> usize {
+        self.trace.footprint()
+    }
+}
+
+/// Snapshot a finished run into a [`MetricsRegistry`]. Deterministic
+/// metrics only: job counts, slot-time aggregates, event counts, tier
+/// hits, and the slot-valued histograms (JCT / wait / service / queue
+/// depth). Wall-clock overhead and pool high-water marks are *excluded*
+/// so the export is byte-identical for a fixed seed at any thread
+/// count (they remain in the simulate JSON, CI-filtered like before).
+pub fn registry_from(outcome: &crate::sim::SimOutcome, obs: &ObsSink) -> MetricsRegistry {
+    let mut r = MetricsRegistry::new();
+    r.counter("taos_jobs_total", outcome.jcts.len() as u64);
+    r.gauge("taos_makespan_slots", outcome.makespan as f64);
+    r.counter("taos_wf_evals_total", outcome.wf_evals);
+    r.counter("taos_des_events_total", outcome.telemetry.events);
+    r.gauge("taos_des_peak_events", outcome.telemetry.peak_events as f64);
+    r.gauge("taos_stream_peak_window", outcome.telemetry.peak_window as f64);
+    r.counter("taos_wasted_work_slots_total", outcome.wasted_work);
+    r.counter("taos_busy_work_slots_total", outcome.busy_work);
+    for (tier, &n) in outcome.tier_tasks.iter().enumerate() {
+        r.counter(&format!("taos_tier_tasks_total{{tier=\"{tier}\"}}"), n);
+    }
+    let mut jct_h = Hist::new();
+    let mut wait_h = Hist::new();
+    let mut service_h = Hist::new();
+    for &j in &outcome.jcts {
+        jct_h.observe(j);
+    }
+    for (i, &w) in outcome.waits.iter().enumerate() {
+        wait_h.observe(w);
+        service_h.observe(outcome.jcts[i].saturating_sub(w));
+    }
+    r.hist("taos_job_jct_slots", jct_h);
+    r.hist("taos_job_wait_slots", wait_h);
+    r.hist("taos_job_service_slots", service_h);
+    r.hist("taos_queue_depth_slots", obs.queue_depth.clone());
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t: Slots, job: u32) -> TraceEvent {
+        TraceEvent {
+            time: t,
+            kind: TraceKind::TaskStart,
+            job,
+            server: 0,
+            a: 1,
+            b: 1,
+        }
+    }
+
+    #[test]
+    fn off_tracer_records_nothing() {
+        let mut tr = Tracer::off();
+        assert!(!tr.on());
+        tr.record(ev(0, 0));
+        tr.job_arrive(1, 2, 3, 4);
+        assert_eq!(tr.len(), 0);
+        assert_eq!(tr.total(), 0);
+        assert_eq!(tr.footprint(), 0);
+    }
+
+    #[test]
+    fn ring_keeps_last_n_and_counts_dropped() {
+        let mut tr = Tracer::with_capacity(4);
+        for i in 0..10 {
+            tr.record(ev(i, i as u32));
+        }
+        assert_eq!(tr.len(), 4);
+        assert_eq!(tr.total(), 10);
+        assert_eq!(tr.dropped(), 6);
+        let times: Vec<Slots> = tr.iter_in_order().map(|e| e.time).collect();
+        assert_eq!(times, vec![6, 7, 8, 9], "last-N, oldest first");
+        assert_eq!(tr.footprint(), 4, "capacity frozen");
+    }
+
+    #[test]
+    fn ring_below_capacity_is_in_order() {
+        let mut tr = Tracer::with_capacity(8);
+        for i in 0..3 {
+            tr.record(ev(i, 0));
+        }
+        let times: Vec<Slots> = tr.iter_in_order().map(|e| e.time).collect();
+        assert_eq!(times, vec![0, 1, 2]);
+        assert_eq!(tr.dropped(), 0);
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_required_fields() {
+        let mut tr = Tracer::with_capacity(16);
+        tr.job_arrive(0, 0, 2, 10);
+        tr.assign(0, 0, 1, 10, 0);
+        tr.task_start(0, 0, 1, 10, 5);
+        tr.task_finish(5, 0, 1, 10, 5);
+        tr.job_complete(5, 0, 5);
+        let s = to_chrome_json(&tr, 2);
+        let parsed = Json::parse(&s).expect("chrome export parses");
+        let evs = parsed.get("traceEvents").and_then(Json::as_arr).unwrap();
+        // 3 metadata (process + scheduler + 2 servers = 4) + 5 events.
+        assert_eq!(evs.len(), 4 + 5);
+        for e in evs {
+            assert!(e.get("ph").is_some(), "every event has ph");
+            assert!(e.get("ts").is_some(), "every event has ts");
+            assert!(e.get("pid").is_some(), "every event has pid");
+        }
+        // Async span pairing: one b and one e with the same id.
+        let phs: Vec<&str> = evs.iter().filter_map(|e| e.get("ph")?.as_str()).collect();
+        assert_eq!(phs.iter().filter(|p| **p == "b").count(), 1);
+        assert_eq!(phs.iter().filter(|p| **p == "e").count(), 1);
+        assert_eq!(phs.iter().filter(|p| **p == "X").count(), 1);
+    }
+
+    #[test]
+    fn jsonl_export_one_line_per_event() {
+        let mut tr = Tracer::with_capacity(8);
+        tr.job_arrive(3, 1, 1, 4);
+        tr.reorder_round(5, 2, 7);
+        let s = to_jsonl(&tr);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in &lines {
+            let j = Json::parse(line).expect("jsonl line parses");
+            assert!(j.get("ts").is_some() && j.get("kind").is_some());
+        }
+        assert!(lines[0].contains("\"kind\":\"job_arrive\""));
+        assert!(lines[1].contains("\"kind\":\"reorder_round\""));
+    }
+
+    #[test]
+    fn hist_buckets_pow2() {
+        let mut h = Hist::new();
+        for v in [0u64, 1, 2, 3, 4, 7, 8, 1000] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 8);
+        assert_eq!(h.sum(), 1025);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 1000);
+        let bounds: Vec<(u64, u64)> = h.bounds().collect();
+        // Bucket 0 (ub 0): value 0. Bucket 1 (ub 1): value 1. Bucket 2
+        // (ub 3): 2, 3. Bucket 3 (ub 7): 4, 7. Bucket 4 (ub 15): 8.
+        // Bucket 10 (ub 1023): 1000.
+        assert_eq!(bounds[0], (0, 1));
+        assert_eq!(bounds[1], (1, 1));
+        assert_eq!(bounds[2], (3, 2));
+        assert_eq!(bounds[3], (7, 2));
+        assert_eq!(bounds[4], (15, 1));
+        assert_eq!(*bounds.last().unwrap(), (1023, 1));
+    }
+
+    #[test]
+    fn hist_merge_adds() {
+        let mut a = Hist::new();
+        a.observe(1);
+        a.observe(5);
+        let mut b = Hist::new();
+        b.observe(5);
+        b.observe(100);
+        a.merge(&b);
+        assert_eq!(a.count(), 4);
+        assert_eq!(a.sum(), 111);
+        assert_eq!(a.min(), 1);
+        assert_eq!(a.max(), 100);
+    }
+
+    #[test]
+    fn empty_hist_renders_cleanly() {
+        let h = Hist::new();
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.bounds().count(), 0);
+        let j = h.to_json().to_string();
+        assert!(j.contains("\"count\":0"));
+    }
+
+    #[test]
+    fn registry_json_and_prometheus_are_deterministic() {
+        let mut r = MetricsRegistry::new();
+        r.counter("taos_jobs_total", 42);
+        r.gauge("taos_makespan_slots", 100.0);
+        let mut h = Hist::new();
+        h.observe(3);
+        h.observe(9);
+        r.hist("taos_job_jct_slots", h);
+        r.counter("taos_tier_tasks_total{tier=\"0\"}", 7);
+
+        let j1 = r.to_json().to_string();
+        let j2 = r.clone().to_json().to_string();
+        assert_eq!(j1, j2);
+        assert!(Json::parse(&j1).is_ok(), "metrics JSON parses");
+        assert!(j1.contains("\"taos_jobs_total\":42"));
+
+        let p = r.to_prometheus();
+        assert!(p.contains("# TYPE taos_jobs_total counter"));
+        assert!(p.contains("taos_jobs_total 42"));
+        assert!(p.contains("taos_makespan_slots 100"));
+        assert!(p.contains("# TYPE taos_job_jct_slots histogram"));
+        assert!(p.contains("taos_job_jct_slots_bucket{le=\"+Inf\"} 2"));
+        assert!(p.contains("taos_job_jct_slots_sum 12"));
+        assert!(p.contains("taos_tier_tasks_total{tier=\"0\"} 7"));
+        // TYPE line strips the inline label set.
+        assert!(p.contains("# TYPE taos_tier_tasks_total counter"));
+    }
+
+    #[test]
+    fn registry_merge_semantics() {
+        let mut a = MetricsRegistry::new();
+        a.counter("c", 1);
+        a.gauge("g", 2.0);
+        let mut b = MetricsRegistry::new();
+        b.counter("c", 10);
+        b.gauge("g", 1.0);
+        b.counter("only_b", 5);
+        a.merge(&b);
+        assert!(matches!(a.get("c"), Some(MetricValue::Counter(11))));
+        match a.get("g") {
+            Some(MetricValue::Gauge(v)) => assert_eq!(*v, 2.0),
+            other => panic!("gauge missing: {other:?}"),
+        }
+        assert!(matches!(a.get("only_b"), Some(MetricValue::Counter(5))));
+    }
+
+    #[test]
+    fn obs_sink_off_is_heap_free() {
+        let o = ObsSink::off();
+        assert_eq!(o.footprint(), 0);
+        assert!(!o.trace.on());
+        assert!(!o.metrics);
+    }
+}

@@ -39,6 +39,7 @@ use crate::cluster::state::{ClusterState, JobProgress, QueueRebuild, ServerQueue
 use crate::config::{ExperimentConfig, SimConfig};
 use crate::job::{Job, Slots};
 use crate::metrics::JctStats;
+use crate::obs::ObsSink;
 use crate::sched::ocwf::{reorder_into, OutstandingSet, ReorderOutcome, ReorderWorkspace};
 use crate::sched::SchedPolicy;
 use crate::util::ceil_div;
@@ -69,6 +70,12 @@ pub struct SimOutcome {
     /// Per-job completion time in slots (completion − arrival), in job
     /// order.
     pub jcts: Vec<Slots>,
+    /// Per-job queueing wait in slots, in job order: the first slot any
+    /// of the job's tasks made progress minus the arrival slot. The
+    /// remainder of the JCT is service time (`jct = wait + service` by
+    /// construction — the latency decomposition; `obs_trace` asserts
+    /// conservation).
+    pub waits: Vec<Slots>,
     /// Per-arrival computation overhead of the scheduling algorithm.
     pub overhead: OverheadMeter,
     /// Slot at which the last task finished.
@@ -103,6 +110,33 @@ impl SimOutcome {
         self.jct_stats().mean
     }
 
+    /// Summary of per-job queueing waits (the delay component of the
+    /// latency decomposition).
+    pub fn wait_stats(&self) -> JctStats {
+        JctStats::from_jcts(&self.waits)
+    }
+
+    /// Mean queueing wait in slots (0 when the engine recorded no
+    /// waits, e.g. a zero-job run).
+    pub fn mean_wait(&self) -> f64 {
+        if self.waits.is_empty() {
+            0.0
+        } else {
+            self.waits.iter().sum::<u64>() as f64 / self.waits.len() as f64
+        }
+    }
+
+    /// Mean service time in slots: `mean_jct − mean_wait` (conservation
+    /// holds per job, so it holds for the means).
+    pub fn mean_service(&self) -> f64 {
+        if self.jcts.is_empty() {
+            0.0
+        } else {
+            let jct = self.jcts.iter().sum::<u64>() as f64 / self.jcts.len() as f64;
+            jct - self.mean_wait()
+        }
+    }
+
     /// Fraction of total service slots burned by replica-race losers
     /// (`wasted_work / busy_work`; 0 when no server ever ran or the
     /// engine does not track busy time).
@@ -126,27 +160,61 @@ pub fn run_fifo(
     cfg: &SimConfig,
     seed: u64,
 ) -> crate::Result<SimOutcome> {
+    let mut obs = ObsSink::off();
+    run_fifo_obs(jobs, num_servers, policy, cfg, seed, &mut obs)
+}
+
+/// [`run_fifo`] with an observability sink: when the sink's tracer /
+/// metrics are enabled, the run emits arrival / assignment / task-span /
+/// completion events and samples per-server queue depth at each
+/// arrival. The schedule arithmetic is untouched — with
+/// [`ObsSink::off`] this *is* `run_fifo`, and with it on the JCT vector
+/// is bit-identical (every emission is observation-only).
+pub fn run_fifo_obs(
+    jobs: &[Job],
+    num_servers: usize,
+    policy: AssignPolicy,
+    cfg: &SimConfig,
+    seed: u64,
+    obs: &mut ObsSink,
+) -> crate::Result<SimOutcome> {
     let mut assigner = policy.build_with(seed, &cfg.assign_params());
     // Absolute slot at which each server's queue empties.
     let mut free: Vec<Slots> = vec![0; num_servers];
     // Busy time at arrival (eq. 2): remaining queue length in slots.
     let mut state = ClusterState::new(num_servers);
     let mut jcts = Vec::with_capacity(jobs.len());
+    let mut waits = Vec::with_capacity(jobs.len());
     let mut overhead = OverheadMeter::new();
     let mut makespan = 0;
 
     for job in jobs {
         debug_assert!(job.mu.len() == num_servers);
         state.observe_free(&free, job.arrival);
+        if obs.metrics {
+            for &f in &free {
+                obs.queue_depth.observe(f.saturating_sub(job.arrival));
+            }
+        }
+        obs.trace.job_arrive(
+            job.arrival,
+            job.id,
+            job.groups.len() as u64,
+            job.total_tasks(),
+        );
         let inst = state.instance(&job.groups, &job.mu);
         let a = overhead.measure(|| assigner.assign(&inst));
         debug_assert_eq!(validate_assignment(&inst, &a), Ok(()));
         let mut completion = job.arrival;
+        let mut first_start = Slots::MAX;
         for (m, n) in a.per_server() {
             let start = free[m].max(job.arrival);
             let fin = start + ceil_div(n, job.mu[m]);
             free[m] = fin;
             completion = completion.max(fin);
+            first_start = first_start.min(start);
+            obs.trace.assign(job.arrival, job.id, m, n, 0);
+            obs.trace.task_start(start, job.id, m, n, fin - start);
         }
         if completion > cfg.max_slots {
             return Err(crate::Error::Sim(format!(
@@ -163,11 +231,19 @@ pub fn run_fifo(
             )));
         }
         jcts.push(completion - job.arrival);
+        waits.push(if first_start == Slots::MAX {
+            0
+        } else {
+            first_start - job.arrival
+        });
+        obs.trace
+            .job_complete(completion, job.id, completion - job.arrival);
         makespan = makespan.max(completion);
     }
 
     Ok(SimOutcome {
         jcts,
+        waits,
         overhead,
         makespan,
         wf_evals: 0,
@@ -208,6 +284,7 @@ pub struct ReorderedRun<'a> {
     wf_evals: u64,
     now: Slots,
     arrival_idx: usize,
+    obs: ObsSink,
 }
 
 impl<'a> ReorderedRun<'a> {
@@ -233,7 +310,15 @@ impl<'a> ReorderedRun<'a> {
             wf_evals: 0,
             now: 0,
             arrival_idx: 0,
+            obs: ObsSink::off(),
         }
+    }
+
+    /// Attach an observability sink (default: off). The analytic
+    /// reordered engine traces arrivals and reorder rounds; task-level
+    /// spans need the DES engine, whose event loop sees every start.
+    pub fn attach_obs(&mut self, obs: ObsSink) {
+        self.obs = obs;
     }
 
     /// Process the next arrival batch (all jobs arriving at the same
@@ -259,6 +344,7 @@ impl<'a> ReorderedRun<'a> {
             wf_evals,
             now,
             arrival_idx,
+            obs,
         } = self;
         let jobs: &'a [Job] = *jobs;
         let job = &jobs[*arrival_idx];
@@ -275,6 +361,15 @@ impl<'a> ReorderedRun<'a> {
             newest += 1;
         }
 
+        for i in *arrival_idx..=newest {
+            obs.trace.job_arrive(
+                *now,
+                jobs[i].id,
+                jobs[i].groups.len() as u64,
+                jobs[i].total_tasks(),
+            );
+        }
+
         // 2. Reorder all outstanding jobs (Alg. 3; busy times start at 0).
         oset.clear();
         for i in 0..=newest {
@@ -283,6 +378,11 @@ impl<'a> ReorderedRun<'a> {
             }
         }
         let outstanding = oset.as_slice();
+        obs.trace.reorder_round(
+            *now,
+            (newest + 1 - *arrival_idx) as u64,
+            outstanding.len() as u64,
+        );
         // Explicit reborrows: the closure must borrow the pooled
         // workspace/outcome, not consume the destructured references.
         overhead.measure(|| {
@@ -314,7 +414,17 @@ impl<'a> ReorderedRun<'a> {
     /// Admit any remaining arrivals, drain the tail of every queue and
     /// produce the outcome. Returns [`crate::Error::Sim`] when jobs are
     /// still unfinished at the `max_slots` horizon.
-    pub fn finish(mut self) -> crate::Result<SimOutcome> {
+    pub fn finish(self) -> crate::Result<SimOutcome> {
+        self.finish_inner().map(|(out, _)| out)
+    }
+
+    /// [`ReorderedRun::finish`] returning the attached [`ObsSink`] as
+    /// well, so callers can export the trace / metrics it collected.
+    pub fn finish_with_obs(self) -> crate::Result<(SimOutcome, ObsSink)> {
+        self.finish_inner()
+    }
+
+    fn finish_inner(mut self) -> crate::Result<(SimOutcome, ObsSink)> {
         while self.step() {}
         // 4. Drain everything that remains.
         self.queues
@@ -334,17 +444,22 @@ impl<'a> ReorderedRun<'a> {
         }
 
         let (jcts, makespan) = self.progress.jcts_and_makespan(self.jobs);
-        Ok(SimOutcome {
-            jcts,
-            overhead: self.overhead,
-            makespan,
-            wf_evals: self.wf_evals,
-            oracle_stats: None,
-            tier_tasks: Vec::new(),
-            wasted_work: 0,
-            busy_work: 0,
-            telemetry: RunTelemetry::default(),
-        })
+        let waits = self.progress.waits(self.jobs);
+        Ok((
+            SimOutcome {
+                jcts,
+                waits,
+                overhead: self.overhead,
+                makespan,
+                wf_evals: self.wf_evals,
+                oracle_stats: None,
+                tier_tasks: Vec::new(),
+                wasted_work: 0,
+                busy_work: 0,
+                telemetry: RunTelemetry::default(),
+            },
+            self.obs,
+        ))
     }
 
     /// Reserved capacity across every pooled buffer of the arrival path
@@ -357,6 +472,7 @@ impl<'a> ReorderedRun<'a> {
             + self.oset.footprint()
             + self.queues.footprint()
             + self.rebuild.footprint()
+            + self.obs.footprint()
     }
 }
 
@@ -388,12 +504,38 @@ pub fn run_policy(
     cfg: &SimConfig,
     seed: u64,
 ) -> crate::Result<SimOutcome> {
+    let mut obs = ObsSink::off();
+    run_policy_obs(jobs, num_servers, policy, cfg, seed, &mut obs)
+}
+
+/// [`run_policy`] with an observability sink threaded through to the
+/// selected engine. The sink is taken over for the duration of the run
+/// (the consuming DES / reordered drivers own it while they execute)
+/// and handed back — populated — through `obs` on success. Scheduling
+/// decisions never read the sink, so outcomes are bit-identical with
+/// tracing on or off.
+pub fn run_policy_obs(
+    jobs: &[Job],
+    num_servers: usize,
+    policy: SchedPolicy,
+    cfg: &SimConfig,
+    seed: u64,
+    obs: &mut ObsSink,
+) -> crate::Result<SimOutcome> {
     if cfg.engine == crate::des::service::EngineKind::Des {
-        return crate::des::run_des(jobs, num_servers, policy, cfg, seed);
+        return crate::des::run_des_obs(jobs, num_servers, policy, cfg, seed, obs);
     }
     match policy.ordering {
-        crate::sched::Ordering::Fifo => run_fifo(jobs, num_servers, policy.assign, cfg, seed),
-        crate::sched::Ordering::Reorder { acc } => run_reordered(jobs, num_servers, acc, cfg),
+        crate::sched::Ordering::Fifo => {
+            run_fifo_obs(jobs, num_servers, policy.assign, cfg, seed, obs)
+        }
+        crate::sched::Ordering::Reorder { acc } => {
+            let mut run = ReorderedRun::new(jobs, num_servers, acc, cfg);
+            run.attach_obs(std::mem::replace(obs, ObsSink::off()));
+            let (out, sink) = run.finish_with_obs()?;
+            *obs = sink;
+            Ok(out)
+        }
     }
 }
 
@@ -433,6 +575,24 @@ pub fn run_experiment(cfg: &ExperimentConfig, policy: SchedPolicy) -> crate::Res
     )
 }
 
+/// [`run_experiment`] with an observability sink (see
+/// [`run_policy_obs`]).
+pub fn run_experiment_obs(
+    cfg: &ExperimentConfig,
+    policy: SchedPolicy,
+    obs: &mut ObsSink,
+) -> crate::Result<SimOutcome> {
+    let jobs = materialize_jobs(cfg)?;
+    run_policy_obs(
+        &jobs,
+        cfg.cluster.servers,
+        policy,
+        &cfg.sim,
+        cfg.seed ^ 0xA55A,
+        obs,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -469,6 +629,33 @@ mod tests {
         let out = run_fifo(&jobs, 1, AssignPolicy::Wf, &SimConfig::default(), 0).unwrap();
         // Job 0: 0→4 (JCT 4). Job 1 arrives at 1, waits 3, runs 4 → JCT 7.
         assert_eq!(out.jcts, vec![4, 7]);
+        // Latency decomposition: job 0 starts immediately (wait 0), job 1
+        // waits behind it until slot 4 (wait 3); service = jct − wait.
+        assert_eq!(out.waits, vec![0, 3]);
+        assert!((out.mean_wait() - 1.5).abs() < 1e-12);
+        assert!((out.mean_service() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fifo_obs_does_not_change_outcomes_and_traces_lifecycle() {
+        use crate::obs::{ObsSink, TraceKind};
+        let jobs = vec![
+            job(0, 0, &[4], &[&[0]], vec![1]),
+            job(1, 1, &[4], &[&[0]], vec![1]),
+        ];
+        let plain = run_fifo(&jobs, 1, AssignPolicy::Wf, &SimConfig::default(), 0).unwrap();
+        let mut obs = ObsSink::new(64, true);
+        let traced =
+            run_fifo_obs(&jobs, 1, AssignPolicy::Wf, &SimConfig::default(), 0, &mut obs).unwrap();
+        assert_eq!(plain.jcts, traced.jcts, "tracing must not move the schedule");
+        assert_eq!(plain.waits, traced.waits);
+        // 2 jobs × (arrive + assign + start + complete) = 8 events.
+        assert_eq!(obs.trace.total(), 8);
+        let kinds: Vec<TraceKind> = obs.trace.iter_in_order().map(|e| e.kind).collect();
+        assert_eq!(kinds[0], TraceKind::JobArrive);
+        assert_eq!(*kinds.last().unwrap(), TraceKind::JobComplete);
+        // Queue depth sampled once per server per arrival.
+        assert_eq!(obs.queue_depth.count(), 2);
     }
 
     #[test]

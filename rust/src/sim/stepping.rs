@@ -41,6 +41,7 @@ pub fn run_fifo_stepping(
     let mut queues: Vec<std::collections::VecDeque<Entry>> =
         vec![Default::default(); num_servers];
     let mut completion: Vec<Option<Slots>> = vec![None; jobs.len()];
+    let mut started: Vec<Option<Slots>> = vec![None; jobs.len()];
     let mut remaining_total: Vec<TaskCount> = jobs.iter().map(|j| j.total_tasks()).collect();
     let mut last_finish: Vec<Slots> = jobs.iter().map(|j| j.arrival).collect();
     let mut overhead = OverheadMeter::new();
@@ -88,6 +89,9 @@ pub fn run_fifo_stepping(
         for (m, q) in queues.iter_mut().enumerate() {
             if let Some(head) = q.front_mut() {
                 let mu = jobs[head.job].mu[m];
+                if started[head.job].is_none() {
+                    started[head.job] = Some(now);
+                }
                 let processed = head.remaining.min(mu);
                 head.remaining -= processed;
                 remaining_total[head.job] -= processed;
@@ -110,8 +114,14 @@ pub fn run_fifo_stepping(
         .map(|(j, c)| c.expect("job must complete") - j.arrival)
         .collect();
     let makespan = completion.iter().map(|c| c.unwrap()).max().unwrap_or(0);
+    let waits: Vec<Slots> = jobs
+        .iter()
+        .zip(&started)
+        .map(|(j, s)| s.map_or(0, |t| t.saturating_sub(j.arrival)))
+        .collect();
     SimOutcome {
         jcts,
+        waits,
         overhead,
         makespan,
         wf_evals: 0,

@@ -211,20 +211,34 @@ pub fn run_fifo_stream(
     let mut free: Vec<crate::job::Slots> = vec![0; num_servers];
     let mut state = crate::cluster::state::ClusterState::new(num_servers);
     let mut jcts = Vec::with_capacity(source.len_hint().unwrap_or(0));
+    let mut waits = Vec::with_capacity(source.len_hint().unwrap_or(0));
     let mut overhead = OverheadMeter::new();
     let mut makespan = 0;
     let mut seen = 0usize;
+    let t0 = std::time::Instant::now();
 
     while let Some(job) = source.next_job()? {
         debug_assert!(job.mu.len() == num_servers);
         seen += 1;
+        if cfg.progress_every > 0 && seen as u64 % cfg.progress_every == 0 {
+            let secs = t0.elapsed().as_secs_f64();
+            let rate = if secs > 0.0 { seen as f64 / secs } else { 0.0 };
+            eprintln!(
+                "[taos stream] jobs={} rate={:.0} jobs/s peak_window={}",
+                seen,
+                rate,
+                source.peak_window()
+            );
+        }
         state.observe_free(&free, job.arrival);
         let inst = state.instance(&job.groups, &job.mu);
         let a = overhead.measure(|| assigner.assign(&inst));
         debug_assert_eq!(validate_assignment(&inst, &a), Ok(()));
         let mut completion = job.arrival;
+        let mut first_start = crate::job::Slots::MAX;
         for (m, n) in a.per_server() {
             let start = free[m].max(job.arrival);
+            first_start = first_start.min(start);
             let fin = start + ceil_div(n, job.mu[m]);
             free[m] = fin;
             completion = completion.max(fin);
@@ -244,11 +258,17 @@ pub fn run_fifo_stream(
             )));
         }
         jcts.push(completion - job.arrival);
+        waits.push(if first_start == crate::job::Slots::MAX {
+            0
+        } else {
+            first_start - job.arrival
+        });
         makespan = makespan.max(completion);
     }
 
     Ok(SimOutcome {
         jcts,
+        waits,
         overhead,
         makespan,
         wf_evals: 0,

@@ -32,7 +32,7 @@ use crate::assign::feasible::OracleStats;
 use crate::benchlib::{fmt_count, TextTable};
 use crate::config::ExperimentConfig;
 use crate::job::Slots;
-use crate::metrics::jct_cdf;
+use crate::metrics::{jct_cdf_pooled, StatsScratch};
 use crate::sched::{PolicySet, SchedPolicy};
 use crate::sim::{run_experiment, SimOutcome};
 use crate::util::json::Json;
@@ -52,6 +52,18 @@ pub struct Cell {
     /// 99th-percentile JCT over the cell's pooled completion times.
     pub p99_jct: f64,
     pub overhead_us: f64,
+    /// Median per-arrival overhead (µs, streaming P² estimate averaged
+    /// over trials) — the overhead *tail* companion of `overhead_us`.
+    /// Wall-clock like `overhead_us`: never compared bitwise.
+    pub overhead_p50_us: f64,
+    /// 99th-percentile per-arrival overhead (µs, P² estimate averaged
+    /// over trials).
+    pub overhead_p99_us: f64,
+    /// Mean queueing wait (slots until a job's first task made progress),
+    /// averaged over trials — the wait half of the JCT decomposition.
+    pub mean_wait: f64,
+    /// Mean service span (`mean JCT − mean wait`), averaged over trials.
+    pub mean_service: f64,
     pub cdf: Vec<(f64, f64)>,
     /// Full WF evaluations, summed over the cell's trials (reordered
     /// policies; 0 for the FIFO assigners). Totals — not per-trial means —
@@ -223,7 +235,28 @@ impl Figure {
         }
         out.push_str(&tp.render());
 
-        out.push_str(&format!("\n== {} : overhead per arrival (us) ==\n", self.name));
+        out.push_str(&format!(
+            "\n== {} : latency decomposition, mean wait/service (slots; wait+service=JCT) ==\n",
+            self.name
+        ));
+        let mut tw = TextTable::new(&hdr_refs);
+        for policy in self.policies() {
+            let mut row = vec![policy.to_string()];
+            for &s in &settings {
+                row.push(match self.cell(policy, s) {
+                    Some(c) => format!("{:.0}/{:.0}", c.mean_wait, c.mean_service),
+                    None => "-".into(),
+                });
+            }
+            row.push("".into());
+            tw.row(row);
+        }
+        out.push_str(&tw.render());
+
+        out.push_str(&format!(
+            "\n== {} : overhead per arrival, mean/p50/p99 (us) ==\n",
+            self.name
+        ));
         let mut t2 = TextTable::new(&hdr_refs);
         for policy in self.policies() {
             let mut row = vec![policy.to_string()];
@@ -232,7 +265,10 @@ impl Figure {
             for &s in &settings {
                 match self.cell(policy, s) {
                     Some(c) => {
-                        row.push(format!("{:.1}", c.overhead_us));
+                        row.push(format!(
+                            "{:.1}/{:.1}/{:.1}",
+                            c.overhead_us, c.overhead_p50_us, c.overhead_p99_us
+                        ));
                         sum += c.overhead_us;
                         cnt += 1;
                     }
@@ -336,6 +372,10 @@ impl Figure {
                         ("p50_jct", Json::num(c.p50_jct)),
                         ("p99_jct", Json::num(c.p99_jct)),
                         ("overhead_us", Json::num(c.overhead_us)),
+                        ("overhead_p50_us", Json::num(c.overhead_p50_us)),
+                        ("overhead_p99_us", Json::num(c.overhead_p99_us)),
+                        ("mean_wait", Json::num(c.mean_wait)),
+                        ("mean_service", Json::num(c.mean_service)),
                         ("wf_evals", Json::num(c.wf_evals as f64)),
                         (
                             "cdf",
@@ -533,13 +573,21 @@ fn cells_from(specs: &[CellSpec], outcomes: &[SimOutcome], trials: usize) -> Vec
     debug_assert_eq!(specs.len(), outcomes.len());
     debug_assert_eq!(specs.len() % trials, 0);
     let mut cells = Vec::with_capacity(specs.len() / trials);
+    // Pooled per-cell buffers: reused across every cell so the collapse
+    // loop stops allocating once they reach the largest trial group.
+    let mut jcts: Vec<Slots> = Vec::new();
+    let mut scratch = StatsScratch::new();
     let mut i = 0;
     while i < specs.len() {
         let spec = &specs[i];
         let group = &outcomes[i..i + trials];
-        let mut jcts: Vec<Slots> = Vec::new();
+        jcts.clear();
         let mut jct_sum = 0.0;
         let mut ov_sum = 0.0;
+        let mut ov_p50_sum = 0.0;
+        let mut ov_p99_sum = 0.0;
+        let mut wait_sum = 0.0;
+        let mut service_sum = 0.0;
         let mut wf_evals_sum = 0u64;
         let mut oracle: Option<OracleStats> = None;
         let mut tier_tasks: Vec<u64> = Vec::new();
@@ -548,6 +596,10 @@ fn cells_from(specs: &[CellSpec], outcomes: &[SimOutcome], trials: usize) -> Vec
         for o in group {
             jct_sum += o.mean_jct();
             ov_sum += o.overhead.mean_us();
+            ov_p50_sum += o.overhead.p50_us();
+            ov_p99_sum += o.overhead.p99_us();
+            wait_sum += o.mean_wait();
+            service_sum += o.mean_service();
             jcts.extend_from_slice(&o.jcts);
             wf_evals_sum += o.wf_evals;
             wasted_work += o.wasted_work;
@@ -562,7 +614,7 @@ fn cells_from(specs: &[CellSpec], outcomes: &[SimOutcome], trials: usize) -> Vec
                 *acc += n;
             }
         }
-        let pooled = crate::metrics::JctStats::from_jcts(&jcts);
+        let pooled = crate::metrics::JctStats::from_jcts_pooled(&jcts, &mut scratch);
         cells.push(Cell {
             policy: spec.policy.name(),
             setting: spec.setting,
@@ -570,7 +622,11 @@ fn cells_from(specs: &[CellSpec], outcomes: &[SimOutcome], trials: usize) -> Vec
             p50_jct: pooled.p50,
             p99_jct: pooled.p99,
             overhead_us: ov_sum / trials as f64,
-            cdf: jct_cdf(&jcts, 64),
+            overhead_p50_us: ov_p50_sum / trials as f64,
+            overhead_p99_us: ov_p99_sum / trials as f64,
+            mean_wait: wait_sum / trials as f64,
+            mean_service: service_sum / trials as f64,
+            cdf: jct_cdf_pooled(&jcts, 64, &mut scratch),
             wf_evals: wf_evals_sum,
             oracle,
             tier_tasks,

@@ -19,6 +19,24 @@ impl Summary {
     /// (`n == 0` signals it).
     pub fn from(xs: &[f64]) -> Summary {
         if xs.is_empty() {
+            return Summary::from_sorted(xs);
+        }
+        let mut sorted = xs.to_vec();
+        // total_cmp, not partial_cmp().unwrap(): a single NaN sample (an
+        // empty trial's mean, a 0/0 ratio) must degrade the statistics,
+        // not panic the whole sweep. NaNs sort last under the IEEE total
+        // order, so finite percentiles stay correct.
+        sorted.sort_by(f64::total_cmp);
+        Summary::from_sorted(&sorted)
+    }
+
+    /// [`Summary::from`] over an *already sorted* slice (ascending under
+    /// `f64::total_cmp`): no copy, no allocation — the hot path for
+    /// pooled callers ([`crate::metrics::StatsScratch`]) that reuse one
+    /// sort buffer across cells. Returns an all-NaN summary for empty
+    /// input (`n == 0` signals it).
+    pub fn from_sorted(sorted: &[f64]) -> Summary {
+        if sorted.is_empty() {
             return Summary {
                 n: 0,
                 mean: f64::NAN,
@@ -30,24 +48,22 @@ impl Summary {
                 p99: f64::NAN,
             };
         }
-        let n = xs.len();
-        let mean = xs.iter().sum::<f64>() / n as f64;
-        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
-        let mut sorted = xs.to_vec();
-        // total_cmp, not partial_cmp().unwrap(): a single NaN sample (an
-        // empty trial's mean, a 0/0 ratio) must degrade the statistics,
-        // not panic the whole sweep. NaNs sort last under the IEEE total
-        // order, so finite percentiles stay correct.
-        sorted.sort_by(f64::total_cmp);
+        debug_assert!(
+            sorted.windows(2).all(|w| w[0].total_cmp(&w[1]).is_le()),
+            "from_sorted requires ascending total_cmp order"
+        );
+        let n = sorted.len();
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
         Summary {
             n,
             mean,
             std: var.sqrt(),
             min: sorted[0],
             max: sorted[n - 1],
-            p50: percentile_sorted(&sorted, 0.50),
-            p90: percentile_sorted(&sorted, 0.90),
-            p99: percentile_sorted(&sorted, 0.99),
+            p50: percentile_sorted(sorted, 0.50),
+            p90: percentile_sorted(sorted, 0.90),
+            p99: percentile_sorted(sorted, 0.99),
         }
     }
 }
@@ -96,21 +112,30 @@ impl Ecdf {
     /// Degenerate requests degrade instead of asserting: `k = 0` yields
     /// an empty series, `k = 1` the single point at the sample minimum.
     pub fn series(&self, k: usize) -> Vec<(f64, f64)> {
-        if self.xs.is_empty() || k == 0 {
-            return vec![];
-        }
-        if k == 1 {
-            let lo = self.xs[0];
-            return vec![(lo, self.eval(lo))];
-        }
-        let (lo, hi) = (self.xs[0], *self.xs.last().unwrap());
-        (0..k)
-            .map(|i| {
-                let x = lo + (hi - lo) * i as f64 / (k - 1) as f64;
-                (x, self.eval(x))
-            })
-            .collect()
+        ecdf_series_sorted(&self.xs, k)
     }
+}
+
+/// [`Ecdf::series`] over an *already sorted* slice (ascending under
+/// `f64::total_cmp`), without constructing an [`Ecdf`] — the pooled
+/// companion of [`Summary::from_sorted`]. Only the returned series
+/// allocates (it is the caller's output value).
+pub fn ecdf_series_sorted(sorted: &[f64], k: usize) -> Vec<(f64, f64)> {
+    if sorted.is_empty() || k == 0 {
+        return vec![];
+    }
+    let eval = |x: f64| sorted.partition_point(|&v| v <= x) as f64 / sorted.len() as f64;
+    if k == 1 {
+        let lo = sorted[0];
+        return vec![(lo, eval(lo))];
+    }
+    let (lo, hi) = (sorted[0], *sorted.last().unwrap());
+    (0..k)
+        .map(|i| {
+            let x = lo + (hi - lo) * i as f64 / (k - 1) as f64;
+            (x, eval(x))
+        })
+        .collect()
 }
 
 /// Online mean/variance accumulator (Welford) for streaming timers.

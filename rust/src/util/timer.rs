@@ -3,16 +3,31 @@
 
 use std::time::{Duration, Instant};
 
-use super::stats::Welford;
+use super::stats::{P2Quantile, Welford};
 
 /// Accumulates wall-clock durations of a repeated operation (e.g. the task
 /// assignment performed on each job arrival) and reports the average
 /// overhead per invocation in microseconds — the left y-axis of the first
-/// subplot of Figs 10–12.
-#[derive(Clone, Debug, Default)]
+/// subplot of Figs 10–12. Besides mean/std, the meter tracks streaming
+/// p50/p99 estimates (P² quantiles, O(1) state) so the overhead *tail*
+/// is visible without retaining per-invocation samples.
+#[derive(Clone, Debug)]
 pub struct OverheadMeter {
     acc: Welford,
+    p50: P2Quantile,
+    p99: P2Quantile,
     total: Duration,
+}
+
+impl Default for OverheadMeter {
+    fn default() -> Self {
+        OverheadMeter {
+            acc: Welford::default(),
+            p50: P2Quantile::new(0.50),
+            p99: P2Quantile::new(0.99),
+            total: Duration::ZERO,
+        }
+    }
 }
 
 impl OverheadMeter {
@@ -30,7 +45,10 @@ impl OverheadMeter {
 
     pub fn record(&mut self, d: Duration) {
         self.total += d;
-        self.acc.push(d.as_secs_f64() * 1e6);
+        let us = d.as_secs_f64() * 1e6;
+        self.acc.push(us);
+        self.p50.push(us);
+        self.p99.push(us);
     }
 
     /// Number of recorded invocations.
@@ -46,6 +64,18 @@ impl OverheadMeter {
     /// Standard deviation of per-invocation overhead, microseconds.
     pub fn std_us(&self) -> f64 {
         self.acc.std()
+    }
+
+    /// Streaming median overhead per invocation, microseconds (P²
+    /// estimate; exact for the first five samples). NaN when empty.
+    pub fn p50_us(&self) -> f64 {
+        self.p50.value()
+    }
+
+    /// Streaming 99th-percentile overhead per invocation, microseconds
+    /// (P² estimate). NaN when empty.
+    pub fn p99_us(&self) -> f64 {
+        self.p99.value()
     }
 
     /// Total accumulated time.
@@ -77,5 +107,25 @@ mod tests {
         let m = OverheadMeter::new();
         assert_eq!(m.count(), 0);
         assert!(m.mean_us().is_nan());
+        assert!(m.p50_us().is_nan());
+        assert!(m.p99_us().is_nan());
+    }
+
+    #[test]
+    fn quantiles_track_recorded_durations() {
+        let mut m = OverheadMeter::new();
+        for i in 1..=100u64 {
+            m.record(Duration::from_micros(i));
+        }
+        // Values 1..=100 µs: the median estimate must land mid-range
+        // and the p99 estimate near the top; both within the observed
+        // min/max by the P² invariants.
+        let p50 = m.p50_us();
+        let p99 = m.p99_us();
+        assert!(p50 >= 1.0 && p50 <= 100.0, "p50 {p50}");
+        assert!(p99 >= 1.0 && p99 <= 100.0, "p99 {p99}");
+        assert!((p50 - 50.0).abs() <= 15.0, "p50 {p50}");
+        assert!(p99 >= 80.0, "p99 {p99}");
+        assert!(p99 >= p50, "tail above median");
     }
 }

@@ -416,6 +416,94 @@ fn des_stochastic_speculation_footprint_freezes_after_warmup() {
 }
 
 #[test]
+fn jct_stats_scratch_capacity_freezes() {
+    // The pooled sweep-statistics path (PR 10): one scratch buffer reused
+    // across every per-cell `JctStats`/CDF computation must stop growing
+    // after the first pass over the largest cell.
+    use taos::metrics::{jct_cdf_pooled, JctStats, StatsScratch};
+
+    let mut rng = Rng::seed_from(0xA1113);
+    let big: Vec<u64> = (0..600).map(|_| rng.gen_range_incl(1, 10_000)).collect();
+    let small: Vec<u64> = (0..40).map(|_| rng.gen_range_incl(1, 10_000)).collect();
+    let mut scratch = StatsScratch::new();
+    // Warmup: grow to the largest cell once.
+    let _ = JctStats::from_jcts_pooled(&big, &mut scratch);
+    let fp = scratch.footprint();
+    assert!(fp >= big.len(), "warmup must have reserved the sort buffer");
+    for pass in 0..4 {
+        // Alternate shapes like a real sweep's collapse loop does.
+        let _ = JctStats::from_jcts_pooled(&small, &mut scratch);
+        let _ = jct_cdf_pooled(&small, 64, &mut scratch);
+        let _ = JctStats::from_jcts_pooled(&big, &mut scratch);
+        let _ = jct_cdf_pooled(&big, 64, &mut scratch);
+        assert_eq!(fp, scratch.footprint(), "stats scratch grew on pass {pass}");
+    }
+}
+
+#[test]
+fn des_event_path_with_tracing_attached_footprint_freezes() {
+    // Tracing on may not re-introduce steady-state allocations: the ring
+    // buffer is sized at construction and the queue-depth histogram is a
+    // fixed array, so a traced DES run must freeze exactly like the
+    // untraced one (the tracer's frozen capacity is part of the
+    // footprint).
+    use taos::config::SimConfig;
+    use taos::des::DesRun;
+    use taos::obs::ObsSink;
+    use taos::sched::SchedPolicy;
+
+    let m = 8;
+    let waves = 7usize;
+    let per_wave = 5usize;
+    let mut jobs: Vec<taos::job::Job> = Vec::new();
+    for w in 0..waves {
+        for j in 0..per_wave {
+            let k = 1 + j % 3;
+            let groups: Vec<TaskGroup> = (0..k)
+                .map(|g| {
+                    let servers: Vec<usize> = (0..m).filter(|s| (s + g + j) % 2 == 0).collect();
+                    TaskGroup::new(4 + 3 * j as u64 + g as u64, servers)
+                })
+                .collect();
+            jobs.push(taos::job::Job {
+                id: w * per_wave + j,
+                arrival: (w as u64) * 10_000,
+                groups,
+                mu: (0..m).map(|s| 1 + ((s + j) % 3) as u64).collect(),
+            });
+        }
+    }
+
+    let warmup_deadline = 2 * 10_000;
+    for policy in [
+        SchedPolicy::fifo(taos::assign::AssignPolicy::Wf),
+        SchedPolicy::ocwf(true),
+    ] {
+        let cfg = SimConfig::default();
+        let mut run = DesRun::new(&jobs, m, policy, &cfg, 5);
+        run.attach_obs(ObsSink::new(1 << 12, true));
+        let mut more = true;
+        while more && run.now() < warmup_deadline {
+            more = run.pump().unwrap();
+        }
+        let fp = run.pool_footprint();
+        assert!(fp >= 1 << 12, "tracer capacity must be in the footprint");
+        while more {
+            more = run.pump().unwrap();
+            assert_eq!(
+                fp,
+                run.pool_footprint(),
+                "traced DES path allocated after warmup at slot {} ({})",
+                run.now(),
+                policy.name()
+            );
+        }
+        let out = run.finish().unwrap();
+        assert_eq!(out.jcts.len(), jobs.len());
+    }
+}
+
+#[test]
 fn executor_spawns_zero_threads_after_warmup() {
     // Every parallel entry point in this crate runs on the process-wide
     // persistent executor. After one warmup batch the worker count is

@@ -1,0 +1,217 @@
+//! Observability-layer invariants (PR 10):
+//!
+//! 1. **Zero perturbation** — attaching a tracing + metrics sink must not
+//!    change a single bit of any outcome, per engine × policy.
+//! 2. **Determinism** — exported trace and metrics artifacts are
+//!    byte-identical for a fixed seed at every `TAOS_TEST_THREADS` count
+//!    (timestamps are simulation slots, never wall clock; the registry
+//!    deliberately excludes every wall-clock metric).
+//! 3. **Conservation** — the latency decomposition satisfies
+//!    `wait + service = JCT` per job, and FIFO waits agree bit-for-bit
+//!    between the analytic and DES engines.
+//! 4. **Bounded memory** — the trace ring really truncates oldest-first
+//!    and reports the drop count.
+
+use taos::config::ExperimentConfig;
+use taos::des::service::EngineKind;
+use taos::obs::{registry_from, to_chrome_json, to_jsonl, ObsSink, TraceKind, Tracer};
+use taos::sched::SchedPolicy;
+use taos::sim::{run_experiment, run_experiment_obs};
+use taos::sweep::{self, pool};
+use taos::util::json::Json;
+
+fn tiny_base(engine: EngineKind) -> ExperimentConfig {
+    let mut cfg = sweep::quick_base(4242);
+    cfg.trace.jobs = 24;
+    cfg.trace.total_tasks = 1_500;
+    cfg.cluster.servers = 12;
+    cfg.cluster.avail_lo = 3;
+    cfg.cluster.avail_hi = 5;
+    cfg.sim.engine = engine;
+    cfg
+}
+
+fn panel() -> Vec<SchedPolicy> {
+    vec![
+        SchedPolicy::parse("wf").unwrap(),
+        SchedPolicy::parse("obta").unwrap(),
+        SchedPolicy::parse("ocwf").unwrap(),
+        SchedPolicy::parse("ocwf-acc").unwrap(),
+    ]
+}
+
+#[test]
+fn tracing_never_changes_outcomes() {
+    for engine in [EngineKind::Analytic, EngineKind::Des] {
+        let cfg = tiny_base(engine);
+        for policy in panel() {
+            let plain = run_experiment(&cfg, policy).unwrap();
+            let mut obs = ObsSink::new(1 << 14, true);
+            let traced = run_experiment_obs(&cfg, policy, &mut obs).unwrap();
+            let tag = format!("{} / {}", engine.name(), policy.name());
+            assert_eq!(plain.jcts, traced.jcts, "JCTs perturbed: {tag}");
+            assert_eq!(plain.waits, traced.waits, "waits perturbed: {tag}");
+            assert_eq!(plain.makespan, traced.makespan, "makespan perturbed: {tag}");
+            assert_eq!(plain.wf_evals, traced.wf_evals, "wf_evals perturbed: {tag}");
+            assert!(obs.trace.total() > 0, "no events recorded: {tag}");
+            let kinds: Vec<TraceKind> = obs.trace.iter_in_order().map(|e| e.kind).collect();
+            assert!(kinds.contains(&TraceKind::JobArrive), "{tag}");
+            if engine == EngineKind::Des || policy.is_fifo() {
+                // The DES loop and the analytic FIFO fold see every task
+                // start and completion; the analytic reordered engine
+                // only traces arrivals and reorder rounds.
+                assert!(kinds.contains(&TraceKind::TaskStart), "{tag}");
+                let completes = kinds
+                    .iter()
+                    .filter(|&&k| k == TraceKind::JobComplete)
+                    .count();
+                assert_eq!(completes, plain.jcts.len(), "one completion per job: {tag}");
+            } else {
+                assert!(kinds.contains(&TraceKind::ReorderRound), "{tag}");
+            }
+        }
+    }
+}
+
+#[test]
+fn latency_decomposition_conserves_jct() {
+    for engine in [EngineKind::Analytic, EngineKind::Des] {
+        let cfg = tiny_base(engine);
+        for policy in panel() {
+            let out = run_experiment(&cfg, policy).unwrap();
+            let tag = format!("{} / {}", engine.name(), policy.name());
+            assert_eq!(out.waits.len(), out.jcts.len(), "{tag}");
+            for (i, (&w, &jct)) in out.waits.iter().zip(&out.jcts).enumerate() {
+                assert!(w <= jct, "job {i}: wait {w} > JCT {jct} ({tag})");
+            }
+            // mean_wait + mean_service == mean_jct by construction; check
+            // the floating-point identity actually holds.
+            let recomposed = out.mean_wait() + out.mean_service();
+            assert!(
+                (recomposed - out.mean_jct()).abs() < 1e-9,
+                "decomposition drifted: {tag}"
+            );
+        }
+    }
+    // Waits must agree bit-for-bit across engines under deterministic
+    // service (same rule in both: first slot of real progress minus
+    // arrival) — the CI DES-vs-analytic JSON diff relies on this for
+    // every policy, not just FIFO.
+    for policy in panel() {
+        let a = run_experiment(&tiny_base(EngineKind::Analytic), policy).unwrap();
+        let d = run_experiment(&tiny_base(EngineKind::Des), policy).unwrap();
+        assert_eq!(
+            a.waits,
+            d.waits,
+            "{}: wait vectors diverged across engines",
+            policy.name()
+        );
+    }
+}
+
+#[test]
+fn exported_artifacts_byte_identical_across_thread_counts() {
+    // The reordered policies fan admission rounds across
+    // `reorder_threads`; the trace and the metrics registry must come out
+    // byte-identical at every thread count (the registry excludes every
+    // wall-clock metric for exactly this reason).
+    for engine in [EngineKind::Analytic, EngineKind::Des] {
+        let mut reference: Option<(String, String, String, String)> = None;
+        for threads in pool::test_thread_counts() {
+            let mut cfg = tiny_base(engine);
+            cfg.sim.reorder_threads = threads;
+            let mut obs = ObsSink::new(1 << 14, true);
+            let out = run_experiment_obs(&cfg, SchedPolicy::parse("ocwf").unwrap(), &mut obs)
+                .unwrap();
+            let reg = registry_from(&out, &obs);
+            let artifacts = (
+                to_chrome_json(&obs.trace, cfg.cluster.servers),
+                to_jsonl(&obs.trace),
+                reg.to_json().to_string(),
+                reg.to_prometheus(),
+            );
+            match &reference {
+                None => reference = Some(artifacts),
+                Some(r) => {
+                    let tag = format!("{} @ {threads} threads", engine.name());
+                    assert_eq!(r.0, artifacts.0, "chrome trace diverged: {tag}");
+                    assert_eq!(r.1, artifacts.1, "jsonl trace diverged: {tag}");
+                    assert_eq!(r.2, artifacts.2, "metrics json diverged: {tag}");
+                    assert_eq!(r.3, artifacts.3, "prometheus text diverged: {tag}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn chrome_export_is_valid_and_schema_complete() {
+    let cfg = tiny_base(EngineKind::Des);
+    let mut obs = ObsSink::new(1 << 14, true);
+    run_experiment_obs(&cfg, SchedPolicy::parse("wf").unwrap(), &mut obs).unwrap();
+    let body = to_chrome_json(&obs.trace, cfg.cluster.servers);
+    let parsed = Json::parse(&body).expect("chrome trace JSON parses");
+    let Json::Obj(top) = parsed else {
+        panic!("top level must be an object")
+    };
+    let Some(Json::Arr(events)) = top.get("traceEvents") else {
+        panic!("traceEvents array missing")
+    };
+    assert!(!events.is_empty());
+    for (i, ev) in events.iter().enumerate() {
+        let Json::Obj(e) = ev else {
+            panic!("event {i} not an object")
+        };
+        for key in ["ph", "ts", "pid"] {
+            assert!(e.contains_key(key), "event {i} missing `{key}`");
+        }
+    }
+    // Every JSONL line is itself a JSON object with the raw fields.
+    let jsonl = to_jsonl(&obs.trace);
+    for (i, line) in jsonl.lines().enumerate() {
+        let Json::Obj(e) = Json::parse(line).expect("jsonl line parses") else {
+            panic!("line {i} not an object")
+        };
+        for key in ["ts", "kind", "job", "server"] {
+            assert!(e.contains_key(key), "line {i} missing `{key}`");
+        }
+    }
+}
+
+#[test]
+fn ring_truncates_oldest_first_and_counts_drops() {
+    let mut tr = Tracer::with_capacity(4);
+    for t in 0..10u64 {
+        tr.job_arrive(t, t as usize, 1, 1);
+    }
+    assert_eq!(tr.len(), 4);
+    assert_eq!(tr.total(), 10);
+    assert_eq!(tr.dropped(), 6);
+    let times: Vec<u64> = tr.iter_in_order().map(|e| e.time).collect();
+    assert_eq!(times, vec![6, 7, 8, 9], "last-N semantics, oldest first");
+    // And the footprint is frozen at the construction-time capacity.
+    assert_eq!(tr.footprint(), 4);
+}
+
+#[test]
+fn metrics_registry_reflects_run_and_decomposition() {
+    let cfg = tiny_base(EngineKind::Des);
+    let mut obs = ObsSink::new(0, true); // metrics without tracing
+    let out = run_experiment_obs(&cfg, SchedPolicy::parse("wf").unwrap(), &mut obs).unwrap();
+    let reg = registry_from(&out, &obs);
+    let j = reg.to_json().to_string();
+    for name in [
+        "taos_jobs_total",
+        "taos_makespan_slots",
+        "taos_job_jct_slots",
+        "taos_job_wait_slots",
+        "taos_job_service_slots",
+        "taos_queue_depth_slots",
+    ] {
+        assert!(j.contains(name), "registry missing `{name}`:\n{j}");
+    }
+    let prom = reg.to_prometheus();
+    assert!(prom.contains("taos_jobs_total"));
+    assert!(prom.contains("_bucket{le="), "histogram exposition missing");
+    assert!(prom.ends_with('\n'), "exposition ends with a newline");
+}
